@@ -1,0 +1,95 @@
+//! All-reduce scenario: STAR's AR-ring modes (§IV-B) on a straggling
+//! 8-worker ring — shows the remove-x-stragglers + parent-wait trade and
+//! the Eq. (3) heuristic's pick, then validates against the simulator.
+//!
+//! Run: `cargo run --release --example ar_ring -- [--workers 8] [--seed 0]`
+
+use star::cli::Args;
+use star::decide::{choose_ar_heuristic, time_to_progress_ar};
+use star::driver::{Driver, DriverConfig, DriverMode};
+use star::models::ZOO;
+use star::sync::SyncMode;
+use star::table::{self, Table};
+use star::trace::{Arch, JobSpec};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> star::Result<()> {
+    let args = Args::parse_env();
+    args.check_known(&["workers", "seed"])?;
+    let n = args.usize_or("workers", 8)?;
+    let seed = args.u64_or("seed", 0)?;
+    let spec = &ZOO[4]; // DenseNet121
+
+    // a ring with one severe and one mild straggler
+    let mut predicted = vec![0.45; n];
+    predicted[0] = 1.8;
+    predicted[1] = 0.62;
+
+    println!("Eq. (3) landscape (time to unit progress, s):");
+    let mut t = Table::new("", &["x_removed", "tw=30ms", "tw=90ms", "tw=150ms", "tw=210ms"]);
+    for x in 0..=2usize {
+        let mut row = vec![table::s(format!("{x}"))];
+        for tw in [30.0, 90.0, 150.0, 210.0] {
+            row.push(table::f(time_to_progress_ar(spec, 100.0, n, x, tw, &predicted), 3));
+        }
+        t.rowf(&row);
+    }
+    t.print();
+
+    let d = choose_ar_heuristic(spec, 100.0, n, 2, &star::star::TW_GRID_MS, &predicted);
+    println!("\nSTAR-H picks: {} (est {:.3})\n", d.mode.name(), d.est);
+
+    // validate in the simulator: chosen mode vs full ring
+    let mk_fixed = |mode: SyncMode| -> Box<dyn Fn(&JobSpec) -> Box<dyn star::driver::Policy>> {
+        Box::new(move |_| {
+            Box::new(star::exp::measure::Fixed {
+                mode: DriverMode::Sync(mode.clone()),
+                rescaled: true,
+                label: "ring",
+            })
+        })
+    };
+    let mut t2 = Table::new("simulated outcome (one job, straggling worker 1)", &[
+        "mode", "TTA_s", "JCT_s", "acc_%",
+    ]);
+    let chosen_name = d.mode.name();
+    for (label, mode) in [
+        ("full ring".to_string(), SyncMode::ArRing { removed: 0, tw_ms: 0.0 }),
+        (chosen_name, d.mode.clone()),
+    ] {
+        let mut cfg = DriverConfig {
+            arch: Arch::AllReduce,
+            seed,
+            record_series: false,
+            ..Default::default()
+        };
+        cfg.throttles.push((0, 1, 0.3, 0.6));
+        let specs = vec![JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 4,
+            workers: n,
+            ps_count: 1,
+            ps_on_gpu_servers: false,
+        }];
+        let (stats, _) = Driver::new(cfg, specs, mk_fixed(mode)).run();
+        let s = &stats[0];
+        t2.rowf(&[
+            table::s(label),
+            match s.tta_s {
+                Some(v) => table::f(v, 0),
+                None => table::s(">cap"),
+            },
+            table::f(s.jct_s, 0),
+            table::f(s.converged_value, 2),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Trace replay: run the full §V comparison on a Philly-style trace —
+//! either generated (default) or parsed from a CSV
+//! (`--trace file.csv`, rows `jobid,submit_s,num_gpus[,model]`).
+//!
+//! Run: `cargo run --release --example trace_replay -- [--jobs 40]
+//!       [--arch ps|ar] [--seed 0] [--trace file.csv]`
+
+use star::baselines::make_policy;
+use star::cli::Args;
+use star::driver::{Driver, DriverConfig};
+use star::stats;
+use star::table::{self, Table};
+use star::trace::{generate, parse_philly_csv, Arch, TraceConfig};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> star::Result<()> {
+    let args = Args::parse_env();
+    args.check_known(&["jobs", "arch", "seed", "trace"])?;
+    let jobs = args.usize_or("jobs", 40)?;
+    let seed = args.u64_or("seed", 0)?;
+    let arch = match args.str_or("arch", "ps").as_str() {
+        "ar" => Arch::AllReduce,
+        _ => Arch::Ps,
+    };
+    let tc = TraceConfig { jobs, seed, span_s: jobs as f64 * 280.0, ..Default::default() };
+    let trace = match args.get("trace") {
+        Some(path) => parse_philly_csv(&std::fs::read_to_string(path)?, &tc)?,
+        None => generate(&tc),
+    };
+
+    let systems: Vec<&str> = match arch {
+        Arch::Ps => vec!["SSGD", "ASGD", "Sync-Switch", "LB-BSP", "LGC", "Zeno++", "STAR-H", "STAR-ML"],
+        Arch::AllReduce => vec!["SSGD", "LB-BSP", "LGC", "STAR-H", "STAR-ML"],
+    };
+    let mut t = Table::new(
+        &format!("trace replay: {} jobs, {arch:?}", trace.len()),
+        &["system", "TTA_mean_s", "JCT_mean_s", "acc_%", "ppl", "stragglers", "reached"],
+    );
+    for sys in systems {
+        let cfg = DriverConfig { arch, seed, record_series: false, ..Default::default() };
+        let name = sys.to_string();
+        let (stats_v, _) =
+            Driver::new(cfg, trace.clone(), Box::new(move |_| make_policy(&name))).run();
+        let tta: Vec<f64> = stats_v.iter().filter_map(|s| s.tta_s).collect();
+        let jct: Vec<f64> = stats_v.iter().map(|s| s.jct_s).collect();
+        let acc: Vec<f64> =
+            stats_v.iter().filter(|s| !s.is_nlp).map(|s| s.converged_value).collect();
+        let ppl: Vec<f64> =
+            stats_v.iter().filter(|s| s.is_nlp).map(|s| s.converged_value).collect();
+        let strag: u64 = stats_v.iter().map(|s| s.straggler_episodes).sum();
+        t.rowf(&[
+            table::s(sys),
+            table::f(stats::mean(&tta), 0),
+            table::f(stats::mean(&jct), 0),
+            table::f(stats::mean(&acc), 2),
+            table::f(stats::mean(&ppl), 1),
+            table::i(strag as i64),
+            table::s(format!("{}/{}", tta.len(), stats_v.len())),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT: lower the L2 graphs (which embed the L1 Pallas kernels) to HLO TEXT
+for the rust runtime.
+
+HLO *text*, never `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (behind the `xla` 0.1.6
+crate) rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs per model config C in --configs:
+    artifacts/<C>/init.hlo.txt          (seed)                -> params
+    artifacts/<C>/train_step.hlo.txt    (params, tokens)      -> (loss, grads)
+    artifacts/<C>/eval_loss.hlo.txt     (params, tokens)      -> loss
+    artifacts/<C>/apply_update.hlo.txt  (params, acc, scale)  -> params
+    artifacts/<C>/grad_acc.hlo.txt      (acc, g, w)           -> acc'
+plus artifacts/predictor.hlo.txt (LSTM, §IV-A) and artifacts/manifest.json
+describing shapes so the rust side never hard-codes them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import predictor as P
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def emit_config(cfg: M.ModelConfig, out_dir: str) -> dict:
+    cdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+    pp = M.padded_param_count(cfg)
+    params_spec = jax.ShapeDtypeStruct((pp,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    scalar1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    t0 = time.time()
+    sizes = {
+        "init": lower_to_file(M.make_init(cfg), (seed_spec,),
+                              os.path.join(cdir, "init.hlo.txt")),
+        "train_step": lower_to_file(M.make_train_step(cfg),
+                                    (params_spec, tokens_spec),
+                                    os.path.join(cdir, "train_step.hlo.txt")),
+        "eval_loss": lower_to_file(M.make_eval_loss(cfg),
+                                   (params_spec, tokens_spec),
+                                   os.path.join(cdir, "eval_loss.hlo.txt")),
+        "apply_update": lower_to_file(M.make_apply_update(cfg),
+                                      (params_spec, params_spec, scalar1),
+                                      os.path.join(cdir, "apply_update.hlo.txt")),
+        "grad_acc": lower_to_file(M.make_grad_acc(cfg),
+                                  (params_spec, params_spec, scalar1),
+                                  os.path.join(cdir, "grad_acc.hlo.txt")),
+    }
+    dt = time.time() - t0
+    print(f"[aot] {cfg.name}: params={M.param_count(cfg):,} (padded {pp:,}) "
+          f"lowered 5 modules in {dt:.1f}s "
+          f"({sum(sizes.values()) / 1e6:.1f} MB HLO text)")
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "use_pallas_matmul": cfg.use_pallas_matmul,
+        "param_count": M.param_count(cfg),
+        "padded_param_count": pp,
+        "artifacts": {k: f"{cfg.name}/{k}.hlo.txt" for k in sizes},
+        "hlo_bytes": sizes,
+    }
+
+
+def emit_predictor(out_dir: str) -> dict:
+    t0 = time.time()
+    weights, mse = P.train_lstm(seed=0, steps=200)
+    fn = P.make_predictor(weights)
+    hist_spec = jax.ShapeDtypeStruct((P.WINDOW, P.N_FEATURES), jnp.float32)
+    n = lower_to_file(fn, (hist_spec,), os.path.join(out_dir, "predictor.hlo.txt"))
+    print(f"[aot] predictor: trained LSTM (mse={mse:.5f}) in "
+          f"{time.time() - t0:.1f}s, {n / 1e3:.0f} KB HLO")
+    return {
+        "window": P.WINDOW,
+        "features": P.N_FEATURES,
+        "hidden": P.HIDDEN,
+        "train_mse": mse,
+        "artifact": "predictor.hlo.txt",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,base",
+                    help="comma list from: " + ",".join(M.CONFIGS))
+    ap.add_argument("--skip-predictor", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "interchange": "hlo-text", "configs": {}}
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        manifest["configs"][cfg.name] = emit_config(cfg, args.out_dir)
+    if not args.skip_predictor:
+        manifest["predictor"] = emit_predictor(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

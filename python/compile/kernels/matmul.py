@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: tiled matmul for the transformer hot spot.
+
+Hardware adaptation (paper targets A100/CUDA, we target the TPU model —
+see DESIGN.md §Hardware-Adaptation): the CUDA idiom of threadblock tiling
+with a shared-memory accumulator becomes a Pallas grid over (M/bm, N/bn,
+K/bk) output-revisiting tiles. The K axis is the innermost grid dimension,
+so each (i, j) output tile stays resident in VMEM while the kernel walks
+the K strip — the same HBM↔VMEM schedule the paper's per-worker GEMMs get
+from CUTLASS-style threadblock tiling. Block shapes default to 128×128,
+the MXU systolic-array native tile.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+on the rust CPU client. Real-TPU perf is estimated analytically in
+DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. VMEM budget check (see DESIGN.md §Perf):
+# bm*bk + bk*bn + bm*bn floats = 3*128*128*4 B = 192 KiB << 16 MiB VMEM.
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (prefers powers of two)."""
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Output-revisiting accumulation: o[i,j] += x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # jnp.dot on f32 blocks maps onto the MXU (bf16 inputs would use the
+    # native systolic datapath; we keep f32 for CPU-exact numerics).
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_raw(
+    x: jax.Array,
+    y: jax.Array,
+    bm: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Pallas tiled matmul, forward only. Shapes must tile evenly."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul: both fwd and bwd run the L1 kernel,
+    so the whole train_step's GEMM FLOPs go through Pallas."""
+    return matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g — also tiled Pallas GEMMs.
+    return matmul_raw(g, y.T), matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (x, y, o tiles resident)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU issue slots doing useful work for this tiling:
+    ratio of real FLOPs to FLOPs after padding each block to the 128x128x128
+    systolic tile. 1.0 when blocks are MXU-aligned."""
+
+    def pad(v: int, t: int = 128) -> int:
+        return ((v + t - 1) // t) * t
+
+    real = 2.0 * m * n * k
+    padded = 2.0 * pad(bm) * pad(bn) * pad(bk) * (m // bm) * (n // bn) * (k // bk)
+    return real / padded if padded else 0.0

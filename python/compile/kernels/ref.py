@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the L1 Pallas kernels. pytest asserts the kernels
+match these to float tolerance across shape/dtype sweeps (hypothesis)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def accumulate_ref(acc, g, w):
+    return acc + w[0] * g
+
+
+def sgd_apply_ref(params, acc, scale):
+    return params - scale[0] * acc

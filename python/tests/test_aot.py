@@ -1,0 +1,57 @@
+"""AOT path: tiny config lowers to parseable HLO text + manifest schema."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_header(tmp_path):
+    cfg = M.CONFIGS["tiny"]
+    pp = M.padded_param_count(cfg)
+    path = tmp_path / "apply.hlo.txt"
+    n = aot.lower_to_file(
+        M.make_apply_update(cfg),
+        (jax.ShapeDtypeStruct((pp,), jnp.float32),
+         jax.ShapeDtypeStruct((pp,), jnp.float32),
+         jax.ShapeDtypeStruct((1,), jnp.float32)),
+        str(path))
+    text = path.read_text()
+    assert n == len(text) > 0
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # pallas interpret-mode must lower to plain HLO: no Mosaic custom-calls
+    assert "mosaic" not in text.lower()
+
+
+def test_emit_config_manifest_fields(tmp_path):
+    cfg = M.CONFIGS["tiny"]
+    entry = aot.emit_config(cfg, str(tmp_path))
+    for key in ("param_count", "padded_param_count", "artifacts", "vocab",
+                "seq_len", "batch"):
+        assert key in entry
+    for name, rel in entry["artifacts"].items():
+        p = tmp_path / rel
+        assert p.exists() and p.stat().st_size > 0, name
+    assert entry["padded_param_count"] % M.PAD_MULTIPLE == 0
+
+
+def test_repo_artifacts_manifest_if_built():
+    """If `make artifacts` has run, the manifest must be consistent."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(root, "manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built yet")
+    m = json.load(open(man))
+    assert m["interchange"] == "hlo-text"
+    for cfg in m["configs"].values():
+        for rel in cfg["artifacts"].values():
+            assert os.path.exists(os.path.join(root, rel)), rel

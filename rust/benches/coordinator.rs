@@ -1,0 +1,87 @@
+//! Coordinator hot-loop benchmarks: round planning per mode, gradient
+//! aggregation (pure-Rust fallback vs naive), comm-tree construction,
+//! prediction pipeline, resource shares (the per-iteration inner loop).
+
+use star::agg;
+use star::benchkit::Bencher;
+use star::cluster::{Cluster, ClusterConfig, Res, Role, Task};
+use star::predict::{ArPredictor, History, IterTimeModel, ResourcePredictor};
+use star::prevent::CommTree;
+use star::simrng::Rng;
+use star::sync::{plan_round, SyncMode};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seeded(5);
+
+    let times: Vec<f64> = (0..12).map(|_| rng.range(0.2, 2.0)).collect();
+    for mode in [
+        SyncMode::Ssgd,
+        SyncMode::Asgd,
+        SyncMode::StaticX(4),
+        SyncMode::DynamicX,
+        SyncMode::ArRing { removed: 2, tw_ms: 90.0 },
+    ] {
+        b.bench(&format!("plan_round {} (N=12)", mode.name()), || {
+            plan_round(&mode, &times, &times)
+        });
+    }
+
+    // gradient aggregation (1M params, 4 reports)
+    let p = 1_000_000;
+    let grads: Vec<Vec<f32>> = (0..4).map(|k| vec![0.1 * k as f32; p]).collect();
+    let grefs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let mut params = vec![0.5f32; p];
+    let mut scratch = vec![0.0f32; p];
+    b.bench("xorder_update fused (1M params, x=4)", || {
+        agg::xorder_update(&mut params, &grefs, 0.01, &mut scratch);
+    });
+    b.throughput("param", 4.0 * p as f64);
+    let mut out = vec![0.0f32; p];
+    b.bench("mean_naive (1M params, x=4)", || {
+        agg::mean_naive(&grefs, &mut out);
+    });
+
+    // comm tree construction
+    let bw: Vec<f64> = (0..12).map(|_| rng.range(0.5, 8.0)).collect();
+    b.bench("CommTree::build (N=12, b=3)", || CommTree::build(&bw, 3));
+
+    // prediction pipeline: history push + AR predict + regressor
+    let mut h = History::new();
+    for _ in 0..32 {
+        h.push(rng.range(0.2, 1.0), rng.range(0.2, 1.0), 0.4);
+    }
+    let mut model = IterTimeModel::new();
+    for _ in 0..64 {
+        let x = IterTimeModel::features(250.0, 60.0, 30.0, rng.range(1.0, 4.0), rng.range(1.0, 6.0));
+        model.observe(&x, rng.range(0.2, 1.5));
+    }
+    b.bench("predict pipeline (AR + ridge)", || {
+        let (c, bw_) = ArPredictor.predict(&h);
+        let x = IterTimeModel::features(250.0, 60.0, 30.0, c * 3.0, bw_ * 6.0);
+        model.predict(&x)
+    });
+
+    // cluster shares: the per-iteration inner loop at realistic occupancy
+    let mut c = Cluster::new(ClusterConfig::default());
+    for j in 0..20 {
+        c.add_task(Task {
+            job: j,
+            role: Role::Ps { idx: 0 },
+            server: 0,
+            cpu_demand: rng.range(1.0, 6.0),
+            bw_demand: rng.range(0.3, 3.0),
+            cpu_cap: 1.0,
+            bw_cap: 1.0,
+            cpu_throttle: 1.0,
+            bw_throttle: 1.0,
+            active: true,
+        });
+    }
+    let mut t = 0.0;
+    b.bench("cluster shares (20 tasks/server)", || {
+        t += 0.37;
+        c.shares(0, Res::Cpu, t)
+    });
+    b.throughput("share-queries", 1.0);
+}

@@ -1,0 +1,53 @@
+//! Decision-path benchmarks (Fig 28's hot path): STAR-H heuristic
+//! enumeration, STAR-ML features+inference, dynamic clustering, LR scaling.
+//! The paper's python heuristic costs ~970 ms per decision; these measure
+//! the rust reimplementation (µs scale — see EXPERIMENTS.md §Perf).
+
+use star::benchkit::Bencher;
+use star::decide::{choose_ar_heuristic, choose_ps_heuristic, MlDecider};
+use star::models::ZOO;
+use star::simrng::Rng;
+use star::sync::{candidate_modes_ps, cluster_times};
+
+fn main() {
+    let mut b = Bencher::new();
+    let spec = &ZOO[4];
+    let mut rng = Rng::seeded(3);
+
+    for n in [4usize, 8, 12] {
+        let pred: Vec<f64> = (0..n).map(|_| rng.range(0.2, 2.5)).collect();
+        b.bench(&format!("STAR-H choose_ps (N={n})"), || {
+            choose_ps_heuristic(spec, 150.0, n, &pred)
+        });
+    }
+
+    let pred8: Vec<f64> = (0..8).map(|_| rng.range(0.2, 2.5)).collect();
+    b.bench("STAR-H choose_ar (N=8, 7 t_w grid)", || {
+        choose_ar_heuristic(spec, 150.0, 8, 3, &star::star::TW_GRID_MS, &pred8)
+    });
+
+    // trained ML decider
+    let mut ml = MlDecider::new();
+    for _ in 0..300 {
+        let p: Vec<f64> = (0..8).map(|_| rng.range(0.2, 2.5)).collect();
+        for m in candidate_modes_ps(8) {
+            let est = star::decide::time_to_progress_ps(spec, 100.0, 8, &m, &p);
+            ml.observe(&MlDecider::features(spec, 100.0, 8, &p, &m), est);
+        }
+    }
+    b.bench("STAR-ML choose (N=8, trained)", || {
+        ml.choose(spec, 150.0, 8, &pred8, candidate_modes_ps(8))
+    });
+
+    b.bench("dynamic clustering (N=12)", || {
+        let p: Vec<f64> = (0..12).map(|_| rng.range(0.2, 2.5)).collect();
+        cluster_times(&p, 0.15, 0.02)
+    });
+
+    b.bench("ridge online observe+fit (D=10)", || {
+        let p: Vec<f64> = (0..8).map(|_| rng.range(0.2, 2.5)).collect();
+        let x = MlDecider::features(spec, 100.0, 8, &p, &star::sync::SyncMode::Ssgd);
+        ml.observe(&x, 1.0);
+        ml.ridge.fit();
+    });
+}

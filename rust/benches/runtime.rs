@@ -1,0 +1,60 @@
+//! PJRT runtime benchmarks: the real compute hot path — per-worker train
+//! step, fused grad-acc/apply kernels, full x-order round — on the tiny
+//! and base configs. Skips cleanly when artifacts are absent.
+
+use star::benchkit::Bencher;
+use star::runtime::{synth_corpus_batch, Manifest, Runtime, TrainSession};
+use star::simrng::Rng;
+
+fn main() {
+    let man = match Manifest::discover() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime bench: {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let mut b = Bencher::quick();
+    let mut rng = Rng::seeded(2);
+
+    for config in ["tiny", "base"] {
+        if !man.config_names().iter().any(|n| n == config) {
+            continue;
+        }
+        let mut s = TrainSession::new(&rt, &man, config).expect("session");
+        s.init_params(0).expect("init");
+        let info = s.info.clone();
+        let toks = synth_corpus_batch(&info, &mut rng);
+        let tokens_per_step = (info.batch * info.seq_len) as f64;
+
+        b.bench(&format!("train_step [{config}] ({} params)", info.param_count), || {
+            s.train_step(&toks).expect("step")
+        });
+        b.throughput("tokens", tokens_per_step);
+
+        let (_, g) = s.train_step(&toks).expect("step");
+        let acc = vec![0.0f32; info.padded_param_count];
+        b.bench(&format!("grad_acc kernel [{config}]"), || {
+            s.grad_acc(&acc, &g, 1.0).expect("acc")
+        });
+        b.throughput("params", info.padded_param_count as f64);
+
+        b.bench(&format!("apply_update kernel [{config}]"), || {
+            s.apply_update(&g, 0.0).expect("apply") // scale 0: params unchanged
+        });
+        b.throughput("params", info.padded_param_count as f64);
+
+        let grads: Vec<Vec<f32>> = (0..4).map(|_| g.clone()).collect();
+        b.bench(&format!("xorder_update x=4 [{config}]"), || {
+            s.apply_update(&g, 0.0).expect("warm");
+            s.xorder_update(&grads, 0.0).expect("xorder")
+        });
+    }
+
+    // predictor artifact
+    if let Ok(p) = star::runtime::LstmPredictor::new(&rt, &man) {
+        let rows: Vec<[f32; 2]> = (0..32).map(|i| [0.5 + 0.01 * i as f32, 0.4]).collect();
+        b.bench("LSTM predictor artifact", || p.predict_rows(&rows).expect("lstm"));
+    }
+}

@@ -1,0 +1,56 @@
+//! End-to-end simulation benchmarks — one per §V table family: the full
+//! trace replay that regenerates Figs 18–22 (per system), plus the raw
+//! event-engine throughput.
+
+use star::baselines::make_policy;
+use star::benchkit::Bencher;
+use star::driver::{Driver, DriverConfig};
+use star::sim::Engine;
+use star::simrng::Rng;
+use star::trace::{generate, Arch, TraceConfig};
+
+fn main() {
+    let mut b = Bencher::quick();
+
+    // raw event-engine throughput
+    b.bench("sim::Engine 100k events", || {
+        let mut e = Engine::new();
+        let mut rng = Rng::seeded(1);
+        for i in 0..100_000u32 {
+            e.schedule_at(rng.range(0.0, 1e6), i);
+        }
+        let mut n = 0u32;
+        while e.next().is_some() {
+            n += 1;
+        }
+        n
+    });
+    b.throughput("events", 200_000.0);
+
+    // per-system end-to-end trace runs (the Fig 18 row generators)
+    for sys in ["SSGD", "ASGD", "LGC", "STAR-H", "STAR-ML"] {
+        let name = sys.to_string();
+        b.bench(&format!("trace replay 8 jobs [{sys}] (PS)"), move || {
+            let trace =
+                generate(&TraceConfig { jobs: 8, span_s: 2000.0, ..Default::default() });
+            let cfg = DriverConfig { record_series: false, ..Default::default() };
+            let n2 = name.clone();
+            let (stats, _) =
+                Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2))).run();
+            stats.len()
+        });
+    }
+
+    let name = "STAR-H".to_string();
+    b.bench("trace replay 8 jobs [STAR-H] (AR)", move || {
+        let trace = generate(&TraceConfig { jobs: 8, span_s: 2000.0, ..Default::default() });
+        let cfg = DriverConfig {
+            arch: Arch::AllReduce,
+            record_series: false,
+            ..Default::default()
+        };
+        let n2 = name.clone();
+        let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2))).run();
+        stats.len()
+    });
+}

@@ -1,0 +1,105 @@
+//! Pure-Rust gradient aggregation fallback.
+//!
+//! The production path aggregates via the AOT Pallas kernel
+//! (`grad_acc.hlo.txt` / `apply_update.hlo.txt`, see `runtime`). This module
+//! is (a) the CPU fallback when artifacts are not built, (b) the oracle the
+//! integration tests compare the PJRT path against, and (c) a bench subject
+//! (chunked and auto-vectorizable vs naive).
+
+/// acc += w * g, elementwise. Chunked for auto-vectorization.
+pub fn accumulate(acc: &mut [f32], g: &[f32], w: f32) {
+    assert_eq!(acc.len(), g.len());
+    const CHUNK: usize = 64;
+    let mut ai = acc.chunks_exact_mut(CHUNK);
+    let mut gi = g.chunks_exact(CHUNK);
+    for (a, gg) in (&mut ai).zip(&mut gi) {
+        for k in 0..CHUNK {
+            a[k] += w * gg[k];
+        }
+    }
+    for (a, gg) in ai.into_remainder().iter_mut().zip(gi.remainder()) {
+        *a += w * gg;
+    }
+}
+
+/// p -= scale * acc, elementwise (fused SGD apply).
+pub fn sgd_apply(params: &mut [f32], acc: &[f32], scale: f32) {
+    assert_eq!(params.len(), acc.len());
+    const CHUNK: usize = 64;
+    let mut pi = params.chunks_exact_mut(CHUNK);
+    let mut ai = acc.chunks_exact(CHUNK);
+    for (p, a) in (&mut pi).zip(&mut ai) {
+        for k in 0..CHUNK {
+            p[k] -= scale * a[k];
+        }
+    }
+    for (p, a) in pi.into_remainder().iter_mut().zip(ai.remainder()) {
+        *p -= scale * a;
+    }
+}
+
+/// Mean of `x` gradient slices into `out` (naive bench baseline: extra pass).
+pub fn mean_naive(grads: &[&[f32]], out: &mut [f32]) {
+    out.fill(0.0);
+    for g in grads {
+        assert_eq!(g.len(), out.len());
+        for (o, v) in out.iter_mut().zip(g.iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / grads.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// x-order update exactly as the coordinator composes it: accumulate x
+/// reports then apply with scale = lr/x.
+pub fn xorder_update(params: &mut [f32], grads: &[&[f32]], lr: f32, scratch: &mut [f32]) {
+    scratch.fill(0.0);
+    for g in grads {
+        accumulate(scratch, g, 1.0);
+    }
+    sgd_apply(params, scratch, lr / grads.len() as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_matches_scalar() {
+        let mut acc = vec![1.0f32; 131];
+        let g: Vec<f32> = (0..131).map(|i| i as f32).collect();
+        accumulate(&mut acc, &g, 0.5);
+        for (i, &v) in acc.iter().enumerate() {
+            assert_eq!(v, 1.0 + 0.5 * i as f32);
+        }
+    }
+
+    #[test]
+    fn sgd_apply_matches_scalar() {
+        let mut p = vec![2.0f32; 77];
+        let a: Vec<f32> = (0..77).map(|i| (i % 5) as f32).collect();
+        sgd_apply(&mut p, &a, 0.1);
+        for (i, &v) in p.iter().enumerate() {
+            assert!((v - (2.0 - 0.1 * (i % 5) as f32)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xorder_equals_mean_sgd() {
+        let n = 515;
+        let mut p: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let p0 = p.clone();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| 0.5 * i as f32 % 3.0).collect();
+        let mut scratch = vec![0.0f32; n];
+        xorder_update(&mut p, &[&g1, &g2], 0.2, &mut scratch);
+        let mut want = vec![0.0f32; n];
+        mean_naive(&[&g1, &g2], &mut want);
+        for i in 0..n {
+            assert!((p[i] - (p0[i] - 0.2 * want[i])).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,481 @@
+//! The six comparison systems of §V, as driver policies:
+//! SSGD, ASGD, Zeno++ [23], LGC [28], Sync-Switch [29], LB-BSP [15]
+//! (plus the AR-adapted LGC the paper describes).
+
+use crate::driver::{DriverMode, Policy, PolicyDecision, RoundObs};
+use crate::predict::FixedDurationRule;
+use crate::sync::SyncMode;
+use crate::trace::Arch;
+
+fn base_mode(arch: Arch) -> DriverMode {
+    match arch {
+        Arch::Ps => DriverMode::Sync(SyncMode::Ssgd),
+        Arch::AllReduce => DriverMode::Sync(SyncMode::ArRing { removed: 0, tw_ms: 0.0 }),
+    }
+}
+
+/// Vanilla bulk-synchronous SGD.
+pub struct Ssgd;
+
+impl Policy for Ssgd {
+    fn name(&self) -> &'static str {
+        "SSGD"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let mut d = PolicyDecision::simple(base_mode(obs.arch));
+        d.lr_rescaled = true; // SSGD runs its tuned LR
+        d
+    }
+}
+
+/// Vanilla asynchronous SGD (PS architecture only in the paper's eval).
+/// Runs the *SSGD-tuned* LR — O7's point: the optimal LR shifts and
+/// vanilla ASGD doesn't retune.
+pub struct Asgd;
+
+impl Policy for Asgd {
+    fn name(&self) -> &'static str {
+        "ASGD"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        match obs.arch {
+            Arch::Ps => PolicyDecision::simple(DriverMode::Sync(SyncMode::Asgd)),
+            Arch::AllReduce => {
+                let mut d = PolicyDecision::simple(base_mode(obs.arch));
+                d.lr_rescaled = true;
+                d
+            }
+        }
+    }
+}
+
+/// Zeno++ [23]: ASGD with bounded staleness; a validation set filters
+/// harmful (stale) gradients before applying, costing extra decision time
+/// per update but keeping converged accuracy near-synchronous.
+pub struct ZenoPp {
+    /// validation overhead per round (scoring candidate gradients)
+    pub validate_s: f64,
+}
+
+impl Default for ZenoPp {
+    fn default() -> Self {
+        ZenoPp { validate_s: 0.08 }
+    }
+}
+
+impl Policy for ZenoPp {
+    fn name(&self) -> &'static str {
+        "Zeno++"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let mut d = match obs.arch {
+            Arch::Ps => PolicyDecision::simple(DriverMode::Sync(SyncMode::Asgd)),
+            Arch::AllReduce => PolicyDecision::simple(base_mode(obs.arch)),
+        };
+        // bounded staleness + validation filtering: accuracy behaves like
+        // high-order sync even though updates are per-report
+        d.x_floor = 0.8;
+        d.lr_rescaled = true;
+        d.overhead_s = self.validate_s;
+        // validation consumes the PS's CPU continuously: modeled through
+        // the ASGD demand factor already applied by the driver
+        d
+    }
+}
+
+/// Live Gradient Compensation [28]: the K fastest workers' gradients form
+/// each update (K = 5 per §V); in AR the N−K slowest workers are removed
+/// from the ring and attached to the highest-bandwidth ring worker.
+pub struct Lgc {
+    pub k: usize,
+}
+
+impl Default for Lgc {
+    fn default() -> Self {
+        Lgc { k: 5 }
+    }
+}
+
+impl Policy for Lgc {
+    fn name(&self) -> &'static str {
+        "LGC"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let k = self.k.min(obs.n);
+        let mut d = match obs.arch {
+            Arch::Ps => PolicyDecision::simple(DriverMode::FirstK(k)),
+            Arch::AllReduce => PolicyDecision::simple(DriverMode::Sync(SyncMode::ArRing {
+                removed: obs.n - k.min(obs.n - 1),
+                tw_ms: 0.0,
+            })),
+        };
+        // LGC compensates the K-batch with live-gradient scaling ≈ LR kept
+        // proportional; treat as rescaled
+        d.lr_rescaled = true;
+        d
+    }
+}
+
+/// Sync-Switch [29]: SSGD normally; a worker straggling continuously for
+/// 5 s switches the job to ASGD, reverting when stragglers clear. Does
+/// NOT retune the LR after the switch (O7's criticism).
+pub struct SyncSwitch {
+    rule: Option<FixedDurationRule>,
+}
+
+impl Default for SyncSwitch {
+    fn default() -> Self {
+        SyncSwitch { rule: None }
+    }
+}
+
+impl Policy for SyncSwitch {
+    fn name(&self) -> &'static str {
+        "Sync-Switch"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let rule = self.rule.get_or_insert_with(|| FixedDurationRule::new(obs.n, 5.0));
+        let last: Vec<f64> =
+            obs.last_times.iter().map(|&t| if t.is_finite() { t } else { 0.5 }).collect();
+        let flags = rule.observe(obs.now, &last);
+        let any = flags.iter().any(|&f| f);
+        match (obs.arch, any) {
+            (Arch::Ps, true) => {
+                // switch to ASGD with the SSGD LR (no retuning)
+                let mut d = PolicyDecision::simple(DriverMode::Sync(SyncMode::Asgd));
+                d.lr_rescaled = false;
+                d.overhead_s = 0.02;
+                d
+            }
+            _ => {
+                let mut d = PolicyDecision::simple(base_mode(obs.arch));
+                d.lr_rescaled = true;
+                d.overhead_s = 0.02;
+                d
+            }
+        }
+    }
+}
+
+/// LB-BSP [15]: stays bulk-synchronous but resizes per-worker batches —
+/// if the fastest worker beats the slowest for `window` consecutive
+/// rounds, move `delta` samples of batch from slow to fast.
+pub struct LbBsp {
+    pub window: u64,
+    pub delta_frac: f64,
+    streak: u64,
+    fast: usize,
+    slow: usize,
+    frac: Vec<f64>,
+}
+
+impl Default for LbBsp {
+    fn default() -> Self {
+        // §V: 8 iterations, 32 samples (of 128 => 0.25)
+        LbBsp { window: 8, delta_frac: 0.25, streak: 0, fast: 0, slow: 0, frac: Vec::new() }
+    }
+}
+
+impl Policy for LbBsp {
+    fn name(&self) -> &'static str {
+        "LB-BSP"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        if self.frac.len() != obs.n {
+            self.frac = vec![1.0; obs.n];
+        }
+        let last: Vec<f64> =
+            obs.last_times.iter().map(|&t| if t.is_finite() { t } else { f64::NAN }).collect();
+        if last.iter().all(|t| t.is_finite()) {
+            let fast = (0..obs.n)
+                .min_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+                .unwrap();
+            let slow = (0..obs.n)
+                .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+                .unwrap();
+            if fast == self.fast && slow == self.slow && last[slow] > 1.2 * last[fast] {
+                self.streak += 1;
+            } else {
+                self.streak = 0;
+                self.fast = fast;
+                self.slow = slow;
+            }
+            if self.streak >= self.window {
+                self.streak = 0;
+                let d = self.delta_frac.min(self.frac[self.slow] - 0.25);
+                if d > 0.0 {
+                    self.frac[self.slow] -= d;
+                    self.frac[self.fast] += d;
+                }
+            }
+        }
+        let mut d = PolicyDecision::simple(base_mode(obs.arch));
+        d.lr_rescaled = true;
+        d.batch_frac = self.frac.clone();
+        d
+    }
+}
+
+/// Kardam [43]: asynchronous updates where stale gradients are decayed
+/// rather than dropped — updates fire per report, and the coordinator's
+/// staleness-aware dampening keeps quality above vanilla ASGD. Modeled as
+/// ASGD with a quality floor between Zeno++'s filtered path and raw ASGD
+/// (decayed stale gradients ≈ partially filtered), plus a small per-round
+/// scoring overhead.
+pub struct Kardam;
+
+impl Policy for Kardam {
+    fn name(&self) -> &'static str {
+        "Kardam"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let mut d = match obs.arch {
+            Arch::Ps => PolicyDecision::simple(DriverMode::Sync(SyncMode::Asgd)),
+            Arch::AllReduce => PolicyDecision::simple(base_mode(obs.arch)),
+        };
+        d.x_floor = 0.5; // dampening recovers some, not all, quality
+        d.lr_rescaled = true;
+        d.overhead_s = 0.03;
+        d
+    }
+}
+
+/// DSSP [18]: stale-synchronous parallel with a dynamically adjusted
+/// staleness threshold — here the threshold maps onto the x-order ladder:
+/// mild predicted skew widens the allowed staleness (smaller x), uniform
+/// times tighten it back to full synchrony.
+pub struct Dssp {
+    threshold: usize,
+}
+
+impl Default for Dssp {
+    fn default() -> Self {
+        Dssp { threshold: 0 }
+    }
+}
+
+impl Policy for Dssp {
+    fn name(&self) -> &'static str {
+        "DSSP"
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let last: Vec<f64> =
+            obs.last_times.iter().map(|&t| if t.is_finite() { t } else { 0.5 }).collect();
+        let devs = crate::predict::deviation_ratios(&last);
+        let worst = devs.iter().cloned().fold(0.0, f64::max);
+        // dynamic threshold: grow while skew persists, shrink when calm
+        if worst > 0.4 {
+            self.threshold = (self.threshold + 1).min(obs.n.saturating_sub(2));
+        } else if worst < 0.2 && self.threshold > 0 {
+            self.threshold -= 1;
+        }
+        let mode = if self.threshold == 0 {
+            base_mode(obs.arch)
+        } else {
+            match obs.arch {
+                Arch::Ps => DriverMode::Sync(SyncMode::StaticX(obs.n - self.threshold)),
+                Arch::AllReduce => DriverMode::Sync(SyncMode::ArRing {
+                    removed: self.threshold,
+                    tw_ms: 60.0,
+                }),
+            }
+        };
+        let mut d = PolicyDecision::simple(mode);
+        d.lr_rescaled = false; // DSSP does not retune the LR (O7)
+        d
+    }
+}
+
+/// All baselines for an architecture, as labeled factories (§V runs SSGD,
+/// ASGD, Sync-Switch, LB-BSP, LGC, Zeno++ on PS; SSGD, LB-BSP, LGC on AR).
+pub fn baseline_names(arch: Arch) -> Vec<&'static str> {
+    match arch {
+        Arch::Ps => vec!["SSGD", "ASGD", "Sync-Switch", "LB-BSP", "LGC", "Zeno++"],
+        Arch::AllReduce => vec!["SSGD", "LB-BSP", "LGC"],
+    }
+}
+
+/// Instantiate a policy (baseline or STAR variant) by its §V name.
+pub fn make_policy(name: &str) -> Box<dyn Policy> {
+    use crate::decide::DeciderKind;
+    match name {
+        "SSGD" => Box::new(Ssgd),
+        "ASGD" => Box::new(Asgd),
+        "Zeno++" => Box::new(ZenoPp::default()),
+        "LGC" => Box::new(Lgc::default()),
+        "Sync-Switch" => Box::new(SyncSwitch::default()),
+        "LB-BSP" => Box::new(LbBsp::default()),
+        "Kardam" => Box::new(Kardam),
+        "DSSP" => Box::new(Dssp::default()),
+        "STAR-H" => Box::new(crate::star::Star::new(DeciderKind::Heuristic)),
+        "STAR-ML" => Box::new(crate::star::Star::new(DeciderKind::Ml)),
+        "STAR-" => Box::new(crate::star::Star::new(DeciderKind::Early)),
+        other => {
+            // ablations: STAR/SP etc (heuristic kind, per §V-C)
+            for (n, abl) in crate::star::ablations() {
+                if n == other {
+                    return Box::new(crate::star::Star::with_ablation(
+                        DeciderKind::Heuristic,
+                        abl,
+                        n,
+                    ));
+                }
+            }
+            panic!("unknown system {other:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ZOO;
+
+    fn obs<'a>(last: &'a [f64], pred: &'a [f64], flags: &'a [bool], arch: Arch) -> RoundObs<'a> {
+        RoundObs {
+            job: 0,
+            n: last.len(),
+            arch,
+            spec: &ZOO[0],
+            step: 100,
+            progress: 50.0,
+            now: 50.0,
+            predicted_times: pred,
+            last_times: last,
+            value: 40.0,
+            predicted_stragglers: flags,
+        }
+    }
+
+    #[test]
+    fn ssgd_always_sync() {
+        let p = vec![0.3, 3.0, 0.3, 0.3];
+        let f = vec![false; 4];
+        let d = Ssgd.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+    }
+
+    #[test]
+    fn asgd_always_async_on_ps() {
+        let p = vec![0.3; 4];
+        let f = vec![false; 4];
+        let d = Asgd.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Asgd));
+        assert!(!d.lr_rescaled, "vanilla ASGD keeps the SSGD LR (O7)");
+    }
+
+    #[test]
+    fn zeno_has_floor_and_overhead() {
+        let p = vec![0.3; 4];
+        let f = vec![false; 4];
+        let d = ZenoPp::default().decide(&obs(&p, &p, &f, Arch::Ps));
+        assert!(d.x_floor > 0.5);
+        assert!(d.overhead_s > 0.0);
+    }
+
+    #[test]
+    fn lgc_first_k_on_ps_ring_removal_on_ar() {
+        let p = vec![0.3; 8];
+        let f = vec![false; 8];
+        let d = Lgc::default().decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::FirstK(5));
+        let d2 = Lgc::default().decide(&obs(&p, &p, &f, Arch::AllReduce));
+        assert!(matches!(d2.mode, DriverMode::Sync(SyncMode::ArRing { removed: 3, .. })));
+    }
+
+    #[test]
+    fn sync_switch_needs_persistent_straggler() {
+        let mut ss = SyncSwitch::default();
+        let slow = vec![0.3, 0.3, 0.3, 1.0];
+        let f = vec![false; 4];
+        // first sighting at t=50: not yet 5 s of straggling
+        let d1 = ss.decide(&obs(&slow, &slow, &f, Arch::Ps));
+        assert_eq!(d1.mode, DriverMode::Sync(SyncMode::Ssgd));
+        // 6 s later: switch, with unscaled LR
+        let mut o = obs(&slow, &slow, &f, Arch::Ps);
+        o.now = 56.0;
+        let d2 = ss.decide(&o);
+        assert_eq!(d2.mode, DriverMode::Sync(SyncMode::Asgd));
+        assert!(!d2.lr_rescaled);
+        // straggler clears: revert to SSGD
+        let ok = vec![0.3; 4];
+        let mut o3 = obs(&ok, &ok, &f, Arch::Ps);
+        o3.now = 57.0;
+        let d3 = ss.decide(&o3);
+        assert_eq!(d3.mode, DriverMode::Sync(SyncMode::Ssgd));
+    }
+
+    #[test]
+    fn lb_bsp_shifts_batches_after_streak() {
+        let mut lb = LbBsp::default();
+        let times = vec![0.3, 0.3, 0.3, 0.9];
+        let f = vec![false; 4];
+        let mut d = PolicyDecision::simple(DriverMode::Sync(SyncMode::Ssgd));
+        for i in 0..=9 {
+            let mut o = obs(&times, &times, &f, Arch::Ps);
+            o.now = 50.0 + i as f64;
+            d = lb.decide(&o);
+        }
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+        assert!(d.batch_frac[3] < 1.0, "slow worker sheds batch: {:?}", d.batch_frac);
+        assert!(d.batch_frac[0] > 1.0 || d.batch_frac.iter().sum::<f64>() > 3.99);
+        // total batch conserved
+        let total: f64 = d.batch_frac.iter().sum();
+        assert!((total - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn factory_builds_all_names() {
+        for arch in [Arch::Ps, Arch::AllReduce] {
+            for n in baseline_names(arch) {
+                let p = make_policy(n);
+                assert_eq!(p.name(), n);
+            }
+        }
+        for n in ["STAR-H", "STAR-ML", "STAR-", "STAR/SP", "STAR/Tree", "Kardam", "DSSP"] {
+            let p = make_policy(n);
+            assert_eq!(p.name(), n);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown system")]
+    fn factory_rejects_unknown() {
+        let _ = make_policy("NotASystem");
+    }
+
+    #[test]
+    fn kardam_is_dampened_asgd() {
+        let p = vec![0.3; 4];
+        let f = vec![false; 4];
+        let d = Kardam.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Asgd));
+        assert!(d.x_floor > 0.0 && d.x_floor < 0.8, "between ASGD and Zeno++");
+    }
+
+    #[test]
+    fn dssp_threshold_widens_then_recovers() {
+        let mut dssp = Dssp::default();
+        let f = vec![false; 8];
+        let skewed = vec![0.3, 0.3, 0.3, 0.3, 0.3, 0.3, 0.3, 0.9];
+        // persistent skew widens the staleness window (x shrinks)
+        let mut d = dssp.decide(&obs(&skewed, &skewed, &f, Arch::Ps));
+        d = dssp.decide(&obs(&skewed, &skewed, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::StaticX(6)));
+        assert!(!d.lr_rescaled, "DSSP does not retune LR (O7)");
+        // calm times tighten back toward synchrony
+        let calm = vec![0.3; 8];
+        let d2 = dssp.decide(&obs(&calm, &calm, &f, Arch::Ps));
+        assert_eq!(d2.mode, DriverMode::Sync(SyncMode::StaticX(7)));
+        let d3 = dssp.decide(&obs(&calm, &calm, &f, Arch::Ps));
+        assert_eq!(d3.mode, DriverMode::Sync(SyncMode::Ssgd));
+    }
+}

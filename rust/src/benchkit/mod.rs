@@ -1,0 +1,148 @@
+//! Micro-benchmark substrate (criterion is unavailable offline): warmup,
+//! calibrated iteration counts, mean/p50/p99, and throughput reporting.
+//! `cargo bench` targets in `rust/benches/` are built on this.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  min {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. Measures wall-time per call of `f`, auto-scaling the
+/// sample count so total time stays near `budget`.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(1200),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(30),
+            budget: Duration::from_millis(250),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` should return something to keep the work
+    /// observable; it is black_box'ed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + initial rate estimate.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = w0.elapsed().as_nanos() as f64 / warm_iters as f64;
+        // Choose sample layout: up to 100 samples, batched if calls are fast.
+        let target_samples = 60u64;
+        let budget_ns = self.budget.as_nanos() as f64;
+        let calls_total = (budget_ns / per_call.max(1.0)).max(3.0) as u64;
+        let batch = (calls_total / target_samples).max(1);
+        let samples = (calls_total / batch).clamp(3, 300);
+
+        let mut times = Vec::with_capacity(samples as usize);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples * batch,
+            mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+            p50_ns: crate::stats::percentile_sorted(&times, 50.0),
+            p99_ns: crate::stats::percentile_sorted(&times, 99.0),
+            min_ns: times[0],
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Report a throughput line derived from the last result.
+    pub fn throughput(&self, unit: &str, per_iter: f64) {
+        if let Some(r) = self.results.last() {
+            let per_sec = per_iter / (r.mean_ns / 1e9);
+            println!("{:<44} {:>14.0} {unit}/s", format!("  ↳ {}", r.name), per_sec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let r = b.bench("sum", || (0..1000u64).sum::<u64>());
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.01);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,38 @@
+//! Experiment harness entrypoint: regenerates every table and figure of
+//! the paper's evaluation (DESIGN.md §4 maps ids to sections).
+//!
+//! ```text
+//! experiments <id> [--jobs N] [--seed S] [--out results] [--quick]
+//!   id ∈ { fig1..fig14, tab1, fig16..fig29, all }
+//! ```
+
+use star::cli::Args;
+use star::exp::{dispatch, ExpCtx};
+
+fn main() {
+    let args = Args::parse_env();
+    let Some(id) = args.subcommand() else {
+        eprintln!(
+            "usage: experiments <figN|tab1|all> [--jobs N] [--seed S] [--out DIR] [--quick]\n\
+             experiment index: DESIGN.md §4"
+        );
+        std::process::exit(2);
+    };
+    let run = || -> star::Result<()> {
+        args.check_known(&["jobs", "seed", "out", "quick"])?;
+        let ctx = ExpCtx {
+            jobs: args.usize_or("jobs", 120)?,
+            seed: args.u64_or("seed", 0)?,
+            out_dir: args.str_or("out", "results").into(),
+            quick: args.flag("quick"),
+        };
+        let t0 = std::time::Instant::now();
+        dispatch(id, &ctx)?;
+        eprintln!("[exp] {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+        Ok(())
+    };
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

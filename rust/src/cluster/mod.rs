@@ -1,0 +1,693 @@
+//! Cluster substrate: servers, tasks, and resource contention.
+//!
+//! Reproduces the testbed of §III — 5 GPU instances (8 GPUs, 96 vCPUs
+//! each) + 3 CPU instances (64 vCPUs) — as a contention model in which the
+//! paper's straggler phenomena *emerge* rather than being injected:
+//!
+//! * every task (worker or PS) carries steady CPU/bandwidth demands from
+//!   the model zoo (PSs demand more than workers, O4; ASGD more than
+//!   SSGD, O5);
+//! * each server grants **max–min fair (water-filling) shares** of its
+//!   time-varying available capacity among co-located tasks;
+//! * available capacity = nameplate − smooth background load (AR-like
+//!   hash noise, paper [31]) − transient contention spikes with
+//!   heavy-tailed durations (0.1–500 s, Fig 7);
+//! * `cpulimit`/`tc`-style throttling (§V) is a per-task cap.
+//!
+//! Iteration times are then computed from these shares by the driver;
+//! deviation ratios above 20% are stragglers (§II).
+
+use crate::simrng::Rng;
+
+/// Resource kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Res {
+    Cpu,
+    Bw,
+}
+
+/// Server class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerKind {
+    /// p4d.24xlarge-like: 8 GPUs, 96 vCPUs
+    Gpu,
+    /// m4.16xlarge-like: 0 GPUs, 64 vCPUs
+    Cpu,
+}
+
+/// Task role within a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Worker { rank: usize },
+    Ps { idx: usize },
+}
+
+impl Role {
+    pub fn is_ps(&self) -> bool {
+        matches!(self, Role::Ps { .. })
+    }
+}
+
+/// A transient contention spike (external co-tenant interference).
+#[derive(Clone, Copy, Debug)]
+pub struct Spike {
+    pub start: f64,
+    pub end: f64,
+    pub cpu_frac: f64,
+    pub bw_frac: f64,
+}
+
+/// One server.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub kind: ServerKind,
+    pub cpus: f64,
+    pub bw_gbps: f64,
+    pub gpus: usize,
+    pub gpus_used: usize,
+    /// lazily extended contention spikes, ordered by start
+    spikes: Vec<Spike>,
+    spike_horizon: f64,
+    spike_rng: Rng,
+}
+
+/// A registered task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub job: usize,
+    pub role: Role,
+    pub server: usize,
+    pub cpu_demand: f64,
+    pub bw_demand: f64,
+    /// dynamic caps (prevention / equalization), fraction of demand (0,1]
+    pub cpu_cap: f64,
+    pub bw_cap: f64,
+    /// static throttles (the paper's cpulimit / tc), composed with caps
+    pub cpu_throttle: f64,
+    pub bw_throttle: f64,
+    pub active: bool,
+}
+
+impl Task {
+    pub fn capped_cpu(&self) -> f64 {
+        self.cpu_demand * self.cpu_cap * self.cpu_throttle
+    }
+
+    pub fn capped_bw(&self) -> f64 {
+        self.bw_demand * self.bw_cap * self.bw_throttle
+    }
+}
+
+pub type TaskId = usize;
+
+/// Cluster configuration (defaults = the paper's testbed).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub gpu_servers: usize,
+    pub cpu_servers: usize,
+    pub gpus_per_server: usize,
+    pub gpu_server_cpus: f64,
+    pub cpu_server_cpus: f64,
+    /// effective per-server network budget for training traffic, Gbps.
+    /// Calibrated (not nameplate 400G) so that PS fan-in contention can
+    /// saturate links as in Fig 9 — see DESIGN.md §2.
+    pub gpu_server_bw: f64,
+    pub cpu_server_bw: f64,
+    /// mean seconds between contention spikes per server
+    pub spike_interval_s: f64,
+    /// lognormal duration parameters (median ≈ 4 s, tail to ~500 s, Fig 7)
+    pub spike_dur_mu: f64,
+    pub spike_dur_sigma: f64,
+    /// background load fraction bounds
+    pub bg_base: f64,
+    pub bg_amp: f64,
+    /// mean seconds between per-task straggler events (0 = off)
+    pub task_event_interval_s: f64,
+    /// per-task event magnitude range (fraction of the task's share lost)
+    pub task_event_mag: (f64, f64),
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            gpu_servers: 5,
+            cpu_servers: 3,
+            gpus_per_server: 8,
+            gpu_server_cpus: 96.0,
+            cpu_server_cpus: 64.0,
+            gpu_server_bw: 50.0,
+            cpu_server_bw: 25.0,
+            spike_interval_s: 240.0,
+            spike_dur_mu: 1.4,    // e^1.4 ≈ 4 s median
+            spike_dur_sigma: 1.6, // p99.9 ≈ 500 s
+            bg_base: 0.08,
+            bg_amp: 0.14,
+            task_event_interval_s: 75.0,
+            task_event_mag: (0.4, 0.85),
+            seed: 0,
+        }
+    }
+}
+
+/// The cluster: servers + task registry + contention model.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub servers: Vec<Server>,
+    pub tasks: Vec<Task>,
+    /// per-server list of active task ids (hot-path index; shares() is
+    /// called on every simulated iteration)
+    by_server: Vec<Vec<TaskId>>,
+    /// lazily-created per-task straggler-event streams (heavy-tailed
+    /// slowdowns hitting one task: pinned-core co-tenants, NIC queue
+    /// imbalance, GC pauses — the paper's 0.1–500 s events, Fig 7)
+    task_events: Vec<SpikeStream>,
+    noise_seed: u64,
+}
+
+/// A lazily-extended stream of heavy-tailed events.
+#[derive(Clone, Debug)]
+pub struct SpikeStream {
+    spikes: Vec<Spike>,
+    horizon: f64,
+    rng: Rng,
+}
+
+impl SpikeStream {
+    fn new(rng: Rng) -> Self {
+        SpikeStream { spikes: Vec::new(), horizon: 0.0, rng }
+    }
+
+    /// Extend to time `t` and return the active magnitude for `res`.
+    fn frac_at(&mut self, t: f64, interval: f64, mag: (f64, f64), dur_mu: f64, dur_sigma: f64, res: Res) -> f64 {
+        while self.horizon <= t {
+            let gap = self.rng.exponential(1.0 / interval);
+            let start = self.horizon + gap;
+            let dur = self.rng.lognormal(dur_mu, dur_sigma).clamp(0.1, 500.0);
+            let both = self.rng.chance(0.35);
+            let on_cpu = both || self.rng.chance(0.5);
+            let m = self.rng.range(mag.0, mag.1);
+            self.spikes.push(Spike {
+                start,
+                end: start + dur,
+                cpu_frac: if on_cpu { m } else { 0.0 },
+                bw_frac: if !on_cpu || both { m } else { 0.0 },
+            });
+            self.horizon = start;
+        }
+        let mut frac: f64 = 0.0;
+        for sp in self.spikes.iter().rev() {
+            if sp.start > t {
+                continue;
+            }
+            if sp.end > t {
+                frac += match res {
+                    Res::Cpu => sp.cpu_frac,
+                    Res::Bw => sp.bw_frac,
+                };
+            }
+            if sp.start + 500.0 < t {
+                break;
+            }
+        }
+        frac.min(0.9)
+    }
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed, 0x5eed);
+        let mut servers = Vec::new();
+        for _ in 0..cfg.gpu_servers {
+            servers.push(Server {
+                kind: ServerKind::Gpu,
+                cpus: cfg.gpu_server_cpus,
+                bw_gbps: cfg.gpu_server_bw,
+                gpus: cfg.gpus_per_server,
+                gpus_used: 0,
+                spikes: Vec::new(),
+                spike_horizon: 0.0,
+                spike_rng: rng.fork(servers_tag(servers_len(&servers))),
+            });
+        }
+        for _ in 0..cfg.cpu_servers {
+            servers.push(Server {
+                kind: ServerKind::Cpu,
+                cpus: cfg.cpu_server_cpus,
+                bw_gbps: cfg.cpu_server_bw,
+                gpus: 0,
+                gpus_used: 0,
+                spikes: Vec::new(),
+                spike_horizon: 0.0,
+                spike_rng: rng.fork(servers_tag(servers_len(&servers))),
+            });
+        }
+        let noise_seed = rng.next_u64();
+        let by_server = vec![Vec::new(); servers.len()];
+        Cluster { cfg, servers, tasks: Vec::new(), by_server, task_events: Vec::new(), noise_seed }
+    }
+
+    pub fn gpu_server_ids(&self) -> Vec<usize> {
+        (0..self.servers.len()).filter(|&s| self.servers[s].kind == ServerKind::Gpu).collect()
+    }
+
+    pub fn cpu_server_ids(&self) -> Vec<usize> {
+        (0..self.servers.len()).filter(|&s| self.servers[s].kind == ServerKind::Cpu).collect()
+    }
+
+    // -- task registry -------------------------------------------------------
+
+    /// Register a task; workers consume a GPU slot on their server.
+    pub fn add_task(&mut self, task: Task) -> TaskId {
+        if matches!(task.role, Role::Worker { .. }) {
+            self.servers[task.server].gpus_used += 1;
+            debug_assert!(
+                self.servers[task.server].gpus_used <= self.servers[task.server].gpus,
+                "GPU oversubscription on server {}",
+                task.server
+            );
+        }
+        let server = task.server;
+        self.tasks.push(task);
+        let id = self.tasks.len() - 1;
+        self.by_server[server].push(id);
+        self.task_events.push(SpikeStream::new(Rng::new(
+            self.noise_seed ^ (id as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+            0x7a51,
+        )));
+        id
+    }
+
+    /// Deactivate a task (job finished) and release its GPU slot.
+    pub fn remove_task(&mut self, id: TaskId) {
+        if self.tasks[id].active {
+            self.tasks[id].active = false;
+            let server = self.tasks[id].server;
+            self.by_server[server].retain(|&x| x != id);
+            if matches!(self.tasks[id].role, Role::Worker { .. }) {
+                self.servers[server].gpus_used -= 1;
+            }
+        }
+    }
+
+    pub fn free_gpus(&self, server: usize) -> usize {
+        self.servers[server].gpus - self.servers[server].gpus_used
+    }
+
+    /// Number of active PSs hosted on `server`.
+    pub fn ps_count(&self, server: usize) -> usize {
+        self.by_server[server].iter().filter(|&&i| self.tasks[i].role.is_ps()).count()
+    }
+
+    // -- contention model ----------------------------------------------------
+
+    /// Smooth background load fraction in [bg_base, bg_base+bg_amp]:
+    /// cosine-interpolated hash noise at two time scales (seconds +
+    /// minutes), deterministic in (seed, server, resource, t).
+    pub fn background_frac(&self, server: usize, res: Res, t: f64) -> f64 {
+        let tag = (server as u64) << 8 | res_tag(res);
+        let fast = smooth_noise(self.noise_seed ^ tag, t);
+        let slow = smooth_noise(self.noise_seed ^ tag ^ 0xABCD, t / 60.0);
+        (self.cfg.bg_base + self.cfg.bg_amp * (0.6 * slow + 0.4 * fast)).clamp(0.0, 0.95)
+    }
+
+    /// Extend + query contention spikes overlapping time `t`.
+    fn spike_frac(&mut self, server: usize, res: Res, t: f64) -> f64 {
+        let cfg_interval = self.cfg.spike_interval_s;
+        let (mu, sigma) = (self.cfg.spike_dur_mu, self.cfg.spike_dur_sigma);
+        let srv = &mut self.servers[server];
+        while srv.spike_horizon <= t {
+            let gap = srv.spike_rng.exponential(1.0 / cfg_interval);
+            let start = srv.spike_horizon + gap;
+            let dur = srv.spike_rng.lognormal(mu, sigma).clamp(0.1, 500.0);
+            let both = srv.spike_rng.chance(0.3);
+            let on_cpu = both || srv.spike_rng.chance(0.5);
+            let mag = srv.spike_rng.range(0.2, 0.7);
+            srv.spikes.push(Spike {
+                start,
+                end: start + dur,
+                cpu_frac: if on_cpu { mag } else { 0.0 },
+                bw_frac: if !on_cpu || both { mag } else { 0.0 },
+            });
+            srv.spike_horizon = start;
+        }
+        // sum overlapping (rare to have >1); scan tail (spikes sorted by start)
+        let mut frac: f64 = 0.0;
+        for s in srv.spikes.iter().rev() {
+            if s.start > t {
+                continue;
+            }
+            if s.end > t {
+                frac += match res {
+                    Res::Cpu => s.cpu_frac,
+                    Res::Bw => s.bw_frac,
+                };
+            }
+            // spikes are start-ordered; once start+500 < t nothing earlier overlaps
+            if s.start + 500.0 < t {
+                break;
+            }
+        }
+        frac.min(0.9)
+    }
+
+    /// Available capacity of `res` on `server` at time `t`.
+    pub fn available(&mut self, server: usize, res: Res, t: f64) -> f64 {
+        let cap = match res {
+            Res::Cpu => self.servers[server].cpus,
+            Res::Bw => self.servers[server].bw_gbps,
+        };
+        let bg = self.background_frac(server, res, t);
+        (cap * (1.0 - bg)).max(0.05 * cap)
+    }
+
+    /// Max–min fair share of `res` for every active task on `server` at
+    /// time `t`. Returns (task_id, share) pairs.
+    pub fn shares(&mut self, server: usize, res: Res, t: f64) -> Vec<(TaskId, f64)> {
+        let avail = self.available(server, res, t);
+        let ids: Vec<TaskId> = self.by_server[server].clone();
+        let demands: Vec<f64> = ids
+            .iter()
+            .map(|&i| match res {
+                Res::Cpu => self.tasks[i].capped_cpu(),
+                Res::Bw => self.tasks[i].capped_bw(),
+            })
+            .collect();
+        let mut alloc = water_fill(&demands, avail);
+        // per-task interference: co-tenant contention hits individual
+        // tasks unevenly (pinned cores, NIC queues), which is where the
+        // paper's *within-server* stragglers come from (Fig 3/4). Scaled
+        // by how loaded the server is.
+        let load = (demands.iter().sum::<f64>() / avail.max(1e-9)).min(1.5);
+        for (k, &id) in ids.iter().enumerate() {
+            let inter = self.task_interference(server, id, res, t, load);
+            alloc[k] *= 1.0 - inter;
+        }
+        ids.into_iter().zip(alloc).collect()
+    }
+
+    /// Interference fraction in [0, 0.85] on one task: smooth per-task
+    /// noise (amplified under load) + heavy-tailed contention spikes that
+    /// hit a hashed subset of the server's tasks.
+    fn task_interference(&mut self, server: usize, id: TaskId, res: Res, t: f64, load: f64) -> f64 {
+        // smooth component: per-task two-scale noise, cubed for a skewed
+        // (mostly-small, occasionally-large) distribution
+        let tag = 0x7a5c_u64 ^ ((id as u64) << 16) ^ res_tag(res);
+        let fast = smooth_noise(self.noise_seed ^ tag, t / 3.0);
+        let slow = smooth_noise(self.noise_seed ^ tag ^ 0x99, t / 45.0);
+        let u = 0.5 * fast + 0.5 * slow;
+        // superlinear in load: relieving a loaded server (balanced PS
+        // placement, §IV-D1 equalization caps) pays off disproportionately
+        let smooth = 1.1 * u * u * load.clamp(0.0, 1.2).powf(1.5);
+        // spike component: victim-hashed server spikes
+        let spike = self.spike_frac(server, res, t);
+        let victim = {
+            let h = (self.noise_seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            (h >> 32) & 1 == 0
+        };
+        let hit = if victim { spike } else { 0.0 };
+        // per-task heavy-tailed straggler events (the dominant mechanism)
+        let own = if self.cfg.task_event_interval_s > 0.0 {
+            let (mu, sigma) = (self.cfg.spike_dur_mu, self.cfg.spike_dur_sigma);
+            self.task_events[id].frac_at(
+                t,
+                self.cfg.task_event_interval_s,
+                self.cfg.task_event_mag,
+                mu,
+                sigma,
+                res,
+            )
+        } else {
+            0.0
+        };
+        (smooth + hit + own).clamp(0.0, 0.9)
+    }
+
+    /// Share granted to one task (water-filled against its co-located set).
+    pub fn share_of(&mut self, id: TaskId, res: Res, t: f64) -> f64 {
+        let server = self.tasks[id].server;
+        self.shares(server, res, t)
+            .into_iter()
+            .find(|&(i, _)| i == id)
+            .map(|(_, s)| s)
+            .unwrap_or(0.0)
+    }
+
+    /// Fraction of nameplate capacity in use on `server` (for Fig 9).
+    pub fn utilization(&mut self, server: usize, res: Res, t: f64) -> f64 {
+        let cap = match res {
+            Res::Cpu => self.servers[server].cpus,
+            Res::Bw => self.servers[server].bw_gbps,
+        };
+        let granted: f64 = self.shares(server, res, t).iter().map(|&(_, s)| s).sum();
+        let external = cap - self.available(server, res, t);
+        ((granted + external) / cap).clamp(0.0, 1.0)
+    }
+}
+
+/// Max–min fair (water-filling) allocation of `capacity` among `demands`;
+/// no task receives more than its demand, and unmet demand shares the
+/// remainder equally.
+pub fn water_fill(demands: &[f64], capacity: f64) -> Vec<f64> {
+    let n = demands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: f64 = demands.iter().sum();
+    if total <= capacity {
+        return demands.to_vec();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    let mut alloc = vec![0.0; n];
+    let mut remaining = capacity;
+    let mut left = n;
+    for (k, &i) in order.iter().enumerate() {
+        let fair = remaining / left as f64;
+        if demands[i] <= fair {
+            alloc[i] = demands[i];
+            remaining -= demands[i];
+        } else {
+            // everyone from here on gets the equal split
+            for &j in &order[k..] {
+                alloc[j] = remaining / left as f64;
+            }
+            return alloc;
+        }
+        left -= 1;
+    }
+    alloc
+}
+
+fn res_tag(res: Res) -> u64 {
+    match res {
+        Res::Cpu => 1,
+        Res::Bw => 2,
+    }
+}
+
+fn servers_len(v: &[Server]) -> usize {
+    v.len()
+}
+
+fn servers_tag(i: usize) -> u64 {
+    0x5e4e_0000 + i as u64
+}
+
+/// Deterministic smooth noise in [0, 1]: cosine interpolation between
+/// per-integer-cell hash values.
+fn smooth_noise(seed: u64, t: f64) -> f64 {
+    let cell = t.floor();
+    let frac = t - cell;
+    let h = |c: f64| {
+        let mut x = seed ^ (c as i64 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    };
+    let w = 0.5 - 0.5 * (std::f64::consts::PI * frac).cos();
+    h(cell) * (1.0 - w) + h(cell + 1.0) * w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(job: usize, server: usize, cpu: f64, bw: f64) -> Task {
+        Task {
+            job,
+            role: Role::Worker { rank: 0 },
+            server,
+            cpu_demand: cpu,
+            bw_demand: bw,
+            cpu_cap: 1.0,
+            bw_cap: 1.0,
+            cpu_throttle: 1.0,
+            bw_throttle: 1.0,
+            active: true,
+        }
+    }
+
+    #[test]
+    fn water_fill_under_capacity_grants_demand() {
+        let a = water_fill(&[1.0, 2.0, 3.0], 10.0);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn water_fill_over_capacity_is_max_min_fair() {
+        let a = water_fill(&[1.0, 4.0, 4.0], 6.0);
+        assert!((a[0] - 1.0).abs() < 1e-12);
+        assert!((a[1] - 2.5).abs() < 1e-12);
+        assert!((a[2] - 2.5).abs() < 1e-12);
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn water_fill_never_exceeds_demand_or_capacity() {
+        let mut rng = Rng::seeded(5);
+        for _ in 0..200 {
+            let n = rng.usize(1, 12);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.1, 10.0)).collect();
+            let cap = rng.range(0.5, 30.0);
+            let a = water_fill(&demands, cap);
+            let sum: f64 = a.iter().sum();
+            assert!(sum <= cap + 1e-9 || sum <= demands.iter().sum::<f64>() + 1e-9);
+            for (x, d) in a.iter().zip(&demands) {
+                assert!(*x <= d + 1e-9);
+                assert!(*x >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn default_testbed_shape() {
+        let c = Cluster::new(ClusterConfig::default());
+        assert_eq!(c.servers.len(), 8);
+        assert_eq!(c.gpu_server_ids().len(), 5);
+        assert_eq!(c.cpu_server_ids().len(), 3);
+        assert_eq!(c.servers[0].gpus, 8);
+        assert_eq!(c.servers[5].gpus, 0);
+    }
+
+    #[test]
+    fn gpu_slots_tracked() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        assert_eq!(c.free_gpus(0), 8);
+        let id = c.add_task(worker(0, 0, 2.0, 1.0));
+        assert_eq!(c.free_gpus(0), 7);
+        c.remove_task(id);
+        assert_eq!(c.free_gpus(0), 8);
+        c.remove_task(id); // idempotent
+        assert_eq!(c.free_gpus(0), 8);
+    }
+
+    #[test]
+    fn shares_respect_contention() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        // saturate CPU on server 0 with ten 12-vCPU tasks (120 > 96)
+        for j in 0..10 {
+            let mut t = worker(j, 0, 12.0, 0.5);
+            t.role = Role::Ps { idx: 0 }; // avoid GPU slots
+            c.add_task(t);
+        }
+        let sh = c.shares(0, Res::Cpu, 10.0);
+        let total: f64 = sh.iter().map(|&(_, s)| s).sum();
+        assert!(total <= 96.0 + 1e-6);
+        for &(_, s) in &sh {
+            assert!(s < 12.0); // contended: nobody gets full demand
+        }
+    }
+
+    #[test]
+    fn throttle_caps_share() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let id = c.add_task(worker(0, 0, 8.0, 1.0));
+        c.tasks[id].cpu_cap = 0.1; // cpulimit to 10%
+        let s = c.share_of(id, Res::Cpu, 5.0);
+        assert!(s <= 0.8 + 1e-9, "{s}");
+    }
+
+    #[test]
+    fn background_noise_is_smooth_and_bounded() {
+        let c = Cluster::new(ClusterConfig::default());
+        let mut prev = c.background_frac(0, Res::Cpu, 0.0);
+        for i in 1..200 {
+            let t = i as f64 * 0.1;
+            let v = c.background_frac(0, Res::Cpu, t);
+            assert!((0.0..=0.95).contains(&v));
+            assert!((v - prev).abs() < 0.15, "jump at {t}: {prev} -> {v}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn background_deterministic() {
+        let a = Cluster::new(ClusterConfig::default());
+        let b = Cluster::new(ClusterConfig::default());
+        for i in 0..50 {
+            let t = i as f64 * 3.7;
+            assert_eq!(a.background_frac(1, Res::Bw, t), b.background_frac(1, Res::Bw, t));
+        }
+    }
+
+    #[test]
+    fn spikes_heavy_tailed_and_reproducible() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        // force spike generation out to t=50_000 (spikes are applied
+        // per-task, so a task must be present)
+        c.add_task(worker(0, 0, 2.0, 1.0));
+        let _ = c.shares(0, Res::Cpu, 50_000.0);
+        let durs: Vec<f64> = c.servers[0].spikes.iter().map(|s| s.end - s.start).collect();
+        assert!(durs.len() > 50, "want many spikes, got {}", durs.len());
+        for d in &durs {
+            // tolerance: end = start + dur loses ~1e-11 at start ~ 5e4
+            assert!((0.0999..=500.001).contains(d), "{d}");
+        }
+        let max = durs.iter().cloned().fold(0.0, f64::max);
+        let med = crate::stats::median(&durs);
+        assert!(max > 20.0 * med, "heavy tail expected: max={max} med={med}");
+    }
+
+    #[test]
+    fn available_positive_and_below_capacity() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        for i in 0..100 {
+            let t = i as f64 * 13.3;
+            let a = c.available(2, Res::Bw, t);
+            assert!(a > 0.0 && a <= c.cfg.gpu_server_bw);
+        }
+    }
+
+    #[test]
+    fn ps_count_counts_only_active_ps() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let mut ps = worker(0, 3, 4.0, 2.0);
+        ps.role = Role::Ps { idx: 0 };
+        let a = c.add_task(ps.clone());
+        c.add_task(worker(0, 3, 2.0, 1.0));
+        assert_eq!(c.ps_count(3), 1);
+        c.remove_task(a);
+        assert_eq!(c.ps_count(3), 0);
+    }
+
+    #[test]
+    fn utilization_rises_with_load() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let before = c.utilization(4, Res::Cpu, 100.0);
+        for j in 0..12 {
+            let mut t = worker(j, 4, 10.0, 0.2);
+            t.role = Role::Ps { idx: 0 };
+            c.add_task(t);
+        }
+        let after = c.utilization(4, Res::Cpu, 100.0);
+        assert!(after > before);
+        assert!(after <= 1.0);
+    }
+}

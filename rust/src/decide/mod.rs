@@ -1,0 +1,430 @@
+//! Synchronization-mode determination (§IV-C): the PGNS heuristic
+//! (STAR-H, Eq. (1)–(3)) and the online ML regressor (STAR-ML), plus the
+//! early-decision variant (STAR-) that trades prediction freshness for
+//! zero training pause.
+
+use crate::models::ModelSpec;
+use crate::predict::Ridge;
+use crate::sync::{candidate_modes_ar, candidate_modes_ps, cluster_times, SyncMode};
+
+/// Which decision engine a STAR instance runs (§V calls these STAR-H,
+/// STAR-ML and STAR-).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeciderKind {
+    /// PGNS heuristic; decision pauses training (§V: ~970 ms in the
+    /// paper's python; we also *measure* our rust latency in Fig 28)
+    Heuristic,
+    /// online regressor bootstrapped from heuristic decisions; inference
+    /// overlaps training (no pause)
+    Ml,
+    /// heuristic executed one iteration early on stale predictions
+    Early,
+}
+
+/// Expected time to reach unit training progress for a PS-architecture
+/// mode (Eq. (1) generalized with the harmonic group-rate aggregation
+/// that Eq. (2) uses; SSGD = static-N, ASGD = static-1).
+///
+/// Steady state of an x-order round: each gradient group cycles at its
+/// own completion time t_g, producing one update of batch x·M/N per
+/// cycle; the g-th group's gradients land after g earlier updates, so its
+/// contribution carries the staleness discount γ^g (the same discount the
+/// training-progress model applies). Progress rate
+/// = Σ_g γ^(G−1) / (n_u(x·M/N) · t_g) — every group's gradients are G−1
+/// versions stale in steady state (G−1−g updates land after its read in
+/// the same round, then g more before its next apply); expected time to a
+/// unit of progress is the reciprocal.
+pub fn time_to_progress_ps(
+    spec: &ModelSpec,
+    progress: f64,
+    n: usize,
+    mode: &SyncMode,
+    predicted: &[f64],
+) -> f64 {
+    debug_assert_eq!(predicted.len(), n);
+    let m_total = (n * crate::models::WORKER_BATCH) as f64;
+    let per_worker = m_total / n as f64;
+    let groups: Vec<Vec<usize>> = match mode {
+        SyncMode::Ssgd => vec![(0..n).collect()],
+        SyncMode::Asgd => (0..n).map(|w| vec![w]).collect(),
+        SyncMode::StaticX(x) => {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+            order.chunks(*x).map(|c| c.to_vec()).collect()
+        }
+        SyncMode::DynamicX => cluster_times(predicted, 0.15, 0.02),
+        SyncMode::ArRing { .. } => {
+            unreachable!("AR modes go through time_to_progress_ar")
+        }
+    };
+    // order groups by completion time: earlier groups are fresher
+    let mut with_t: Vec<(f64, f64)> = groups
+        .iter()
+        .map(|g| {
+            let t_g = g.iter().map(|&w| predicted[w]).fold(0.0, f64::max).max(1e-6);
+            (t_g, g.len() as f64 * per_worker)
+        })
+        .collect();
+    with_t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let gamma = crate::progress::STALE_GAMMA;
+    let disc = gamma.powi(with_t.len() as i32 - 1);
+    let mut rate = 0.0;
+    for (t_g, batch) in &with_t {
+        rate += disc / (spec.n_u(progress, *batch) * t_g);
+    }
+    if rate <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / rate
+    }
+}
+
+/// Eq. (3): AR-architecture time to unit progress for removing `removed`
+/// stragglers with parent wait `tw_ms`. q = removed stragglers whose
+/// predicted time fits within t_ring + t_w.
+pub fn time_to_progress_ar(
+    spec: &ModelSpec,
+    progress: f64,
+    n: usize,
+    removed: usize,
+    tw_ms: f64,
+    predicted: &[f64],
+) -> f64 {
+    debug_assert_eq!(predicted.len(), n);
+    let removed = removed.min(n.saturating_sub(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+    let ring = &order[..n - removed];
+    let out = &order[n - removed..];
+    let t_ring = ring.iter().map(|&w| predicted[w]).fold(0.0, f64::max).max(1e-6);
+    let tw = tw_ms / 1e3;
+    let q = out.iter().filter(|&&w| predicted[w] <= t_ring + tw).count();
+    let m_total = (n * crate::models::WORKER_BATCH) as f64;
+    let batch = (n - removed + q) as f64 * m_total / n as f64;
+    spec.n_u(progress, batch) * (t_ring + tw)
+}
+
+/// One decision: the mode plus the LR it must run at (§IV-C LR scaling).
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub mode: SyncMode,
+    pub lr: f64,
+    /// estimated time to unit progress used for the pick (diagnostics)
+    pub est: f64,
+    /// next-best estimates, for prevention fallback ordering (§IV-D1)
+    pub ranked: Vec<(SyncMode, f64)>,
+}
+
+/// STAR-H: enumerate Eq. (1)/(2) over the PS candidates (§IV-C1).
+pub fn choose_ps_heuristic(
+    spec: &ModelSpec,
+    progress: f64,
+    n: usize,
+    predicted: &[f64],
+) -> Decision {
+    let mut ranked: Vec<(SyncMode, f64)> = candidate_modes_ps(n)
+        .into_iter()
+        .map(|m| {
+            let est = time_to_progress_ps(spec, progress, n, &m, predicted);
+            (m, est)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    decision_from(spec, n, predicted, ranked)
+}
+
+/// STAR-H for AR: enumerate x ∈ 1..=#stragglers and a t_w grid (§IV-C1).
+pub fn choose_ar_heuristic(
+    spec: &ModelSpec,
+    progress: f64,
+    n: usize,
+    stragglers: usize,
+    tw_grid_ms: &[f64],
+    predicted: &[f64],
+) -> Decision {
+    let mut ranked: Vec<(SyncMode, f64)> = candidate_modes_ar(stragglers, tw_grid_ms)
+        .into_iter()
+        .map(|m| {
+            let est = match &m {
+                SyncMode::ArRing { removed, tw_ms } => {
+                    time_to_progress_ar(spec, progress, n, *removed, *tw_ms, predicted)
+                }
+                _ => unreachable!(),
+            };
+            (m, est)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    decision_from(spec, n, predicted, ranked)
+}
+
+fn decision_from(
+    spec: &ModelSpec,
+    n: usize,
+    predicted: &[f64],
+    ranked: Vec<(SyncMode, f64)>,
+) -> Decision {
+    let (mode, est) = ranked[0].clone();
+    let lr = lr_for_mode(spec, n, &mode, predicted);
+    Decision { mode, lr, est, ranked }
+}
+
+/// LR scaling per §IV-C: r_new = (M_new/M)·r_ssgd with y = expected
+/// reports per update under the mode.
+pub fn lr_for_mode(spec: &ModelSpec, n: usize, mode: &SyncMode, predicted: &[f64]) -> f64 {
+    let y = expected_reports(n, mode, predicted);
+    crate::sync::scaled_lr(spec.base_lr, y.max(1) as usize, n)
+}
+
+/// Expected gradient reports per update under a mode.
+pub fn expected_reports(n: usize, mode: &SyncMode, predicted: &[f64]) -> u64 {
+    match mode {
+        SyncMode::Ssgd => n as u64,
+        SyncMode::Asgd => 1,
+        SyncMode::StaticX(x) => *x as u64,
+        SyncMode::DynamicX => {
+            let clusters = cluster_times(predicted, 0.15, 0.02);
+            if clusters.is_empty() {
+                n as u64
+            } else {
+                (predicted.len() as f64 / clusters.len() as f64).round().max(1.0) as u64
+            }
+        }
+        SyncMode::ArRing { removed, .. } => (n - removed.min(&(n - 1))) as u64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// STAR-ML: online regressor
+// ---------------------------------------------------------------------------
+
+/// Feature dimension for the mode-latency regressor (§IV-C2 inputs:
+/// per-worker predicted times summary, deviation ratio, model type,
+/// learning rate, training stage, and the mode descriptor).
+pub const ML_FEATURES: usize = 10;
+
+/// The STAR-ML regressor: predicts log(time to unit progress) for a
+/// (job-state, mode) pair. Bootstrapped online from STAR-H outcomes and
+/// then refined with observed outcomes.
+#[derive(Clone, Debug)]
+pub struct MlDecider {
+    pub ridge: Ridge<ML_FEATURES>,
+    pub samples: u64,
+    /// minimum observations before the regressor takes over from the
+    /// heuristic (§IV-C2: "switches once the ML model is trained")
+    pub min_samples: u64,
+}
+
+impl Default for MlDecider {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MlDecider {
+    pub fn new() -> Self {
+        MlDecider { ridge: Ridge::new(1e-3, 0.9995), samples: 0, min_samples: 200 }
+    }
+
+    pub fn trained(&self) -> bool {
+        self.samples >= self.min_samples
+    }
+
+    pub fn features(
+        spec: &ModelSpec,
+        progress: f64,
+        n: usize,
+        predicted: &[f64],
+        mode: &SyncMode,
+    ) -> [f64; ML_FEATURES] {
+        let min = predicted.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-6);
+        let max = predicted.iter().cloned().fold(0.0, f64::max);
+        let mean = predicted.iter().sum::<f64>() / n as f64;
+        let dev = (max - min) / min;
+        let y = expected_reports(n, mode, predicted) as f64;
+        let (is_dyn, tw) = match mode {
+            SyncMode::DynamicX => (1.0, 0.0),
+            SyncMode::ArRing { tw_ms, .. } => (0.0, *tw_ms / 1000.0),
+            _ => (0.0, 0.0),
+        };
+        [
+            1.0,
+            mean.ln().max(-8.0),
+            dev.min(10.0),
+            (progress + 1.0).ln(),
+            spec.grad_mb / 100.0,
+            spec.base_lr * 10.0,
+            y / n as f64,
+            is_dyn,
+            tw,
+            max.ln().max(-8.0),
+        ]
+    }
+
+    /// Record an observed outcome: the realized time per unit progress for
+    /// the state/mode the job just ran.
+    pub fn observe(&mut self, x: &[f64; ML_FEATURES], time_per_progress: f64) {
+        self.ridge.observe(x, time_per_progress.max(1e-6).ln());
+        self.samples += 1;
+    }
+
+    /// Choose the mode with minimum predicted latency among candidates.
+    pub fn choose(
+        &mut self,
+        spec: &ModelSpec,
+        progress: f64,
+        n: usize,
+        predicted: &[f64],
+        candidates: Vec<SyncMode>,
+    ) -> Decision {
+        let mut ranked: Vec<(SyncMode, f64)> = candidates
+            .into_iter()
+            .map(|m| {
+                let x = Self::features(spec, progress, n, predicted, &m);
+                let est = self.ridge.predict(&x).exp();
+                (m, est)
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        decision_from(spec, n, predicted, ranked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ZOO;
+
+    fn uniform(n: usize, t: f64) -> Vec<f64> {
+        vec![t; n]
+    }
+
+    #[test]
+    fn no_straggler_ssgd_beats_asgd() {
+        // O6: with no stragglers SSGD has lower TTA than ASGD, and the
+        // heuristic never picks ASGD in that state
+        let spec = &ZOO[0];
+        let pred = uniform(8, 0.3);
+        let d = choose_ps_heuristic(spec, 100.0, 8, &pred);
+        let t_ssgd = time_to_progress_ps(spec, 100.0, 8, &SyncMode::Ssgd, &pred);
+        let t_asgd = time_to_progress_ps(spec, 100.0, 8, &SyncMode::Asgd, &pred);
+        assert!(t_ssgd < t_asgd, "ssgd {t_ssgd} vs asgd {t_asgd}");
+        assert_ne!(d.mode, SyncMode::Asgd);
+        // the pick is within a whisker of full-sync (uniform times):
+        assert!(d.est <= t_ssgd * 1.001);
+    }
+
+    #[test]
+    fn severe_straggler_prefers_partial_modes() {
+        let spec = &ZOO[0];
+        let mut pred = uniform(8, 0.3);
+        pred[7] = 30.0; // pathological straggler
+        let d = choose_ps_heuristic(spec, 100.0, 8, &pred);
+        assert_ne!(d.mode, SyncMode::Ssgd, "must not wait 30 s per update");
+        let t_best = d.est;
+        let t_ssgd = time_to_progress_ps(spec, 100.0, 8, &SyncMode::Ssgd, &pred);
+        assert!(t_best < t_ssgd / 3.0);
+    }
+
+    #[test]
+    fn late_stage_penalizes_small_batches_more() {
+        // PGNS grows with step => async modes lose appeal later (O6)
+        let spec = &ZOO[3];
+        let mut pred = uniform(8, 0.3);
+        pred[7] = 0.55;
+        let early_gap = time_to_progress_ps(spec, 10.0, 8, &SyncMode::Asgd, &pred)
+            / time_to_progress_ps(spec, 10.0, 8, &SyncMode::Ssgd, &pred);
+        let late_gap = time_to_progress_ps(spec, 500.0, 8, &SyncMode::Asgd, &pred)
+            / time_to_progress_ps(spec, 500.0, 8, &SyncMode::Ssgd, &pred);
+        assert!(late_gap > early_gap);
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_clustered_times() {
+        // two clear clusters: dynamic groups them exactly; any static x
+        // that splits a cluster wastes waiting time
+        let spec = &ZOO[1];
+        let pred = vec![0.30, 0.31, 0.32, 0.33, 1.50, 1.52, 1.54, 1.56];
+        let t_dyn = time_to_progress_ps(spec, 100.0, 8, &SyncMode::DynamicX, &pred);
+        let t_3 = time_to_progress_ps(spec, 100.0, 8, &SyncMode::StaticX(3), &pred);
+        assert!(t_dyn < t_3, "dyn {t_dyn} vs static-3 {t_3}");
+    }
+
+    #[test]
+    fn ar_removal_helps_with_straggler() {
+        let spec = &ZOO[2];
+        let mut pred = uniform(8, 0.3);
+        pred[0] = 3.0;
+        let keep = time_to_progress_ar(spec, 100.0, 8, 0, 0.0, &pred);
+        let drop1 = time_to_progress_ar(spec, 100.0, 8, 1, 60.0, &pred);
+        assert!(drop1 < keep);
+        let d = choose_ar_heuristic(spec, 100.0, 8, 1, &[30.0, 60.0, 120.0], &pred);
+        assert!(matches!(d.mode, SyncMode::ArRing { removed: 1, .. }));
+    }
+
+    #[test]
+    fn ar_q_counts_fast_removed_workers() {
+        let spec = &ZOO[2];
+        let mut pred = uniform(8, 0.3);
+        pred[0] = 0.35; // mild "straggler": fits in a 100ms wait window
+        let with_wait = time_to_progress_ar(spec, 0.0, 8, 1, 100.0, &pred);
+        let no_wait = time_to_progress_ar(spec, 0.0, 8, 1, 0.0, &pred);
+        // waiting 100 ms recovers the report (bigger batch) — for a mild
+        // straggler the extra wait should pay for itself via n_u
+        let _ = (with_wait, no_wait); // both finite
+        assert!(with_wait.is_finite() && no_wait.is_finite());
+        // q effect: with the wait, batch is 8/8 instead of 7/8
+        // => n_u smaller
+        let nu_with = spec.n_u(0.0, 8.0 * 128.0);
+        let nu_without = spec.n_u(0.0, 7.0 * 128.0);
+        assert!(nu_with < nu_without);
+    }
+
+    #[test]
+    fn lr_scaling_follows_batch() {
+        let spec = &ZOO[0]; // base_lr = 0.1
+        let pred = uniform(8, 0.3);
+        assert!((lr_for_mode(spec, 8, &SyncMode::Ssgd, &pred) - 0.1).abs() < 1e-12);
+        assert!((lr_for_mode(spec, 8, &SyncMode::Asgd, &pred) - 0.0125).abs() < 1e-12);
+        assert!((lr_for_mode(spec, 8, &SyncMode::StaticX(4), &pred) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranked_modes_sorted_ascending() {
+        let spec = &ZOO[5];
+        let mut pred = uniform(6, 0.4);
+        pred[3] = 1.1;
+        let d = choose_ps_heuristic(spec, 500.0, 6, &pred);
+        for w in d.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(d.ranked[0].1, d.est);
+    }
+
+    #[test]
+    fn ml_learns_to_match_heuristic_ordering() {
+        let spec = &ZOO[0];
+        let mut ml = MlDecider::new();
+        let mut rng = crate::simrng::Rng::seeded(8);
+        // train on heuristic estimates across random states
+        for _ in 0..600 {
+            let n = 8;
+            let mut pred: Vec<f64> = (0..n).map(|_| rng.range(0.2, 0.5)).collect();
+            if rng.chance(0.5) {
+                pred[0] = rng.range(1.0, 4.0);
+            }
+            let prog = rng.range(0.0, 600.0);
+            for m in candidate_modes_ps(n) {
+                let est = time_to_progress_ps(spec, prog, n, &m, &pred);
+                let x = MlDecider::features(spec, prog, n, &pred, &m);
+                ml.observe(&x, est);
+            }
+        }
+        assert!(ml.trained());
+        // on a fresh heavy-straggler state the ML choice should avoid SSGD
+        let mut pred = uniform(8, 0.3);
+        pred[7] = 20.0;
+        let d = ml.choose(spec, 300.0, 8, &pred, candidate_modes_ps(8));
+        assert_ne!(d.mode, SyncMode::Ssgd);
+    }
+}

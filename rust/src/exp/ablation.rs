@@ -1,0 +1,82 @@
+//! §V-C ablations: Figs 23–27 (TTA, JCT, accuracy, perplexity, straggler
+//! counts for the STAR variants).
+
+use super::{band_str, band_str_f, run_systems, summarize, ExpCtx};
+use crate::stats;
+use crate::table::Table;
+use crate::trace::Arch;
+
+/// Variant set of §V-C. STAR-H carries /SP, /DS and /xS (per the paper);
+/// all others are evaluated on the full STAR too.
+pub fn ablation_systems() -> Vec<&'static str> {
+    vec![
+        "STAR-H", "STAR/SP", "STAR/xS", "STAR/DS", "STAR/PS", "STAR/W", "STAR/RS", "STAR/Mu",
+        "STAR/N", "STAR/Tree",
+    ]
+}
+
+pub fn fig23_to_27(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        let tag = if arch == Arch::Ps { "ps" } else { "ar" };
+        let results = run_systems(ctx, &ablation_systems(), arch);
+
+        let mk = |title: String, cols: &[&str]| Table::new(&title, cols);
+        let mut t23 = mk(format!("Fig 23 ({tag}) — TTA per job (s), STAR variants"),
+                         &["variant", "mean", "p1", "p99", "vs_STAR"]);
+        let mut t24 = mk(format!("Fig 24 ({tag}) — JCT per job (s), STAR variants"),
+                         &["variant", "mean", "p1", "p99", "vs_STAR"]);
+        let mut t25 = mk(format!("Fig 25 ({tag}) — accuracy per image job (%), STAR variants"),
+                         &["variant", "mean", "p1", "p99", "vs_STAR"]);
+        let mut t26 = mk(format!("Fig 26 ({tag}) — perplexity per NLP job, STAR variants"),
+                         &["variant", "mean", "p1", "p99", "vs_STAR"]);
+        let mut t27 = mk(format!("Fig 27 ({tag}) — straggler episodes per job, STAR variants"),
+                         &["variant", "mean", "p1", "p99", "vs_STAR"]);
+
+        let base = summarize(&results["STAR-H"]);
+        for sys in ablation_systems() {
+            let s = summarize(&results[sys]);
+            let rel = |v: f64, b: f64| -> String {
+                if b.abs() < 1e-9 {
+                    "-".into()
+                } else {
+                    format!("{:+.0}%", (v / b - 1.0) * 100.0)
+                }
+            };
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.tta)));
+            row.push(rel(stats::mean(&s.tta), stats::mean(&base.tta)));
+            t23.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.jct)));
+            row.push(rel(stats::mean(&s.jct), stats::mean(&base.jct)));
+            t24.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str_f(stats::band(&s.acc), 2));
+            row.push(format!("{:+.2}", stats::mean(&s.acc) - stats::mean(&base.acc)));
+            t25.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str_f(stats::band(&s.ppl), 1));
+            row.push(format!("{:+.1}", stats::mean(&s.ppl) - stats::mean(&base.ppl)));
+            t26.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.stragglers)));
+            row.push(rel(stats::mean(&s.stragglers), stats::mean(&base.stragglers)));
+            t27.row(row);
+        }
+
+        let print_one = |id: &str, t: &Table| {
+            if which == id || which == "all" || which == "fig23" {
+                t.print();
+                println!();
+                ctx.save(&format!("{id}_{tag}"), t);
+            }
+        };
+        print_one("fig23", &t23);
+        print_one("fig24", &t24);
+        print_one("fig25", &t25);
+        print_one("fig26", &t26);
+        print_one("fig27", &t27);
+    }
+    println!("(paper: every removed ingredient raises TTA/JCT and straggler counts, and lowers accuracy)\n");
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! §V evaluation: Figs 16–22.
+
+use super::measure::{run_single, Fixed};
+use super::{band_str, band_str_f, run_system, run_systems, summarize, ExpCtx};
+use crate::driver::DriverMode;
+use crate::models::ZOO;
+use crate::predict::{FixedDurationRule, RatioSeriesRule, Confusion, STRAGGLER_DEV};
+use crate::stats;
+use crate::sync::SyncMode;
+use crate::table::{self, Table};
+use crate::trace::Arch;
+
+/// Fig 16 — static x-order: converged accuracy + TTA for x ∈ {1,2,4,8}.
+pub fn fig16(ctx: &ExpCtx) -> crate::Result<()> {
+    let dense = ZOO.iter().position(|m| m.name == "DenseNet121").unwrap();
+    let mut t = Table::new(
+        "Fig 16 — x-order synchronization (8 workers, DenseNet121)",
+        &["mode", "converged_acc_%", "tta_s", "jct_s"],
+    );
+    for x in [1usize, 2, 4, 8] {
+        let s = run_single(
+            dense,
+            8,
+            Box::new(move |_| {
+                Box::new(Fixed {
+                    mode: DriverMode::Sync(if x == 8 {
+                        SyncMode::Ssgd
+                    } else {
+                        SyncMode::StaticX(x)
+                    }),
+                    rescaled: true,
+                    label: "x-order",
+                })
+            }),
+            None,
+            ctx.seed,
+        );
+        t.rowf(&[
+            table::s(format!("{x}-order")),
+            table::f(s.converged_value, 1),
+            match s.tta_s {
+                Some(v) => table::f(v, 0),
+                None => table::s(">cap"),
+            },
+            table::f(s.jct_s, 0),
+        ]);
+    }
+    t.print();
+    println!("(paper: 80.3/82.7/86.4/88.9% accuracy and 15680/4120/2480/1960 s TTA for 1/2/4/8-order)\n");
+    ctx.save("fig16", &t);
+    Ok(())
+}
+
+/// Fig 17 — straggler-prediction FP/FN across methods.
+///
+/// STAR and STAR- confusions come from the driver's online accounting;
+/// the fixed-duration rule [29] and the deviation-ratio time-series
+/// baseline are evaluated offline on the recorded iteration series of the
+/// measurement run, so all methods see identical workloads.
+pub fn fig17(ctx: &ExpCtx) -> crate::Result<()> {
+    let mut t = Table::new(
+        "Fig 17 — straggler prediction accuracy (mean FP% / FN% over jobs, p90)",
+        &["method", "fp_mean", "fp_p90", "fn_mean", "fn_p90"],
+    );
+
+    // offline baselines over the SSGD measurement run
+    let (stats_ssgd, _) = run_system(ctx, "SSGD", Arch::Ps, true, 0.0);
+    let _ = &stats_ssgd;
+    let mut fixed_fp = Vec::new();
+    let mut fixed_fn = Vec::new();
+    let mut ratio_fp = Vec::new();
+    let mut ratio_fn = Vec::new();
+    for s in &stats_ssgd {
+        let iters = s.series.iter().map(|w| w.len()).min().unwrap_or(0);
+        if iters < 12 {
+            continue;
+        }
+        let n = s.series.len();
+        let mut rule_fixed = FixedDurationRule::new(n, 5.0);
+        let mut rule_ratio = RatioSeriesRule::new(n);
+        let mut cf = Confusion::default();
+        let mut cr = Confusion::default();
+        let mut tsim = 0.0;
+        let mut pred_fixed = vec![false; n];
+        let mut pred_ratio = vec![false; n];
+        for j in 0..iters {
+            let times: Vec<f64> = s.series.iter().map(|w| w[j].total_s).collect();
+            let actual = crate::predict::straggler_flags(&times);
+            for w in 0..n {
+                cf.add(pred_fixed[w], actual[w]);
+                cr.add(pred_ratio[w], actual[w]);
+            }
+            tsim += stats::mean(&times);
+            pred_fixed = rule_fixed.observe(tsim, &times);
+            pred_ratio = rule_ratio.observe_and_predict(&times);
+        }
+        fixed_fp.push(cf.fp_rate() * 100.0);
+        fixed_fn.push(cf.fn_rate() * 100.0);
+        ratio_fp.push(cr.fp_rate() * 100.0);
+        ratio_fn.push(cr.fn_rate() * 100.0);
+    }
+
+    // STAR's own prediction pipeline (driver-recorded confusions)
+    let mut rows: Vec<(&str, Vec<f64>, Vec<f64>)> = vec![
+        ("fixed-duration [29]", fixed_fp, fixed_fn),
+        ("ratio-series LSTM", ratio_fp, ratio_fn),
+    ];
+    for sys in ["STAR-H", "STAR-"] {
+        let (stats, _) = run_system(ctx, sys, Arch::Ps, false, 0.0);
+        let fps: Vec<f64> = stats.iter().map(|s| s.prediction.fp_rate() * 100.0).collect();
+        let fns: Vec<f64> = stats.iter().map(|s| s.prediction.fn_rate() * 100.0).collect();
+        rows.push((if sys == "STAR-H" { "STAR" } else { "STAR-" }, fps, fns));
+    }
+    for (name, fp, fn_) in rows {
+        t.rowf(&[
+            table::s(name),
+            table::f(stats::mean(&fp), 1),
+            table::f(stats::percentile(&fp, 90.0), 1),
+            table::f(stats::mean(&fn_), 1),
+            table::f(stats::percentile(&fn_, 90.0), 1),
+        ]);
+    }
+    t.print();
+    println!("(paper: STAR 3.5–10.4% FP, 3.8–4.2% FN — lowest; fixed-duration and ratio-LSTM are worse)\n");
+    ctx.save("fig17", &t);
+    Ok(())
+}
+
+/// Systems compared in §V-B per architecture.
+pub fn eval_systems(arch: Arch) -> Vec<&'static str> {
+    match arch {
+        Arch::Ps => vec![
+            "SSGD", "ASGD", "Sync-Switch", "LB-BSP", "LGC", "Zeno++", "STAR-H", "STAR-ML",
+            "STAR-",
+        ],
+        Arch::AllReduce => vec!["SSGD", "LB-BSP", "LGC", "STAR-H", "STAR-ML", "STAR-"],
+    }
+}
+
+/// Figs 18–22 — the §V-B overall comparison (one pass per architecture
+/// feeds all five figures).
+pub fn fig18_to_22(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        let tag = if arch == Arch::Ps { "ps" } else { "ar" };
+        let results = run_systems(ctx, &eval_systems(arch), arch);
+
+        let mut t18 = Table::new(
+            &format!("Fig 18 ({tag}) — TTA per job (s): mean, p1, p99"),
+            &["system", "mean", "p1", "p99", "reached"],
+        );
+        let mut t19 = Table::new(
+            &format!("Fig 19 ({tag}) — JCT per job (s): mean, p1, p99"),
+            &["system", "mean", "p1", "p99"],
+        );
+        let mut t20 = Table::new(
+            &format!("Fig 20 ({tag}) — converged accuracy (image jobs, %)"),
+            &["system", "mean", "p1", "p99"],
+        );
+        let mut t21 = Table::new(
+            &format!("Fig 21 ({tag}) — converged perplexity (NLP jobs)"),
+            &["system", "mean", "p1", "p99"],
+        );
+        let mut t22 = Table::new(
+            &format!("Fig 22 ({tag}) — straggler episodes per job"),
+            &["system", "mean", "p1", "p99"],
+        );
+        for sys in eval_systems(arch) {
+            let s = summarize(&results[sys]);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.tta)));
+            row.push(format!("{}/{}", s.tta_reached, s.jobs));
+            t18.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.jct)));
+            t19.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str_f(stats::band(&s.acc), 2));
+            t20.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str_f(stats::band(&s.ppl), 1));
+            t21.row(row);
+            let mut row = vec![sys.to_string()];
+            row.extend(band_str(stats::band(&s.stragglers)));
+            t22.row(row);
+        }
+        let print_one = |id: &str, t: &Table| {
+            if which == id || which == "all" || which == "fig18" {
+                t.print();
+                println!();
+                ctx.save(&format!("{id}_{tag}"), t);
+            }
+        };
+        print_one("fig18", &t18);
+        print_one("fig19", &t19);
+        print_one("fig20", &t20);
+        print_one("fig21", &t21);
+        print_one("fig22", &t22);
+
+        // headline reductions
+        if which == "fig18" || which == "all" {
+            let s_star = summarize(&results["STAR-ML"]);
+            let s_ssgd = summarize(&results["SSGD"]);
+            let red = (1.0 - stats::mean(&s_star.tta) / stats::mean(&s_ssgd.tta)) * 100.0;
+            println!(
+                "[{tag}] STAR-ML reduces mean TTA vs SSGD by {red:.0}% \
+                 (paper: 84% PS / 70% AR)\n"
+            );
+        }
+        let _ = STRAGGLER_DEV;
+    }
+    Ok(())
+}

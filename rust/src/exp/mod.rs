@@ -1,0 +1,200 @@
+//! Experiment harness: one subcommand per paper table/figure
+//! (`cargo run --release --bin experiments -- <id>`; see DESIGN.md §4 for
+//! the full index). Each experiment prints the paper's rows/series and
+//! saves a CSV under `results/`.
+
+pub mod ablation;
+pub mod eval;
+pub mod measure;
+pub mod overhead;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::baselines::make_policy;
+use crate::driver::{Driver, DriverConfig, JobStats, ServerRecord};
+use crate::stats::Band;
+use crate::table::Table;
+use crate::trace::{generate, Arch, TraceConfig};
+
+/// Shared experiment context (CLI-derived).
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub jobs: usize,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    /// shrink everything for smoke tests
+    pub quick: bool,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx { jobs: 120, seed: 0, out_dir: PathBuf::from("results"), quick: false }
+    }
+}
+
+impl ExpCtx {
+    pub fn effective_jobs(&self) -> usize {
+        if self.quick {
+            self.jobs.min(12)
+        } else {
+            self.jobs
+        }
+    }
+
+    pub fn trace(&self) -> Vec<crate::trace::JobSpec> {
+        let jobs = self.effective_jobs();
+        let cfg = TraceConfig {
+            jobs,
+            seed: self.seed,
+            // keep the cluster busy: scale the span with job count
+            span_s: jobs as f64 * 280.0,
+            ..Default::default()
+        };
+        generate(&cfg)
+    }
+
+    pub fn save(&self, name: &str, t: &Table) {
+        let path = self.out_dir.join(format!("{name}.csv"));
+        if let Err(e) = t.save_csv(&path) {
+            eprintln!("warning: could not save {}: {e}", path.display());
+        }
+    }
+}
+
+/// Run one system over the context's trace.
+pub fn run_system(
+    ctx: &ExpCtx,
+    system: &str,
+    arch: Arch,
+    record_series: bool,
+    server_sample_s: f64,
+) -> (Vec<JobStats>, Vec<ServerRecord>) {
+    let cfg = DriverConfig {
+        arch,
+        seed: ctx.seed,
+        record_series,
+        server_sample_period_s: server_sample_s,
+        ..Default::default()
+    };
+    let name = system.to_string();
+    let driver = Driver::new(cfg, ctx.trace(), Box::new(move |_| make_policy(&name)));
+    driver.run()
+}
+
+/// Run several systems; returns name → stats.
+pub fn run_systems(
+    ctx: &ExpCtx,
+    systems: &[&str],
+    arch: Arch,
+) -> BTreeMap<String, Vec<JobStats>> {
+    let mut out = BTreeMap::new();
+    for sys in systems {
+        eprintln!("[exp] running {sys} ({arch:?}, {} jobs)…", ctx.effective_jobs());
+        let t0 = std::time::Instant::now();
+        let (stats, _) = run_system(ctx, sys, arch, false, 0.0);
+        eprintln!("[exp]   {sys}: {:.1}s wall", t0.elapsed().as_secs_f64());
+        out.insert(sys.to_string(), stats);
+    }
+    out
+}
+
+/// The §V summary triple: mean, p1, p99 (the paper's error bars).
+pub fn band_str(b: Band) -> Vec<String> {
+    vec![format!("{:.0}", b.mean), format!("{:.0}", b.p1), format!("{:.0}", b.p99)]
+}
+
+pub fn band_str_f(b: Band, d: usize) -> Vec<String> {
+    vec![
+        format!("{:.*}", d, b.mean),
+        format!("{:.*}", d, b.p1),
+        format!("{:.*}", d, b.p99),
+    ]
+}
+
+/// TTAs (jobs that reached target), JCTs, accuracies, perplexities,
+/// straggler episodes of a stat set.
+pub struct Summary {
+    pub tta: Vec<f64>,
+    pub jct: Vec<f64>,
+    pub acc: Vec<f64>,
+    pub ppl: Vec<f64>,
+    pub stragglers: Vec<f64>,
+    pub tta_reached: usize,
+    pub jobs: usize,
+}
+
+pub fn summarize(stats: &[JobStats]) -> Summary {
+    Summary {
+        tta: stats.iter().filter_map(|s| s.tta_s).collect(),
+        jct: stats.iter().map(|s| s.jct_s).collect(),
+        acc: stats.iter().filter(|s| !s.is_nlp).map(|s| s.converged_value).collect(),
+        ppl: stats.iter().filter(|s| s.is_nlp).map(|s| s.converged_value).collect(),
+        stragglers: stats.iter().map(|s| s.straggler_episodes as f64).collect(),
+        tta_reached: stats.iter().filter(|s| s.tta_s.is_some()).count(),
+        jobs: stats.len(),
+    }
+}
+
+/// Dispatch an experiment id. `all` runs everything.
+pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
+    match id {
+        "fig1" | "fig2" | "fig3" | "fig4" | "fig5" | "fig6" | "fig7" => {
+            measure::fig1_to_7(ctx, id)
+        }
+        "fig8" => measure::fig8(ctx),
+        "fig9" | "fig10" => measure::fig9_10(ctx, id),
+        "fig11" => measure::fig11(ctx),
+        "fig12" => measure::fig12_13(ctx, true),
+        "fig13" => measure::fig12_13(ctx, false),
+        "tab1" => measure::tab1(ctx),
+        "fig14" => measure::fig14(ctx),
+        "fig16" => eval::fig16(ctx),
+        "fig17" => eval::fig17(ctx),
+        "fig18" | "fig19" | "fig20" | "fig21" | "fig22" => eval::fig18_to_22(ctx, id),
+        "fig23" | "fig24" | "fig25" | "fig26" | "fig27" => ablation::fig23_to_27(ctx, id),
+        "fig28" => overhead::fig28(ctx),
+        "fig29" => overhead::fig29(ctx),
+        "all" => {
+            for id in [
+                "fig1", "fig8", "fig9", "fig11", "fig12", "fig13", "tab1", "fig14", "fig16",
+                "fig17", "fig18", "fig23", "fig28", "fig29",
+            ] {
+                // fig1 emits figs 1–7; fig9 emits 9–10; fig18 emits 18–22;
+                // fig23 emits 23–27
+                dispatch(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (try `all` or figN/tab1)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> ExpCtx {
+        ExpCtx {
+            jobs: 6,
+            quick: true,
+            out_dir: std::env::temp_dir().join("star_exp_test"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn summarize_partitions_models() {
+        let ctx = quick_ctx();
+        let (stats, _) = run_system(&ctx, "SSGD", Arch::Ps, false, 0.0);
+        let s = summarize(&stats);
+        assert_eq!(s.jobs, stats.len());
+        assert_eq!(s.acc.len() + s.ppl.len(), s.jobs);
+        assert!(s.tta_reached <= s.jobs);
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown() {
+        assert!(dispatch("fig99", &quick_ctx()).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! # STAR — Straggler Tolerant And Resilient DL training
+//!
+//! Reproduction of *"Straggler Tolerant and Resilient DL Training on
+//! Homogeneous GPUs"* (Zhang & Shen, CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution:
+//!   straggler prediction ([`predict`]), x-order synchronization modes
+//!   ([`sync`]), TTA-optimal mode selection ([`decide`]), resource-aware
+//!   straggler prevention ([`prevent`]), all glued by the [`star`]
+//!   controller; plus every substrate the paper's evaluation needs:
+//!   a discrete-event cluster simulator ([`sim`], [`cluster`]), the
+//!   ten-model zoo ([`models`]), a Philly-style trace generator
+//!   ([`trace`]), the training-progress model ([`progress`]), and the six
+//!   comparison systems ([`baselines`]).
+//! * **L2/L1 (python, build time only)** — the per-worker compute:
+//!   a transformer-LM train step whose GEMMs and whose fused gradient
+//!   aggregation/SGD-apply run as Pallas kernels, AOT-lowered to HLO text.
+//! * **[`runtime`]** — loads those artifacts through PJRT (`xla` crate)
+//!   and keeps parameters device-resident; python never runs at
+//!   coordination time.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index (every paper table/figure → an `experiments` subcommand).
+
+pub mod agg;
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod decide;
+pub mod driver;
+pub mod exp;
+pub mod jsonio;
+pub mod metrics;
+pub mod models;
+pub mod predict;
+pub mod prevent;
+pub mod progress;
+pub mod runtime;
+pub mod sim;
+pub mod simrng;
+pub mod star;
+pub mod stats;
+pub mod sync;
+pub mod table;
+pub mod testutil;
+pub mod trace;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

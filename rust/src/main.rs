@@ -1,0 +1,194 @@
+//! `star` — leader CLI for the STAR training coordinator.
+//!
+//! Subcommands:
+//! * `train`  — run the real PJRT training path: N in-process workers on
+//!   the AOT transformer artifacts, coordinated under a STAR-selected (or
+//!   forced) synchronization mode (see also `examples/e2e_train.rs`).
+//! * `simulate` — run one system over a generated Philly-style trace and
+//!   print the per-job summary.
+//! * `replay` — like `simulate` but from a Philly CSV file.
+//! * `artifacts` — inspect the AOT artifact manifest.
+//!
+//! Every experiment figure/table lives in the separate `experiments`
+//! binary (DESIGN.md §4).
+
+use star::baselines::make_policy;
+use star::cli::Args;
+use star::driver::{Driver, DriverConfig};
+use star::runtime::{Manifest, Runtime, TrainSession};
+use star::stats;
+use star::table::{self, Table};
+use star::trace::{generate, Arch, TraceConfig};
+
+fn main() {
+    let args = Args::parse_env();
+    let code = match args.subcommand() {
+        Some("train") => cmd(train(&args)),
+        Some("simulate") => cmd(simulate(&args)),
+        Some("replay") => cmd(replay(&args)),
+        Some("artifacts") => cmd(artifacts(&args)),
+        _ => {
+            eprintln!(
+                "usage: star <train|simulate|replay|artifacts> [options]\n\
+                 \n\
+                 train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
+                 simulate   --system SSGD|ASGD|…|STAR-ML --jobs N [--arch ps|ar] [--seed S]\n\
+                 replay     --trace FILE.csv --system NAME [--arch ps|ar]\n\
+                 artifacts  [--dir artifacts]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd(r: star::Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn train(args: &Args) -> star::Result<()> {
+    args.check_known(&["config", "workers", "steps", "mode", "seed", "lr"])?;
+    let config = args.str_or("config", "tiny");
+    let workers = args.usize_or("workers", 4)?;
+    let steps = args.u64_or("steps", 50)?;
+    let mode = args.str_or("mode", "star");
+    let seed = args.u64_or("seed", 0)?;
+    let lr = args.f64_or("lr", 0.5)? as f32;
+
+    let man = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    let mut session = TrainSession::new(&rt, &man, &config)?;
+    session.init_params(seed as i32)?;
+    println!(
+        "star train: config={config} params={} workers={workers} steps={steps} mode={mode}",
+        session.info.param_count
+    );
+    let mut rng = star::simrng::Rng::seeded(seed);
+    let info = session.info.clone();
+    let tokens = |rng: &mut star::simrng::Rng| -> Vec<i32> {
+        star::runtime::synth_corpus_batch(&info, rng)
+    };
+    for step in 0..steps {
+        let mut grads = Vec::new();
+        let mut loss_sum = 0.0;
+        for _ in 0..workers {
+            let batch = tokens(&mut rng);
+            let (loss, g) = session.train_step(&batch)?;
+            loss_sum += loss;
+            grads.push(g);
+        }
+        // x per mode: ssgd = all, asgd = 1, static-x = x
+        let x = match mode.as_str() {
+            "asgd" => 1,
+            m if m.starts_with("static-") => m[7..].parse().unwrap_or(workers),
+            _ => workers,
+        };
+        let used: Vec<Vec<f32>> = grads.into_iter().take(x).collect();
+        let eff_lr = lr * used.len() as f32 / workers as f32;
+        session.xorder_update(&used, eff_lr)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  mean worker loss {:.4}", loss_sum / workers as f32);
+        }
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> star::Result<()> {
+    args.check_known(&["system", "jobs", "arch", "seed"])?;
+    let system = args.str_or("system", "STAR-ML");
+    let jobs = args.usize_or("jobs", 60)?;
+    let seed = args.u64_or("seed", 0)?;
+    let arch = parse_arch(&args.str_or("arch", "ps"))?;
+    let trace = generate(&TraceConfig {
+        jobs,
+        seed,
+        span_s: jobs as f64 * 280.0,
+        ..Default::default()
+    });
+    run_and_report(&system, arch, seed, trace)
+}
+
+fn replay(args: &Args) -> star::Result<()> {
+    args.check_known(&["trace", "system", "arch", "seed"])?;
+    let path = args.require("trace")?;
+    let system = args.str_or("system", "STAR-ML");
+    let seed = args.u64_or("seed", 0)?;
+    let arch = parse_arch(&args.str_or("arch", "ps"))?;
+    let text = std::fs::read_to_string(path)?;
+    let trace = star::trace::parse_philly_csv(&text, &TraceConfig::default())?;
+    run_and_report(&system, arch, seed, trace)
+}
+
+fn run_and_report(
+    system: &str,
+    arch: Arch,
+    seed: u64,
+    trace: Vec<star::trace::JobSpec>,
+) -> star::Result<()> {
+    let cfg = DriverConfig { arch, seed, record_series: false, ..Default::default() };
+    let name = system.to_string();
+    let driver = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name)));
+    let (stats_v, _) = driver.run();
+    let mut t = Table::new(
+        &format!("{system} over {} jobs ({arch:?})", stats_v.len()),
+        &["metric", "mean", "p1", "p99"],
+    );
+    let tta: Vec<f64> = stats_v.iter().filter_map(|s| s.tta_s).collect();
+    let jct: Vec<f64> = stats_v.iter().map(|s| s.jct_s).collect();
+    let acc: Vec<f64> =
+        stats_v.iter().filter(|s| !s.is_nlp).map(|s| s.converged_value).collect();
+    let strag: Vec<f64> = stats_v.iter().map(|s| s.straggler_episodes as f64).collect();
+    for (name, v, d) in [
+        ("TTA (s)", &tta, 0),
+        ("JCT (s)", &jct, 0),
+        ("accuracy (%)", &acc, 2),
+        ("straggler episodes", &strag, 0),
+    ] {
+        let b = stats::band(v);
+        t.rowf(&[
+            table::s(name),
+            table::f(b.mean, d),
+            table::f(b.p1, d),
+            table::f(b.p99, d),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn parse_arch(s: &str) -> star::Result<Arch> {
+    match s {
+        "ps" => Ok(Arch::Ps),
+        "ar" | "allreduce" => Ok(Arch::AllReduce),
+        other => anyhow::bail!("unknown arch {other:?} (ps|ar)"),
+    }
+}
+
+fn artifacts(args: &Args) -> star::Result<()> {
+    args.check_known(&["dir"])?;
+    let man = match args.get("dir") {
+        Some(d) => Manifest::load(std::path::Path::new(d))?,
+        None => Manifest::discover()?,
+    };
+    let mut t = Table::new("AOT artifacts", &["config", "params", "padded", "vocab", "seq", "batch", "pallas"]);
+    for name in man.config_names() {
+        let c = man.config(&name)?;
+        t.rowf(&[
+            table::s(c.name),
+            table::i(c.param_count as i64),
+            table::i(c.padded_param_count as i64),
+            table::i(c.vocab as i64),
+            table::i(c.seq_len as i64),
+            table::i(c.batch as i64),
+            table::s(if c.use_pallas_matmul { "yes" } else { "no" }),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

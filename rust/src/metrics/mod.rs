@@ -1,0 +1,135 @@
+//! Metrics substrate: named counters and wall-time timers, used by the
+//! coordinator hot path and by Fig 28 (decision-time overhead).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A registry of counters and duration accumulators.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, TimerStat>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TimerStat {
+    pub calls: u64,
+    pub total_ns: u128,
+    pub max_ns: u128,
+}
+
+impl TimerStat {
+    pub fn mean_ms(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.calls as f64 / 1e6
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_ns(name, t0.elapsed().as_nanos());
+        out
+    }
+
+    pub fn record_ns(&mut self, name: &str, ns: u128) {
+        let t = self.timers.entry(name.to_string()).or_default();
+        t.calls += 1;
+        t.total_ns += ns;
+        t.max_ns = t.max_ns.max(ns);
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&TimerStat> {
+        self.timers.get(name)
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, t) in &other.timers {
+            let e = self.timers.entry(k.clone()).or_default();
+            e.calls += t.calls;
+            e.total_ns += t.total_ns;
+            e.max_ns = e.max_ns.max(t.max_ns);
+        }
+    }
+
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "counter {k:<40} {v}");
+        }
+        for (k, t) in &self.timers {
+            let _ = writeln!(
+                out,
+                "timer   {k:<40} calls={} mean={:.3}ms max={:.3}ms",
+                t.calls,
+                t.mean_ms(),
+                t.max_ns as f64 / 1e6
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("a");
+        m.add("a", 4);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let mut m = Metrics::new();
+        let v = m.time("t", || 42);
+        assert_eq!(v, 42);
+        let t = m.timer("t").unwrap();
+        assert_eq!(t.calls, 1);
+        assert!(t.total_ns > 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.inc("x");
+        a.record_ns("t", 100);
+        let mut b = Metrics::new();
+        b.add("x", 2);
+        b.record_ns("t", 300);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        let t = a.timer("t").unwrap();
+        assert_eq!(t.calls, 2);
+        assert_eq!(t.max_ns, 300);
+    }
+}

@@ -1,0 +1,310 @@
+//! The ten-model zoo from §III: eight CIFAR-10 image models + two
+//! WikiText-2 NLP models, with the calibrated constants the simulator
+//! needs (sizes, per-iteration costs, resource demands, PGNS schedule,
+//! accuracy-curve anchors). Absolute values are calibrated so the
+//! *measured phenomena* of the paper hold: communication dominates
+//! iteration time (Fig 2), PSs out-consume workers (O4), ASGD out-consumes
+//! SSGD (O5), and x-order converged accuracy matches Fig 16's spread.
+
+/// Task category (drives accuracy vs perplexity reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Image,
+    Nlp,
+}
+
+/// One trainable model's calibrated constants.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub kind: Kind,
+    /// parameters, millions
+    pub params_m: f64,
+    /// gradient/parameter payload per transfer, MB (f32)
+    pub grad_mb: f64,
+    /// GPU fwd+bwd time per iteration (batch 128) on the homogeneous GPU, ms
+    pub gpu_ms: f64,
+    /// CPU preprocessing work per iteration, vCPU-milliseconds
+    pub pre_cpu_ms: f64,
+    /// steady CPU demand of one worker, vCPUs (preprocess + busy-poll)
+    pub worker_cpu: f64,
+    /// steady bandwidth demand of one worker, Gbps
+    pub worker_bw: f64,
+    /// PS demand multipliers over a worker (O4: +5–87% CPU, +101–296% bw)
+    pub ps_cpu_factor: f64,
+    pub ps_bw_factor: f64,
+    /// ASGD demand multipliers over SSGD (O5: +44–351% CPU, +38–427% bw)
+    pub asgd_cpu_factor: f64,
+    pub asgd_bw_factor: f64,
+    /// optimal (SSGD) learning rate from §III
+    pub base_lr: f64,
+    /// accuracy curve: start / converged (SSGD) accuracy, % (image) —
+    /// for NLP these hold perplexity start / converged instead
+    pub acc0: f64,
+    pub acc_max: f64,
+    /// progress constant: progress units to 1/e of the gap
+    pub tau: f64,
+    /// staleness penalty anchor, accuracy points lost at x=1 vs x=N for
+    /// N=8 (Fig 16); NLP: perplexity points gained
+    pub kappa_pts: f64,
+    /// LR-mismatch penalty when running async-family modes with the
+    /// unscaled SSGD LR (O7), accuracy pts (NLP: perplexity pts)
+    pub lr_mismatch_pts: f64,
+    /// PGNS schedule φ(p) = phi0 * (1 + p / phi_scale), where p is the
+    /// accumulated statistical progress — PGNS grows as the model improves
+    /// ([45], [46]), independent of how many (small) updates were taken
+    pub phi0: f64,
+    pub phi_scale: f64,
+    /// TTA sensitivity to CPU / bandwidth deprivation (§IV-D1), unitless
+    pub cpu_sens: f64,
+    pub bw_sens: f64,
+}
+
+/// Index into [`ZOO`].
+pub type ModelId = usize;
+
+/// Staleness-penalty shape exponent (fit to Fig 16, see DESIGN.md §5).
+pub const STALENESS_EXP: f64 = 1.6;
+
+/// Exponent of the realized-staleness quality penalty (concave: even mild
+/// staleness costs some converged quality, anchored to Fig 16's x=1/x=N
+/// endpoints).
+pub const STALE_QUALITY_EXP: f64 = 0.9;
+
+pub static ZOO: &[ModelSpec] = &[
+    ModelSpec {
+        name: "ResNet20", kind: Kind::Image, params_m: 0.27, grad_mb: 1.1,
+        gpu_ms: 22.0, pre_cpu_ms: 220.0, worker_cpu: 2.2, worker_bw: 0.35,
+        ps_cpu_factor: 1.18, ps_bw_factor: 2.1, asgd_cpu_factor: 1.55,
+        asgd_bw_factor: 1.45, base_lr: 0.1, acc0: 10.0, acc_max: 91.5,
+        tau: 170.0, kappa_pts: 7.5, lr_mismatch_pts: 1.8, phi0: 1200.0,
+        phi_scale: 85.0, cpu_sens: 0.62, bw_sens: 0.31,
+    },
+    ModelSpec {
+        name: "ResNet56", kind: Kind::Image, params_m: 0.85, grad_mb: 3.4,
+        gpu_ms: 45.0, pre_cpu_ms: 230.0, worker_cpu: 2.3, worker_bw: 0.45,
+        ps_cpu_factor: 1.22, ps_bw_factor: 2.3, asgd_cpu_factor: 1.62,
+        asgd_bw_factor: 1.55, base_lr: 0.1, acc0: 10.0, acc_max: 93.0,
+        tau: 200.0, kappa_pts: 8.0, lr_mismatch_pts: 2.0, phi0: 1400.0,
+        phi_scale: 100.0, cpu_sens: 0.58, bw_sens: 0.36,
+    },
+    ModelSpec {
+        name: "VGG13", kind: Kind::Image, params_m: 9.4, grad_mb: 37.6,
+        gpu_ms: 52.0, pre_cpu_ms: 240.0, worker_cpu: 2.6, worker_bw: 1.6,
+        ps_cpu_factor: 1.45, ps_bw_factor: 3.1, asgd_cpu_factor: 2.1,
+        asgd_bw_factor: 2.6, base_lr: 0.01, acc0: 10.0, acc_max: 93.4,
+        tau: 215.0, kappa_pts: 9.2, lr_mismatch_pts: 2.1, phi0: 1800.0,
+        phi_scale: 107.0, cpu_sens: 0.44, bw_sens: 0.66,
+    },
+    ModelSpec {
+        name: "VGG16", kind: Kind::Image, params_m: 14.7, grad_mb: 58.8,
+        gpu_ms: 60.0, pre_cpu_ms: 245.0, worker_cpu: 2.7, worker_bw: 2.2,
+        ps_cpu_factor: 1.52, ps_bw_factor: 3.4, asgd_cpu_factor: 2.4,
+        asgd_bw_factor: 3.2, base_lr: 0.01, acc0: 10.0, acc_max: 93.6,
+        tau: 230.0, kappa_pts: 9.8, lr_mismatch_pts: 2.3, phi0: 2000.0,
+        phi_scale: 115.0, cpu_sens: 0.41, bw_sens: 0.72,
+    },
+    ModelSpec {
+        name: "DenseNet121", kind: Kind::Image, params_m: 7.0, grad_mb: 28.0,
+        gpu_ms: 92.0, pre_cpu_ms: 260.0, worker_cpu: 2.8, worker_bw: 1.3,
+        ps_cpu_factor: 1.48, ps_bw_factor: 3.0, asgd_cpu_factor: 2.2,
+        asgd_bw_factor: 2.4, base_lr: 0.01, acc0: 10.0, acc_max: 94.0,
+        tau: 245.0, kappa_pts: 9.0, lr_mismatch_pts: 2.2, phi0: 1900.0,
+        phi_scale: 122.0, cpu_sens: 0.52, bw_sens: 0.58,
+    },
+    ModelSpec {
+        name: "AlexNet", kind: Kind::Image, params_m: 2.5, grad_mb: 10.0,
+        gpu_ms: 15.0, pre_cpu_ms: 210.0, worker_cpu: 2.1, worker_bw: 0.9,
+        ps_cpu_factor: 1.30, ps_bw_factor: 2.6, asgd_cpu_factor: 1.8,
+        asgd_bw_factor: 1.9, base_lr: 0.01, acc0: 10.0, acc_max: 86.0,
+        tau: 150.0, kappa_pts: 7.0, lr_mismatch_pts: 1.7, phi0: 1300.0,
+        phi_scale: 75.0, cpu_sens: 0.49, bw_sens: 0.47,
+    },
+    ModelSpec {
+        name: "GoogleNet", kind: Kind::Image, params_m: 6.2, grad_mb: 24.8,
+        gpu_ms: 70.0, pre_cpu_ms: 250.0, worker_cpu: 2.6, worker_bw: 1.2,
+        ps_cpu_factor: 1.40, ps_bw_factor: 2.9, asgd_cpu_factor: 2.0,
+        asgd_bw_factor: 2.3, base_lr: 0.01, acc0: 10.0, acc_max: 93.0,
+        tau: 220.0, kappa_pts: 8.8, lr_mismatch_pts: 2.0, phi0: 1700.0,
+        phi_scale: 110.0, cpu_sens: 0.50, bw_sens: 0.55,
+    },
+    ModelSpec {
+        name: "MobileNet", kind: Kind::Image, params_m: 3.2, grad_mb: 12.8,
+        gpu_ms: 30.0, pre_cpu_ms: 235.0, worker_cpu: 2.4, worker_bw: 1.0,
+        ps_cpu_factor: 1.34, ps_bw_factor: 2.7, asgd_cpu_factor: 1.9,
+        asgd_bw_factor: 2.0, base_lr: 0.01, acc0: 10.0, acc_max: 90.2,
+        tau: 185.0, kappa_pts: 8.2, lr_mismatch_pts: 1.9, phi0: 1500.0,
+        phi_scale: 92.0, cpu_sens: 0.55, bw_sens: 0.50,
+    },
+    ModelSpec {
+        name: "LSTM", kind: Kind::Nlp, params_m: 13.0, grad_mb: 52.0,
+        gpu_ms: 120.0, pre_cpu_ms: 300.0, worker_cpu: 3.0, worker_bw: 2.0,
+        ps_cpu_factor: 1.60, ps_bw_factor: 3.5, asgd_cpu_factor: 2.6,
+        asgd_bw_factor: 3.5, base_lr: 0.01, acc0: 600.0, acc_max: 101.0,
+        tau: 260.0, kappa_pts: 38.0, lr_mismatch_pts: 22.0, phi0: 2200.0,
+        phi_scale: 130.0, cpu_sens: 0.47, bw_sens: 0.68,
+    },
+    ModelSpec {
+        name: "Transformer", kind: Kind::Nlp, params_m: 19.0, grad_mb: 76.0,
+        gpu_ms: 100.0, pre_cpu_ms: 290.0, worker_cpu: 3.1, worker_bw: 2.6,
+        ps_cpu_factor: 1.87, ps_bw_factor: 3.9, asgd_cpu_factor: 3.1,
+        asgd_bw_factor: 4.2, base_lr: 0.01, acc0: 420.0, acc_max: 62.0,
+        tau: 275.0, kappa_pts: 30.0, lr_mismatch_pts: 18.0, phi0: 2600.0,
+        phi_scale: 137.0, cpu_sens: 0.45, bw_sens: 0.73,
+    },
+];
+
+/// Per-worker mini-batch size (§III).
+pub const WORKER_BATCH: usize = 128;
+
+impl ModelSpec {
+    pub fn by_name(name: &str) -> Option<(ModelId, &'static ModelSpec)> {
+        ZOO.iter().enumerate().find(|(_, m)| m.name == name)
+    }
+
+    /// PGNS φ at accumulated progress p (pre-computed schedule; §IV-C1
+    /// approximation of [45]'s per-epoch pre-calculated values).
+    pub fn phi(&self, progress: f64) -> f64 {
+        self.phi0 * (1.0 + progress.max(0.0) / self.phi_scale)
+    }
+
+    /// Parameter updates needed per unit progress for an update built from
+    /// batch `b` at progress `p`: n_u = 1 + φ_k / b   ([46], Eq. (1)).
+    pub fn n_u(&self, progress: f64, batch: f64) -> f64 {
+        1.0 + self.phi(progress) / batch.max(1.0)
+    }
+
+    /// Converged accuracy (image) or perplexity (NLP) for a mode whose
+    /// average update uses x of N workers' gradients, with/without LR
+    /// rescaling (Fig 16 + O7 model, DESIGN.md §5). For NLP the penalty is
+    /// *added* (higher perplexity = worse).
+    pub fn converged_value(&self, x_over_n: f64, lr_rescaled: bool) -> f64 {
+        let frac = (1.0 - x_over_n.clamp(0.0, 1.0)).powf(STALENESS_EXP);
+        let mut penalty = self.kappa_pts * frac;
+        if !lr_rescaled && x_over_n < 0.999 {
+            penalty += self.lr_mismatch_pts;
+        }
+        match self.kind {
+            Kind::Image => self.acc_max - penalty,
+            Kind::Nlp => self.acc_max + penalty,
+        }
+    }
+
+    /// Converged quality as a function of *realized* mean gradient
+    /// staleness (fraction of a full round, 0 = fully synchronous): the
+    /// asymptote the progress model approaches. All gradients are used in
+    /// x-order modes, so quality is governed by how stale they are when
+    /// applied, plus the O7 LR-mismatch penalty.
+    pub fn converged_value_stale(&self, stale_frac: f64, lr_rescaled: bool) -> f64 {
+        let mut penalty = self.kappa_pts * stale_frac.clamp(0.0, 1.0).powf(STALE_QUALITY_EXP);
+        if !lr_rescaled && stale_frac > 1e-3 {
+            penalty += self.lr_mismatch_pts;
+        }
+        match self.kind {
+            Kind::Image => self.acc_max - penalty,
+            Kind::Nlp => self.acc_max + penalty,
+        }
+    }
+
+    /// Whether a candidate value has reached `target` ("accuracy >= target"
+    /// for image, "perplexity <= target" for NLP).
+    pub fn reached(&self, value: f64, target: f64) -> bool {
+        match self.kind {
+            Kind::Image => value >= target - 1e-9,
+            Kind::Nlp => value <= target + 1e-9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_ten_models_eight_image_two_nlp() {
+        assert_eq!(ZOO.len(), 10);
+        assert_eq!(ZOO.iter().filter(|m| m.kind == Kind::Image).count(), 8);
+        assert_eq!(ZOO.iter().filter(|m| m.kind == Kind::Nlp).count(), 2);
+    }
+
+    #[test]
+    fn resnet_lr_is_point_one_others_point_oh_one() {
+        for m in ZOO {
+            if m.name.starts_with("ResNet") {
+                assert_eq!(m.base_lr, 0.1);
+            } else {
+                assert_eq!(m.base_lr, 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn ps_factors_within_o4_ranges() {
+        for m in ZOO {
+            assert!((1.05..=1.87).contains(&m.ps_cpu_factor), "{}", m.name);
+            assert!((2.0..=4.0).contains(&m.ps_bw_factor), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn asgd_factors_within_o5_ranges() {
+        for m in ZOO {
+            assert!((1.44..=4.51).contains(&m.asgd_cpu_factor), "{}", m.name);
+            assert!((1.38..=5.27).contains(&m.asgd_bw_factor), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn phi_grows_with_progress() {
+        let m = &ZOO[0];
+        assert!(m.phi(300.0) > m.phi(0.0));
+        assert!(m.n_u(300.0, 512.0) > m.n_u(0.0, 512.0));
+        // bigger batch => fewer updates needed
+        assert!(m.n_u(100.0, 1024.0) < m.n_u(100.0, 128.0));
+    }
+
+    #[test]
+    fn converged_value_matches_fig16_shape() {
+        // Fig 16 anchors (8-worker job): 1-order 80.3, 2-order 82.7,
+        // 4-order 86.4, 8-order 88.9 => spread ≈ 8.6 pts, convex in x.
+        let m = ModelSpec {
+            kappa_pts: 9.8, acc_max: 88.9, ..ZOO[3].clone()
+        };
+        let a1 = m.converged_value(1.0 / 8.0, true);
+        let a2 = m.converged_value(2.0 / 8.0, true);
+        let a4 = m.converged_value(4.0 / 8.0, true);
+        let a8 = m.converged_value(1.0, true);
+        assert!((a8 - 88.9).abs() < 1e-9);
+        assert!(a1 < a2 && a2 < a4 && a4 < a8);
+        assert!((a1 - 80.3).abs() < 1.0, "a1={a1}");
+        assert!((a2 - 82.7).abs() < 1.0, "a2={a2}");
+        // convexity: marginal gain shrinks as x grows
+        assert!((a2 - a1) > (a8 - a4) / 4.0);
+    }
+
+    #[test]
+    fn lr_mismatch_penalizes_unrescaled_async() {
+        let m = &ZOO[4];
+        assert!(m.converged_value(0.25, false) < m.converged_value(0.25, true));
+        // full-sync SSGD never pays the penalty
+        assert_eq!(m.converged_value(1.0, false), m.converged_value(1.0, true));
+    }
+
+    #[test]
+    fn nlp_penalty_raises_perplexity() {
+        let (_, lstm) = ModelSpec::by_name("LSTM").unwrap();
+        assert!(lstm.converged_value(0.125, true) > lstm.acc_max);
+        assert!(lstm.reached(lstm.acc_max, lstm.acc_max));
+        assert!(!lstm.reached(lstm.acc_max + 5.0, lstm.acc_max));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for (i, m) in ZOO.iter().enumerate() {
+            let (j, found) = ModelSpec::by_name(m.name).unwrap();
+            assert_eq!(i, j);
+            assert_eq!(found.name, m.name);
+        }
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,486 @@
+//! Straggler prediction (§IV-A).
+//!
+//! Pipeline per worker, every iteration:
+//!  1. record observed (available CPU, available bandwidth) into a ring
+//!     history;
+//!  2. predict the next iteration's resources — production path runs the
+//!     AOT LSTM artifact through PJRT ([`runtime::Predictor`]), with a
+//!     pure-Rust AR(1) fallback of the same interface;
+//!  3. map predicted resources to a predicted iteration time with an
+//!     online ridge regression over physical features (the paper's
+//!     "regression model" with model type / batch size as inputs);
+//!  4. flag workers whose predicted deviation ratio d_i > 20% (§II).
+//!
+//! The baseline predictors of §III-B / Fig 17 (fixed-duration rule,
+//! deviation-ratio LSTM) live here too so the comparison is apples-to-
+//! apples.
+
+use std::collections::VecDeque;
+
+/// History window length (matches the python-side LSTM WINDOW).
+pub const WINDOW: usize = 32;
+
+/// Straggler threshold from §II.
+pub const STRAGGLER_DEV: f64 = 0.20;
+
+/// Ring buffer of recent per-iteration observations for one worker.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub cpu: VecDeque<f64>,
+    pub bw: VecDeque<f64>,
+    pub iter_s: VecDeque<f64>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, cpu: f64, bw: f64, iter_s: f64) {
+        push_cap(&mut self.cpu, cpu);
+        push_cap(&mut self.bw, bw);
+        push_cap(&mut self.iter_s, iter_s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.cpu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cpu.is_empty()
+    }
+
+    /// history rows as [cpu, bw] pairs oldest-first, padded by repeating
+    /// the oldest value when shorter than WINDOW (artifact needs W rows)
+    pub fn padded_rows(&self) -> Vec<[f32; 2]> {
+        let mut rows = Vec::with_capacity(WINDOW);
+        let first = [
+            *self.cpu.front().unwrap_or(&0.5) as f32,
+            *self.bw.front().unwrap_or(&0.5) as f32,
+        ];
+        for _ in self.len()..WINDOW {
+            rows.push(first);
+        }
+        for i in 0..self.len() {
+            rows.push([self.cpu[i] as f32, self.bw[i] as f32]);
+        }
+        rows
+    }
+}
+
+fn push_cap(q: &mut VecDeque<f64>, v: f64) {
+    if q.len() == WINDOW {
+        q.pop_front();
+    }
+    q.push_back(v);
+}
+
+/// Resource forecast interface: next-iteration (cpu, bw).
+pub trait ResourcePredictor {
+    fn predict(&mut self, h: &History) -> (f64, f64);
+}
+
+/// AR(1) fallback: x' = mean + rho (last − mean), rho from the window's
+/// lag-1 autocorrelation. Zero-dependency, always available.
+#[derive(Clone, Debug, Default)]
+pub struct ArPredictor;
+
+impl ArPredictor {
+    fn ar1(xs: &VecDeque<f64>) -> f64 {
+        let n = xs.len();
+        if n == 0 {
+            return 0.5;
+        }
+        if n < 4 {
+            return xs[n - 1];
+        }
+        let v: Vec<f64> = xs.iter().copied().collect();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..n - 1 {
+            num += (v[i] - mean) * (v[i + 1] - mean);
+        }
+        for x in &v {
+            den += (x - mean) * (x - mean);
+        }
+        let rho = if den > 1e-12 { (num / den).clamp(-1.0, 1.0) } else { 0.0 };
+        mean + rho * (v[n - 1] - mean)
+    }
+}
+
+impl ResourcePredictor for ArPredictor {
+    fn predict(&mut self, h: &History) -> (f64, f64) {
+        (Self::ar1(&h.cpu).clamp(0.0, 1.0), Self::ar1(&h.bw).clamp(0.0, 1.0))
+    }
+}
+
+/// Online ridge regression y ≈ w·x over `D` features with forgetting:
+/// maintains XᵀX and Xᵀy, refits on demand (tiny D, Gaussian elimination).
+#[derive(Clone, Debug)]
+pub struct Ridge<const D: usize> {
+    pub xtx: [[f64; D]; D],
+    pub xty: [f64; D],
+    pub w: [f64; D],
+    pub n: u64,
+    pub lambda: f64,
+    /// exponential forgetting factor per observation (1.0 = none)
+    pub forget: f64,
+    dirty: bool,
+}
+
+impl<const D: usize> Ridge<D> {
+    pub fn new(lambda: f64, forget: f64) -> Self {
+        Ridge {
+            xtx: [[0.0; D]; D],
+            xty: [0.0; D],
+            w: [0.0; D],
+            n: 0,
+            lambda,
+            forget,
+            dirty: false,
+        }
+    }
+
+    pub fn observe(&mut self, x: &[f64; D], y: f64) {
+        for i in 0..D {
+            for j in 0..D {
+                self.xtx[i][j] = self.forget * self.xtx[i][j] + x[i] * x[j];
+            }
+            self.xty[i] = self.forget * self.xty[i] + x[i] * y;
+        }
+        self.n += 1;
+        self.dirty = true;
+    }
+
+    pub fn fit(&mut self) {
+        // (XᵀX + λI) w = Xᵀy, Gaussian elimination with partial pivoting
+        let mut a = self.xtx;
+        let mut b = self.xty;
+        for i in 0..D {
+            a[i][i] += self.lambda;
+        }
+        for col in 0..D {
+            let mut piv = col;
+            for r in col + 1..D {
+                if a[r][col].abs() > a[piv][col].abs() {
+                    piv = r;
+                }
+            }
+            a.swap(col, piv);
+            b.swap(col, piv);
+            let d = a[col][col];
+            if d.abs() < 1e-12 {
+                continue;
+            }
+            for r in 0..D {
+                if r == col {
+                    continue;
+                }
+                let f = a[r][col] / d;
+                for c in col..D {
+                    a[r][c] -= f * a[col][c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+        for i in 0..D {
+            self.w[i] = if a[i][i].abs() < 1e-12 { 0.0 } else { b[i] / a[i][i] };
+        }
+        self.dirty = false;
+    }
+
+    pub fn predict(&mut self, x: &[f64; D]) -> f64 {
+        if self.dirty {
+            self.fit();
+        }
+        let mut y = 0.0;
+        for i in 0..D {
+            y += self.w[i] * x[i];
+        }
+        y
+    }
+}
+
+/// Iteration-time regressor features (§IV-A: predicted resources + model
+/// type + batch size, expressed physically so one regressor generalizes):
+/// [1, pre_work/cpu, bytes/bw, gpu_ms, pre_work, bytes]
+pub const ITER_FEATURES: usize = 6;
+
+/// Online iteration-time model: predicted (cpu_share, bw_share) → seconds.
+#[derive(Clone, Debug)]
+pub struct IterTimeModel {
+    pub ridge: Ridge<ITER_FEATURES>,
+}
+
+impl Default for IterTimeModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IterTimeModel {
+    pub fn new() -> Self {
+        IterTimeModel { ridge: Ridge::new(1e-4, 0.999) }
+    }
+
+    pub fn features(
+        pre_cpu_ms: f64,
+        gpu_ms: f64,
+        grad_mb: f64,
+        cpu_share: f64,
+        bw_share_gbps: f64,
+    ) -> [f64; ITER_FEATURES] {
+        let cpu = cpu_share.max(1e-3);
+        let bw = bw_share_gbps.max(1e-3);
+        let bytes_gbit = grad_mb * 8.0 / 1000.0;
+        [
+            1.0,
+            pre_cpu_ms / 1000.0 / cpu,
+            2.0 * bytes_gbit / bw,
+            gpu_ms / 1000.0,
+            pre_cpu_ms / 1000.0,
+            bytes_gbit,
+        ]
+    }
+
+    pub fn observe(&mut self, x: &[f64; ITER_FEATURES], seconds: f64) {
+        self.ridge.observe(x, seconds);
+    }
+
+    pub fn predict(&mut self, x: &[f64; ITER_FEATURES]) -> f64 {
+        self.ridge.predict(x).max(1e-3)
+    }
+
+    pub fn trained(&self) -> bool {
+        self.ridge.n >= 8
+    }
+}
+
+/// Deviation ratios d_i = (T_i − min T)/min T (§II).
+pub fn deviation_ratios(times: &[f64]) -> Vec<f64> {
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-9);
+    times.iter().map(|&t| (t - min) / min).collect()
+}
+
+/// Straggler flags at the §II threshold.
+pub fn straggler_flags(times: &[f64]) -> Vec<bool> {
+    deviation_ratios(times).into_iter().map(|d| d > STRAGGLER_DEV).collect()
+}
+
+/// Confusion counts for predictor evaluation (Fig 17).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn add(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    /// FP rate among predicted-or-actual positives, as the paper reports.
+    pub fn fp_rate(&self) -> f64 {
+        let denom = (self.fp + self.tn) as f64;
+        if denom == 0.0 { 0.0 } else { self.fp as f64 / denom }
+    }
+
+    pub fn fn_rate(&self) -> f64 {
+        let denom = (self.tp + self.fn_) as f64;
+        if denom == 0.0 { 0.0 } else { self.fn_ as f64 / denom }
+    }
+}
+
+/// Fixed-duration baseline (§III-B / Sync-Switch): flags a worker as a
+/// straggler only after it has straggled for `persist_s` continuous
+/// seconds. State machine per worker.
+#[derive(Clone, Debug)]
+pub struct FixedDurationRule {
+    pub persist_s: f64,
+    since: Vec<Option<f64>>,
+}
+
+impl FixedDurationRule {
+    pub fn new(n: usize, persist_s: f64) -> Self {
+        FixedDurationRule { persist_s, since: vec![None; n] }
+    }
+
+    /// Observe iteration at time `t`; returns per-worker predicted flags
+    /// for the *next* iteration.
+    pub fn observe(&mut self, t: f64, times: &[f64]) -> Vec<bool> {
+        let flags = straggler_flags(times);
+        flags
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| {
+                if f {
+                    let s = *self.since[i].get_or_insert(t);
+                    t - s >= self.persist_s
+                } else {
+                    self.since[i] = None;
+                    false
+                }
+            })
+            .collect()
+    }
+}
+
+/// Deviation-ratio time-series baseline (§III-B "LSTM on past ratios"):
+/// same AR machinery applied directly to d_i instead of resources.
+#[derive(Clone, Debug)]
+pub struct RatioSeriesRule {
+    histories: Vec<VecDeque<f64>>,
+}
+
+impl RatioSeriesRule {
+    pub fn new(n: usize) -> Self {
+        RatioSeriesRule { histories: vec![VecDeque::new(); n] }
+    }
+
+    pub fn observe_and_predict(&mut self, times: &[f64]) -> Vec<bool> {
+        let ratios = deviation_ratios(times);
+        ratios
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                push_cap(&mut self.histories[i], d);
+                ArPredictor::ar1(&self.histories[i]) > STRAGGLER_DEV
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_ring_caps_at_window() {
+        let mut h = History::new();
+        for i in 0..(WINDOW + 10) {
+            h.push(i as f64, 0.5, 0.1);
+        }
+        assert_eq!(h.len(), WINDOW);
+        assert_eq!(h.cpu[0], 10.0);
+        assert_eq!(h.padded_rows().len(), WINDOW);
+    }
+
+    #[test]
+    fn padded_rows_repeat_oldest() {
+        let mut h = History::new();
+        h.push(0.3, 0.6, 0.1);
+        h.push(0.4, 0.7, 0.1);
+        let rows = h.padded_rows();
+        assert_eq!(rows.len(), WINDOW);
+        assert_eq!(rows[0], [0.3f32, 0.6f32]);
+        assert_eq!(rows[WINDOW - 1], [0.4f32, 0.7f32]);
+    }
+
+    #[test]
+    fn ar_predictor_tracks_constant() {
+        let mut h = History::new();
+        for _ in 0..WINDOW {
+            h.push(0.7, 0.4, 0.1);
+        }
+        let (c, b) = ArPredictor.predict(&h);
+        assert!((c - 0.7).abs() < 1e-9);
+        assert!((b - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ar_predictor_mean_reverts_on_noise() {
+        let mut rng = crate::simrng::Rng::seeded(1);
+        let mut h = History::new();
+        for _ in 0..WINDOW {
+            h.push(0.5 + 0.05 * rng.normal(), 0.5, 0.1);
+        }
+        let (c, _) = ArPredictor.predict(&h);
+        assert!((c - 0.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_function() {
+        let mut r: Ridge<3> = Ridge::new(1e-6, 1.0);
+        let mut rng = crate::simrng::Rng::seeded(2);
+        for _ in 0..500 {
+            let x = [1.0, rng.range(0.0, 2.0), rng.range(-1.0, 1.0)];
+            let y = 0.5 + 2.0 * x[1] - 1.5 * x[2];
+            r.observe(&x, y);
+        }
+        r.fit();
+        assert!((r.w[0] - 0.5).abs() < 1e-6);
+        assert!((r.w[1] - 2.0).abs() < 1e-6);
+        assert!((r.w[2] + 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iter_time_model_learns_physical_law() {
+        // ground truth: T = pre/cpu + gpu + 2*bytes/bw (the feature map is
+        // exact, so ridge should nail it)
+        let mut m = IterTimeModel::new();
+        let mut rng = crate::simrng::Rng::seeded(3);
+        for _ in 0..400 {
+            let cpu = rng.range(0.5, 8.0);
+            let bw = rng.range(0.5, 10.0);
+            let x = IterTimeModel::features(250.0, 60.0, 30.0, cpu, bw);
+            let y = 0.25 / cpu + 0.06 + 2.0 * 0.24 / bw;
+            m.observe(&x, y);
+        }
+        assert!(m.trained());
+        let x = IterTimeModel::features(250.0, 60.0, 30.0, 2.0, 2.0);
+        let want = 0.25 / 2.0 + 0.06 + 2.0 * 0.24 / 2.0;
+        let got = m.predict(&x);
+        assert!((got - want).abs() / want < 0.05, "got {got} want {want}");
+    }
+
+    #[test]
+    fn deviation_and_flags() {
+        let d = deviation_ratios(&[1.0, 1.1, 1.5]);
+        assert!((d[0] - 0.0).abs() < 1e-12);
+        assert!((d[2] - 0.5).abs() < 1e-12);
+        assert_eq!(straggler_flags(&[1.0, 1.1, 1.5]), vec![false, false, true]);
+        // boundary: exactly 20% is NOT a straggler (strict >)
+        assert_eq!(straggler_flags(&[1.0, 1.2]), vec![false, false]);
+    }
+
+    #[test]
+    fn confusion_rates() {
+        let mut c = Confusion::default();
+        c.add(true, true);
+        c.add(true, false);
+        c.add(false, true);
+        c.add(false, false);
+        assert!((c.fp_rate() - 0.5).abs() < 1e-12);
+        assert!((c.fn_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_duration_rule_needs_persistence() {
+        let mut r = FixedDurationRule::new(2, 5.0);
+        // straggling starts at t=0; not flagged until 5 s have elapsed
+        assert_eq!(r.observe(0.0, &[1.0, 2.0]), vec![false, false]);
+        assert_eq!(r.observe(3.0, &[1.0, 2.0]), vec![false, false]);
+        assert_eq!(r.observe(6.0, &[1.0, 2.0]), vec![false, true]);
+        // recovery resets the clock
+        assert_eq!(r.observe(7.0, &[1.0, 1.0]), vec![false, false]);
+        assert_eq!(r.observe(8.0, &[1.0, 2.0]), vec![false, false]);
+    }
+
+    #[test]
+    fn ratio_series_rule_predicts_persistent_straggler() {
+        let mut r = RatioSeriesRule::new(2);
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            out = r.observe_and_predict(&[1.0, 1.6]);
+        }
+        assert_eq!(out, vec![false, true]);
+    }
+}

@@ -1,0 +1,339 @@
+//! Resource-aware straggler prevention (§IV-D).
+//!
+//! * [`equalize_group`] — within a gradient group, faster peers need not
+//!   finish before the slowest: deprive their CPU/bandwidth so they
+//!   complete exactly at the group deadline (free resources, zero TTA
+//!   cost).
+//! * [`sensitivity_deprivation`] — when that is not enough, spread the
+//!   remaining shortfall over co-located tasks inversely to
+//!   sensitivity × current accuracy improvement: R^k · (1/(S·A)) / Σ 1/(S·A).
+//! * acceptance test (S_w < S_o) is evaluated by the caller via the
+//!   iteration-time model; on failure STAR falls back to the next-ranked
+//!   mode (see `star`).
+//! * [`CommTree`] — §IV-D2b: amortize worker↔PS (or child↔parent)
+//!   communication over a latency-layered aggregation tree.
+//! * high-load task placement balancing lives in `trace::place_job`.
+
+/// Deprivable headroom of one co-located fast worker: the cap multiplier
+/// that makes its predicted completion hit the group deadline. With
+/// iteration time T(c) = fixed + var/c (c = resource share), slowing from
+/// T_now to T_target allows cap = var / (T_target − fixed) / share_now.
+pub fn equalize_cap(t_now: f64, t_target: f64, fixed_s: f64) -> f64 {
+    debug_assert!(t_target >= t_now - 1e-12);
+    let var_now = (t_now - fixed_s).max(1e-9);
+    let var_target = (t_target - fixed_s).max(var_now);
+    (var_now / var_target).clamp(0.05, 1.0)
+}
+
+/// Equalize a gradient group (§IV-D1): returns per-member resource-cap
+/// multipliers so each member lands on the group's slowest completion.
+/// `times[i]` = predicted completion, `fixed_s[i]` = the share-independent
+/// part (GPU compute).
+pub fn equalize_group(times: &[f64], fixed_s: &[f64]) -> Vec<f64> {
+    assert_eq!(times.len(), fixed_s.len());
+    let t_max = times.iter().cloned().fold(0.0, f64::max);
+    times
+        .iter()
+        .zip(fixed_s)
+        .map(|(&t, &f)| equalize_cap(t, t_max, f))
+        .collect()
+}
+
+/// A co-located task's deprivation inputs (§IV-D1).
+#[derive(Clone, Copy, Debug)]
+pub struct Victim {
+    /// sensitivity S^k of its job to this resource (Π (TTA_j − TTA)/TTA)
+    pub sensitivity: f64,
+    /// current accuracy improvement A (progress::improvement_rate)
+    pub improvement: f64,
+    /// resource currently granted (upper bound on what can be taken)
+    pub granted: f64,
+    /// floor that must remain (keep the task alive)
+    pub floor: f64,
+}
+
+/// Split a shortfall `needed` across victims ∝ 1/(S·A), water-filling the
+/// per-victim headroom (granted − floor). Returns per-victim amounts;
+/// their sum may be < needed if headroom runs out.
+pub fn sensitivity_deprivation(needed: f64, victims: &[Victim]) -> Vec<f64> {
+    let n = victims.len();
+    let mut take = vec![0.0; n];
+    if n == 0 || needed <= 0.0 {
+        return take;
+    }
+    let weight = |v: &Victim| 1.0 / (v.sensitivity.max(1e-6) * v.improvement.max(1e-6));
+    let mut remaining = needed;
+    let mut open: Vec<usize> = (0..n).collect();
+    // iterate: weighted split, clamp at headroom, redistribute
+    for _ in 0..n + 1 {
+        if remaining <= 1e-12 || open.is_empty() {
+            break;
+        }
+        let wsum: f64 = open.iter().map(|&i| weight(&victims[i])).sum();
+        let mut next_open = Vec::new();
+        let mut clamped_any = false;
+        for &i in &open {
+            let share = remaining * weight(&victims[i]) / wsum;
+            let headroom = (victims[i].granted - victims[i].floor - take[i]).max(0.0);
+            if share >= headroom {
+                take[i] += headroom;
+                clamped_any = true;
+            } else {
+                next_open.push(i);
+            }
+        }
+        let taken: f64 = take.iter().sum();
+        remaining = needed - taken;
+        open = next_open;
+        if !clamped_any {
+            // final proportional split among open victims
+            let wsum: f64 = open.iter().map(|&i| weight(&victims[i])).sum();
+            for &i in &open {
+                take[i] += remaining * weight(&victims[i]) / wsum;
+            }
+            break;
+        }
+    }
+    take
+}
+
+/// Sensitivity S^k from throttling observations (§IV-D1):
+/// Π_j (TTA_j^k − TTA)/TTA over the throttling experiments of resource k.
+pub fn sensitivity_from_throttles(tta_base: f64, tta_throttled: &[f64]) -> f64 {
+    let mut s = 1.0;
+    for &t in tta_throttled {
+        s *= ((t - tta_base) / tta_base).max(1e-3);
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Communication tree (§IV-D2b)
+// ---------------------------------------------------------------------------
+
+/// Aggregation tree: `parent[i]` = parent worker of i (usize::MAX = root,
+/// i.e. directly attached to the PS/AR-parent).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommTree {
+    pub parent: Vec<usize>,
+    pub branching: usize,
+}
+
+pub const ROOT: usize = usize::MAX;
+
+impl CommTree {
+    /// Build the §IV-D2b tree: workers sorted by link quality (higher
+    /// bandwidth → closer to the root); each layer holds `branching`×
+    /// more nodes; children attach to the best-linked node of the layer
+    /// above (fewest-children-first for balance).
+    pub fn build(bw_to_ps: &[f64], branching: usize) -> CommTree {
+        let n = bw_to_ps.len();
+        let branching = branching.max(1);
+        let mut order: Vec<usize> = (0..n).collect();
+        // best bandwidth first
+        order.sort_by(|&a, &b| bw_to_ps[b].partial_cmp(&bw_to_ps[a]).unwrap());
+        let mut parent = vec![ROOT; n];
+        let mut child_count = vec![0usize; n];
+        let mut prev_layer: Vec<usize> = Vec::new();
+        let mut cur_layer: Vec<usize> = Vec::new();
+        let mut root_slots = branching;
+        for &w in &order {
+            if root_slots > 0 {
+                parent[w] = ROOT;
+                root_slots -= 1;
+                cur_layer.push(w);
+                continue;
+            }
+            // attach to the least-loaded node of the previous layer
+            let p = prev_layer
+                .iter()
+                .copied()
+                .min_by_key(|&p| (child_count[p], std::cmp::Reverse((bw_to_ps[p] * 1e6) as u64)))
+                .or_else(|| cur_layer.iter().copied().min_by_key(|&p| child_count[p]));
+            match p {
+                Some(p) if child_count[p] < branching => {
+                    parent[w] = p;
+                    child_count[p] += 1;
+                    cur_layer.push(w);
+                }
+                _ => {
+                    // previous layer full: rotate layers
+                    prev_layer = std::mem::take(&mut cur_layer);
+                    let p = prev_layer
+                        .iter()
+                        .copied()
+                        .min_by_key(|&p| child_count[p])
+                        .expect("nonempty layer");
+                    parent[w] = p;
+                    child_count[p] += 1;
+                    cur_layer.push(w);
+                }
+            }
+            if cur_layer.len() >= prev_layer.len().max(1) * branching && !cur_layer.is_empty() {
+                prev_layer = std::mem::take(&mut cur_layer);
+            }
+        }
+        CommTree { parent, branching }
+    }
+
+    /// Flat topology: every worker talks to the PS directly.
+    pub fn flat(n: usize) -> CommTree {
+        CommTree { parent: vec![ROOT; n], branching: usize::MAX }
+    }
+
+    pub fn depth_of(&self, mut w: usize) -> usize {
+        let mut d = 1;
+        let mut guard = 0;
+        while self.parent[w] != ROOT {
+            w = self.parent[w];
+            d += 1;
+            guard += 1;
+            assert!(guard <= self.parent.len(), "cycle in comm tree");
+        }
+        d
+    }
+
+    pub fn max_depth(&self) -> usize {
+        (0..self.parent.len()).map(|w| self.depth_of(w)).max().unwrap_or(0)
+    }
+
+    /// Direct PS fan-in (number of roots).
+    pub fn root_fanin(&self) -> usize {
+        self.parent.iter().filter(|&&p| p == ROOT).count()
+    }
+
+    pub fn children_of(&self, p: usize) -> Vec<usize> {
+        (0..self.parent.len()).filter(|&w| self.parent[w] == p).collect()
+    }
+
+    /// Communication-time factor relative to flat fan-in (used by the
+    /// simulator): PS serves `root_fanin` flows instead of N (less PS
+    /// contention), while each extra layer adds a pipelined hop cost.
+    /// Aggregation is bottom-up and overlapped, so a hop costs a fraction
+    /// `hop_overlap` of a full transfer.
+    pub fn effective_flows(&self) -> usize {
+        self.root_fanin().max(1)
+    }
+
+    pub fn hop_penalty(&self, hop_overlap: f64) -> f64 {
+        1.0 + hop_overlap * (self.max_depth().saturating_sub(1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equalize_cap_identity_when_already_at_target() {
+        assert!((equalize_cap(1.0, 1.0, 0.2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equalize_cap_slows_proportionally() {
+        // T = 0.2 fixed + 0.8 var; target 1.8 => var must become 1.6 => cap 0.5
+        let c = equalize_cap(1.0, 1.8, 0.2);
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equalize_group_slowest_keeps_full_share() {
+        let caps = equalize_group(&[1.0, 2.0, 1.5], &[0.1, 0.1, 0.1]);
+        assert!((caps[1] - 1.0).abs() < 1e-12);
+        assert!(caps[0] < 1.0 && caps[2] < 1.0);
+        assert!(caps[0] < caps[2], "faster worker gives up more");
+    }
+
+    #[test]
+    fn deprivation_prefers_insensitive_late_stage_jobs() {
+        let victims = [
+            Victim { sensitivity: 0.9, improvement: 0.9, granted: 10.0, floor: 0.0 },
+            Victim { sensitivity: 0.1, improvement: 0.1, granted: 10.0, floor: 0.0 },
+        ];
+        let take = sensitivity_deprivation(5.0, &victims);
+        assert!(take[1] > 10.0 * take[0], "insensitive job pays more: {take:?}");
+        assert!((take.iter().sum::<f64>() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deprivation_respects_headroom() {
+        let victims = [
+            Victim { sensitivity: 0.1, improvement: 0.1, granted: 2.0, floor: 1.5 },
+            Victim { sensitivity: 0.9, improvement: 0.9, granted: 10.0, floor: 0.0 },
+        ];
+        let take = sensitivity_deprivation(5.0, &victims);
+        assert!(take[0] <= 0.5 + 1e-9);
+        assert!((take.iter().sum::<f64>() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deprivation_partial_when_headroom_short() {
+        let victims = [Victim { sensitivity: 0.5, improvement: 0.5, granted: 1.0, floor: 0.8 }];
+        let take = sensitivity_deprivation(5.0, &victims);
+        assert!((take[0] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deprivation_empty_and_zero() {
+        assert!(sensitivity_deprivation(1.0, &[]).is_empty());
+        let v = [Victim { sensitivity: 1.0, improvement: 1.0, granted: 5.0, floor: 0.0 }];
+        assert_eq!(sensitivity_deprivation(0.0, &v), vec![0.0]);
+    }
+
+    #[test]
+    fn sensitivity_from_throttles_multiplies() {
+        // two throttling runs at +50% and +20% TTA => S = 0.5*0.2 = 0.1
+        let s = sensitivity_from_throttles(100.0, &[150.0, 120.0]);
+        assert!((s - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_tree_all_root() {
+        let t = CommTree::flat(5);
+        assert_eq!(t.root_fanin(), 5);
+        assert_eq!(t.max_depth(), 1);
+    }
+
+    #[test]
+    fn tree_reduces_root_fanin_and_orders_by_bw() {
+        let bw: Vec<f64> = vec![1.0, 9.0, 3.0, 8.0, 2.0, 7.0, 5.0, 4.0];
+        let t = CommTree::build(&bw, 2);
+        assert_eq!(t.root_fanin(), 2);
+        // best-bandwidth workers (1 and 3) sit at the root layer
+        assert_eq!(t.parent[1], ROOT);
+        assert_eq!(t.parent[3], ROOT);
+        // worst-bandwidth worker (0) is at max depth
+        assert_eq!(t.depth_of(0), t.max_depth());
+        // all reachable, no cycles
+        for w in 0..bw.len() {
+            assert!(t.depth_of(w) <= bw.len());
+        }
+    }
+
+    #[test]
+    fn tree_respects_branching_bound() {
+        let mut rng = crate::simrng::Rng::seeded(3);
+        for _ in 0..50 {
+            let n = rng.usize(1, 12);
+            let b = rng.usize(1, 4);
+            let bw: Vec<f64> = (0..n).map(|_| rng.range(0.5, 10.0)).collect();
+            let t = CommTree::build(&bw, b);
+            for p in 0..n {
+                assert!(t.children_of(p).len() <= b, "n={n} b={b}");
+            }
+            assert!(t.root_fanin() <= b);
+            // partition: every node has exactly one parent (by construction)
+            let depth_sum: usize = (0..n).map(|w| t.depth_of(w)).sum();
+            assert!(depth_sum >= n);
+        }
+    }
+
+    #[test]
+    fn hop_penalty_grows_with_depth() {
+        let flat = CommTree::flat(8);
+        let deep = CommTree::build(&vec![1.0; 8], 2);
+        assert!(deep.max_depth() > flat.max_depth());
+        assert!(deep.hop_penalty(0.3) > flat.hop_penalty(0.3));
+        assert!(deep.effective_flows() < 8);
+    }
+}

@@ -1,0 +1,314 @@
+//! Training-progress substrate: PGNS-governed statistical efficiency +
+//! accuracy/perplexity curves + the paper's convergence detector.
+//!
+//! Per parameter update built from batch B at step s, progress advances by
+//! `1/n_u = 1/(1 + φ(s)/B)` ([46], §IV-C1), discounted by `γ^staleness`
+//! for stale gradient reports. Accuracy approaches a mode-dependent
+//! asymptote `a_max_eff` (Fig 16 / O7 model, models::converged_value)
+//! exponentially in progress. NLP models run the same machinery on
+//! perplexity (descending). Convergence = change below a threshold across
+//! five evaluations spaced 40 s apart (§III).
+
+use crate::models::{Kind, ModelSpec};
+
+/// Discount base for stale gradients (one unit of staleness = one
+/// parameter update applied between a gradient's read and its apply).
+pub const STALE_GAMMA: f64 = 0.9;
+
+/// Staleness saturates: beyond ~one full round of updates the gradient is
+/// "fully stale" and further version skew adds little extra damage
+/// (matches staleness-aware ASGD analyses; keeps γ^σ from annihilating
+/// progress under pathological contention).
+pub const STALE_CAP: f64 = 8.0;
+
+/// EMA rate for the mode-mix statistics that set the converged asymptote.
+const MIX_EMA: f64 = 0.05;
+
+/// Evaluation cadence and window from §III.
+pub const EVAL_PERIOD_S: f64 = 40.0;
+pub const EVAL_WINDOW: usize = 5;
+
+/// Evolving training state of one job.
+#[derive(Clone, Debug)]
+pub struct ProgressModel {
+    pub spec: &'static ModelSpec,
+    pub workers: usize,
+    /// parameter updates applied so far
+    pub step: u64,
+    /// accumulated statistical progress
+    pub progress: f64,
+    /// EMA of x/N over applied updates (diagnostics)
+    pub x_over_n_ema: f64,
+    /// EMA of realized staleness as a fraction of a full round (sets the
+    /// converged-quality asymptote)
+    pub stale_frac_ema: f64,
+    /// EMA of "update used a correctly rescaled LR" (O7)
+    pub lr_ok_ema: f64,
+    /// recent evaluation values for convergence detection
+    evals: Vec<f64>,
+    eval_due: f64,
+}
+
+impl ProgressModel {
+    pub fn new(spec: &'static ModelSpec, workers: usize) -> Self {
+        ProgressModel {
+            spec,
+            workers,
+            step: 0,
+            progress: 0.0,
+            x_over_n_ema: 1.0,
+            stale_frac_ema: 0.0,
+            lr_ok_ema: 1.0,
+            evals: Vec::new(),
+            eval_due: EVAL_PERIOD_S,
+        }
+    }
+
+    /// Total batch M summed across workers (§III: 128/worker).
+    pub fn total_batch(&self) -> f64 {
+        (self.workers * crate::models::WORKER_BATCH) as f64
+    }
+
+    /// Apply one parameter update built from `reports` gradient reports
+    /// (each of per-worker batch M/N) with mean staleness `staleness`
+    /// and `lr_rescaled` indicating §IV-C LR scaling was applied when the
+    /// effective batch shrank.
+    pub fn apply_update(&mut self, reports: usize, staleness: f64, lr_rescaled: bool) {
+        self.apply_update_mix(reports, reports, staleness, lr_rescaled);
+    }
+
+    /// Like [`apply_update`], but the converged-quality bookkeeping sees
+    /// `mix_reports` instead of `reports`: Zeno++-style validation
+    /// filtering keeps *quality* near-synchronous without changing the
+    /// statistical batch each update carries.
+    pub fn apply_update_mix(
+        &mut self,
+        reports: usize,
+        mix_reports: usize,
+        staleness: f64,
+        lr_rescaled: bool,
+    ) {
+        debug_assert!(reports >= 1 && reports <= self.workers);
+        let batch = self.total_batch() * reports as f64 / self.workers as f64;
+        let delta = 1.0 / self.spec.n_u(self.progress, batch)
+            * STALE_GAMMA.powf(staleness.clamp(0.0, STALE_CAP));
+        self.progress += delta;
+        self.step += 1;
+        let x_over_n = reports as f64 / self.workers as f64;
+        self.x_over_n_ema += MIX_EMA * (x_over_n - self.x_over_n_ema);
+        // converged quality follows *realized* staleness; validation
+        // filtering (mix_reports > reports, Zeno++) discards the stalest
+        // gradients, shrinking the quality-relevant staleness
+        let filter = (mix_reports.saturating_sub(reports)) as f64 / self.workers as f64;
+        let denom = (self.workers.saturating_sub(1)).max(1) as f64;
+        let sf = (staleness * (1.0 - filter) / denom).clamp(0.0, 1.0);
+        self.stale_frac_ema += MIX_EMA * (sf - self.stale_frac_ema);
+        let ok = if sf < 0.02 { 1.0 } else if lr_rescaled { 1.0 } else { 0.0 };
+        self.lr_ok_ema += MIX_EMA * (ok - self.lr_ok_ema);
+    }
+
+    /// Converged asymptote for the current mode mix.
+    pub fn asymptote(&self) -> f64 {
+        let with = self.spec.converged_value_stale(self.stale_frac_ema, true);
+        let without = self.spec.converged_value_stale(self.stale_frac_ema, false);
+        // blend by how often LR was correct
+        with * self.lr_ok_ema + without * (1.0 - self.lr_ok_ema)
+    }
+
+    /// Current model quality: accuracy % (image) or perplexity (NLP).
+    pub fn value(&self) -> f64 {
+        let a_inf = self.asymptote();
+        let a0 = self.spec.acc0;
+        let f = (-self.progress / self.spec.tau).exp();
+        a_inf + (a0 - a_inf) * f
+    }
+
+    /// Value change per unit progress right now (for sensitivity/stage
+    /// weighting in §IV-D1: "current accuracy improvement" A).
+    pub fn improvement_rate(&self) -> f64 {
+        let a_inf = self.asymptote();
+        ((a_inf - self.spec.acc0) / self.spec.tau * (-self.progress / self.spec.tau).exp()).abs()
+    }
+
+    /// Advance evaluation bookkeeping to time `t`; returns true once the
+    /// §III convergence criterion fires (<`thresh` change over 5 evals).
+    pub fn converged_at(&mut self, t: f64) -> bool {
+        let thresh = match self.spec.kind {
+            Kind::Image => 0.02, // accuracy points
+            Kind::Nlp => 0.2,    // perplexity points
+        };
+        while t >= self.eval_due {
+            self.evals.push(self.value());
+            if self.evals.len() > EVAL_WINDOW {
+                self.evals.remove(0);
+            }
+            self.eval_due += EVAL_PERIOD_S;
+        }
+        if self.evals.len() < EVAL_WINDOW {
+            return false;
+        }
+        let lo = self.evals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.evals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        // a plateau only counts as convergence when the curve is actually
+        // near its asymptote — a wall-clock lull (slow iterations under
+        // heavy contention) must not masquerade as convergence
+        let near = match self.spec.kind {
+            Kind::Image => (self.value() - self.asymptote()).abs() < 1.0,
+            Kind::Nlp => (self.value() - self.asymptote()).abs() < 5.0,
+        };
+        hi - lo < thresh && near
+    }
+
+    /// TTA target per §III: the converged value the vanilla ASGD baseline
+    /// reaches (fully stale updates at the SSGD-tuned LR, per O7).
+    pub fn tta_target(&self) -> f64 {
+        self.spec.converged_value_stale(1.0, false)
+    }
+
+    /// Reached when within a small evaluation margin of the target (an
+    /// exponential approach never *equals* its own asymptote).
+    pub fn reached_target(&self) -> bool {
+        let margin = match self.spec.kind {
+            Kind::Image => 0.25,
+            Kind::Nlp => 2.0,
+        };
+        let target = self.tta_target();
+        let adjusted = match self.spec.kind {
+            Kind::Image => target - margin,
+            Kind::Nlp => target + margin,
+        };
+        self.spec.reached(self.value(), adjusted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ZOO;
+
+    fn pm(model: usize, workers: usize) -> ProgressModel {
+        ProgressModel::new(&ZOO[model], workers)
+    }
+
+    #[test]
+    fn ssgd_progress_monotone_toward_acc_max() {
+        let mut p = pm(0, 8);
+        let mut last = p.value();
+        for _ in 0..15_000 {
+            p.apply_update(8, 0.0, true);
+            let v = p.value();
+            assert!(v >= last - 1e-9);
+            last = v;
+        }
+        assert!((p.value() - p.spec.acc_max).abs() < 1.0, "v={}", p.value());
+    }
+
+    #[test]
+    fn asgd_converges_lower_than_ssgd() {
+        let mut sync = pm(3, 8);
+        let mut asgd = pm(3, 8);
+        for _ in 0..20_000 {
+            sync.apply_update(8, 0.0, true);
+            asgd.apply_update(1, 7.0, true); // fully stale reports
+        }
+        assert!(sync.value() > asgd.value());
+        // and matches Fig 16 1-order vs 8-order spread direction
+        assert!(sync.value() - asgd.value() > 3.0);
+    }
+
+    #[test]
+    fn bigger_batch_fewer_updates_to_same_progress() {
+        let mut big = pm(1, 8);
+        let mut small = pm(1, 8);
+        for _ in 0..200 {
+            big.apply_update(8, 0.0, true);
+        }
+        let mut n = 0;
+        while small.progress < big.progress {
+            small.apply_update(2, 0.0, true);
+            n += 1;
+        }
+        assert!(n > 200, "2-order needs more updates: {n}");
+    }
+
+    #[test]
+    fn staleness_discounts_progress() {
+        let mut fresh = pm(2, 4);
+        let mut stale = pm(2, 4);
+        for _ in 0..100 {
+            fresh.apply_update(1, 0.0, true);
+            stale.apply_update(1, 3.0, true);
+        }
+        assert!(stale.progress < fresh.progress);
+    }
+
+    #[test]
+    fn lr_mismatch_lowers_asymptote() {
+        let mut ok = pm(4, 8);
+        let mut bad = pm(4, 8);
+        for _ in 0..10_000 {
+            // partially stale updates (x-order groups) with vs without the
+            // §IV-C LR rescale
+            ok.apply_update(2, 2.0, true);
+            bad.apply_update(2, 2.0, false);
+        }
+        assert!(ok.value() > bad.value());
+    }
+
+    #[test]
+    fn nlp_perplexity_descends() {
+        let mut p = pm(8, 4); // LSTM
+        let v0 = p.value();
+        for _ in 0..3000 {
+            p.apply_update(4, 0.0, true);
+        }
+        assert!(p.value() < v0);
+        assert!(p.value() > p.spec.acc_max - 1.0); // asymptote from above
+    }
+
+    #[test]
+    fn convergence_detector_fires_on_plateau() {
+        let mut p = pm(0, 4);
+        // plateau: run to near-convergence
+        for _ in 0..100_000 {
+            p.apply_update(4, 0.0, true);
+        }
+        // five evals over 200+ s on a flat curve
+        assert!(!p.converged_at(100.0)); // not enough evals yet
+        assert!(p.converged_at(400.0));
+    }
+
+    #[test]
+    fn convergence_not_fired_early() {
+        let mut p = pm(0, 4);
+        for i in 0..10 {
+            p.apply_update(4, 0.0, true);
+            assert!(!p.converged_at(40.0 * (i + 1) as f64 - 1.0) || i > 5);
+        }
+    }
+
+    #[test]
+    fn tta_target_reachable_by_ssgd_and_asgd() {
+        for (mi, spec) in ZOO.iter().enumerate() {
+            let p = pm(mi, 8);
+            let target = p.tta_target();
+            // SSGD asymptote beats the ASGD target
+            assert!(
+                spec.reached(spec.converged_value_stale(0.0, true), target),
+                "{}", spec.name
+            );
+            // vanilla ASGD's own asymptote equals the target exactly
+            assert!((spec.converged_value_stale(1.0, false) - target).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn improvement_rate_decays_with_training_stage() {
+        let mut p = pm(5, 4);
+        let early = p.improvement_rate();
+        for _ in 0..2000 {
+            p.apply_update(4, 0.0, true);
+        }
+        assert!(p.improvement_rate() < early);
+    }
+}

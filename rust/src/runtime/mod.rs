@@ -1,0 +1,317 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `make artifacts`) and executes them from the rust hot path.
+//! Python never runs here.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5's
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md). All modules are lowered with
+//! `return_tuple=True`, so every execution returns a single tuple literal
+//! that we decompose.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub json: Json,
+}
+
+/// Static description of one lowered model config.
+#[derive(Clone, Debug)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub padded_param_count: usize,
+    pub use_pallas_matmul: bool,
+}
+
+impl Manifest {
+    /// Locate artifacts: `$STAR_ARTIFACTS`, `./artifacts`, or the crate
+    /// root's `artifacts/`.
+    pub fn discover() -> Result<Manifest> {
+        let mut candidates = Vec::new();
+        if let Ok(p) = std::env::var("STAR_ARTIFACTS") {
+            candidates.push(PathBuf::from(p));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        candidates.push(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        for c in candidates {
+            if c.join("manifest.json").exists() {
+                return Self::load(&c);
+            }
+        }
+        bail!("artifacts not found — run `make artifacts` first")
+    }
+
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let json = Json::parse_file(&root.join("manifest.json"))?;
+        if json.get("interchange")?.str()? != "hlo-text" {
+            bail!("unsupported artifact interchange format");
+        }
+        Ok(Manifest { root: root.to_path_buf(), json })
+    }
+
+    pub fn config_names(&self) -> Vec<String> {
+        self.json
+            .get("configs")
+            .and_then(|c| c.obj().map(|m| m.keys().cloned().collect()))
+            .unwrap_or_default()
+    }
+
+    pub fn config(&self, name: &str) -> Result<ConfigInfo> {
+        let c = self.json.get("configs")?.get(name)?;
+        Ok(ConfigInfo {
+            name: name.to_string(),
+            vocab: c.get("vocab")?.int()? as usize,
+            seq_len: c.get("seq_len")?.int()? as usize,
+            batch: c.get("batch")?.int()? as usize,
+            param_count: c.get("param_count")?.int()? as usize,
+            padded_param_count: c.get("padded_param_count")?.int()? as usize,
+            use_pallas_matmul: c.get("use_pallas_matmul")?.boolean()?,
+        })
+    }
+
+    pub fn artifact_path(&self, config: &str, which: &str) -> Result<PathBuf> {
+        let rel = self
+            .json
+            .get("configs")?
+            .get(config)?
+            .get("artifacts")?
+            .get(which)?
+            .str()?
+            .to_string();
+        Ok(self.root.join(rel))
+    }
+
+    pub fn predictor_path(&self) -> Result<PathBuf> {
+        Ok(self.root.join(self.json.get("predictor")?.get("artifact")?.str()?))
+    }
+
+    pub fn predictor_window(&self) -> Result<usize> {
+        Ok(self.json.get("predictor")?.get("window")?.int()? as usize)
+    }
+}
+
+/// A PJRT client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Compiled> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap)
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Compiled { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled executable.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Compiled {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
+        lit.to_tuple().map_err(wrap)
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Literal helpers.
+pub fn lit_f32(values: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+pub fn lit_f32_2d(values: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(values.len(), rows * cols);
+    xla::Literal::vec1(values).reshape(&[rows as i64, cols as i64]).map_err(wrap)
+}
+
+pub fn lit_i32_2d(values: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(values.len(), rows * cols);
+    xla::Literal::vec1(values).reshape(&[rows as i64, cols as i64]).map_err(wrap)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(wrap)
+}
+
+/// A device-side training session for one model config: holds the five
+/// compiled functions and the parameter vector, and exposes the exact
+/// operations the coordinator composes (train_step / grad_acc /
+/// apply_update / eval_loss).
+pub struct TrainSession {
+    pub info: ConfigInfo,
+    init: Compiled,
+    train_step: Compiled,
+    eval_loss: Compiled,
+    apply_update: Compiled,
+    grad_acc: Compiled,
+    /// current parameters (host mirror; device buffers are created per
+    /// call — the PJRT CPU client aliases host memory so this is cheap;
+    /// see EXPERIMENTS.md §Perf for the measured numbers)
+    pub params: Vec<f32>,
+}
+
+impl TrainSession {
+    pub fn new(rt: &Runtime, man: &Manifest, config: &str) -> Result<TrainSession> {
+        let info = man.config(config)?;
+        let load = |which: &str| -> Result<Compiled> {
+            rt.load(&man.artifact_path(config, which)?)
+        };
+        Ok(TrainSession {
+            params: vec![0.0; info.padded_param_count],
+            info,
+            init: load("init")?,
+            train_step: load("train_step")?,
+            eval_loss: load("eval_loss")?,
+            apply_update: load("apply_update")?,
+            grad_acc: load("grad_acc")?,
+        })
+    }
+
+    /// Initialize parameters on device from a seed.
+    pub fn init_params(&mut self, seed: i32) -> Result<()> {
+        let out = self.init.run(&[lit_scalar_i32(seed)])?;
+        self.params = to_f32_vec(&out[0])?;
+        anyhow::ensure!(self.params.len() == self.info.padded_param_count);
+        Ok(())
+    }
+
+    /// One worker's forward+backward on a token batch: returns (loss, grads).
+    pub fn train_step(&self, tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let t = lit_i32_2d(tokens, self.info.batch, self.info.seq_len + 1)?;
+        let out = self.train_step.run(&[lit_f32(&self.params), t])?;
+        Ok((scalar_f32(&out[0])?, to_f32_vec(&out[1])?))
+    }
+
+    /// Evaluation loss on a held-out batch.
+    pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
+        let t = lit_i32_2d(tokens, self.info.batch, self.info.seq_len + 1)?;
+        let out = self.eval_loss.run(&[lit_f32(&self.params), t])?;
+        scalar_f32(&out[0])
+    }
+
+    /// acc += w*g through the fused Pallas kernel artifact.
+    pub fn grad_acc(&self, acc: &[f32], g: &[f32], w: f32) -> Result<Vec<f32>> {
+        let out = self.grad_acc.run(&[lit_f32(acc), lit_f32(g), lit_f32(&[w])])?;
+        to_f32_vec(&out[0])
+    }
+
+    /// params -= scale * acc through the fused Pallas kernel artifact.
+    pub fn apply_update(&mut self, acc: &[f32], scale: f32) -> Result<()> {
+        let out = self
+            .apply_update
+            .run(&[lit_f32(&self.params), lit_f32(acc), lit_f32(&[scale])])?;
+        self.params = to_f32_vec(&out[0])?;
+        Ok(())
+    }
+
+    /// x-order update exactly as §IV-B defines it: mean of `grads` applied
+    /// at `lr` (composition of grad_acc + apply_update artifacts).
+    pub fn xorder_update(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        anyhow::ensure!(!grads.is_empty());
+        let mut acc = vec![0.0f32; self.info.padded_param_count];
+        for g in grads {
+            acc = self.grad_acc(&acc, g, 1.0)?;
+        }
+        self.apply_update(&acc, lr / grads.len() as f32)
+    }
+}
+
+/// Synthetic tiny-corpus batch for the e2e examples: a noisy affine
+/// bigram process over a zipf-skewed alphabet — learnable structure
+/// (the affine map) with irreducible entropy (the zipf innovations), so
+/// training loss falls well below ln(V) but stays bounded away from 0.
+pub fn synth_corpus_batch(
+    info: &ConfigInfo,
+    rng: &mut crate::simrng::Rng,
+) -> Vec<i32> {
+    let v = info.vocab;
+    let mut out = Vec::with_capacity(info.batch * (info.seq_len + 1));
+    for _ in 0..info.batch {
+        let mut cur = rng.zipf(v, 1.2);
+        for _ in 0..=info.seq_len {
+            out.push(cur as i32);
+            // local additive drift: the model can learn "next ≈ cur + small
+            // zipf offset" as a relative rule, so loss falls from ln(V)
+            // toward the innovation entropy within a few hundred steps
+            let innovation = rng.zipf(64.min(v), 1.3) + 1; // 1-based
+            cur = (cur + innovation) % v;
+        }
+    }
+    out
+}
+
+/// The straggler-prediction LSTM artifact (§IV-A): history → next (cpu, bw).
+pub struct LstmPredictor {
+    compiled: Compiled,
+    window: usize,
+}
+
+impl LstmPredictor {
+    pub fn new(rt: &Runtime, man: &Manifest) -> Result<LstmPredictor> {
+        Ok(LstmPredictor {
+            compiled: rt.load(&man.predictor_path()?)?,
+            window: man.predictor_window()?,
+        })
+    }
+
+    pub fn predict_rows(&self, rows: &[[f32; 2]]) -> Result<(f64, f64)> {
+        anyhow::ensure!(rows.len() == self.window, "history must have {} rows", self.window);
+        let flat: Vec<f32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        let hist = lit_f32_2d(&flat, self.window, 2)?;
+        let out = self.compiled.run(&[hist])?;
+        let v = to_f32_vec(&out[0])?;
+        Ok((v[0].clamp(0.0, 1.0) as f64, v[1].clamp(0.0, 1.0) as f64))
+    }
+}
+
+impl crate::predict::ResourcePredictor for LstmPredictor {
+    fn predict(&mut self, h: &crate::predict::History) -> (f64, f64) {
+        match self.predict_rows(&h.padded_rows()) {
+            Ok(v) => v,
+            Err(_) => {
+                // degrade to last value on any runtime error
+                (
+                    h.cpu.back().copied().unwrap_or(0.5),
+                    h.bw.back().copied().unwrap_or(0.5),
+                )
+            }
+        }
+    }
+}

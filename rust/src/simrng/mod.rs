@@ -1,0 +1,367 @@
+//! Deterministic PRNG + distributions substrate.
+//!
+//! The `rand` crate family is unavailable in this offline image, so the
+//! simulator carries its own generator: PCG64 (O'Neill 2014, XSL-RR
+//! variant) — splittable via `fork`, with the distributions the cluster
+//! model needs (normal, lognormal, exponential, Poisson, Pareto, Zipf).
+//! Everything is seeded and reproducible; experiment output is a pure
+//! function of the seed.
+
+/// PCG64 XSL-RR generator. 128-bit state/increment, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// cached second normal deviate (Box–Muller produces pairs)
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Create from a seed; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb) | 1;
+        let mut rng = Rng { state: 0, inc, spare_normal: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience single-argument constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator (stable: depends only on the
+    /// parent's current state and the tag).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64();
+        Rng::new(s ^ tag.rotate_left(17), tag.wrapping_add(0x9e37_79b9))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive (unbiased via rejection).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        if span == 0 {
+            return self.next_u64() as i64; // full range
+        }
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + (v % span) as i64;
+            }
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // avoid log(0)
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// LogNormal with given log-space mean and sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Poisson (Knuth for small mean, normal approx for large).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean > 30.0 {
+            let v = self.normal_with(mean, mean.sqrt()).round();
+            return v.max(0.0) as u64;
+        }
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Pareto with scale x_m and shape alpha (heavy-tailed durations).
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        x_m / u.powf(1.0 / alpha)
+    }
+
+    /// Zipf over {0, .., n-1} with exponent s > 1 (token sampling for the
+    /// synthetic corpus): Devroye's rejection method for the (truncated)
+    /// zeta distribution (Non-Uniform Random Variate Generation, X.6.1).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n >= 1);
+        let s = s.max(1.001);
+        let b = 2f64.powf(s - 1.0);
+        loop {
+            let u = loop {
+                let u = self.f64();
+                if u > 1e-300 {
+                    break u;
+                }
+            };
+            let v = self.f64();
+            let x = u.powf(-1.0 / (s - 1.0)).floor();
+            if !(1.0..=n as f64).contains(&x) {
+                continue; // truncate to [1, n]
+            }
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                return x as usize - 1;
+            }
+        }
+    }
+
+    /// Pick a random element index by weight.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.usize(0, i);
+            items.swap(i, j);
+        }
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+/// AR(1) process: x' = rho*x + sigma*eps; used for time-varying server
+/// background load and bandwidth capacity (paper [31], DESIGN.md §6).
+#[derive(Clone, Debug)]
+pub struct Ar1 {
+    pub rho: f64,
+    pub sigma: f64,
+    pub value: f64,
+}
+
+impl Ar1 {
+    pub fn new(rho: f64, sigma: f64, init: f64) -> Self {
+        Ar1 { rho, sigma, value: init }
+    }
+
+    pub fn step(&mut self, rng: &mut Rng) -> f64 {
+        self.value = self.rho * self.value + self.sigma * rng.normal();
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::seeded(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn int_bounds_inclusive() {
+        let mut r = Rng::seeded(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = r.int(4, 12);
+            assert!((4..=12).contains(&v));
+            seen_lo |= v == 4;
+            seen_hi |= v == 12;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::seeded(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(4.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 4.5).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_heavy_tail_positive() {
+        let mut r = Rng::seeded(13);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 2.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Rng::seeded(17);
+        let n = 20_000;
+        let mut counts = vec![0usize; 50];
+        for _ in 0..n {
+            let v = r.zipf(50, 1.2);
+            assert!(v < 50);
+            counts[v] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        // but NOT degenerate: the tail must carry real mass (this guards
+        // against the s>1 inverse-CDF bug that returned rank 0 always)
+        let tail: usize = counts[5..].iter().sum();
+        assert!(tail > n / 5, "tail mass {tail}");
+        // empirical entropy well above zero
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n as f64;
+                -p * p.ln()
+            })
+            .sum();
+        assert!(h > 1.5, "entropy {h}");
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Rng::seeded(19);
+        let w = [0.0, 1.0, 3.0];
+        let mut c = [0usize; 3];
+        for _ in 0..6000 {
+            c[r.weighted_index(&w)] += 1;
+        }
+        assert_eq!(c[0], 0);
+        assert!(c[2] > 2 * c[1]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seeded(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::seeded(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn ar1_is_mean_reverting() {
+        let mut rng = Rng::seeded(31);
+        let mut p = Ar1::new(0.9, 0.1, 5.0);
+        for _ in 0..200 {
+            p.step(&mut rng);
+        }
+        assert!(p.value.abs() < 3.0);
+    }
+}

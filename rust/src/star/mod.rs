@@ -1,0 +1,515 @@
+//! The STAR controller (Fig 15): per-iteration straggler prediction →
+//! synchronization-mode determination (STAR-H heuristic / STAR-ML
+//! regressor / STAR- early decision) → resource-aware prevention, as a
+//! [`Policy`] for the trace driver. Ablation switches (§V-C) turn each
+//! ingredient off.
+
+use std::time::Instant;
+
+use crate::decide::{
+    choose_ar_heuristic, choose_ps_heuristic, expected_reports, Decision, DeciderKind, MlDecider,
+};
+use crate::driver::{DriverMode, Policy, PolicyDecision, RoundObs};
+use crate::prevent::CommTree;
+use crate::sync::{candidate_modes_ar, candidate_modes_ps, SyncMode};
+use crate::trace::Arch;
+
+/// The t_w grid STAR-H enumerates for AR (§V: 30–210 ms).
+pub const TW_GRID_MS: [f64; 7] = [30.0, 60.0, 90.0, 120.0, 150.0, 180.0, 210.0];
+
+/// Ablation switches (§V-C variant names in comments).
+#[derive(Clone, Debug)]
+pub struct Ablation {
+    /// /SP: replace STAR's resource-based prediction with the
+    /// fixed-duration rule of [29]
+    pub use_fixed_duration_prediction: bool,
+    /// /xS: only SSGD/ASGD available (no x-order modes)
+    pub no_x_order: bool,
+    /// /DS: drop the dynamic-x-order mode
+    pub no_dynamic: bool,
+    /// /PS: drop "preventing stragglers upon mode change" entirely
+    pub no_prevention: bool,
+    /// /W: drop the worker-equalization part of prevention
+    pub no_worker_equalize: bool,
+    /// /RS: ignore resource sensitivity / training stage in deprivation
+    pub no_sensitivity: bool,
+    /// /Mu: greedy most-capacity placement instead of Muri-style balance
+    pub greedy_placement: bool,
+    /// /N: placement without balancing the number of high-load tasks
+    pub no_balance_count: bool,
+    /// /Tree: no communication-tree amortization
+    pub no_tree: bool,
+}
+
+impl Default for Ablation {
+    fn default() -> Self {
+        Ablation {
+            use_fixed_duration_prediction: false,
+            no_x_order: false,
+            no_dynamic: false,
+            no_prevention: false,
+            no_worker_equalize: false,
+            no_sensitivity: false,
+            greedy_placement: false,
+            no_balance_count: false,
+            no_tree: false,
+        }
+    }
+}
+
+/// STAR as a driver policy.
+pub struct Star {
+    pub kind: DeciderKind,
+    pub ablation: Ablation,
+    name: &'static str,
+    ml: MlDecider,
+    /// paper-scale decision pause for the heuristic (§V: ~970 ms python;
+    /// our measured rust latency is recorded separately in Fig 28)
+    pub pause_h_s: f64,
+    /// simulated overlapped ML inference latency (§V: ~644 ms total ÷ jobs)
+    pub overhead_ml_s: f64,
+    /// STAR-: stale predictions (previous round's) are used
+    early_prev_predictions: Vec<f64>,
+    /// measured wall-clock of our rust decision path
+    pub wall_ns_total: u128,
+    pub wall_decisions: u64,
+    fixed_rule: Option<crate::predict::FixedDurationRule>,
+    last_feats: Vec<([f64; crate::decide::ML_FEATURES], u64)>,
+    /// hysteresis: keep the current mode unless the best candidate is
+    /// materially better (avoids mode thrash + repeated switch pauses)
+    last_mode: Option<SyncMode>,
+    pub hysteresis: f64,
+}
+
+impl Star {
+    pub fn new(kind: DeciderKind) -> Self {
+        let name = match kind {
+            DeciderKind::Heuristic => "STAR-H",
+            DeciderKind::Ml => "STAR-ML",
+            DeciderKind::Early => "STAR-",
+        };
+        Star {
+            kind,
+            ablation: Ablation::default(),
+            name,
+            ml: MlDecider::new(),
+            pause_h_s: 0.97,
+            overhead_ml_s: 0.20,
+            early_prev_predictions: Vec::new(),
+            wall_ns_total: 0,
+            wall_decisions: 0,
+            fixed_rule: None,
+            last_feats: Vec::new(),
+            last_mode: None,
+            hysteresis: 0.12,
+        }
+    }
+
+    pub fn with_ablation(kind: DeciderKind, ablation: Ablation, name: &'static str) -> Self {
+        let mut s = Self::new(kind);
+        s.ablation = ablation;
+        s.name = name;
+        s
+    }
+
+    fn candidates(&self, n: usize, arch: Arch, stragglers: usize) -> Vec<SyncMode> {
+        match arch {
+            Arch::Ps => {
+                if self.ablation.no_x_order {
+                    vec![SyncMode::Ssgd, SyncMode::Asgd]
+                } else {
+                    let mut v = candidate_modes_ps(n);
+                    if self.ablation.no_dynamic {
+                        v.retain(|m| *m != SyncMode::DynamicX);
+                    }
+                    v
+                }
+            }
+            Arch::AllReduce => candidate_modes_ar(stragglers.max(1), &TW_GRID_MS),
+        }
+    }
+
+    fn heuristic_decision(&self, obs: &RoundObs, predicted: &[f64], stragglers: usize) -> Decision {
+        match obs.arch {
+            Arch::Ps => {
+                if self.ablation.no_x_order {
+                    // rank only SSGD vs ASGD
+                    let mut ranked: Vec<(SyncMode, f64)> = [SyncMode::Ssgd, SyncMode::Asgd]
+                        .into_iter()
+                        .map(|m| {
+                            let est = crate::decide::time_to_progress_ps(
+                                obs.spec, obs.progress, obs.n, &m, predicted,
+                            );
+                            (m, est)
+                        })
+                        .collect();
+                    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                    let (mode, est) = ranked[0].clone();
+                    let lr = crate::decide::lr_for_mode(obs.spec, obs.n, &mode, predicted);
+                    Decision { mode, lr, est, ranked }
+                } else if self.ablation.no_dynamic {
+                    let mut d = choose_ps_heuristic(obs.spec, obs.progress, obs.n, predicted);
+                    d.ranked.retain(|(m, _)| *m != SyncMode::DynamicX);
+                    let (mode, est) = d.ranked[0].clone();
+                    d.mode = mode;
+                    d.est = est;
+                    d
+                } else {
+                    choose_ps_heuristic(obs.spec, obs.progress, obs.n, predicted)
+                }
+            }
+            Arch::AllReduce => {
+                choose_ar_heuristic(obs.spec, obs.progress, obs.n, stragglers, &TW_GRID_MS, predicted)
+            }
+        }
+    }
+}
+
+impl Policy for Star {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
+        let wall = Instant::now();
+
+        // -- straggler prediction (§IV-A; /SP swaps in the [29] rule) -----
+        let predicted: Vec<f64> = if self.ablation.use_fixed_duration_prediction {
+            let rule = self
+                .fixed_rule
+                .get_or_insert_with(|| crate::predict::FixedDurationRule::new(obs.n, 5.0));
+            let last: Vec<f64> = obs
+                .last_times
+                .iter()
+                .map(|&t| if t.is_finite() { t } else { 0.5 })
+                .collect();
+            let flags = rule.observe(obs.now, &last);
+            // rule only yields flags; synthesize times: flagged workers
+            // keep their slow time, others get the min
+            let min = last.iter().cloned().fold(f64::INFINITY, f64::min);
+            last.iter()
+                .zip(&flags)
+                .map(|(&t, &f)| if f { t } else { min })
+                .collect()
+        } else if self.kind == DeciderKind::Early && !self.early_prev_predictions.is_empty() {
+            // STAR-: decide with the previous round's predictions
+            self.early_prev_predictions.clone()
+        } else {
+            obs.predicted_times.to_vec()
+        };
+        if self.kind == DeciderKind::Early {
+            self.early_prev_predictions = obs.predicted_times.to_vec();
+        }
+
+        let flags = crate::predict::straggler_flags(&predicted);
+        let stragglers = flags.iter().filter(|&&f| f).count();
+
+        // no predicted stragglers -> SSGD (Fig 15: "otherwise SSGD")
+        if stragglers == 0 {
+            let mode = match obs.arch {
+                Arch::Ps => SyncMode::Ssgd,
+                Arch::AllReduce => SyncMode::ArRing { removed: 0, tw_ms: 0.0 },
+            };
+            self.last_mode = Some(mode.clone());
+            let mode = DriverMode::Sync(mode);
+            self.wall_ns_total += wall.elapsed().as_nanos();
+            self.wall_decisions += 1;
+            let mut d = PolicyDecision::simple(mode);
+            d.lr_rescaled = true;
+            if !self.ablation.no_tree {
+                d.tree = Some(CommTree::build(&vec![1.0; obs.n], 3));
+            }
+            return d;
+        }
+
+        // -- mode determination (§IV-C) ------------------------------------
+        let mut decision = if self.kind == DeciderKind::Ml && self.ml.trained() {
+            // periodic continued distillation keeps the regressor pinned
+            // to the (cheap, µs-scale) heuristic across training stages
+            if self.wall_decisions % 4 == 0 {
+                let d = self.heuristic_decision(obs, &predicted, stragglers);
+                for (m, est) in &d.ranked {
+                    let x = MlDecider::features(obs.spec, obs.progress, obs.n, &predicted, m);
+                    self.ml.observe(&x, *est);
+                }
+            }
+            let cands = self.candidates(obs.n, obs.arch, stragglers);
+            self.ml.choose(obs.spec, obs.progress, obs.n, &predicted, cands)
+        } else {
+            let d = self.heuristic_decision(obs, &predicted, stragglers);
+            // §IV-C2: the regressor is bootstrapped from the heuristic's
+            // own estimates (distillation) until it takes over
+            if self.kind == DeciderKind::Ml {
+                for (m, est) in &d.ranked {
+                    let x = MlDecider::features(obs.spec, obs.progress, obs.n, &predicted, m);
+                    self.ml.observe(&x, *est);
+                }
+            }
+            d
+        };
+        // hysteresis: stick with the current mode unless the winner beats
+        // it by more than `hysteresis`
+        if let Some(last) = &self.last_mode {
+            if let Some((_, last_est)) = decision.ranked.iter().find(|(m, _)| m == last) {
+                if *last_est <= decision.est * (1.0 + self.hysteresis) {
+                    decision.mode = last.clone();
+                    decision.est = *last_est;
+                }
+            }
+        }
+        self.last_mode = Some(decision.mode.clone());
+
+        // remember features for online ML training (trained on heuristic
+        // outcomes first, then refined; §IV-C2)
+        if self.kind == DeciderKind::Ml {
+            let x = MlDecider::features(obs.spec, obs.progress, obs.n, &predicted, &decision.mode);
+            self.last_feats.push((x, obs.step));
+            if self.last_feats.len() > 64 {
+                self.last_feats.remove(0);
+            }
+        }
+
+        // -- prevention (§IV-D1): group equalization ------------------------
+        // Within each gradient group the slowest member sets the deadline;
+        // faster members yield CPU/bandwidth so they complete exactly at
+        // that deadline — freed resources flow to co-located tasks through
+        // the cluster's fair-sharing, at zero TTA cost to this job.
+        let deprive = Vec::new();
+        let mut self_caps = Vec::new();
+        if !self.ablation.no_prevention && !self.ablation.no_worker_equalize {
+            let groups: Vec<Vec<usize>> = match &decision.mode {
+                SyncMode::Ssgd => vec![(0..obs.n).collect()],
+                SyncMode::StaticX(x) => {
+                    let mut order: Vec<usize> = (0..obs.n).collect();
+                    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+                    order.chunks(*x).map(|c| c.to_vec()).collect()
+                }
+                SyncMode::DynamicX => crate::sync::cluster_times(&predicted, 0.15, 0.02),
+                SyncMode::Asgd => Vec::new(),
+                SyncMode::ArRing { removed, .. } => {
+                    let keep = obs.n - removed.min(&(obs.n - 1));
+                    let mut order: Vec<usize> = (0..obs.n).collect();
+                    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+                    vec![order[..keep].to_vec()]
+                }
+            };
+            if !groups.is_empty() {
+                self_caps = vec![1.0; obs.n];
+                let fixed = obs.spec.gpu_ms / 1000.0;
+                for g in &groups {
+                    let times: Vec<f64> = g.iter().map(|&w| predicted[w]).collect();
+                    let deadline = times.iter().cloned().fold(0.0, f64::max);
+                    let fixed_v = vec![fixed; g.len()];
+                    let caps = crate::prevent::equalize_group(&times, &fixed_v);
+                    for (k, &w) in g.iter().enumerate() {
+                        // conservative: predictions are noisy, so reclaim
+                        // only part of the headroom, and only when the gap
+                        // to the group deadline is material — an over-
+                        // tight cap would itself manufacture a straggler
+                        if deadline > 1.3 * times[k] {
+                            self_caps[w] = 1.0 - 0.4 * (1.0 - caps[k]);
+                        }
+                    }
+                }
+            }
+        }
+
+        let reports = expected_reports(obs.n, &decision.mode, &predicted) as usize;
+        let _ = reports;
+
+        let (pause, overhead) = match self.kind {
+            DeciderKind::Heuristic => (self.pause_h_s, 0.0),
+            DeciderKind::Ml => (0.0, self.overhead_ml_s),
+            DeciderKind::Early => (0.0, self.pause_h_s), // overlapped, but accounted
+        };
+
+        self.wall_ns_total += wall.elapsed().as_nanos();
+        self.wall_decisions += 1;
+
+        let mut d = PolicyDecision::simple(DriverMode::Sync(decision.mode));
+        d.lr_rescaled = true; // §IV-C: STAR always rescales LR on switch
+        d.pause_s = pause;
+        d.overhead_s = overhead;
+        d.deprive = deprive;
+        d.self_caps = self_caps;
+        if !self.ablation.no_tree {
+            d.tree = Some(CommTree::build(&vec![1.0; obs.n], 3));
+        }
+        d
+    }
+
+    fn feedback(&mut self, step: u64, time_per_progress: f64) {
+        // outcome refinement: low-rate, bounded — realized seconds-per-
+        // value-unit is far noisier than the heuristic's estimates, so it
+        // nudges rather than dominates the distilled regressor
+        if self.kind == DeciderKind::Ml && step % 64 == 0 {
+            if let Some(idx) = self.last_feats.iter().position(|&(_, s)| s <= step) {
+                let (x, _) = self.last_feats.remove(idx);
+                let clamped = time_per_progress.clamp(1e-3, 1e3);
+                self.ml.observe(&x, clamped);
+            }
+        }
+    }
+
+    fn balanced_placement(&self) -> bool {
+        !(self.ablation.no_balance_count || self.ablation.greedy_placement)
+    }
+
+    fn wants_tree(&self) -> bool {
+        !self.ablation.no_tree
+    }
+}
+
+/// Named ablation constructors (§V-C).
+pub fn ablations() -> Vec<(&'static str, Ablation)> {
+    vec![
+        ("STAR/SP", Ablation { use_fixed_duration_prediction: true, ..Default::default() }),
+        ("STAR/xS", Ablation { no_x_order: true, ..Default::default() }),
+        ("STAR/DS", Ablation { no_dynamic: true, ..Default::default() }),
+        ("STAR/PS", Ablation { no_prevention: true, ..Default::default() }),
+        ("STAR/W", Ablation { no_worker_equalize: true, ..Default::default() }),
+        ("STAR/RS", Ablation { no_sensitivity: true, ..Default::default() }),
+        ("STAR/Mu", Ablation { greedy_placement: true, ..Default::default() }),
+        ("STAR/N", Ablation { no_balance_count: true, ..Default::default() }),
+        ("STAR/Tree", Ablation { no_tree: true, ..Default::default() }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ZOO;
+
+    fn obs<'a>(
+        predicted: &'a [f64],
+        last: &'a [f64],
+        flags: &'a [bool],
+        arch: Arch,
+    ) -> RoundObs<'a> {
+        RoundObs {
+            job: 0,
+            n: predicted.len(),
+            arch,
+            spec: &ZOO[0],
+            step: 500,
+            progress: 100.0,
+            now: 100.0,
+            predicted_times: predicted,
+            last_times: last,
+            value: 50.0,
+            predicted_stragglers: flags,
+        }
+    }
+
+    #[test]
+    fn no_straggler_means_ssgd() {
+        let mut star = Star::new(DeciderKind::Heuristic);
+        let p = vec![0.3; 8];
+        let f = vec![false; 8];
+        let d = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+        assert_eq!(d.pause_s, 0.0, "no decision pause when no straggler");
+    }
+
+    #[test]
+    fn straggler_triggers_heuristic_with_pause() {
+        let mut star = Star::new(DeciderKind::Heuristic);
+        let mut p = vec![0.3; 8];
+        p[0] = 3.0;
+        let f = crate::predict::straggler_flags(&p);
+        let d = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert_ne!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+        assert!(d.pause_s > 0.0);
+        assert!(d.lr_rescaled);
+    }
+
+    #[test]
+    fn ml_defers_to_heuristic_until_trained() {
+        let mut star = Star::new(DeciderKind::Ml);
+        let mut p = vec![0.3; 8];
+        p[0] = 3.0;
+        let f = crate::predict::straggler_flags(&p);
+        let d = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        // untrained: heuristic path, but no pause (ML overlaps by §V)
+        assert_eq!(d.pause_s, 0.0);
+        assert!(d.overhead_s > 0.0);
+        assert_ne!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+    }
+
+    #[test]
+    fn early_variant_uses_stale_predictions() {
+        let mut star = Star::new(DeciderKind::Early);
+        let p1 = vec![0.3; 8]; // first round: uniform
+        let f1 = vec![false; 8];
+        let _ = star.decide(&obs(&p1, &p1, &f1, Arch::Ps));
+        // second round: a straggler appears, but STAR- decides on round-1
+        // predictions => still SSGD
+        let mut p2 = vec![0.3; 8];
+        p2[0] = 3.0;
+        let f2 = crate::predict::straggler_flags(&p2);
+        let d = star.decide(&obs(&p2, &p2, &f2, Arch::Ps));
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
+        // third round: now it sees them
+        let d3 = star.decide(&obs(&p2, &p2, &f2, Arch::Ps));
+        assert_ne!(d3.mode, DriverMode::Sync(SyncMode::Ssgd));
+    }
+
+    #[test]
+    fn ar_arch_yields_ring_modes() {
+        let mut star = Star::new(DeciderKind::Heuristic);
+        let mut p = vec![0.3; 8];
+        p[0] = 3.0;
+        let f = crate::predict::straggler_flags(&p);
+        let d = star.decide(&obs(&p, &p, &f, Arch::AllReduce));
+        assert!(matches!(d.mode, DriverMode::Sync(SyncMode::ArRing { .. })));
+    }
+
+    #[test]
+    fn xs_ablation_limits_candidates() {
+        let abl = Ablation { no_x_order: true, ..Default::default() };
+        let mut star = Star::with_ablation(DeciderKind::Heuristic, abl, "STAR/xS");
+        let mut p = vec![0.3; 8];
+        p[0] = 30.0;
+        let f = crate::predict::straggler_flags(&p);
+        let d = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert!(
+            matches!(d.mode, DriverMode::Sync(SyncMode::Ssgd) | DriverMode::Sync(SyncMode::Asgd)),
+            "{:?}",
+            d.mode
+        );
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Asgd), "severe straggler => ASGD");
+    }
+
+    #[test]
+    fn tree_ablation_disables_tree() {
+        let abl = Ablation { no_tree: true, ..Default::default() };
+        let mut star = Star::with_ablation(DeciderKind::Heuristic, abl, "STAR/Tree");
+        assert!(!star.wants_tree());
+        let p = vec![0.3; 8];
+        let f = vec![false; 8];
+        let d = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        assert!(d.tree.is_none());
+    }
+
+    #[test]
+    fn wall_clock_measured() {
+        let mut star = Star::new(DeciderKind::Heuristic);
+        let mut p = vec![0.3; 8];
+        p[0] = 3.0;
+        let f = crate::predict::straggler_flags(&p);
+        for _ in 0..5 {
+            let _ = star.decide(&obs(&p, &p, &f, Arch::Ps));
+        }
+        assert_eq!(star.wall_decisions, 5);
+        assert!(star.wall_ns_total > 0);
+    }
+
+    #[test]
+    fn ablation_list_matches_paper_variants() {
+        let names: Vec<&str> = ablations().iter().map(|(n, _)| *n).collect();
+        for want in ["STAR/SP", "STAR/xS", "STAR/DS", "STAR/PS", "STAR/W", "STAR/RS",
+                     "STAR/Mu", "STAR/N", "STAR/Tree"] {
+            assert!(names.contains(&want), "{want}");
+        }
+    }
+}

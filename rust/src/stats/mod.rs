@@ -1,0 +1,258 @@
+//! Statistics substrate: percentiles, CDF/PDF summaries, correlation,
+//! histograms, online accumulators. Every figure in the paper is a CDF,
+//! PDF, or percentile band — this module regenerates those summaries.
+
+/// Online mean/variance (Welford) + min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile over a copy of the data (nearest-rank with linear interp).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile assuming `xs` is already sorted ascending.
+pub fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    if xs.len() == 1 {
+        return xs[0];
+    }
+    let rank = p / 100.0 * (xs.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    xs[lo] * (1.0 - frac) + xs[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// A CDF summary sampled at the given x grid: returns P(X <= x) per point.
+pub fn cdf_at(xs: &[f64], grid: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.iter()
+        .map(|&g| {
+            let cnt = v.partition_point(|&x| x <= g);
+            cnt as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Evenly-spaced grid over [lo, hi] with n points.
+pub fn grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect()
+}
+
+/// Histogram with `bins` equal-width bins over [lo, hi]; returns counts.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || !x.is_finite() {
+            continue;
+        }
+        let mut b = ((x - lo) / w) as usize;
+        if b >= bins {
+            b = bins - 1; // clamp x == hi (and overshoot) into last bin
+        }
+        h[b] += 1;
+    }
+    h
+}
+
+/// Number of distinct occupied bins when [0, max] is split into `bins`
+/// equal bins — the paper's Fig 6 statistic for worker iteration times.
+pub fn occupied_bins(xs: &[f64], bins: usize) -> usize {
+    if xs.is_empty() {
+        return 0;
+    }
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if hi <= 0.0 {
+        return 1;
+    }
+    histogram(xs, 0.0, hi, bins).iter().filter(|&&c| c > 0).count()
+}
+
+/// Summary band used all over §V: mean with 1st and 99th percentiles.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    pub mean: f64,
+    pub p1: f64,
+    pub p99: f64,
+}
+
+pub fn band(xs: &[f64]) -> Band {
+    Band { mean: mean(xs), p1: percentile(xs, 1.0), p99: percentile(xs, 99.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.add(x);
+        }
+        assert!((o.mean() - 4.0).abs() < 1e-12);
+        assert!((o.min - 1.0).abs() < 1e-12);
+        assert!((o.max - 10.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((o.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_near_zero() {
+        let mut rng = crate::simrng::Rng::seeded(1);
+        let x: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        assert!(pearson(&x, &y).abs() < 0.05);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [1.0, 2.0, 2.0, 5.0];
+        let g = grid(0.0, 6.0, 7);
+        let c = cdf_at(&xs, &g);
+        for w in c.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert_eq!(*c.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn histogram_clamps_max() {
+        // 0.5 sits on the boundary and goes to the upper bin; 1.0 == hi is
+        // clamped into the last bin
+        let h = histogram(&[0.0, 0.5, 1.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![1, 2]);
+        let h2 = histogram(&[0.0, 0.49, 1.0], 0.0, 1.0, 2);
+        assert_eq!(h2, vec![2, 1]);
+    }
+
+    #[test]
+    fn occupied_bins_spread() {
+        // all equal -> last bin only
+        assert_eq!(occupied_bins(&[3.0, 3.0, 3.0], 8), 1);
+        // spread evenly over 8 bins (bin centers)
+        let xs: Vec<f64> = (0..8).map(|i| i as f64 + 0.5).collect();
+        assert_eq!(occupied_bins(&xs, 8), 8);
+    }
+
+    #[test]
+    fn band_orders() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let b = band(&xs);
+        assert!(b.p1 < b.mean && b.mean < b.p99);
+    }
+}

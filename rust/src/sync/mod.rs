@@ -1,0 +1,402 @@
+//! Synchronization modes (§IV-B): SSGD, ASGD, static-x-order,
+//! dynamic-x-order, and the AR-ring family (x removed stragglers attached
+//! to waiting parents). This module defines the modes and their *round
+//! semantics*: given per-worker iteration durations, when does each
+//! parameter update fire, from how many gradient reports, and at what
+//! staleness — consumed by both the simulator driver and the real PJRT
+//! training loop in `examples/e2e_train.rs`.
+
+use crate::simrng::Rng;
+
+/// A synchronization mode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncMode {
+    /// bulk-synchronous: one update from all N workers
+    Ssgd,
+    /// fully asynchronous: one update per gradient report
+    Asgd,
+    /// update per x gradient reports, arrival order (1 < x < N)
+    StaticX(usize),
+    /// update per predicted-iteration-time cluster (§IV-B)
+    DynamicX,
+    /// ring all-reduce with `removed` stragglers re-attached to parents
+    /// that wait `tw_ms` after their own computation (AR architecture)
+    ArRing { removed: usize, tw_ms: f64 },
+}
+
+impl SyncMode {
+    pub fn name(&self) -> String {
+        match self {
+            SyncMode::Ssgd => "SSGD".into(),
+            SyncMode::Asgd => "ASGD".into(),
+            SyncMode::StaticX(x) => format!("{x}-order"),
+            SyncMode::DynamicX => "dynamic-x".into(),
+            SyncMode::ArRing { removed, tw_ms } => format!("ring(-{removed},{tw_ms}ms)"),
+        }
+    }
+
+    /// Is this one of the async-family modes that changes the effective
+    /// batch (and thus needs LR rescaling per §IV-C / O7)?
+    pub fn shrinks_batch(&self, n: usize) -> bool {
+        match self {
+            SyncMode::Ssgd => false,
+            SyncMode::Asgd => n > 1,
+            SyncMode::StaticX(x) => *x < n,
+            SyncMode::DynamicX => true,
+            SyncMode::ArRing { removed, .. } => *removed > 0,
+        }
+    }
+}
+
+/// LR scaling on mode switch (§IV-C): r_new = (M_new / M) * r_ssgd where
+/// M_new = y·M/N and y = reports per update.
+pub fn scaled_lr(base_lr: f64, reports: usize, n: usize) -> f64 {
+    base_lr * reports as f64 / n as f64
+}
+
+/// One parameter update within a round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Update {
+    /// offset from round start, seconds
+    pub at: f64,
+    /// worker ranks whose gradients form this update
+    pub members: Vec<usize>,
+    /// updates applied earlier in the round (gradient staleness proxy)
+    pub staleness: f64,
+}
+
+/// The schedule of one training round under a mode.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub updates: Vec<Update>,
+    /// when each worker becomes free to start its next iteration
+    /// (offset from round start)
+    pub worker_end: Vec<f64>,
+    /// wall span of the round
+    pub span: f64,
+    /// gradient reports that made it into some update this round
+    pub reports_used: usize,
+}
+
+/// Build the round schedule for `mode` given actual per-worker durations
+/// `times` (seconds) and `predicted` durations (used only by DynamicX for
+/// grouping, mirroring §IV-B where clusters form on *predicted* times).
+pub fn plan_round(mode: &SyncMode, times: &[f64], predicted: &[f64]) -> RoundPlan {
+    let n = times.len();
+    assert!(n >= 1);
+    assert_eq!(predicted.len(), n);
+    match mode {
+        SyncMode::Ssgd => {
+            let t_max = max_of(times);
+            RoundPlan {
+                updates: vec![Update { at: t_max, members: (0..n).collect(), staleness: 0.0 }],
+                worker_end: vec![t_max; n],
+                span: t_max,
+                reports_used: n,
+            }
+        }
+        SyncMode::Asgd => {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+            let updates = order
+                .iter()
+                .enumerate()
+                .map(|(k, &w)| Update { at: times[w], members: vec![w], staleness: k as f64 })
+                .collect();
+            RoundPlan {
+                updates,
+                worker_end: times.to_vec(),
+                span: max_of(times),
+                reports_used: n,
+            }
+        }
+        SyncMode::StaticX(x) => {
+            let x = (*x).clamp(1, n);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+            let mut updates = Vec::new();
+            let mut worker_end = vec![0.0; n];
+            for (g, chunk) in order.chunks(x).enumerate() {
+                let at = chunk.iter().map(|&w| times[w]).fold(0.0, f64::max);
+                for &w in chunk {
+                    worker_end[w] = at;
+                }
+                updates.push(Update { at, members: chunk.to_vec(), staleness: g as f64 });
+            }
+            let span = max_of(times);
+            let used = updates.iter().map(|u| u.members.len()).sum();
+            RoundPlan { updates, worker_end, span, reports_used: used }
+        }
+        SyncMode::DynamicX => {
+            let clusters = cluster_times(predicted, 0.15, 0.02);
+            let mut updates: Vec<Update> = clusters
+                .into_iter()
+                .map(|members| {
+                    let at = members.iter().map(|&w| times[w]).fold(0.0, f64::max);
+                    Update { at, members, staleness: 0.0 }
+                })
+                .collect();
+            updates.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+            let mut worker_end = vec![0.0; n];
+            for (g, u) in updates.iter_mut().enumerate() {
+                u.staleness = g as f64;
+                for &w in &u.members {
+                    worker_end[w] = u.at;
+                }
+            }
+            let span = max_of(times);
+            let used = updates.iter().map(|u| u.members.len()).sum();
+            RoundPlan { updates, worker_end, span, reports_used: used }
+        }
+        SyncMode::ArRing { removed, tw_ms } => {
+            let tw = tw_ms / 1e3;
+            let removed = (*removed).min(n.saturating_sub(1));
+            // slowest `removed` workers leave the ring
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+            let ring: Vec<usize> = order[..n - removed].to_vec();
+            let out: Vec<usize> = order[n - removed..].to_vec();
+            let t_ring = ring.iter().map(|&w| times[w]).fold(0.0, f64::max);
+            let deadline = t_ring + tw;
+            // q removed stragglers finish within the parent wait window
+            let mut members = ring.clone();
+            members.extend(out.iter().copied().filter(|&w| times[w] <= deadline));
+            members.sort_unstable();
+            let reports = members.len();
+            let span = deadline;
+            RoundPlan {
+                updates: vec![Update { at: deadline, members, staleness: 0.0 }],
+                // everyone (incl. removed stragglers) resumes on broadcast
+                worker_end: times.iter().map(|&t| t.max(deadline)).collect(),
+                span,
+                reports_used: reports,
+            }
+        }
+    }
+}
+
+/// Agglomerative (single-linkage on the sorted line) clustering of
+/// predicted iteration times: a new cluster starts where the gap to the
+/// previous time exceeds `rel` (relative) or `abs_s` (absolute floor).
+/// This is the 1-D specialization of hierarchical clustering with a
+/// distance threshold (§IV-B cites sklearn's AgglomerativeClustering).
+pub fn cluster_times(times: &[f64], rel: f64, abs_s: f64) -> Vec<Vec<usize>> {
+    let n = times.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+    let mut clusters: Vec<Vec<usize>> = vec![vec![order[0]]];
+    for win in order.windows(2) {
+        let (prev, cur) = (win[0], win[1]);
+        let gap = times[cur] - times[prev];
+        let thresh = (rel * times[prev]).max(abs_s);
+        if gap > thresh {
+            clusters.push(Vec::new());
+        }
+        clusters.last_mut().unwrap().push(cur);
+    }
+    clusters
+}
+
+/// All candidate modes STAR-H/STAR-ML enumerate for an N-worker PS job
+/// (§IV-C1): SSGD, ASGD, static x for x=2..N-1, dynamic-x.
+pub fn candidate_modes_ps(n: usize) -> Vec<SyncMode> {
+    let mut v = vec![SyncMode::Ssgd, SyncMode::Asgd];
+    for x in 2..n {
+        v.push(SyncMode::StaticX(x));
+    }
+    v.push(SyncMode::DynamicX);
+    v
+}
+
+/// Candidate AR modes: x removed in 1..=stragglers, t_w over a grid (§V:
+/// 30–210 ms), plus the full ring (x = 0).
+pub fn candidate_modes_ar(stragglers: usize, tw_grid_ms: &[f64]) -> Vec<SyncMode> {
+    let mut v = vec![SyncMode::ArRing { removed: 0, tw_ms: 0.0 }];
+    for x in 1..=stragglers {
+        for &tw in tw_grid_ms {
+            v.push(SyncMode::ArRing { removed: x, tw_ms: tw });
+        }
+    }
+    v
+}
+
+/// Simulated per-report communication jitter helper used by tests and the
+/// e2e example to derive plausible durations.
+pub fn jittered_times(base_s: f64, n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n).map(|_| base_s * rng.range(0.9, 1.15)).collect()
+}
+
+fn max_of(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T4: [f64; 4] = [1.0, 1.1, 1.2, 5.0];
+
+    #[test]
+    fn ssgd_single_update_at_max() {
+        let p = plan_round(&SyncMode::Ssgd, &T4, &T4);
+        assert_eq!(p.updates.len(), 1);
+        assert_eq!(p.updates[0].at, 5.0);
+        assert_eq!(p.updates[0].members.len(), 4);
+        assert!(p.worker_end.iter().all(|&e| e == 5.0));
+        assert_eq!(p.reports_used, 4);
+    }
+
+    #[test]
+    fn asgd_one_update_per_worker_no_waiting() {
+        let p = plan_round(&SyncMode::Asgd, &T4, &T4);
+        assert_eq!(p.updates.len(), 4);
+        assert_eq!(p.worker_end, T4.to_vec());
+        // fastest has no staleness, slowest the most
+        assert_eq!(p.updates[0].staleness, 0.0);
+        assert_eq!(p.updates[3].staleness, 3.0);
+        assert_eq!(p.updates[3].members, vec![3]);
+    }
+
+    #[test]
+    fn static_2_groups_by_arrival() {
+        let p = plan_round(&SyncMode::StaticX(2), &T4, &T4);
+        assert_eq!(p.updates.len(), 2);
+        assert_eq!(p.updates[0].members, vec![0, 1]);
+        assert_eq!(p.updates[0].at, 1.1);
+        assert_eq!(p.updates[1].members, vec![2, 3]);
+        assert_eq!(p.updates[1].at, 5.0);
+        // fast pair freed at 1.1, not at 5.0: straggler no longer blocks them
+        assert_eq!(p.worker_end[0], 1.1);
+        assert_eq!(p.worker_end[3], 5.0);
+    }
+
+    #[test]
+    fn static_x_remainder_group() {
+        let t = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let p = plan_round(&SyncMode::StaticX(2), &t, &t);
+        assert_eq!(p.updates.len(), 3);
+        assert_eq!(p.updates[2].members, vec![4]);
+        assert_eq!(p.reports_used, 5);
+    }
+
+    #[test]
+    fn dynamic_clusters_similar_predictions() {
+        // predictions: {1.0,1.05,1.1} and {5.0}; actuals slightly different
+        let pred = [1.0, 1.05, 1.1, 5.0];
+        let act = [1.02, 1.0, 1.2, 4.8];
+        let p = plan_round(&SyncMode::DynamicX, &act, &pred);
+        assert_eq!(p.updates.len(), 2);
+        assert_eq!(p.updates[0].members.len(), 3);
+        assert_eq!(p.updates[0].at, 1.2); // max actual within cluster
+        assert_eq!(p.updates[1].members, vec![3]);
+    }
+
+    #[test]
+    fn ar_ring_full_is_ssgd_like() {
+        let p = plan_round(&SyncMode::ArRing { removed: 0, tw_ms: 0.0 }, &T4, &T4);
+        assert_eq!(p.updates.len(), 1);
+        assert_eq!(p.reports_used, 4);
+        assert_eq!(p.span, 5.0);
+    }
+
+    #[test]
+    fn ar_ring_removal_shrinks_span_and_counts_q() {
+        // remove the 5.0 straggler; ring max becomes 1.2; wait 100 ms
+        let p = plan_round(&SyncMode::ArRing { removed: 1, tw_ms: 100.0 }, &T4, &T4);
+        assert!((p.span - 1.3).abs() < 1e-9);
+        // straggler (5.0) missed the 1.3 deadline: q = 0, reports = 3
+        assert_eq!(p.reports_used, 3);
+        // wait long enough and its report makes it: q = 1
+        let p2 = plan_round(&SyncMode::ArRing { removed: 1, tw_ms: 4000.0 }, &T4, &T4);
+        assert_eq!(p2.reports_used, 4);
+    }
+
+    #[test]
+    fn cluster_times_splits_on_gap() {
+        let t = [0.10, 0.11, 0.12, 0.50, 0.52, 2.0];
+        let c = cluster_times(&t, 0.15, 0.02);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0], vec![0, 1, 2]);
+        assert_eq!(c[1], vec![3, 4]);
+        assert_eq!(c[2], vec![5]);
+    }
+
+    #[test]
+    fn cluster_times_single_cluster_when_tight() {
+        let t = [1.0, 1.01, 1.02, 1.03];
+        assert_eq!(cluster_times(&t, 0.15, 0.02).len(), 1);
+    }
+
+    #[test]
+    fn cluster_covers_all_workers_exactly_once() {
+        let mut rng = Rng::seeded(4);
+        for _ in 0..100 {
+            let n = rng.usize(1, 12);
+            let t: Vec<f64> = (0..n).map(|_| rng.range(0.1, 3.0)).collect();
+            let c = cluster_times(&t, 0.15, 0.02);
+            let mut seen: Vec<usize> = c.into_iter().flatten().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn scaled_lr_proportional() {
+        assert!((scaled_lr(0.1, 2, 8) - 0.025).abs() < 1e-12);
+        assert!((scaled_lr(0.1, 8, 8) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidate_sets() {
+        let ps = candidate_modes_ps(8);
+        assert!(ps.contains(&SyncMode::Ssgd));
+        assert!(ps.contains(&SyncMode::Asgd));
+        assert!(ps.contains(&SyncMode::StaticX(2)));
+        assert!(ps.contains(&SyncMode::StaticX(7)));
+        assert!(!ps.contains(&SyncMode::StaticX(8)));
+        assert!(ps.contains(&SyncMode::DynamicX));
+        let ar = candidate_modes_ar(2, &[30.0, 90.0]);
+        assert_eq!(ar.len(), 1 + 2 * 2);
+    }
+
+    #[test]
+    fn modes_that_shrink_batch() {
+        assert!(!SyncMode::Ssgd.shrinks_batch(8));
+        assert!(SyncMode::Asgd.shrinks_batch(8));
+        assert!(SyncMode::StaticX(4).shrinks_batch(8));
+        assert!(!SyncMode::StaticX(8).shrinks_batch(8));
+        assert!(SyncMode::ArRing { removed: 1, tw_ms: 50.0 }.shrinks_batch(8));
+    }
+
+    #[test]
+    fn updates_are_time_ordered_and_partition_members() {
+        let mut rng = Rng::seeded(77);
+        for _ in 0..200 {
+            let n = rng.usize(2, 12);
+            let t: Vec<f64> = (0..n).map(|_| rng.range(0.05, 4.0)).collect();
+            for mode in [
+                SyncMode::Ssgd,
+                SyncMode::Asgd,
+                SyncMode::StaticX(rng.usize(2, n.max(3) - 1)),
+                SyncMode::DynamicX,
+            ] {
+                let p = plan_round(&mode, &t, &t);
+                let mut last = 0.0;
+                let mut seen = vec![false; n];
+                for u in &p.updates {
+                    assert!(u.at >= last - 1e-12, "{mode:?}");
+                    last = u.at;
+                    for &m in &u.members {
+                        assert!(!seen[m], "duplicate member in {mode:?}");
+                        seen[m] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{mode:?} must use all workers");
+                assert!(p.span <= t.iter().cloned().fold(0.0, f64::max) + 1e-12);
+            }
+        }
+    }
+}

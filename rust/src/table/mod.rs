@@ -1,0 +1,169 @@
+//! Console-table + CSV substrate for the experiments harness: every paper
+//! table/figure prints through this so output is aligned and also lands in
+//! `results/*.csv` for external plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Convenience: format mixed cells.
+    pub fn rowf(&mut self, cells: &[Cell]) -> &mut Self {
+        self.row(cells.iter().map(|c| c.render()).collect())
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                let _ = write!(out, "{}{}", c, " ".repeat(pad));
+                if i + 1 < cells.len() {
+                    let _ = write!(out, "  ");
+                }
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &Path) -> crate::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Typed cell for `rowf`.
+pub enum Cell {
+    S(String),
+    I(i64),
+    F(f64, usize), // value, decimals
+    Pct(f64),      // fraction -> "12.3%"
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::S(s) => s.clone(),
+            Cell::I(v) => format!("{v}"),
+            Cell::F(v, d) => format!("{:.*}", d, v),
+            Cell::Pct(v) => format!("{:.1}%", v * 100.0),
+        }
+    }
+}
+
+pub fn s(v: impl Into<String>) -> Cell {
+    Cell::S(v.into())
+}
+
+pub fn i(v: i64) -> Cell {
+    Cell::I(v)
+}
+
+pub fn f(v: f64, d: usize) -> Cell {
+    Cell::F(v, d)
+}
+
+pub fn pct(v: f64) -> Cell {
+    Cell::Pct(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.rowf(&[s("a"), f(1.5, 2)]);
+        t.rowf(&[s("longer-name"), i(42)]);
+        let out = t.render();
+        assert!(out.contains("demo"));
+        let lines: Vec<&str> = out.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // all rows same width alignment: "value" column starts at same idx
+        let hidx = lines[1].find("value").unwrap();
+        assert_eq!(lines[3].find("1.50").unwrap(), hidx);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_bad_width() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn pct_cell() {
+        assert_eq!(Cell::Pct(0.1234).render(), "12.3%");
+    }
+}

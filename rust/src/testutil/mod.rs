@@ -1,0 +1,106 @@
+//! Property-testing substrate (proptest is unavailable offline): seeded
+//! random-case generation with failing-seed reporting and a lightweight
+//! shrink pass for integer-vector inputs.
+
+use crate::simrng::Rng;
+
+/// Run `cases` random property checks. `gen` builds an input from the RNG,
+/// `prop` returns Err(msg) on violation. Panics with the seed and input
+/// debug form on the first failure so the case is replayable.
+pub fn forall<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("STAR_PROP_SEED") {
+        Ok(v) => v.parse().unwrap_or(0xBADC0DE),
+        Err(_) => 0xBADC0DE,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  \
+                 violation: {msg}\n  input: {input:#?}\n  \
+                 replay with STAR_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Shrinking helper for Vec<T> inputs: tries removing chunks while the
+/// property still fails, returning a (locally) minimal failing input.
+pub fn shrink_vec<T: Clone, P>(mut input: Vec<T>, mut fails: P) -> Vec<T>
+where
+    P: FnMut(&[T]) -> bool,
+{
+    debug_assert!(fails(&input));
+    let mut chunk = input.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= input.len() {
+            let mut candidate = input.clone();
+            candidate.drain(i..i + chunk);
+            if !candidate.is_empty() && fails(&candidate) {
+                input = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    input
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        let scale = a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol * scale,
+            "assert_close failed: {} vs {} (tol {})",
+            a,
+            b,
+            tol
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs-nonneg", 200, |r| r.normal(), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always-fails", 5, |r| r.int(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // fails iff the vector contains a 7
+        let input = vec![1, 2, 7, 3, 4, 5, 7, 9];
+        let min = shrink_vec(input, |v| v.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn close_macro() {
+        assert_close!(1.0, 1.0 + 1e-9, 1e-6);
+    }
+}

@@ -1,0 +1,374 @@
+//! Trace substrate: Philly-style job trace generation (§III) + a parser
+//! for real Philly CSV extracts + the placement policy of the paper.
+//!
+//! The paper samples 350 jobs from the Microsoft Philly trace
+//! (Oct 9–13 2017) and assigns: workers U[4,12] (same GPU instance when
+//! possible), PS count U[1, N], PSs either co-located on the job's GPU
+//! servers or on separate CPU servers (random, "industry practice"), and
+//! one of ten models per job. The generator reproduces exactly that
+//! sampling, seeded; the parser accepts a real trace CSV when available.
+
+use crate::cluster::{Cluster, Role, Task};
+use crate::models::{ModelSpec, ZOO};
+use crate::simrng::Rng;
+
+/// Architecture under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Ps,
+    AllReduce,
+}
+
+/// One job drawn from the trace.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: usize,
+    /// arrival offset from trace start, seconds
+    pub arrival_s: f64,
+    pub model: usize, // index into models::ZOO
+    pub workers: usize,
+    pub ps_count: usize,
+    /// PSs on the job's GPU servers (true) or separate CPU servers (false)
+    pub ps_on_gpu_servers: bool,
+}
+
+impl JobSpec {
+    pub fn spec(&self) -> &'static ModelSpec {
+        &ZOO[self.model]
+    }
+}
+
+/// Trace generation parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub jobs: usize,
+    pub seed: u64,
+    /// trace span the arrivals cover, seconds (paper: ~4 days)
+    pub span_s: f64,
+    pub min_workers: usize,
+    pub max_workers: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            jobs: 350,
+            seed: 0,
+            span_s: 4.0 * 24.0 * 3600.0,
+            min_workers: 4,
+            max_workers: 12,
+        }
+    }
+}
+
+/// Generate a Philly-like trace: bursty day/night arrivals (two-level
+/// Poisson mix), worker/PS counts and model mix per §III.
+pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut rng = Rng::new(cfg.seed, 0x7ace);
+    let mut jobs = Vec::with_capacity(cfg.jobs);
+    // bursty arrivals: rate doubles during "day" half of each 24h period
+    let mut t: f64 = 0.0;
+    let base_gap = cfg.span_s / cfg.jobs as f64;
+    for id in 0..cfg.jobs {
+        let day_phase = (t / 86_400.0).fract();
+        let rate_mult = if day_phase < 0.5 { 1.6 } else { 0.6 };
+        t += rng.exponential(rate_mult / base_gap);
+        let workers = rng.usize(cfg.min_workers, cfg.max_workers);
+        jobs.push(JobSpec {
+            id,
+            arrival_s: t.min(cfg.span_s),
+            model: rng.usize(0, ZOO.len() - 1),
+            workers,
+            ps_count: rng.usize(1, workers),
+            ps_on_gpu_servers: rng.chance(0.5),
+        });
+    }
+    jobs
+}
+
+/// Parse a Philly-style CSV: `jobid,submit_s,num_gpus[,model]` per line
+/// (header optional). Missing model -> hashed onto the zoo.
+pub fn parse_philly_csv(text: &str, cfg: &TraceConfig) -> crate::Result<Vec<JobSpec>> {
+    let mut rng = Rng::new(cfg.seed, 0xCC);
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+        if lineno == 0 && cols.len() >= 2 && cols[1].parse::<f64>().is_err() {
+            continue; // header row (submit column is non-numeric)
+        }
+        if cols.len() < 3 {
+            anyhow::bail!("line {}: want jobid,submit_s,num_gpus[,model]", lineno + 1);
+        }
+        let submit: f64 = cols[1].parse()?;
+        let gpus: usize = cols[2].parse()?;
+        let workers = gpus.clamp(cfg.min_workers, cfg.max_workers);
+        let model = match cols.get(3) {
+            Some(name) if !name.is_empty() => {
+                ModelSpec::by_name(name)
+                    .map(|(i, _)| i)
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unknown model {name}", lineno + 1))?
+            }
+            _ => (cols[0].bytes().map(|b| b as usize).sum::<usize>()) % ZOO.len(),
+        };
+        jobs.push(JobSpec {
+            id: jobs.len(),
+            arrival_s: submit,
+            model,
+            workers,
+            ps_count: rng.usize(1, workers),
+            ps_on_gpu_servers: rng.chance(0.5),
+        });
+    }
+    jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    Ok(jobs)
+}
+
+/// A job's placed tasks.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub worker_tasks: Vec<crate::cluster::TaskId>,
+    pub ps_tasks: Vec<crate::cluster::TaskId>,
+}
+
+/// Placement error: not enough free GPUs right now (job must queue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoCapacity;
+
+/// Place a job per §III: workers fill one GPU server if possible, else
+/// spill to others; PSs go to the job's GPU servers or to CPU servers,
+/// choosing — when STAR's high-load balancing is on — the server hosting
+/// the fewest PSs (§IV-D2a), else the first that fits.
+pub fn place_job(
+    cluster: &mut Cluster,
+    job: &JobSpec,
+    balance_ps: bool,
+) -> Result<Placement, NoCapacity> {
+    let spec = job.spec();
+    // -- workers: prefer a single server with enough free GPUs
+    let gpu_ids = cluster.gpu_server_ids();
+    let total_free: usize = gpu_ids.iter().map(|&s| cluster.free_gpus(s)).sum();
+    if total_free < job.workers {
+        return Err(NoCapacity);
+    }
+    let mut assignment: Vec<usize> = Vec::with_capacity(job.workers);
+    if let Some(&s) = gpu_ids.iter().find(|&&s| cluster.free_gpus(s) >= job.workers) {
+        assignment.extend(std::iter::repeat(s).take(job.workers));
+    } else {
+        // spill: greedy most-free-first
+        let mut by_free: Vec<usize> = gpu_ids.clone();
+        by_free.sort_by_key(|&s| std::cmp::Reverse(cluster.free_gpus(s)));
+        let mut need = job.workers;
+        for &s in &by_free {
+            let take = cluster.free_gpus(s).min(need);
+            assignment.extend(std::iter::repeat(s).take(take));
+            need -= take;
+            if need == 0 {
+                break;
+            }
+        }
+    }
+    let worker_tasks: Vec<_> = assignment
+        .iter()
+        .enumerate()
+        .map(|(rank, &server)| {
+            cluster.add_task(Task {
+                job: job.id,
+                role: Role::Worker { rank },
+                server,
+                cpu_demand: spec.worker_cpu,
+                bw_demand: spec.worker_bw,
+                cpu_cap: 1.0,
+                bw_cap: 1.0,
+                cpu_throttle: 1.0,
+                bw_throttle: 1.0,
+                active: true,
+            })
+        })
+        .collect();
+
+    // -- PSs
+    let candidates = if job.ps_on_gpu_servers {
+        cluster.gpu_server_ids()
+    } else {
+        cluster.cpu_server_ids()
+    };
+    let mut ps_tasks = Vec::with_capacity(job.ps_count);
+    for idx in 0..job.ps_count {
+        let server = if balance_ps {
+            // STAR §IV-D2a: fewest hosted PSs first (ties: lower id)
+            *candidates
+                .iter()
+                .min_by_key(|&&s| (cluster.ps_count(s), s))
+                .expect("candidate set nonempty")
+        } else {
+            // baseline industry practice: round-robin by index
+            candidates[idx % candidates.len()]
+        };
+        ps_tasks.push(cluster.add_task(Task {
+            job: job.id,
+            role: Role::Ps { idx },
+            server,
+            cpu_demand: spec.worker_cpu * spec.ps_cpu_factor,
+            bw_demand: spec.worker_bw * spec.ps_bw_factor,
+            cpu_cap: 1.0,
+            bw_cap: 1.0,
+            cpu_throttle: 1.0,
+            bw_throttle: 1.0,
+            active: true,
+        }));
+    }
+    Ok(Placement { worker_tasks, ps_tasks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn generate_matches_paper_sampling() {
+        let jobs = generate(&TraceConfig::default());
+        assert_eq!(jobs.len(), 350);
+        for j in &jobs {
+            assert!((4..=12).contains(&j.workers));
+            assert!(j.ps_count >= 1 && j.ps_count <= j.workers);
+            assert!(j.model < ZOO.len());
+            assert!(j.arrival_s >= 0.0 && j.arrival_s <= TraceConfig::default().span_s);
+        }
+        // arrivals sorted
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        // all ten models appear
+        let mut seen = vec![false; ZOO.len()];
+        for j in &jobs {
+            seen[j.model] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let a = generate(&TraceConfig::default());
+        let b = generate(&TraceConfig::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.workers, y.workers);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+
+    #[test]
+    fn csv_parser_roundtrip() {
+        let text = "jobid,submit,gpus,model\nj1,100,8,VGG16\nj2,50,4,\n# comment\nj3,900,32,LSTM\n";
+        let jobs = parse_philly_csv(text, &TraceConfig::default()).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].arrival_s, 50.0);
+        assert_eq!(jobs[1].spec().name, "VGG16");
+        // 32 gpus clamped to 12 workers
+        assert_eq!(jobs[2].workers, 12);
+    }
+
+    #[test]
+    fn csv_parser_rejects_bad_rows() {
+        assert!(parse_philly_csv("1,2", &TraceConfig::default()).is_err());
+        assert!(parse_philly_csv("j,5,4,NotAModel", &TraceConfig::default()).is_err());
+    }
+
+    #[test]
+    fn placement_prefers_single_server() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let job = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 0,
+            workers: 8,
+            ps_count: 2,
+            ps_on_gpu_servers: false,
+        };
+        let p = place_job(&mut c, &job, false).unwrap();
+        assert_eq!(p.worker_tasks.len(), 8);
+        let servers: std::collections::BTreeSet<usize> =
+            p.worker_tasks.iter().map(|&t| c.tasks[t].server).collect();
+        assert_eq!(servers.len(), 1, "8 workers fit one empty 8-GPU server");
+        // PSs on CPU servers
+        for &t in &p.ps_tasks {
+            assert!(c.cpu_server_ids().contains(&c.tasks[t].server));
+        }
+    }
+
+    #[test]
+    fn placement_spills_when_fragmented() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        // consume 5 GPUs on every GPU server
+        for (j, s) in c.gpu_server_ids().into_iter().enumerate() {
+            for r in 0..5 {
+                c.add_task(Task {
+                    job: 1000 + j,
+                    role: Role::Worker { rank: r },
+                    server: s,
+                    cpu_demand: 1.0,
+                    bw_demand: 0.1,
+                    cpu_cap: 1.0,
+                    bw_cap: 1.0,
+                    cpu_throttle: 1.0,
+                    bw_throttle: 1.0,
+                    active: true,
+                });
+            }
+        }
+        let job = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 0,
+            workers: 7,
+            ps_count: 1,
+            ps_on_gpu_servers: true,
+        };
+        let p = place_job(&mut c, &job, false).unwrap();
+        let servers: std::collections::BTreeSet<usize> =
+            p.worker_tasks.iter().map(|&t| c.tasks[t].server).collect();
+        assert!(servers.len() >= 2, "must spill across servers");
+    }
+
+    #[test]
+    fn placement_fails_without_capacity() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let big = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 0,
+            workers: 12,
+            ps_count: 1,
+            ps_on_gpu_servers: false,
+        };
+        // fill the cluster: 40 gpus / 12 -> 3 jobs place, 4th fails
+        assert!(place_job(&mut c, &big, false).is_ok());
+        assert!(place_job(&mut c, &big, false).is_ok());
+        assert!(place_job(&mut c, &big, false).is_ok());
+        assert!(matches!(place_job(&mut c, &big, false), Err(NoCapacity)));
+    }
+
+    #[test]
+    fn balanced_ps_placement_spreads() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let job = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 3,
+            workers: 4,
+            ps_count: 3,
+            ps_on_gpu_servers: false,
+        };
+        let p = place_job(&mut c, &job, true).unwrap();
+        let counts: Vec<usize> = c.cpu_server_ids().iter().map(|&s| c.ps_count(s)).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 3);
+        assert!(*counts.iter().max().unwrap() <= 1, "balanced: {counts:?}");
+        drop(p);
+    }
+}

@@ -1,0 +1,378 @@
+//! Property tests on coordinator invariants (routing, batching, state),
+//! via the in-repo property runner (`testutil::forall` — the offline
+//! stand-in for proptest, with seeded replay).
+
+use star::cluster::{water_fill, Cluster, ClusterConfig, Res, Role, Task};
+use star::decide::{choose_ps_heuristic, expected_reports, time_to_progress_ps};
+use star::predict::{deviation_ratios, straggler_flags};
+use star::prevent::{equalize_group, sensitivity_deprivation, CommTree, Victim};
+use star::progress::ProgressModel;
+use star::simrng::Rng;
+use star::sync::{cluster_times, plan_round, SyncMode};
+use star::testutil::forall;
+
+fn times_gen(rng: &mut Rng) -> Vec<f64> {
+    let n = rng.usize(2, 12);
+    (0..n).map(|_| rng.range(0.05, 5.0)).collect()
+}
+
+#[test]
+fn prop_every_plan_partitions_workers() {
+    forall("plan-partition", 300, times_gen, |times| {
+        let n = times.len();
+        let mut rng = Rng::seeded(times.len() as u64);
+        let modes = vec![
+            SyncMode::Ssgd,
+            SyncMode::Asgd,
+            SyncMode::StaticX(rng.usize(1, n)),
+            SyncMode::DynamicX,
+            SyncMode::ArRing { removed: rng.usize(0, n - 1), tw_ms: rng.range(0.0, 300.0) },
+        ];
+        for mode in modes {
+            let plan = plan_round(&mode, times, times);
+            let mut seen = vec![0u32; n];
+            for u in &plan.updates {
+                for &m in &u.members {
+                    seen[m] += 1;
+                }
+            }
+            match mode {
+                SyncMode::ArRing { .. } => {
+                    // ring: each member at most once, ring members exactly once
+                    if seen.iter().any(|&c| c > 1) {
+                        return Err(format!("{mode:?}: duplicated member"));
+                    }
+                }
+                _ => {
+                    if seen.iter().any(|&c| c != 1) {
+                        return Err(format!("{mode:?}: not a partition: {seen:?}"));
+                    }
+                }
+            }
+            // update times within [0, span]; worker_end >= own time for sync
+            for u in &plan.updates {
+                if u.at < 0.0 || u.at > plan.span + 1e-9 {
+                    return Err(format!("{mode:?}: update at {} outside span {}", u.at, plan.span));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_heuristic_pick_is_argmin_of_its_ranking() {
+    forall("heuristic-argmin", 200, times_gen, |times| {
+        let n = times.len();
+        let spec = &star::models::ZOO[times.len() % 10];
+        let d = choose_ps_heuristic(spec, 50.0, n, times);
+        for (m, est) in &d.ranked {
+            if *est < d.est - 1e-12 {
+                return Err(format!("{} beats chosen {}", m.name(), d.mode.name()));
+            }
+        }
+        // chosen estimate must equal a recomputed one (determinism)
+        let again = time_to_progress_ps(spec, 50.0, n, &d.mode, times);
+        if (again - d.est).abs() > 1e-9 {
+            return Err("estimate not reproducible".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_expected_reports_bounded() {
+    forall("reports-bounds", 200, times_gen, |times| {
+        let n = times.len();
+        for mode in star::sync::candidate_modes_ps(n) {
+            let r = expected_reports(n, &mode, times);
+            if r < 1 || r > n as u64 {
+                return Err(format!("{}: reports {r} outside [1,{n}]", mode.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_water_fill_conserves_and_caps() {
+    forall(
+        "water-fill",
+        300,
+        |rng| {
+            let n = rng.usize(0, 16);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.0, 10.0)).collect();
+            let cap = rng.range(0.0, 40.0);
+            (demands, cap)
+        },
+        |(demands, cap)| {
+            let a = water_fill(demands, *cap);
+            let sum: f64 = a.iter().sum();
+            let dem: f64 = demands.iter().sum();
+            if sum > cap + 1e-9 && sum > dem + 1e-9 {
+                return Err(format!("over-allocated: {sum} vs cap {cap}"));
+            }
+            for (x, d) in a.iter().zip(demands) {
+                if *x > d + 1e-9 || *x < -1e-12 {
+                    return Err(format!("share {x} vs demand {d}"));
+                }
+            }
+            // max-min fairness: if any task got less than demand, no task
+            // got more than (max unmet task's share + epsilon) while having
+            // lower demand... simplified check: unmet tasks share equally
+            let unmet: Vec<f64> = a
+                .iter()
+                .zip(demands)
+                .filter(|(x, d)| **x < *d - 1e-9)
+                .map(|(x, _)| *x)
+                .collect();
+            if unmet.len() >= 2 {
+                let lo = unmet.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = unmet.iter().cloned().fold(0.0, f64::max);
+                if hi - lo > 1e-6 {
+                    return Err(format!("unmet shares unequal: {lo} vs {hi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cluster_shares_never_exceed_capacity() {
+    forall(
+        "cluster-shares",
+        60,
+        |rng| {
+            let n_tasks = rng.usize(1, 24);
+            let t = rng.range(0.0, 5000.0);
+            (n_tasks, t, rng.next_u64())
+        },
+        |&(n_tasks, t, seed)| {
+            let mut c = Cluster::new(ClusterConfig { seed, ..Default::default() });
+            let mut rng = Rng::seeded(seed);
+            for j in 0..n_tasks {
+                c.add_task(Task {
+                    job: j,
+                    role: Role::Ps { idx: 0 },
+                    server: rng.usize(0, 7),
+                    cpu_demand: rng.range(0.5, 20.0),
+                    bw_demand: rng.range(0.1, 8.0),
+                    cpu_cap: rng.range(0.1, 1.0),
+                    bw_cap: 1.0,
+                    cpu_throttle: rng.range(0.2, 1.0),
+                    bw_throttle: 1.0,
+                    active: true,
+                });
+            }
+            for server in 0..8 {
+                for res in [Res::Cpu, Res::Bw] {
+                    let cap = match res {
+                        Res::Cpu => c.servers[server].cpus,
+                        Res::Bw => c.servers[server].bw_gbps,
+                    };
+                    let total: f64 = c.shares(server, res, t).iter().map(|&(_, s)| s).sum();
+                    if total > cap + 1e-6 {
+                        return Err(format!("server {server} {res:?}: {total} > {cap}"));
+                    }
+                    for (id, s) in c.shares(server, res, t) {
+                        if s < 0.0 {
+                            return Err(format!("negative share for task {id}: {s}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_progress_value_bounded_and_monotone_in_updates() {
+    forall(
+        "progress-bounds",
+        100,
+        |rng| {
+            let model = rng.usize(0, 9);
+            let workers = rng.usize(2, 12);
+            let steps = rng.usize(10, 400);
+            let seed = rng.next_u64();
+            (model, workers, steps, seed)
+        },
+        |&(model, workers, steps, seed)| {
+            let spec = &star::models::ZOO[model];
+            let mut p = ProgressModel::new(spec, workers);
+            let mut rng = Rng::seeded(seed);
+            let mut last_progress = 0.0;
+            for _ in 0..steps {
+                let reports = rng.usize(1, workers);
+                let staleness = rng.range(0.0, 20.0);
+                p.apply_update(reports, staleness, rng.chance(0.5));
+                if p.progress < last_progress {
+                    return Err("progress went backwards".into());
+                }
+                last_progress = p.progress;
+                let v = p.value();
+                match spec.kind {
+                    star::models::Kind::Image => {
+                        if !(0.0..=100.0).contains(&v) {
+                            return Err(format!("accuracy {v} out of range"));
+                        }
+                    }
+                    star::models::Kind::Nlp => {
+                        if v < spec.acc_max - 1.0 || v > spec.acc0 + 1.0 {
+                            return Err(format!("perplexity {v} out of range"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_comm_tree_is_acyclic_forest_with_bounded_fanout() {
+    forall(
+        "comm-tree",
+        200,
+        |rng| {
+            let n = rng.usize(1, 16);
+            let b = rng.usize(1, 5);
+            let bw: Vec<f64> = (0..n).map(|_| rng.range(0.1, 10.0)).collect();
+            (bw, b)
+        },
+        |(bw, b)| {
+            let t = CommTree::build(bw, *b);
+            for w in 0..bw.len() {
+                let d = t.depth_of(w); // panics on cycle
+                if d > bw.len() {
+                    return Err("depth exceeds n".into());
+                }
+            }
+            for p in 0..bw.len() {
+                if t.children_of(p).len() > *b {
+                    return Err(format!("fanout exceeded at {p}"));
+                }
+            }
+            if t.root_fanin() == 0 || t.root_fanin() > *b {
+                return Err(format!("root fanin {}", t.root_fanin()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_equalize_never_speeds_anyone_up() {
+    forall(
+        "equalize",
+        200,
+        |rng| {
+            let n = rng.usize(1, 12);
+            let times: Vec<f64> = (0..n).map(|_| rng.range(0.2, 4.0)).collect();
+            let fixed: Vec<f64> = times.iter().map(|t| t * rng.range(0.05, 0.6)).collect();
+            (times, fixed)
+        },
+        |(times, fixed)| {
+            let caps = equalize_group(times, fixed);
+            let t_max = times.iter().cloned().fold(0.0, f64::max);
+            for (i, &c) in caps.iter().enumerate() {
+                if !(0.05..=1.0).contains(&c) {
+                    return Err(format!("cap {c} out of range"));
+                }
+                // the slowest member keeps (nearly) full resources
+                if (times[i] - t_max).abs() < 1e-12 && c < 0.999 {
+                    return Err("slowest member was capped".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deprivation_never_exceeds_need_or_headroom() {
+    forall(
+        "deprivation",
+        200,
+        |rng| {
+            let n = rng.usize(0, 8);
+            let victims: Vec<Victim> = (0..n)
+                .map(|_| Victim {
+                    sensitivity: rng.range(0.01, 1.0),
+                    improvement: rng.range(0.01, 1.0),
+                    granted: rng.range(0.0, 10.0),
+                    floor: rng.range(0.0, 5.0),
+                })
+                .collect();
+            let need = rng.range(0.0, 20.0);
+            (victims, need)
+        },
+        |(victims, need)| {
+            let take = sensitivity_deprivation(*need, victims);
+            let total: f64 = take.iter().sum();
+            if total > need + 1e-6 {
+                return Err(format!("took {total} > needed {need}"));
+            }
+            for (t, v) in take.iter().zip(victims) {
+                let headroom = (v.granted - v.floor).max(0.0);
+                if *t > headroom + 1e-6 || *t < -1e-9 {
+                    return Err(format!("take {t} vs headroom {headroom}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deviation_ratios_and_flags_consistent() {
+    forall("deviation", 300, times_gen, |times| {
+        let d = deviation_ratios(times);
+        let f = straggler_flags(times);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        for i in 0..times.len() {
+            if (times[i] - min).abs() < 1e-12 && f[i] {
+                return Err("fastest worker flagged".into());
+            }
+            if (f[i]) != (d[i] > 0.2) {
+                return Err("flag/ratio mismatch".into());
+            }
+            if d[i] < 0.0 {
+                return Err("negative deviation".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clustering_is_ordered_partition() {
+    forall("clustering", 300, times_gen, |times| {
+        let clusters = cluster_times(times, 0.15, 0.02);
+        let mut seen = vec![false; times.len()];
+        let mut last_max = f64::NEG_INFINITY;
+        for c in &clusters {
+            if c.is_empty() {
+                return Err("empty cluster".into());
+            }
+            let lo = c.iter().map(|&w| times[w]).fold(f64::INFINITY, f64::min);
+            let hi = c.iter().map(|&w| times[w]).fold(f64::NEG_INFINITY, f64::max);
+            if lo < last_max - 1e-12 {
+                return Err("clusters overlap in time".into());
+            }
+            last_max = hi;
+            for &w in c {
+                if seen[w] {
+                    return Err("worker in two clusters".into());
+                }
+                seen[w] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("worker missing from clustering".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,138 @@
+//! Integration: full systems over the cluster simulator — the headline
+//! relationships the paper claims must hold on a reduced trace.
+
+use star::baselines::make_policy;
+use star::driver::{Driver, DriverConfig, JobStats};
+use star::trace::{generate, Arch, TraceConfig};
+
+fn run(system: &str, arch: Arch, jobs: usize) -> Vec<JobStats> {
+    let trace = generate(&TraceConfig { jobs, span_s: jobs as f64 * 280.0, ..Default::default() });
+    let cfg = DriverConfig { arch, record_series: false, ..Default::default() };
+    let name = system.to_string();
+    let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name))).run();
+    stats
+}
+
+fn mean_tta(stats: &[JobStats]) -> f64 {
+    let v: Vec<f64> = stats.iter().filter_map(|s| s.tta_s).collect();
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+fn mean_jct(stats: &[JobStats]) -> f64 {
+    stats.iter().map(|s| s.jct_s).sum::<f64>() / stats.len().max(1) as f64
+}
+
+fn mean_acc(stats: &[JobStats]) -> f64 {
+    let v: Vec<f64> = stats.iter().filter(|s| !s.is_nlp).map(|s| s.converged_value).collect();
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+const JOBS: usize = 10;
+
+#[test]
+fn star_beats_ssgd_on_tta_and_jct_ps() {
+    let ssgd = run("SSGD", Arch::Ps, JOBS);
+    let star_h = run("STAR-H", Arch::Ps, JOBS);
+    assert!(
+        mean_tta(&star_h) < mean_tta(&ssgd),
+        "STAR-H TTA {} !< SSGD {}",
+        mean_tta(&star_h),
+        mean_tta(&ssgd)
+    );
+    assert!(mean_jct(&star_h) < mean_jct(&ssgd));
+}
+
+#[test]
+fn star_keeps_ssgd_level_accuracy() {
+    let ssgd = run("SSGD", Arch::Ps, JOBS);
+    let star_h = run("STAR-H", Arch::Ps, JOBS);
+    assert!(
+        (mean_acc(&ssgd) - mean_acc(&star_h)).abs() < 1.5,
+        "accuracy gap too large: {} vs {}",
+        mean_acc(&ssgd),
+        mean_acc(&star_h)
+    );
+}
+
+#[test]
+fn asgd_family_generates_more_stragglers_than_ssgd() {
+    // O5/Fig 22: switching-to-ASGD systems create more stragglers
+    let ssgd = run("SSGD", Arch::Ps, JOBS);
+    let sync_switch = run("Sync-Switch", Arch::Ps, JOBS);
+    let s_frac = |v: &[JobStats]| {
+        v.iter().map(|s| s.straggler_iters).sum::<u64>() as f64
+            / v.iter().map(|s| s.iters_total).sum::<u64>().max(1) as f64
+    };
+    assert!(
+        s_frac(&sync_switch) > s_frac(&ssgd),
+        "{} !> {}",
+        s_frac(&sync_switch),
+        s_frac(&ssgd)
+    );
+}
+
+#[test]
+fn every_eval_system_completes_the_trace() {
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        for sys in star::exp::eval::eval_systems(arch) {
+            let stats = run(sys, arch, 5);
+            assert_eq!(stats.len(), 5, "{sys} {arch:?}");
+            for s in &stats {
+                assert!(s.updates > 0, "{sys}: no updates");
+                assert!(s.jct_s > 0.0);
+                assert!(s.converged_value.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn ablations_run_and_report() {
+    for (name, _) in star::star::ablations() {
+        let stats = run(name, Arch::Ps, 4);
+        assert_eq!(stats.len(), 4, "{name}");
+    }
+}
+
+#[test]
+fn star_ml_eventually_uses_its_regressor() {
+    let stats = run("STAR-ML", Arch::Ps, 8);
+    // ML variant must make decisions without accumulating pause time
+    let pause: f64 = stats.iter().map(|s| s.decision_pause_total_s).sum();
+    assert_eq!(pause, 0.0, "STAR-ML must not pause training");
+    let overhead: f64 = stats.iter().map(|s| s.decision_overhead_total_s).sum();
+    assert!(overhead > 0.0, "overlapped inference still accounted");
+}
+
+#[test]
+fn seeds_change_outcomes_but_structure_holds() {
+    let trace_a = generate(&TraceConfig { jobs: 5, span_s: 1500.0, seed: 1, ..Default::default() });
+    let trace_b = generate(&TraceConfig { jobs: 5, span_s: 1500.0, seed: 2, ..Default::default() });
+    let cfg = |seed| DriverConfig { seed, record_series: false, ..Default::default() };
+    let (a, _) = Driver::new(cfg(1), trace_a, Box::new(|_| make_policy("SSGD"))).run();
+    let (b, _) = Driver::new(cfg(2), trace_b, Box::new(|_| make_policy("SSGD"))).run();
+    assert_eq!(a.len(), 5);
+    assert_eq!(b.len(), 5);
+    let ja: f64 = a.iter().map(|s| s.jct_s).sum();
+    let jb: f64 = b.iter().map(|s| s.jct_s).sum();
+    assert_ne!(ja, jb, "different seeds should differ");
+}
+
+#[test]
+fn prediction_confusion_is_populated_for_star() {
+    let stats = run("STAR-H", Arch::Ps, 6);
+    let total: u64 = stats
+        .iter()
+        .map(|s| s.prediction.tp + s.prediction.fp + s.prediction.tn + s.prediction.fn_)
+        .sum();
+    assert!(total > 1000, "confusion counters look unpopulated: {total}");
+    // prediction quality must be far better than chance on both error axes
+    let fp: f64 = star::stats::mean(
+        &stats.iter().map(|s| s.prediction.fp_rate()).collect::<Vec<_>>(),
+    );
+    let fn_: f64 = star::stats::mean(
+        &stats.iter().map(|s| s.prediction.fn_rate()).collect::<Vec<_>>(),
+    );
+    assert!(fp < 0.5, "fp {fp}");
+    assert!(fn_ < 0.6, "fn {fn_}");
+}
