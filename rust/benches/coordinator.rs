@@ -1,6 +1,7 @@
 //! Coordinator hot-loop benchmarks: round planning per mode, gradient
 //! aggregation (pure-Rust fallback vs naive), comm-tree construction,
-//! prediction pipeline, resource shares (the per-iteration inner loop).
+//! prediction pipeline, resource shares (the per-iteration inner loop) —
+//! both the epoch-fill path and the cached-lookup path.
 
 use star::agg;
 use star::benchkit::Bencher;
@@ -78,10 +79,28 @@ fn main() {
             active: true,
         });
     }
+    // epoch fill: every call advances time, so every call recomputes
     let mut t = 0.0;
-    b.bench("cluster shares (20 tasks/server)", || {
+    b.bench("cluster shares epoch fill (20 tasks)", || {
         t += 0.37;
         c.shares(0, Res::Cpu, t)
     });
     b.throughput("share-queries", 1.0);
+
+    // cached lookups: the whole server queried per task at one instant —
+    // one water-fill, 20 O(k) lookups (the SSGD round-start pattern).
+    // Continues from the previous bench's clock: cluster query times must
+    // be non-decreasing (spike pruning relies on it).
+    let mut tc = t;
+    b.bench("cluster share_of x20 cached (one epoch)", || {
+        tc += 0.37;
+        let mut sum = 0.0;
+        for id in 0..20 {
+            sum += c.share_of(id, Res::Cpu, tc);
+        }
+        sum
+    });
+    b.throughput("share-queries", 20.0);
+
+    b.write_json_env("BENCH_coordinator.json");
 }

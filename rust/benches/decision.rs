@@ -50,4 +50,6 @@ fn main() {
         ml.observe(&x, 1.0);
         ml.ridge.fit();
     });
+
+    b.write_json_env("BENCH_decision.json");
 }

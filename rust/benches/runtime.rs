@@ -14,7 +14,14 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::cpu().expect("PJRT cpu client");
+    // skips cleanly when built without the `xla` feature, too
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime bench: {e}");
+            return;
+        }
+    };
     let mut b = Bencher::quick();
     let mut rng = Rng::seeded(2);
 
@@ -57,4 +64,6 @@ fn main() {
         let rows: Vec<[f32; 2]> = (0..32).map(|i| [0.5 + 0.01 * i as f32, 0.4]).collect();
         b.bench("LSTM predictor artifact", || p.predict_rows(&rows).expect("lstm"));
     }
+
+    b.write_json_env("BENCH_runtime.json");
 }

@@ -1,6 +1,7 @@
 //! End-to-end simulation benchmarks — one per §V table family: the full
 //! trace replay that regenerates Figs 18–22 (per system), plus the raw
-//! event-engine throughput.
+//! event-engine throughput. Writes `BENCH_sim.json` (schema
+//! `star-bench-v1`) so CI can track trace-replay throughput across PRs.
 
 use star::baselines::make_policy;
 use star::benchkit::Bencher;
@@ -53,4 +54,6 @@ fn main() {
         let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2))).run();
         stats.len()
     });
+
+    b.write_json_env("BENCH_sim.json");
 }

@@ -123,14 +123,9 @@ impl Policy for Lgc {
 /// Sync-Switch [29]: SSGD normally; a worker straggling continuously for
 /// 5 s switches the job to ASGD, reverting when stragglers clear. Does
 /// NOT retune the LR after the switch (O7's criticism).
+#[derive(Default)]
 pub struct SyncSwitch {
     rule: Option<FixedDurationRule>,
-}
-
-impl Default for SyncSwitch {
-    fn default() -> Self {
-        SyncSwitch { rule: None }
-    }
 }
 
 impl Policy for SyncSwitch {
@@ -172,12 +167,24 @@ pub struct LbBsp {
     fast: usize,
     slow: usize,
     frac: Vec<f64>,
+    /// fractions changed since last shipped to the driver (the driver
+    /// keeps its installed vector when `batch_frac` comes back empty, so
+    /// unchanged rounds cost no clone)
+    dirty: bool,
 }
 
 impl Default for LbBsp {
     fn default() -> Self {
         // §V: 8 iterations, 32 samples (of 128 => 0.25)
-        LbBsp { window: 8, delta_frac: 0.25, streak: 0, fast: 0, slow: 0, frac: Vec::new() }
+        LbBsp {
+            window: 8,
+            delta_frac: 0.25,
+            streak: 0,
+            fast: 0,
+            slow: 0,
+            frac: Vec::new(),
+            dirty: false,
+        }
     }
 }
 
@@ -189,6 +196,7 @@ impl Policy for LbBsp {
     fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
         if self.frac.len() != obs.n {
             self.frac = vec![1.0; obs.n];
+            self.dirty = true;
         }
         let last: Vec<f64> =
             obs.last_times.iter().map(|&t| if t.is_finite() { t } else { f64::NAN }).collect();
@@ -212,12 +220,16 @@ impl Policy for LbBsp {
                 if d > 0.0 {
                     self.frac[self.slow] -= d;
                     self.frac[self.fast] += d;
+                    self.dirty = true;
                 }
             }
         }
         let mut d = PolicyDecision::simple(base_mode(obs.arch));
         d.lr_rescaled = true;
-        d.batch_frac = self.frac.clone();
+        if self.dirty {
+            d.batch_frac = self.frac.clone();
+            self.dirty = false;
+        }
         d
     }
 }
@@ -251,14 +263,9 @@ impl Policy for Kardam {
 /// staleness threshold — here the threshold maps onto the x-order ladder:
 /// mild predicted skew widens the allowed staleness (smaller x), uniform
 /// times tighten it back to full synchrony.
+#[derive(Default)]
 pub struct Dssp {
     threshold: usize,
-}
-
-impl Default for Dssp {
-    fn default() -> Self {
-        Dssp { threshold: 0 }
-    }
 }
 
 impl Policy for Dssp {
@@ -419,16 +426,21 @@ mod tests {
         let times = vec![0.3, 0.3, 0.3, 0.9];
         let f = vec![false; 4];
         let mut d = PolicyDecision::simple(DriverMode::Sync(SyncMode::Ssgd));
+        // mirror the driver: an empty batch_frac keeps the installed vector
+        let mut installed: Vec<f64> = Vec::new();
         for i in 0..=9 {
             let mut o = obs(&times, &times, &f, Arch::Ps);
             o.now = 50.0 + i as f64;
             d = lb.decide(&o);
+            if !d.batch_frac.is_empty() {
+                installed = d.batch_frac.clone();
+            }
         }
         assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
-        assert!(d.batch_frac[3] < 1.0, "slow worker sheds batch: {:?}", d.batch_frac);
-        assert!(d.batch_frac[0] > 1.0 || d.batch_frac.iter().sum::<f64>() > 3.99);
+        assert!(installed[3] < 1.0, "slow worker sheds batch: {installed:?}");
+        assert!(installed[0] > 1.0 || installed.iter().sum::<f64>() > 3.99);
         // total batch conserved
-        let total: f64 = d.batch_frac.iter().sum();
+        let total: f64 = installed.iter().sum();
         assert!((total - 4.0).abs() < 1e-9);
     }
 

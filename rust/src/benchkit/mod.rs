@@ -1,9 +1,14 @@
 //! Micro-benchmark substrate (criterion is unavailable offline): warmup,
-//! calibrated iteration counts, mean/p50/p99, and throughput reporting.
-//! `cargo bench` targets in `rust/benches/` are built on this.
+//! calibrated iteration counts, mean/p50/p99, throughput reporting, and a
+//! machine-readable JSON artifact (`BENCH_*.json`) so perf trajectories
+//! can be tracked across PRs. `cargo bench` targets in `rust/benches/`
+//! are built on this.
 
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::jsonio::{self, Json};
 
 /// One benchmark's result.
 #[derive(Clone, Debug)]
@@ -14,6 +19,8 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p99_ns: f64,
     pub min_ns: f64,
+    /// optional derived throughput: (unit, items per second)
+    pub throughput: Option<(String, f64)>,
 }
 
 impl BenchResult {
@@ -27,6 +34,27 @@ impl BenchResult {
             fmt_ns(self.min_ns),
             self.iters
         )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", jsonio::s(&self.name)),
+            ("iters", jsonio::num(self.iters as f64)),
+            ("ns_per_iter", jsonio::num(self.mean_ns)),
+            ("p50_ns", jsonio::num(self.p50_ns)),
+            ("p99_ns", jsonio::num(self.p99_ns)),
+            ("min_ns", jsonio::num(self.min_ns)),
+        ];
+        if let Some((unit, per_sec)) = &self.throughput {
+            pairs.push((
+                "throughput",
+                jsonio::obj(vec![
+                    ("unit", jsonio::s(unit)),
+                    ("per_sec", jsonio::num(*per_sec)),
+                ]),
+            ));
+        }
+        jsonio::obj(pairs)
     }
 }
 
@@ -110,17 +138,52 @@ impl Bencher {
             p50_ns: crate::stats::percentile_sorted(&times, 50.0),
             p99_ns: crate::stats::percentile_sorted(&times, 99.0),
             min_ns: times[0],
+            throughput: None,
         };
         println!("{}", res.report());
         self.results.push(res);
         self.results.last().unwrap()
     }
 
-    /// Report a throughput line derived from the last result.
-    pub fn throughput(&self, unit: &str, per_iter: f64) {
-        if let Some(r) = self.results.last() {
+    /// Attach a throughput figure (items of `unit` per iteration) to the
+    /// last result and print the derived rate.
+    pub fn throughput(&mut self, unit: &str, per_iter: f64) {
+        if let Some(r) = self.results.last_mut() {
             let per_sec = per_iter / (r.mean_ns / 1e9);
+            r.throughput = Some((unit.to_string(), per_sec));
             println!("{:<44} {:>14.0} {unit}/s", format!("  ↳ {}", r.name), per_sec);
+        }
+    }
+
+    /// Serialize every result as a `star-bench-v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("schema", jsonio::s("star-bench-v1")),
+            ("generated_by", jsonio::s("star::benchkit")),
+            (
+                "results",
+                jsonio::arr(self.results.iter().map(|r| r.to_json())),
+            ),
+        ])
+    }
+
+    /// Write the JSON artifact (e.g. `BENCH_sim.json`); CI commits/uploads
+    /// these so the perf trajectory is visible across PRs.
+    pub fn write_json(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        println!("bench results written to {}", path.display());
+        Ok(())
+    }
+
+    /// Bench-binary epilogue: write the artifact to `$STAR_BENCH_JSON` if
+    /// set (single-target runs only — the override is shared, so a full
+    /// `cargo bench` would make every target clobber it), else to
+    /// `default_name`. Failures warn instead of panicking so a read-only
+    /// working directory never kills a bench run.
+    pub fn write_json_env(&self, default_name: &str) {
+        let out = std::env::var("STAR_BENCH_JSON").unwrap_or_else(|_| default_name.into());
+        if let Err(e) = self.write_json(Path::new(&out)) {
+            eprintln!("warning: could not write {out}: {e}");
         }
     }
 }
@@ -144,5 +207,42 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_attaches_to_last_result() {
+        let mut b = Bencher::quick();
+        b.bench("sum", || (0..100u64).sum::<u64>());
+        b.throughput("adds", 100.0);
+        let r = b.results.last().unwrap();
+        let (unit, per_sec) = r.throughput.as_ref().unwrap();
+        assert_eq!(unit, "adds");
+        assert!(*per_sec > 0.0);
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        let mut b = Bencher::quick();
+        b.bench("sum", || (0..100u64).sum::<u64>());
+        b.throughput("adds", 100.0);
+        let path = std::env::temp_dir().join("star_benchkit_test.json");
+        b.write_json(&path).unwrap();
+        let parsed = Json::parse_file(&path).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        let results = parsed.get("results").unwrap().arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().str().unwrap(), "sum");
+        assert!(results[0].get("ns_per_iter").unwrap().num().unwrap() > 0.0);
+        assert!(
+            results[0]
+                .get("throughput")
+                .unwrap()
+                .get("per_sec")
+                .unwrap()
+                .num()
+                .unwrap()
+                > 0.0
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

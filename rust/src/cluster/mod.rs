@@ -16,6 +16,27 @@
 //!
 //! Iteration times are then computed from these shares by the driver;
 //! deviation ratios above 20% are stragglers (§II).
+//!
+//! ## Share cache (DESIGN.md §2.3)
+//!
+//! Share queries are the simulator's hottest path: every simulated
+//! iteration start asks for the worker's CPU+bandwidth shares and every
+//! PS's bandwidth share, and SSGD fires a whole round of iteration starts
+//! at the *same* simulated instant. Shares are therefore computed **once
+//! per (server, resource, time) epoch** into a reusable buffer (in-place
+//! water-fill, no per-query allocation) and invalidated by a monotonically
+//! increasing *generation* that bumps whenever anything share-relevant
+//! changes: task registration/deactivation, caps, throttles, or demands.
+//! All mutation goes through [`Cluster::set_caps`]/[`Cluster::set_demands`]/
+//! [`Cluster::set_throttles`] so invalidation cannot be missed; the cache
+//! can be disabled ([`Cluster::set_share_cache_enabled`]) to force direct
+//! recomputation, and the two paths are bit-identical (verified by the
+//! `share_cache_equivalence` integration test).
+//!
+//! Contention-spike and per-task event lists are pruned as simulated time
+//! advances (event durations are capped at 500 s, and the discrete-event
+//! driver queries at non-decreasing times), so arbitrarily long traces run
+//! in bounded memory.
 
 use crate::simrng::Rng;
 
@@ -57,6 +78,15 @@ pub struct Spike {
     pub bw_frac: f64,
 }
 
+/// Spike durations are clamped to this (Fig 7's 0.1–500 s tail); it bounds
+/// both the reverse scan and how far behind the clock pruning must keep
+/// entries alive.
+const SPIKE_MAX_DUR_S: f64 = 500.0;
+
+/// Expired spikes are dropped in batches of this size (amortizes the
+/// front-drain to O(1) per query).
+const SPIKE_PRUNE_BATCH: usize = 64;
+
 /// One server.
 #[derive(Clone, Debug)]
 pub struct Server {
@@ -65,13 +95,21 @@ pub struct Server {
     pub bw_gbps: f64,
     pub gpus: usize,
     pub gpus_used: usize,
-    /// lazily extended contention spikes, ordered by start
+    /// lazily extended contention spikes, ordered by start; pruned as the
+    /// query clock advances
     spikes: Vec<Spike>,
     spike_horizon: f64,
+    /// highest query time pruning has run for — earlier queries would see
+    /// wrong (missing) contention, so they are rejected in debug builds
+    spike_pruned_to: f64,
     spike_rng: Rng,
 }
 
 /// A registered task.
+///
+/// Demands, caps, and throttles feed the share cache; the cluster's task
+/// registry is private, so all mutation flows through the invalidating
+/// `Cluster::set_*` methods (reads via [`Cluster::task`]).
 #[derive(Clone, Debug)]
 pub struct Task {
     pub job: usize,
@@ -150,20 +188,47 @@ impl Default for ClusterConfig {
     }
 }
 
+/// One cached share epoch for a (server, resource) pair: the water-filled,
+/// interference-scaled share of every active task on the server at `time`,
+/// valid while the cluster generation is unchanged. Buffers are reused
+/// across epochs, so steady-state queries allocate nothing.
+#[derive(Clone, Debug, Default)]
+struct ShareEpoch {
+    time: f64,
+    generation: u64,
+    valid: bool,
+    /// task ids in `by_server` order at fill time
+    ids: Vec<TaskId>,
+    shares: Vec<f64>,
+}
+
 /// The cluster: servers + task registry + contention model.
+///
+/// Everything that feeds a share computation — tasks, server capacities,
+/// config — is private, so a mutation that bypasses the cache's
+/// generation bump cannot compile; read through [`Cluster::task`],
+/// [`Cluster::server`], and [`Cluster::config`].
 #[derive(Clone, Debug)]
 pub struct Cluster {
-    pub cfg: ClusterConfig,
-    pub servers: Vec<Server>,
-    pub tasks: Vec<Task>,
-    /// per-server list of active task ids (hot-path index; shares() is
-    /// called on every simulated iteration)
+    cfg: ClusterConfig,
+    servers: Vec<Server>,
+    tasks: Vec<Task>,
+    /// per-server list of active task ids (hot-path index; share queries
+    /// happen on every simulated iteration)
     by_server: Vec<Vec<TaskId>>,
     /// lazily-created per-task straggler-event streams (heavy-tailed
     /// slowdowns hitting one task: pinned-core co-tenants, NIC queue
     /// imbalance, GC pauses — the paper's 0.1–500 s events, Fig 7)
     task_events: Vec<SpikeStream>,
     noise_seed: u64,
+    /// bumped on any share-relevant mutation; epoch keys compare to it
+    generation: u64,
+    /// `servers.len() * 2` epochs, indexed `server * 2 + res_idx(res)`
+    cache: Vec<ShareEpoch>,
+    cache_enabled: bool,
+    /// water-fill scratch (demand + sort-order buffers)
+    scratch_demands: Vec<f64>,
+    scratch_order: Vec<usize>,
 }
 
 /// A lazily-extended stream of heavy-tailed events.
@@ -171,20 +236,28 @@ pub struct Cluster {
 pub struct SpikeStream {
     spikes: Vec<Spike>,
     horizon: f64,
+    /// see `Server::spike_pruned_to`
+    pruned_to: f64,
     rng: Rng,
 }
 
 impl SpikeStream {
     fn new(rng: Rng) -> Self {
-        SpikeStream { spikes: Vec::new(), horizon: 0.0, rng }
+        SpikeStream { spikes: Vec::new(), horizon: 0.0, pruned_to: 0.0, rng }
     }
 
     /// Extend to time `t` and return the active magnitude for `res`.
     fn frac_at(&mut self, t: f64, interval: f64, mag: (f64, f64), dur_mu: f64, dur_sigma: f64, res: Res) -> f64 {
+        debug_assert!(
+            t >= self.pruned_to,
+            "cluster query times must be non-decreasing once pruning has run \
+             (query at {t}, events pruned for {})",
+            self.pruned_to
+        );
         while self.horizon <= t {
             let gap = self.rng.exponential(1.0 / interval);
             let start = self.horizon + gap;
-            let dur = self.rng.lognormal(dur_mu, dur_sigma).clamp(0.1, 500.0);
+            let dur = self.rng.lognormal(dur_mu, dur_sigma).clamp(0.1, SPIKE_MAX_DUR_S);
             let both = self.rng.chance(0.35);
             let on_cpu = both || self.rng.chance(0.5);
             let m = self.rng.range(mag.0, mag.1);
@@ -196,6 +269,7 @@ impl SpikeStream {
             });
             self.horizon = start;
         }
+        prune_spikes(&mut self.spikes, t, &mut self.pruned_to);
         let mut frac: f64 = 0.0;
         for sp in self.spikes.iter().rev() {
             if sp.start > t {
@@ -207,7 +281,7 @@ impl SpikeStream {
                     Res::Bw => sp.bw_frac,
                 };
             }
-            if sp.start + 500.0 < t {
+            if sp.start + SPIKE_MAX_DUR_S < t {
                 break;
             }
         }
@@ -215,37 +289,64 @@ impl SpikeStream {
     }
 }
 
+/// Drop spikes that can no longer overlap any query at time >= `t`:
+/// entries are start-ordered with duration <= [`SPIKE_MAX_DUR_S`], so
+/// everything with `start + 500 < t` is dead (the driver's query times are
+/// non-decreasing). Drained in batches to stay O(1) amortized.
+/// `pruned_to` records the watermark so debug builds can reject the
+/// out-of-order queries that pruning would silently answer wrong.
+fn prune_spikes(spikes: &mut Vec<Spike>, t: f64, pruned_to: &mut f64) {
+    let cut = spikes.partition_point(|s| s.start + SPIKE_MAX_DUR_S < t);
+    if cut >= SPIKE_PRUNE_BATCH {
+        spikes.drain(..cut);
+        *pruned_to = t;
+    }
+}
+
+fn res_idx(res: Res) -> usize {
+    match res {
+        Res::Cpu => 0,
+        Res::Bw => 1,
+    }
+}
+
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
         let mut rng = Rng::new(cfg.seed, 0x5eed);
-        let mut servers = Vec::new();
-        for _ in 0..cfg.gpu_servers {
+        let n_servers = cfg.gpu_servers + cfg.cpu_servers;
+        let mut servers = Vec::with_capacity(n_servers);
+        for i in 0..n_servers {
+            let gpu = i < cfg.gpu_servers;
             servers.push(Server {
-                kind: ServerKind::Gpu,
-                cpus: cfg.gpu_server_cpus,
-                bw_gbps: cfg.gpu_server_bw,
-                gpus: cfg.gpus_per_server,
+                kind: if gpu { ServerKind::Gpu } else { ServerKind::Cpu },
+                cpus: if gpu { cfg.gpu_server_cpus } else { cfg.cpu_server_cpus },
+                bw_gbps: if gpu { cfg.gpu_server_bw } else { cfg.cpu_server_bw },
+                gpus: if gpu { cfg.gpus_per_server } else { 0 },
                 gpus_used: 0,
                 spikes: Vec::new(),
                 spike_horizon: 0.0,
-                spike_rng: rng.fork(servers_tag(servers_len(&servers))),
-            });
-        }
-        for _ in 0..cfg.cpu_servers {
-            servers.push(Server {
-                kind: ServerKind::Cpu,
-                cpus: cfg.cpu_server_cpus,
-                bw_gbps: cfg.cpu_server_bw,
-                gpus: 0,
-                gpus_used: 0,
-                spikes: Vec::new(),
-                spike_horizon: 0.0,
-                spike_rng: rng.fork(servers_tag(servers_len(&servers))),
+                spike_pruned_to: 0.0,
+                // 0x5e4e_0000 + index keeps the seed lineage of the
+                // original per-server fork tags (bit-compatible streams)
+                spike_rng: rng.fork(0x5e4e_0000 + i as u64),
             });
         }
         let noise_seed = rng.next_u64();
         let by_server = vec![Vec::new(); servers.len()];
-        Cluster { cfg, servers, tasks: Vec::new(), by_server, task_events: Vec::new(), noise_seed }
+        let cache = vec![ShareEpoch::default(); servers.len() * 2];
+        Cluster {
+            cfg,
+            servers,
+            tasks: Vec::new(),
+            by_server,
+            task_events: Vec::new(),
+            noise_seed,
+            generation: 0,
+            cache,
+            cache_enabled: true,
+            scratch_demands: Vec::new(),
+            scratch_order: Vec::new(),
+        }
     }
 
     pub fn gpu_server_ids(&self) -> Vec<usize> {
@@ -276,6 +377,7 @@ impl Cluster {
             self.noise_seed ^ (id as u64).wrapping_mul(0xA24B_AED4_963E_E407),
             0x7a51,
         )));
+        self.generation += 1;
         id
     }
 
@@ -288,7 +390,75 @@ impl Cluster {
             if matches!(self.tasks[id].role, Role::Worker { .. }) {
                 self.servers[server].gpus_used -= 1;
             }
+            self.generation += 1;
         }
+    }
+
+    /// Set a task's dynamic caps (§IV-D1 prevention / equalization),
+    /// invalidating cached shares when the values actually change.
+    pub fn set_caps(&mut self, id: TaskId, cpu_cap: f64, bw_cap: f64) {
+        let t = &mut self.tasks[id];
+        if t.cpu_cap != cpu_cap || t.bw_cap != bw_cap {
+            t.cpu_cap = cpu_cap;
+            t.bw_cap = bw_cap;
+            self.generation += 1;
+        }
+    }
+
+    /// Set a task's static throttles (the paper's cpulimit / tc).
+    pub fn set_throttles(&mut self, id: TaskId, cpu_throttle: f64, bw_throttle: f64) {
+        let t = &mut self.tasks[id];
+        if t.cpu_throttle != cpu_throttle || t.bw_throttle != bw_throttle {
+            t.cpu_throttle = cpu_throttle;
+            t.bw_throttle = bw_throttle;
+            self.generation += 1;
+        }
+    }
+
+    /// Set a task's steady demands (mode-dependent, O5).
+    pub fn set_demands(&mut self, id: TaskId, cpu_demand: f64, bw_demand: f64) {
+        let t = &mut self.tasks[id];
+        if t.cpu_demand != cpu_demand || t.bw_demand != bw_demand {
+            t.cpu_demand = cpu_demand;
+            t.bw_demand = bw_demand;
+            self.generation += 1;
+        }
+    }
+
+    /// Read-only view of one registered task.
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id]
+    }
+
+    /// Number of tasks ever registered (deactivated ones keep their slot).
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Read-only view of one server.
+    pub fn server(&self, s: usize) -> &Server {
+        &self.servers[s]
+    }
+
+    pub fn server_count(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Read-only view of the cluster configuration.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Current invalidation generation (bumps on any share-relevant change).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Disable (or re-enable) the share cache. With the cache off every
+    /// query recomputes from scratch — the reference path the equivalence
+    /// tests compare against; results are bit-identical either way.
+    pub fn set_share_cache_enabled(&mut self, enabled: bool) {
+        self.cache_enabled = enabled;
     }
 
     pub fn free_gpus(&self, server: usize) -> usize {
@@ -317,10 +487,16 @@ impl Cluster {
         let cfg_interval = self.cfg.spike_interval_s;
         let (mu, sigma) = (self.cfg.spike_dur_mu, self.cfg.spike_dur_sigma);
         let srv = &mut self.servers[server];
+        debug_assert!(
+            t >= srv.spike_pruned_to,
+            "cluster query times must be non-decreasing once pruning has run \
+             (query at {t}, server spikes pruned for {})",
+            srv.spike_pruned_to
+        );
         while srv.spike_horizon <= t {
             let gap = srv.spike_rng.exponential(1.0 / cfg_interval);
             let start = srv.spike_horizon + gap;
-            let dur = srv.spike_rng.lognormal(mu, sigma).clamp(0.1, 500.0);
+            let dur = srv.spike_rng.lognormal(mu, sigma).clamp(0.1, SPIKE_MAX_DUR_S);
             let both = srv.spike_rng.chance(0.3);
             let on_cpu = both || srv.spike_rng.chance(0.5);
             let mag = srv.spike_rng.range(0.2, 0.7);
@@ -332,6 +508,7 @@ impl Cluster {
             });
             srv.spike_horizon = start;
         }
+        prune_spikes(&mut srv.spikes, t, &mut srv.spike_pruned_to);
         // sum overlapping (rare to have >1); scan tail (spikes sorted by start)
         let mut frac: f64 = 0.0;
         for s in srv.spikes.iter().rev() {
@@ -345,7 +522,7 @@ impl Cluster {
                 };
             }
             // spikes are start-ordered; once start+500 < t nothing earlier overlaps
-            if s.start + 500.0 < t {
+            if s.start + SPIKE_MAX_DUR_S < t {
                 break;
             }
         }
@@ -353,7 +530,7 @@ impl Cluster {
     }
 
     /// Available capacity of `res` on `server` at time `t`.
-    pub fn available(&mut self, server: usize, res: Res, t: f64) -> f64 {
+    pub fn available(&self, server: usize, res: Res, t: f64) -> f64 {
         let cap = match res {
             Res::Cpu => self.servers[server].cpus,
             Res::Bw => self.servers[server].bw_gbps,
@@ -362,19 +539,35 @@ impl Cluster {
         (cap * (1.0 - bg)).max(0.05 * cap)
     }
 
-    /// Max–min fair share of `res` for every active task on `server` at
-    /// time `t`. Returns (task_id, share) pairs.
-    pub fn shares(&mut self, server: usize, res: Res, t: f64) -> Vec<(TaskId, f64)> {
+    /// Fill the (server, res) share epoch for time `t` unless it is
+    /// already current. This is the only place shares are computed: one
+    /// in-place water-fill over the co-located set plus per-task
+    /// interference — everything else is cache lookups.
+    fn ensure_epoch(&mut self, server: usize, res: Res, t: f64) {
+        let slot = server * 2 + res_idx(res);
+        if self.cache_enabled {
+            let e = &self.cache[slot];
+            if e.valid && e.generation == self.generation && e.time == t {
+                return;
+            }
+        }
         let avail = self.available(server, res, t);
-        let ids: Vec<TaskId> = self.by_server[server].clone();
-        let demands: Vec<f64> = ids
-            .iter()
-            .map(|&i| match res {
+        // move the buffers out so the borrow checker lets us call &mut
+        // self methods while filling them
+        let mut ids = std::mem::take(&mut self.cache[slot].ids);
+        let mut shares = std::mem::take(&mut self.cache[slot].shares);
+        let mut demands = std::mem::take(&mut self.scratch_demands);
+        let mut order = std::mem::take(&mut self.scratch_order);
+        ids.clear();
+        ids.extend_from_slice(&self.by_server[server]);
+        demands.clear();
+        for &i in &ids {
+            demands.push(match res {
                 Res::Cpu => self.tasks[i].capped_cpu(),
                 Res::Bw => self.tasks[i].capped_bw(),
-            })
-            .collect();
-        let mut alloc = water_fill(&demands, avail);
+            });
+        }
+        water_fill_into(&demands, avail, &mut order, &mut shares);
         // per-task interference: co-tenant contention hits individual
         // tasks unevenly (pinned cores, NIC queues), which is where the
         // paper's *within-server* stragglers come from (Fig 3/4). Scaled
@@ -382,9 +575,24 @@ impl Cluster {
         let load = (demands.iter().sum::<f64>() / avail.max(1e-9)).min(1.5);
         for (k, &id) in ids.iter().enumerate() {
             let inter = self.task_interference(server, id, res, t, load);
-            alloc[k] *= 1.0 - inter;
+            shares[k] *= 1.0 - inter;
         }
-        ids.into_iter().zip(alloc).collect()
+        self.scratch_demands = demands;
+        self.scratch_order = order;
+        let e = &mut self.cache[slot];
+        e.ids = ids;
+        e.shares = shares;
+        e.time = t;
+        e.generation = self.generation;
+        e.valid = true;
+    }
+
+    /// Max–min fair share of `res` for every active task on `server` at
+    /// time `t`. Returns (task_id, share) pairs.
+    pub fn shares(&mut self, server: usize, res: Res, t: f64) -> Vec<(TaskId, f64)> {
+        self.ensure_epoch(server, res, t);
+        let e = &self.cache[server * 2 + res_idx(res)];
+        e.ids.iter().copied().zip(e.shares.iter().copied()).collect()
     }
 
     /// Interference fraction in [0, 0.85] on one task: smooth per-task
@@ -428,11 +636,26 @@ impl Cluster {
     /// Share granted to one task (water-filled against its co-located set).
     pub fn share_of(&mut self, id: TaskId, res: Res, t: f64) -> f64 {
         let server = self.tasks[id].server;
-        self.shares(server, res, t)
-            .into_iter()
-            .find(|&(i, _)| i == id)
-            .map(|(_, s)| s)
-            .unwrap_or(0.0)
+        self.ensure_epoch(server, res, t);
+        let e = &self.cache[server * 2 + res_idx(res)];
+        e.ids.iter().position(|&i| i == id).map(|k| e.shares[k]).unwrap_or(0.0)
+    }
+
+    /// Batched hot-path query: one task's (CPU, bandwidth) share pair at
+    /// `t`. Fills at most two epochs; repeat queries at the same instant
+    /// (e.g. a whole SSGD round starting together) are pure lookups.
+    pub fn worker_shares(&mut self, id: TaskId, t: f64) -> (f64, f64) {
+        (self.share_of(id, Res::Cpu, t), self.share_of(id, Res::Bw, t))
+    }
+
+    /// Batched hot-path query: sum of bandwidth shares over `ids` (the
+    /// PS-side aggregate fan-in) at `t`, one epoch fill per server.
+    pub fn bw_share_sum(&mut self, ids: &[TaskId], t: f64) -> f64 {
+        let mut sum = 0.0;
+        for &id in ids {
+            sum += self.share_of(id, Res::Bw, t);
+        }
+        sum
     }
 
     /// Fraction of nameplate capacity in use on `server` (for Fig 9).
@@ -441,7 +664,8 @@ impl Cluster {
             Res::Cpu => self.servers[server].cpus,
             Res::Bw => self.servers[server].bw_gbps,
         };
-        let granted: f64 = self.shares(server, res, t).iter().map(|&(_, s)| s).sum();
+        self.ensure_epoch(server, res, t);
+        let granted: f64 = self.cache[server * 2 + res_idx(res)].shares.iter().sum();
         let external = cap - self.available(server, res, t);
         ((granted + external) / cap).clamp(0.0, 1.0)
     }
@@ -451,17 +675,36 @@ impl Cluster {
 /// no task receives more than its demand, and unmet demand shares the
 /// remainder equally.
 pub fn water_fill(demands: &[f64], capacity: f64) -> Vec<f64> {
+    let mut order = Vec::new();
+    let mut alloc = Vec::new();
+    water_fill_into(demands, capacity, &mut order, &mut alloc);
+    alloc
+}
+
+/// In-place [`water_fill`]: writes the allocation into `alloc` using
+/// `order` as sort scratch, allocating nothing once the buffers have grown
+/// to the working-set size. Identical results to `water_fill` (same stable
+/// sort, same tie-breaking).
+pub fn water_fill_into(
+    demands: &[f64],
+    capacity: f64,
+    order: &mut Vec<usize>,
+    alloc: &mut Vec<f64>,
+) {
     let n = demands.len();
+    alloc.clear();
+    alloc.resize(n, 0.0);
     if n == 0 {
-        return Vec::new();
+        return;
     }
     let total: f64 = demands.iter().sum();
     if total <= capacity {
-        return demands.to_vec();
+        alloc.copy_from_slice(demands);
+        return;
     }
-    let mut order: Vec<usize> = (0..n).collect();
+    order.clear();
+    order.extend(0..n);
     order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
-    let mut alloc = vec![0.0; n];
     let mut remaining = capacity;
     let mut left = n;
     for (k, &i) in order.iter().enumerate() {
@@ -474,11 +717,10 @@ pub fn water_fill(demands: &[f64], capacity: f64) -> Vec<f64> {
             for &j in &order[k..] {
                 alloc[j] = remaining / left as f64;
             }
-            return alloc;
+            return;
         }
         left -= 1;
     }
-    alloc
 }
 
 fn res_tag(res: Res) -> u64 {
@@ -486,14 +728,6 @@ fn res_tag(res: Res) -> u64 {
         Res::Cpu => 1,
         Res::Bw => 2,
     }
-}
-
-fn servers_len(v: &[Server]) -> usize {
-    v.len()
-}
-
-fn servers_tag(i: usize) -> u64 {
-    0x5e4e_0000 + i as u64
 }
 
 /// Deterministic smooth noise in [0, 1]: cosine interpolation between
@@ -567,6 +801,22 @@ mod tests {
     }
 
     #[test]
+    fn water_fill_into_matches_and_reuses_buffers() {
+        let mut rng = Rng::seeded(11);
+        let mut order = Vec::new();
+        let mut alloc = Vec::new();
+        for _ in 0..200 {
+            let n = rng.usize(0, 14);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.0, 10.0)).collect();
+            let cap = rng.range(0.0, 30.0);
+            let want = water_fill(&demands, cap);
+            // buffers deliberately carry state from the previous case
+            water_fill_into(&demands, cap, &mut order, &mut alloc);
+            assert_eq!(want, alloc, "demands {demands:?} cap {cap}");
+        }
+    }
+
+    #[test]
     fn default_testbed_shape() {
         let c = Cluster::new(ClusterConfig::default());
         assert_eq!(c.servers.len(), 8);
@@ -609,9 +859,94 @@ mod tests {
     fn throttle_caps_share() {
         let mut c = Cluster::new(ClusterConfig::default());
         let id = c.add_task(worker(0, 0, 8.0, 1.0));
-        c.tasks[id].cpu_cap = 0.1; // cpulimit to 10%
+        c.set_caps(id, 0.1, 1.0); // cpulimit to 10%
         let s = c.share_of(id, Res::Cpu, 5.0);
         assert!(s <= 0.8 + 1e-9, "{s}");
+    }
+
+    #[test]
+    fn cap_changes_invalidate_cached_shares() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let mut first = 0;
+        for j in 0..10 {
+            let mut t = worker(j, 0, 12.0, 0.5);
+            t.role = Role::Ps { idx: 0 };
+            let id = c.add_task(t);
+            if j == 0 {
+                first = id;
+            }
+        }
+        let t = 10.0;
+        let before = c.share_of(first, Res::Cpu, t);
+        // same (generation, time): a pure cache hit must repeat exactly
+        assert_eq!(before, c.share_of(first, Res::Cpu, t));
+        c.set_caps(first, 0.1, 1.0);
+        let after = c.share_of(first, Res::Cpu, t);
+        assert!(after < before, "cap must shrink the cached share: {after} vs {before}");
+        // writing identical values must not churn the generation
+        let g = c.generation();
+        c.set_caps(first, 0.1, 1.0);
+        c.set_demands(first, 12.0, 0.5);
+        c.set_throttles(first, 1.0, 1.0);
+        assert_eq!(g, c.generation());
+        c.set_throttles(first, 0.5, 1.0);
+        assert!(c.generation() > g);
+    }
+
+    #[test]
+    fn cached_shares_match_direct_recompute() {
+        let mut cached = Cluster::new(ClusterConfig::default());
+        let mut direct = Cluster::new(ClusterConfig::default());
+        direct.set_share_cache_enabled(false);
+        let mut ids = Vec::new();
+        for j in 0..12 {
+            let mut t = worker(j, j % 5, 4.0 + j as f64, 1.0 + 0.3 * j as f64);
+            if j % 3 == 0 {
+                t.role = Role::Ps { idx: 0 };
+            }
+            ids.push(cached.add_task(t.clone()));
+            direct.add_task(t);
+        }
+        let mut t = 0.0;
+        for step in 0..120 {
+            t += 3.7;
+            for server in 0..8 {
+                for res in [Res::Cpu, Res::Bw] {
+                    assert_eq!(
+                        cached.shares(server, res, t),
+                        direct.shares(server, res, t),
+                        "server {server} {res:?} t {t}"
+                    );
+                }
+            }
+            for &id in &ids {
+                assert_eq!(
+                    cached.worker_shares(id, t),
+                    (direct.share_of(id, Res::Cpu, t), direct.share_of(id, Res::Bw, t))
+                );
+            }
+            assert_eq!(cached.bw_share_sum(&ids, t), direct.bw_share_sum(&ids, t));
+            for server in 0..8 {
+                assert_eq!(
+                    cached.utilization(server, Res::Cpu, t),
+                    direct.utilization(server, Res::Cpu, t)
+                );
+            }
+            // interleave share-relevant mutations on both clusters
+            match step % 3 {
+                0 => {
+                    let id = ids[step % ids.len()];
+                    cached.set_caps(id, 0.5, 0.7);
+                    direct.set_caps(id, 0.5, 0.7);
+                }
+                1 => {
+                    let id = ids[(step * 7) % ids.len()];
+                    cached.set_demands(id, 6.0, 2.0);
+                    direct.set_demands(id, 6.0, 2.0);
+                }
+                _ => {}
+            }
+        }
     }
 
     #[test]
@@ -640,11 +975,25 @@ mod tests {
     #[test]
     fn spikes_heavy_tailed_and_reproducible() {
         let mut c = Cluster::new(ClusterConfig::default());
-        // force spike generation out to t=50_000 (spikes are applied
-        // per-task, so a task must be present)
+        // spikes are applied per-task, so a task must be present
         c.add_task(worker(0, 0, 2.0, 1.0));
-        let _ = c.shares(0, Res::Cpu, 50_000.0);
-        let durs: Vec<f64> = c.servers[0].spikes.iter().map(|s| s.end - s.start).collect();
+        // walk the clock forward monotonically (as the driver does),
+        // harvesting spike durations before pruning retires the entries
+        let mut durs: Vec<f64> = Vec::new();
+        let mut last_start = f64::NEG_INFINITY;
+        let mut t = 0.0;
+        while t <= 50_000.0 {
+            let _ = c.shares(0, Res::Cpu, t);
+            for s in &c.servers[0].spikes {
+                if s.start > last_start {
+                    durs.push(s.end - s.start);
+                }
+            }
+            if let Some(s) = c.servers[0].spikes.last() {
+                last_start = s.start;
+            }
+            t += 100.0;
+        }
         assert!(durs.len() > 50, "want many spikes, got {}", durs.len());
         for d in &durs {
             // tolerance: end = start + dur loses ~1e-11 at start ~ 5e4
@@ -656,8 +1005,25 @@ mod tests {
     }
 
     #[test]
-    fn available_positive_and_below_capacity() {
+    fn spike_lists_stay_bounded_on_long_traces() {
         let mut c = Cluster::new(ClusterConfig::default());
+        let id = c.add_task(worker(0, 0, 2.0, 1.0));
+        let mut t = 0.0;
+        while t <= 500_000.0 {
+            let _ = c.share_of(id, Res::Cpu, t);
+            t += 50.0;
+        }
+        // ~2083 spikes were generated (mean gap 240 s); pruning must keep
+        // only the ~500 s live window plus at most one unpruned batch
+        let live = c.servers[0].spikes.len();
+        assert!(live < 2 * SPIKE_PRUNE_BATCH + 16, "server spikes not pruned: {live}");
+        let ev = c.task_events[id].spikes.len();
+        assert!(ev < 2 * SPIKE_PRUNE_BATCH + 16, "task events not pruned: {ev}");
+    }
+
+    #[test]
+    fn available_positive_and_below_capacity() {
+        let c = Cluster::new(ClusterConfig::default());
         for i in 0..100 {
             let t = i as f64 * 13.3;
             let a = c.available(2, Res::Bw, t);

@@ -269,12 +269,6 @@ struct JobRun {
     finished: bool,
 }
 
-impl Driver {
-    fn jobs_placement_worker(&self, run: &JobRun, rank: usize) -> TaskId {
-        run.placement.worker_tasks[rank]
-    }
-}
-
 enum Event {
     Arrive(usize),
     WorkerDone { job: usize, worker: usize, iter: u64 },
@@ -347,7 +341,7 @@ impl Driver {
     }
 
     fn sample_servers(&mut self, t: f64) {
-        for s in 0..self.cluster.servers.len() {
+        for s in 0..self.cluster.server_count() {
             let rec = ServerRecord {
                 time: t,
                 server: s,
@@ -430,9 +424,12 @@ impl Driver {
                 };
                 for &(tj, rank, cpu, bw) in &self.cfg.throttles.clone() {
                     if tj == job && rank < n {
-                        let tid = self.jobs_placement_worker(&run, rank);
-                        self.cluster.tasks[tid].cpu_throttle = cpu.clamp(0.01, 1.0);
-                        self.cluster.tasks[tid].bw_throttle = bw.clamp(0.01, 1.0);
+                        let tid = run.placement.worker_tasks[rank];
+                        self.cluster.set_throttles(
+                            tid,
+                            cpu.clamp(0.01, 1.0),
+                            bw.clamp(0.01, 1.0),
+                        );
                     }
                 }
                 self.jobs[job] = Some(run);
@@ -448,13 +445,20 @@ impl Driver {
     }
 
     /// Compute one worker's iteration breakdown from cluster state at `t`.
+    ///
+    /// Share queries are batched through the cluster's epoch cache: the
+    /// worker's CPU+BW pair and the PS fan-in sum cost one water-fill per
+    /// (server, resource) per simulated instant, no matter how many
+    /// workers start an iteration at that instant (SSGD rounds start a
+    /// whole group at once).
     fn iteration_breakdown(&mut self, job: usize, worker: usize, t: f64) -> IterBreakdown {
         let run = self.jobs[job].as_ref().expect("job running");
         let spec = run.job.spec();
         let wt = run.placement.worker_tasks[worker];
         let bf = run.batch_frac[worker];
-        let cpu_share = self.cluster.share_of(wt, Res::Cpu, t).max(1e-3);
-        let bw_share = self.cluster.share_of(wt, Res::Bw, t).max(1e-3);
+        let (cpu_share, bw_share) = self.cluster.worker_shares(wt, t);
+        let cpu_share = cpu_share.max(1e-3);
+        let bw_share = bw_share.max(1e-3);
 
         // preprocess: pre_cpu_ms at full demand share, scaled by granted CPU
         let pre_s = spec.pre_cpu_ms / 1000.0 * bf * (spec.worker_cpu / cpu_share);
@@ -465,13 +469,8 @@ impl Driver {
         let gbits = 2.0 * spec.grad_mb * 8.0 / 1000.0;
         let comm_s = match self.cfg.arch {
             Arch::Ps => {
-                let ps_share: f64 = run
-                    .placement
-                    .ps_tasks
-                    .iter()
-                    .map(|&pt| self.cluster.share_of(pt, Res::Bw, t))
-                    .sum::<f64>()
-                    .max(1e-3);
+                let ps_share: f64 =
+                    self.cluster.bw_share_sum(&run.placement.ps_tasks, t).max(1e-3);
                 let flows = run.tree.effective_flows() as f64;
                 let eff = bw_share.min(ps_share / flows);
                 gbits / eff * run.tree.hop_penalty(0.03)
@@ -827,8 +826,7 @@ impl Driver {
             std::mem::take(&mut run.imposed)
         };
         for (task, cpu_cap, bw_cap) in imposed {
-            self.cluster.tasks[task].cpu_cap = cpu_cap;
-            self.cluster.tasks[task].bw_cap = bw_cap;
+            self.cluster.set_caps(task, cpu_cap, bw_cap);
         }
 
         let decision = {
@@ -878,11 +876,7 @@ impl Driver {
         }
         // the decision pause halts training only when it actually changes
         // the mode (an unchanged decision is absorbed by the running round)
-        let switched = run.stats.mode_switches > 0 && decision.pause_s > 0.0 && {
-            // mode_switches was incremented above iff mode changed
-            true
-        };
-        let effective_pause = if switched && run.mode_just_switched {
+        let effective_pause = if run.mode_just_switched && decision.pause_s > 0.0 {
             run.pause_until = t + decision.pause_s;
             decision.pause_s
         } else {
@@ -906,29 +900,35 @@ impl Driver {
         let (ps_fc, ps_fb) = (spec.ps_cpu_factor, spec.ps_bw_factor);
         let self_caps = decision.self_caps.clone();
         for (w, &wt) in worker_tasks.iter().enumerate() {
-            self.cluster.tasks[wt].cpu_demand = base_wc * (1.0 + (asgd_c - 1.0) * (fc - 1.0));
-            self.cluster.tasks[wt].bw_demand = base_wb * (1.0 + (asgd_b - 1.0) * (fb - 1.0));
+            self.cluster.set_demands(
+                wt,
+                base_wc * (1.0 + (asgd_c - 1.0) * (fc - 1.0)),
+                base_wb * (1.0 + (asgd_b - 1.0) * (fb - 1.0)),
+            );
             // §IV-D1 group equalization: fast members yield headroom
             let cap = self_caps.get(w).copied().unwrap_or(1.0).clamp(0.05, 1.0);
-            self.cluster.tasks[wt].cpu_cap = cap;
-            self.cluster.tasks[wt].bw_cap = cap;
+            self.cluster.set_caps(wt, cap, cap);
         }
         for &pt in &ps_tasks {
-            self.cluster.tasks[pt].cpu_demand =
-                base_wc * ps_fc * (1.0 + (asgd_c - 1.0) * (fc - 1.0));
-            self.cluster.tasks[pt].bw_demand =
-                base_wb * ps_fb * (1.0 + (asgd_b - 1.0) * (fb - 1.0));
+            self.cluster.set_demands(
+                pt,
+                base_wc * ps_fc * (1.0 + (asgd_c - 1.0) * (fc - 1.0)),
+                base_wb * ps_fb * (1.0 + (asgd_b - 1.0) * (fb - 1.0)),
+            );
         }
 
         // §IV-D1 deprivations requested by the policy
         let run = self.jobs[job].as_mut().unwrap();
         for (task, frac) in deprive {
-            if task < self.cluster.tasks.len() && self.cluster.tasks[task].active {
-                let old_c = self.cluster.tasks[task].cpu_cap;
-                let old_b = self.cluster.tasks[task].bw_cap;
+            if task < self.cluster.task_count() && self.cluster.task(task).active {
+                let old_c = self.cluster.task(task).cpu_cap;
+                let old_b = self.cluster.task(task).bw_cap;
                 run.imposed.push((task, old_c, old_b));
-                self.cluster.tasks[task].cpu_cap = (old_c * frac).clamp(0.05, 1.0);
-                self.cluster.tasks[task].bw_cap = (old_b * frac).clamp(0.05, 1.0);
+                self.cluster.set_caps(
+                    task,
+                    (old_c * frac).clamp(0.05, 1.0),
+                    (old_b * frac).clamp(0.05, 1.0),
+                );
             }
         }
     }
@@ -959,8 +959,7 @@ impl Driver {
             self.cluster.remove_task(tid);
         }
         for (task, c, b) in run.imposed {
-            self.cluster.tasks[task].cpu_cap = c;
-            self.cluster.tasks[task].bw_cap = b;
+            self.cluster.set_caps(task, c, b);
         }
         self.finished.push(run.stats);
         // admit queued jobs

@@ -30,13 +30,19 @@ pub fn equalize_cap(t_now: f64, t_target: f64, fixed_s: f64) -> f64 {
 /// `times[i]` = predicted completion, `fixed_s[i]` = the share-independent
 /// part (GPU compute).
 pub fn equalize_group(times: &[f64], fixed_s: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    equalize_group_into(times, fixed_s, &mut out);
+    out
+}
+
+/// In-place [`equalize_group`] for the per-round hot path: writes the cap
+/// multipliers into `out` (cleared first), so steady-state decisions reuse
+/// the buffer instead of allocating per group.
+pub fn equalize_group_into(times: &[f64], fixed_s: &[f64], out: &mut Vec<f64>) {
     assert_eq!(times.len(), fixed_s.len());
+    out.clear();
     let t_max = times.iter().cloned().fold(0.0, f64::max);
-    times
-        .iter()
-        .zip(fixed_s)
-        .map(|(&t, &f)| equalize_cap(t, t_max, f))
-        .collect()
+    out.extend(times.iter().zip(fixed_s).map(|(&t, &f)| equalize_cap(t, t_max, f)));
 }
 
 /// A co-located task's deprivation inputs (§IV-D1).
@@ -234,6 +240,20 @@ mod tests {
         // T = 0.2 fixed + 0.8 var; target 1.8 => var must become 1.6 => cap 0.5
         let c = equalize_cap(1.0, 1.8, 0.2);
         assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equalize_group_into_matches_allocating_variant() {
+        let mut rng = crate::simrng::Rng::seeded(7);
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            let n = rng.usize(1, 10);
+            let times: Vec<f64> = (0..n).map(|_| rng.range(0.2, 4.0)).collect();
+            let fixed: Vec<f64> = times.iter().map(|t| t * rng.range(0.05, 0.6)).collect();
+            // buffer carries state from the previous case on purpose
+            equalize_group_into(&times, &fixed, &mut out);
+            assert_eq!(out, equalize_group(&times, &fixed));
+        }
     }
 
     #[test]

@@ -17,8 +17,9 @@ use crate::trace::Arch;
 /// The t_w grid STAR-H enumerates for AR (§V: 30–210 ms).
 pub const TW_GRID_MS: [f64; 7] = [30.0, 60.0, 90.0, 120.0, 150.0, 180.0, 210.0];
 
-/// Ablation switches (§V-C variant names in comments).
-#[derive(Clone, Debug)]
+/// Ablation switches (§V-C variant names in comments); the default (all
+/// off) is full STAR.
+#[derive(Clone, Debug, Default)]
 pub struct Ablation {
     /// /SP: replace STAR's resource-based prediction with the
     /// fixed-duration rule of [29]
@@ -39,22 +40,6 @@ pub struct Ablation {
     pub no_balance_count: bool,
     /// /Tree: no communication-tree amortization
     pub no_tree: bool,
-}
-
-impl Default for Ablation {
-    fn default() -> Self {
-        Ablation {
-            use_fixed_duration_prediction: false,
-            no_x_order: false,
-            no_dynamic: false,
-            no_prevention: false,
-            no_worker_equalize: false,
-            no_sensitivity: false,
-            greedy_placement: false,
-            no_balance_count: false,
-            no_tree: false,
-        }
-    }
 }
 
 /// STAR as a driver policy.
@@ -79,6 +64,14 @@ pub struct Star {
     /// materially better (avoids mode thrash + repeated switch pauses)
     last_mode: Option<SyncMode>,
     pub hysteresis: f64,
+    /// worker count the §IV-D2b tree was already installed for: the tree
+    /// is a pure function of n here, so later decisions send `None` and
+    /// the driver keeps the installed one (saves a build+clone per round)
+    tree_installed_n: Option<usize>,
+    /// scratch for the per-group equalization pass (allocation-free rounds)
+    eq_times: Vec<f64>,
+    eq_fixed: Vec<f64>,
+    eq_caps: Vec<f64>,
 }
 
 impl Star {
@@ -102,6 +95,21 @@ impl Star {
             last_feats: Vec::new(),
             last_mode: None,
             hysteresis: 0.12,
+            tree_installed_n: None,
+            eq_times: Vec::new(),
+            eq_fixed: Vec::new(),
+            eq_caps: Vec::new(),
+        }
+    }
+
+    /// §IV-D2b tree to ship with this decision: built once per worker
+    /// count, `None` afterwards (the driver keeps the installed tree).
+    fn tree_update(&mut self, n: usize) -> Option<CommTree> {
+        if self.tree_installed_n == Some(n) {
+            None
+        } else {
+            self.tree_installed_n = Some(n);
+            Some(CommTree::build(&vec![1.0; n], 3))
         }
     }
 
@@ -217,7 +225,7 @@ impl Policy for Star {
             let mut d = PolicyDecision::simple(mode);
             d.lr_rescaled = true;
             if !self.ablation.no_tree {
-                d.tree = Some(CommTree::build(&vec![1.0; obs.n], 3));
+                d.tree = self.tree_update(obs.n);
             }
             return d;
         }
@@ -297,17 +305,23 @@ impl Policy for Star {
                 self_caps = vec![1.0; obs.n];
                 let fixed = obs.spec.gpu_ms / 1000.0;
                 for g in &groups {
-                    let times: Vec<f64> = g.iter().map(|&w| predicted[w]).collect();
-                    let deadline = times.iter().cloned().fold(0.0, f64::max);
-                    let fixed_v = vec![fixed; g.len()];
-                    let caps = crate::prevent::equalize_group(&times, &fixed_v);
+                    self.eq_times.clear();
+                    self.eq_times.extend(g.iter().map(|&w| predicted[w]));
+                    let deadline = self.eq_times.iter().cloned().fold(0.0, f64::max);
+                    self.eq_fixed.clear();
+                    self.eq_fixed.resize(g.len(), fixed);
+                    crate::prevent::equalize_group_into(
+                        &self.eq_times,
+                        &self.eq_fixed,
+                        &mut self.eq_caps,
+                    );
                     for (k, &w) in g.iter().enumerate() {
                         // conservative: predictions are noisy, so reclaim
                         // only part of the headroom, and only when the gap
                         // to the group deadline is material — an over-
                         // tight cap would itself manufacture a straggler
-                        if deadline > 1.3 * times[k] {
-                            self_caps[w] = 1.0 - 0.4 * (1.0 - caps[k]);
+                        if deadline > 1.3 * self.eq_times[k] {
+                            self_caps[w] = 1.0 - 0.4 * (1.0 - self.eq_caps[k]);
                         }
                     }
                 }
@@ -333,7 +347,7 @@ impl Policy for Star {
         d.deprive = deprive;
         d.self_caps = self_caps;
         if !self.ablation.no_tree {
-            d.tree = Some(CommTree::build(&vec![1.0; obs.n], 3));
+            d.tree = self.tree_update(obs.n);
         }
         d
     }

@@ -294,11 +294,11 @@ mod tests {
         let p = place_job(&mut c, &job, false).unwrap();
         assert_eq!(p.worker_tasks.len(), 8);
         let servers: std::collections::BTreeSet<usize> =
-            p.worker_tasks.iter().map(|&t| c.tasks[t].server).collect();
+            p.worker_tasks.iter().map(|&t| c.task(t).server).collect();
         assert_eq!(servers.len(), 1, "8 workers fit one empty 8-GPU server");
         // PSs on CPU servers
         for &t in &p.ps_tasks {
-            assert!(c.cpu_server_ids().contains(&c.tasks[t].server));
+            assert!(c.cpu_server_ids().contains(&c.task(t).server));
         }
     }
 
@@ -332,7 +332,7 @@ mod tests {
         };
         let p = place_job(&mut c, &job, false).unwrap();
         let servers: std::collections::BTreeSet<usize> =
-            p.worker_tasks.iter().map(|&t| c.tasks[t].server).collect();
+            p.worker_tasks.iter().map(|&t| c.task(t).server).collect();
         assert!(servers.len() >= 2, "must spill across servers");
     }
 

@@ -2,7 +2,7 @@
 //! via the in-repo property runner (`testutil::forall` — the offline
 //! stand-in for proptest, with seeded replay).
 
-use star::cluster::{water_fill, Cluster, ClusterConfig, Res, Role, Task};
+use star::cluster::{water_fill, water_fill_into, Cluster, ClusterConfig, Res, Role, Task};
 use star::decide::{choose_ps_heuristic, expected_reports, time_to_progress_ps};
 use star::predict::{deviation_ratios, straggler_flags};
 use star::prevent::{equalize_group, sensitivity_deprivation, CommTree, Victim};
@@ -109,7 +109,8 @@ fn prop_water_fill_conserves_and_caps() {
             let a = water_fill(demands, *cap);
             let sum: f64 = a.iter().sum();
             let dem: f64 = demands.iter().sum();
-            if sum > cap + 1e-9 && sum > dem + 1e-9 {
+            // contended regime: the allocation must not exceed capacity
+            if dem > cap + 1e-9 && sum > cap + 1e-9 {
                 return Err(format!("over-allocated: {sum} vs cap {cap}"));
             }
             for (x, d) in a.iter().zip(demands) {
@@ -131,6 +132,140 @@ fn prop_water_fill_conserves_and_caps() {
                 let hi = unmet.iter().cloned().fold(0.0, f64::max);
                 if hi - lo > 1e-6 {
                     return Err(format!("unmet shares unequal: {lo} vs {hi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_water_fill_into_conserves_caps_and_matches() {
+    forall(
+        "water-fill-into",
+        300,
+        |rng| {
+            let n = rng.usize(0, 16);
+            let demands: Vec<f64> = (0..n).map(|_| rng.range(0.0, 10.0)).collect();
+            let cap = rng.range(0.0, 40.0);
+            (demands, cap)
+        },
+        |(demands, cap)| {
+            let mut order = Vec::new();
+            let mut a = Vec::new();
+            water_fill_into(demands, *cap, &mut order, &mut a);
+            // bit-identical to the allocating variant (same sort, same ties)
+            if a != water_fill(demands, *cap) {
+                return Err("water_fill_into diverges from water_fill".into());
+            }
+            // reusing dirty scratch buffers must not change the result
+            let first = a.clone();
+            water_fill_into(demands, *cap, &mut order, &mut a);
+            if a != first {
+                return Err("scratch reuse changed the allocation".into());
+            }
+            // conservation: contended allocations fill capacity exactly,
+            // uncontended ones grant every demand
+            let sum: f64 = a.iter().sum();
+            let dem: f64 = demands.iter().sum();
+            if dem > cap + 1e-9 {
+                if (sum - cap).abs() > 1e-6 {
+                    return Err(format!("contended sum {sum} != capacity {cap}"));
+                }
+            } else if (sum - dem).abs() > 1e-6 {
+                return Err(format!("uncontended sum {sum} != demand {dem}"));
+            }
+            // demand cap: no task gets more than it asked for
+            for (x, d) in a.iter().zip(demands) {
+                if *x > d + 1e-9 || *x < -1e-12 {
+                    return Err(format!("share {x} vs demand {d}"));
+                }
+            }
+            // equal-split tail: all unmet tasks receive the same share
+            let unmet: Vec<f64> = a
+                .iter()
+                .zip(demands)
+                .filter(|(x, d)| **x < *d - 1e-9)
+                .map(|(x, _)| *x)
+                .collect();
+            if unmet.len() >= 2 {
+                let lo = unmet.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = unmet.iter().cloned().fold(0.0, f64::max);
+                if hi - lo > 1e-6 {
+                    return Err(format!("unmet shares unequal: {lo} vs {hi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cached_shares_match_direct_under_mutation() {
+    forall(
+        "share-cache-mutation",
+        30,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut cached = Cluster::new(ClusterConfig { seed, ..Default::default() });
+            let mut direct = cached.clone();
+            direct.set_share_cache_enabled(false);
+            let mut rng = Rng::seeded(seed);
+            let mut ids: Vec<usize> = Vec::new();
+            let mut t = 0.0;
+            for step in 0..50 {
+                // query times are non-decreasing, like the event engine's
+                t += rng.range(0.1, 30.0);
+                match rng.usize(0, 3) {
+                    0 => {
+                        let task = Task {
+                            job: step,
+                            role: Role::Ps { idx: 0 },
+                            server: rng.usize(0, 7),
+                            cpu_demand: rng.range(0.5, 20.0),
+                            bw_demand: rng.range(0.1, 8.0),
+                            cpu_cap: 1.0,
+                            bw_cap: 1.0,
+                            cpu_throttle: rng.range(0.2, 1.0),
+                            bw_throttle: 1.0,
+                            active: true,
+                        };
+                        ids.push(cached.add_task(task.clone()));
+                        direct.add_task(task);
+                    }
+                    1 if !ids.is_empty() => {
+                        let id = *rng.choose(&ids);
+                        let (c1, c2) = (rng.range(0.05, 1.0), rng.range(0.05, 1.0));
+                        cached.set_caps(id, c1, c2);
+                        direct.set_caps(id, c1, c2);
+                    }
+                    2 if !ids.is_empty() => {
+                        let id = *rng.choose(&ids);
+                        let (d1, d2) = (rng.range(0.5, 20.0), rng.range(0.1, 8.0));
+                        cached.set_demands(id, d1, d2);
+                        direct.set_demands(id, d1, d2);
+                    }
+                    3 if ids.len() > 1 => {
+                        let id = ids.remove(rng.usize(0, ids.len() - 1));
+                        cached.remove_task(id);
+                        direct.remove_task(id);
+                    }
+                    _ => {}
+                }
+                for server in 0..8 {
+                    for res in [Res::Cpu, Res::Bw] {
+                        let x = cached.shares(server, res, t);
+                        if x != direct.shares(server, res, t) {
+                            return Err(format!(
+                                "cached != direct at t={t} server={server} {res:?}"
+                            ));
+                        }
+                        // a second query at the same instant is a pure
+                        // cache hit and must repeat exactly
+                        if cached.shares(server, res, t) != x {
+                            return Err(format!("cache hit differs at t={t}"));
+                        }
+                    }
                 }
             }
             Ok(())
@@ -168,8 +303,8 @@ fn prop_cluster_shares_never_exceed_capacity() {
             for server in 0..8 {
                 for res in [Res::Cpu, Res::Bw] {
                     let cap = match res {
-                        Res::Cpu => c.servers[server].cpus,
-                        Res::Bw => c.servers[server].bw_gbps,
+                        Res::Cpu => c.server(server).cpus,
+                        Res::Bw => c.server(server).bw_gbps,
                     };
                     let total: f64 = c.shares(server, res, t).iter().map(|&(_, s)| s).sum();
                     if total > cap + 1e-6 {

@@ -1,0 +1,102 @@
+//! The share-cache contract: the epoch cache is a pure performance
+//! optimization — replaying a full trace with the cache enabled must be
+//! **bit-identical** to replaying it with every share query recomputed
+//! from scratch. This holds because (a) all share-relevant mutation goes
+//! through generation-bumping setters, (b) the contention streams are
+//! extended lazily but deterministically per (server/task) RNG, and
+//! (c) pruning only drops entries that cannot influence the driver's
+//! non-decreasing query times.
+
+use star::baselines::make_policy;
+use star::driver::{Driver, DriverConfig, JobStats, ServerRecord};
+use star::trace::{generate, Arch, TraceConfig};
+
+fn run(arch: Arch, system: &str, cache: bool) -> (Vec<JobStats>, Vec<ServerRecord>) {
+    let trace = generate(&TraceConfig { jobs: 8, span_s: 2000.0, ..Default::default() });
+    let cfg = DriverConfig {
+        arch,
+        record_series: true,
+        server_sample_period_s: 200.0,
+        ..Default::default()
+    };
+    let name = system.to_string();
+    let mut driver = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name)));
+    driver.cluster.set_share_cache_enabled(cache);
+    driver.run()
+}
+
+/// Every field compared with exact equality — "close" is not good enough:
+/// the cache must not perturb a single RNG draw or float operation.
+fn assert_bit_identical(a: &[JobStats], b: &[JobStats]) {
+    assert_eq!(a.len(), b.len(), "job count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.job, y.job);
+        assert_eq!(x.system, y.system);
+        assert_eq!(x.start_s, y.start_s, "job {}", x.job);
+        assert_eq!(x.end_s, y.end_s, "job {}", x.job);
+        assert_eq!(x.tta_s, y.tta_s, "job {} TTA", x.job);
+        assert_eq!(x.jct_s, y.jct_s, "job {} JCT", x.job);
+        assert_eq!(x.converged_value, y.converged_value, "job {}", x.job);
+        assert_eq!(x.updates, y.updates, "job {}", x.job);
+        assert_eq!(x.iters_total, y.iters_total, "job {}", x.job);
+        assert_eq!(x.straggler_iters, y.straggler_iters, "job {}", x.job);
+        assert_eq!(x.straggler_episodes, y.straggler_episodes, "job {}", x.job);
+        assert_eq!(x.mode_switches, y.mode_switches, "job {}", x.job);
+        assert_eq!(x.decision_count, y.decision_count, "job {}", x.job);
+        assert_eq!(x.prediction.tp, y.prediction.tp, "job {}", x.job);
+        assert_eq!(x.prediction.fp, y.prediction.fp, "job {}", x.job);
+        assert_eq!(x.prediction.tn, y.prediction.tn, "job {}", x.job);
+        assert_eq!(x.prediction.fn_, y.prediction.fn_, "job {}", x.job);
+        assert_eq!(x.decision_pause_total_s, y.decision_pause_total_s, "job {}", x.job);
+        assert_eq!(x.value_series, y.value_series, "job {}", x.job);
+        // per-iteration breakdowns: the rawest observable of the share path
+        assert_eq!(x.series.len(), y.series.len());
+        for (sw, dw) in x.series.iter().zip(&y.series) {
+            assert_eq!(sw.len(), dw.len(), "job {} series length", x.job);
+            for (si, di) in sw.iter().zip(dw) {
+                assert_eq!(si.pre_s, di.pre_s, "job {}", x.job);
+                assert_eq!(si.gpu_s, di.gpu_s, "job {}", x.job);
+                assert_eq!(si.comm_s, di.comm_s, "job {}", x.job);
+                assert_eq!(si.total_s, di.total_s, "job {}", x.job);
+                assert_eq!(si.cpu_share, di.cpu_share, "job {}", x.job);
+                assert_eq!(si.bw_share, di.bw_share, "job {}", x.job);
+            }
+        }
+    }
+}
+
+fn assert_records_identical(a: &[ServerRecord], b: &[ServerRecord]) {
+    assert_eq!(a.len(), b.len(), "record count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.time, y.time);
+        assert_eq!(x.server, y.server);
+        assert_eq!(x.ps_hosted, y.ps_hosted);
+        assert_eq!(x.cpu_util, y.cpu_util, "server {} t {}", x.server, x.time);
+        assert_eq!(x.bw_util, y.bw_util, "server {} t {}", x.server, x.time);
+    }
+}
+
+#[test]
+fn cached_replay_is_bit_identical_ps() {
+    let (cached, cached_recs) = run(Arch::Ps, "STAR-H", true);
+    let (direct, direct_recs) = run(Arch::Ps, "STAR-H", false);
+    assert_bit_identical(&cached, &direct);
+    assert_records_identical(&cached_recs, &direct_recs);
+}
+
+#[test]
+fn cached_replay_is_bit_identical_ar() {
+    let (cached, cached_recs) = run(Arch::AllReduce, "STAR-H", true);
+    let (direct, direct_recs) = run(Arch::AllReduce, "STAR-H", false);
+    assert_bit_identical(&cached, &direct);
+    assert_records_identical(&cached_recs, &direct_recs);
+}
+
+#[test]
+fn cached_replay_is_bit_identical_for_deprivation_free_baseline() {
+    // SSGD exercises the plain SSGD round-start burst (many same-instant
+    // queries, the cache's sweet spot) without STAR's cap churn
+    let (cached, _) = run(Arch::Ps, "SSGD", true);
+    let (direct, _) = run(Arch::Ps, "SSGD", false);
+    assert_bit_identical(&cached, &direct);
+}
