@@ -60,7 +60,7 @@ fn main() -> star::Result<()> {
         let cfg = DriverConfig { record_series: false, ..Default::default() };
         let name = sys.to_string();
         let (stats, _) =
-            Driver::new(cfg, trace, Box::new(move |_| make_policy(&name))).run();
+            Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system"))).run();
         let tta: Vec<f64> = stats.iter().filter_map(|s| s.tta_s).collect();
         println!(
             "{sys:<8} mean TTA {:>6.0}s  mean JCT {:>6.0}s  ({} jobs)",

@@ -46,7 +46,7 @@ fn run() -> star::Result<()> {
         let cfg = DriverConfig { arch, seed, record_series: false, ..Default::default() };
         let name = sys.to_string();
         let (stats_v, _) =
-            Driver::new(cfg, trace.clone(), Box::new(move |_| make_policy(&name))).run();
+            Driver::new(cfg, trace.clone(), Box::new(move |_| make_policy(&name).expect("known system"))).run();
         let tta: Vec<f64> = stats_v.iter().filter_map(|s| s.tta_s).collect();
         let jct: Vec<f64> = stats_v.iter().map(|s| s.jct_s).collect();
         let acc: Vec<f64> =

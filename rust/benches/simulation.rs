@@ -37,7 +37,7 @@ fn main() {
             let cfg = DriverConfig { record_series: false, ..Default::default() };
             let n2 = name.clone();
             let (stats, _) =
-                Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2))).run();
+                Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2).expect("known system"))).run();
             stats.len()
         });
     }
@@ -51,7 +51,7 @@ fn main() {
             ..Default::default()
         };
         let n2 = name.clone();
-        let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2))).run();
+        let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&n2).expect("known system"))).run();
         stats.len()
     });
 

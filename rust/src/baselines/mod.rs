@@ -105,11 +105,16 @@ impl Policy for Lgc {
     }
 
     fn decide(&mut self, obs: &RoundObs) -> PolicyDecision {
-        let k = self.k.min(obs.n);
+        // K counts gradient sources: only live workers can report, and
+        // the driver's AR ring is chained over the live set — so the
+        // removal count is live-relative too (dead workers are already
+        // outside the ring; counting them here would shrink it twice)
+        let live = obs.live.iter().filter(|&&a| a).count().max(1);
+        let k = self.k.min(live);
         let mut d = match obs.arch {
             Arch::Ps => PolicyDecision::simple(DriverMode::FirstK(k)),
             Arch::AllReduce => PolicyDecision::simple(DriverMode::Sync(SyncMode::ArRing {
-                removed: obs.n - k.min(obs.n - 1),
+                removed: live - k.min(live.saturating_sub(1)),
                 tw_ms: 0.0,
             })),
         };
@@ -200,12 +205,17 @@ impl Policy for LbBsp {
         }
         let last: Vec<f64> =
             obs.last_times.iter().map(|&t| if t.is_finite() { t } else { f64::NAN }).collect();
-        if last.iter().all(|t| t.is_finite()) {
-            let fast = (0..obs.n)
-                .min_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+        // batch resizing only ever shifts load between *live* workers —
+        // a dead worker's stale time must not be mistaken for "fast"
+        let live_ids: Vec<usize> = (0..obs.n).filter(|&w| obs.live[w]).collect();
+        if live_ids.len() >= 2 && live_ids.iter().all(|&w| last[w].is_finite()) {
+            let fast = *live_ids
+                .iter()
+                .min_by(|&&a, &&b| last[a].partial_cmp(&last[b]).unwrap())
                 .unwrap();
-            let slow = (0..obs.n)
-                .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            let slow = *live_ids
+                .iter()
+                .max_by(|&&a, &&b| last[a].partial_cmp(&last[b]).unwrap())
                 .unwrap();
             if fast == self.fast && slow == self.slow && last[slow] > 1.2 * last[fast] {
                 self.streak += 1;
@@ -311,9 +321,12 @@ pub fn baseline_names(arch: Arch) -> Vec<&'static str> {
 }
 
 /// Instantiate a policy (baseline or STAR variant) by its §V name.
-pub fn make_policy(name: &str) -> Box<dyn Policy> {
+/// Unknown names are an *error*, not an abort: experiment subcommands
+/// surface it through `exp::dispatch` so a typoed `--system` prints the
+/// known set instead of panicking mid-sweep.
+pub fn make_policy(name: &str) -> crate::Result<Box<dyn Policy>> {
     use crate::decide::DeciderKind;
-    match name {
+    Ok(match name {
         "SSGD" => Box::new(Ssgd),
         "ASGD" => Box::new(Asgd),
         "Zeno++" => Box::new(ZenoPp::default()),
@@ -329,22 +342,28 @@ pub fn make_policy(name: &str) -> Box<dyn Policy> {
             // ablations: STAR/SP etc (heuristic kind, per §V-C)
             for (n, abl) in crate::star::ablations() {
                 if n == other {
-                    return Box::new(crate::star::Star::with_ablation(
+                    return Ok(Box::new(crate::star::Star::with_ablation(
                         DeciderKind::Heuristic,
                         abl,
                         n,
-                    ));
+                    )));
                 }
             }
-            panic!("unknown system {other:?}")
+            anyhow::bail!(
+                "unknown system {other:?} (known: SSGD, ASGD, Zeno++, LGC, Sync-Switch, \
+                 LB-BSP, Kardam, DSSP, STAR-H, STAR-ML, STAR-, and the STAR/* ablations)"
+            )
         }
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::ZOO;
+
+    /// all-live mask large enough for every test's worker count
+    const LIVE: [bool; 16] = [true; 16];
 
     fn obs<'a>(last: &'a [f64], pred: &'a [f64], flags: &'a [bool], arch: Arch) -> RoundObs<'a> {
         RoundObs {
@@ -359,6 +378,7 @@ mod tests {
             last_times: last,
             value: 40.0,
             predicted_stragglers: flags,
+            live: &LIVE[..last.len()],
         }
     }
 
@@ -448,20 +468,74 @@ mod tests {
     fn factory_builds_all_names() {
         for arch in [Arch::Ps, Arch::AllReduce] {
             for n in baseline_names(arch) {
-                let p = make_policy(n);
+                let p = make_policy(n).unwrap();
                 assert_eq!(p.name(), n);
             }
         }
         for n in ["STAR-H", "STAR-ML", "STAR-", "STAR/SP", "STAR/Tree", "Kardam", "DSSP"] {
-            let p = make_policy(n);
+            let p = make_policy(n).unwrap();
             assert_eq!(p.name(), n);
         }
     }
 
     #[test]
-    #[should_panic(expected = "unknown system")]
-    fn factory_rejects_unknown() {
-        let _ = make_policy("NotASystem");
+    fn factory_errors_on_unknown_instead_of_aborting() {
+        let err = make_policy("NotASystem").err().expect("unknown name must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown system"), "{msg}");
+        assert!(msg.contains("SSGD"), "error should list known systems: {msg}");
+    }
+
+    #[test]
+    fn lgc_clamps_k_to_live_workers() {
+        let p = vec![0.3; 8];
+        let f = vec![false; 8];
+        let mut o = obs(&p, &p, &f, Arch::Ps);
+        let mut live = vec![true; 8];
+        live[0] = false;
+        live[1] = false;
+        live[2] = false;
+        live[3] = false; // 4 live < K=5
+        o.live = &live;
+        let d = Lgc::default().decide(&o);
+        assert_eq!(d.mode, DriverMode::FirstK(4), "K must shrink to the live count");
+        // AR: the driver's ring is live-relative, so the removal count is
+        // too — with 4 live and K clamped to 4 the ring keeps 3 (the same
+        // "always remove one" shape as the fault-free k >= n case), NOT
+        // n - k = 4 removed of 4 live
+        let mut o2 = obs(&p, &p, &f, Arch::AllReduce);
+        o2.live = &live;
+        let d2 = Lgc::default().decide(&o2);
+        assert!(
+            matches!(d2.mode, DriverMode::Sync(SyncMode::ArRing { removed: 1, .. })),
+            "{:?}",
+            d2.mode
+        );
+    }
+
+    #[test]
+    fn lb_bsp_ignores_dead_workers_when_picking_fast_and_slow() {
+        let mut lb = LbBsp::default();
+        // worker 3 is slow but DEAD; among the living, 2 is slowest
+        let times = vec![0.3, 0.3, 0.6, 0.9];
+        let f = vec![false; 4];
+        let mut live = vec![true; 4];
+        live[3] = false;
+        let mut installed: Vec<f64> = Vec::new();
+        for i in 0..=9 {
+            let mut o = obs(&times, &times, &f, Arch::Ps);
+            o.live = &live;
+            o.now = 50.0 + i as f64;
+            let d = lb.decide(&o);
+            if !d.batch_frac.is_empty() {
+                installed = d.batch_frac.clone();
+            }
+        }
+        assert!(installed[2] < 1.0, "live slow worker sheds batch: {installed:?}");
+        assert!(
+            (installed[3] - 1.0).abs() < 1e-12,
+            "dead worker's batch untouched: {installed:?}"
+        );
     }
 
     #[test]

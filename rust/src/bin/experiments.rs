@@ -3,8 +3,13 @@
 //!
 //! ```text
 //! experiments <id> [--jobs N] [--seed S] [--out results] [--quick]
-//!   id ∈ { fig1..fig14, tab1, fig16..fig29, all }
+//!             [--fault-rate R] [--fault-seed S]
+//!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, all }
 //! ```
+//!
+//! `--fault-rate` injects a seeded failure plan (worker/PS crashes,
+//! server outages, degradation windows — DESIGN.md §7) into every run;
+//! the `resilience` experiment sweeps its own rates and ignores it.
 
 use star::cli::Args;
 use star::exp::{dispatch, ExpCtx};
@@ -13,18 +18,21 @@ fn main() {
     let args = Args::parse_env();
     let Some(id) = args.subcommand() else {
         eprintln!(
-            "usage: experiments <figN|tab1|all> [--jobs N] [--seed S] [--out DIR] [--quick]\n\
+            "usage: experiments <figN|tab1|resilience|all> [--jobs N] [--seed S] [--out DIR] \
+             [--quick] [--fault-rate R] [--fault-seed S]\n\
              experiment index: DESIGN.md §4"
         );
         std::process::exit(2);
     };
     let run = || -> star::Result<()> {
-        args.check_known(&["jobs", "seed", "out", "quick"])?;
+        args.check_known(&["jobs", "seed", "out", "quick", "fault-rate", "fault-seed"])?;
         let ctx = ExpCtx {
             jobs: args.usize_or("jobs", 120)?,
             seed: args.u64_or("seed", 0)?,
             out_dir: args.str_or("out", "results").into(),
             quick: args.flag("quick"),
+            fault_rate: args.f64_or("fault-rate", 0.0)?,
+            fault_seed: args.u64_or("fault-seed", 0)?,
         };
         let t0 = std::time::Instant::now();
         dispatch(id, &ctx)?;

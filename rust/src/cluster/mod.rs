@@ -166,6 +166,13 @@ pub struct ClusterConfig {
     pub seed: u64,
 }
 
+impl ClusterConfig {
+    /// Total server count (GPU + CPU) this config builds.
+    pub fn total_servers(&self) -> usize {
+        self.gpu_servers + self.cpu_servers
+    }
+}
+
 impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
@@ -213,6 +220,14 @@ pub struct Cluster {
     cfg: ClusterConfig,
     servers: Vec<Server>,
     tasks: Vec<Task>,
+    /// suspension flags parallel to `tasks` (fault injection): a
+    /// suspended task keeps its registration (and GPU slot — it restarts
+    /// in place) but leaves `by_server`, so it draws no shares
+    suspended: Vec<bool>,
+    /// per-server capacity-degradation windows from the fault plan
+    /// (NIC flaps / co-located bursts), registered up-front and queried
+    /// statelessly by `available`
+    degradations: Vec<Vec<Spike>>,
     /// per-server list of active task ids (hot-path index; share queries
     /// happen on every simulated iteration)
     by_server: Vec<Vec<TaskId>>,
@@ -334,10 +349,13 @@ impl Cluster {
         let noise_seed = rng.next_u64();
         let by_server = vec![Vec::new(); servers.len()];
         let cache = vec![ShareEpoch::default(); servers.len() * 2];
+        let degradations = vec![Vec::new(); servers.len()];
         Cluster {
             cfg,
             servers,
             tasks: Vec::new(),
+            suspended: Vec::new(),
+            degradations,
             by_server,
             task_events: Vec::new(),
             noise_seed,
@@ -371,6 +389,7 @@ impl Cluster {
         }
         let server = task.server;
         self.tasks.push(task);
+        self.suspended.push(false);
         let id = self.tasks.len() - 1;
         self.by_server[server].push(id);
         self.task_events.push(SpikeStream::new(Rng::new(
@@ -381,10 +400,12 @@ impl Cluster {
         id
     }
 
-    /// Deactivate a task (job finished) and release its GPU slot.
+    /// Deactivate a task (job finished) and release its GPU slot. Works
+    /// on suspended tasks too (a job can finish while a member is down).
     pub fn remove_task(&mut self, id: TaskId) {
         if self.tasks[id].active {
             self.tasks[id].active = false;
+            self.suspended[id] = false;
             let server = self.tasks[id].server;
             self.by_server[server].retain(|&x| x != id);
             if matches!(self.tasks[id].role, Role::Worker { .. }) {
@@ -392,6 +413,76 @@ impl Cluster {
             }
             self.generation += 1;
         }
+    }
+
+    /// Suspend a task (fault injection: crash / server outage). The task
+    /// keeps its registration and GPU slot (it restarts in place) but
+    /// stops drawing shares; the share-epoch cache is invalidated via the
+    /// generation bump (DESIGN.md §2.3).
+    pub fn suspend_task(&mut self, id: TaskId) {
+        if self.tasks[id].active && !self.suspended[id] {
+            self.suspended[id] = true;
+            let server = self.tasks[id].server;
+            self.by_server[server].retain(|&x| x != id);
+            self.generation += 1;
+        }
+    }
+
+    /// Resume a previously suspended task (restart complete).
+    pub fn resume_task(&mut self, id: TaskId) {
+        if self.tasks[id].active && self.suspended[id] {
+            self.suspended[id] = false;
+            self.by_server[self.tasks[id].server].push(id);
+            self.generation += 1;
+        }
+    }
+
+    /// Is this task currently suspended?
+    pub fn is_suspended(&self, id: TaskId) -> bool {
+        self.suspended[id]
+    }
+
+    /// Register a capacity-degradation window [start, end) on `server`
+    /// (fault plan: NIC flap / co-located burst). Windows are expected to
+    /// be registered before the simulation queries their span; the
+    /// generation bump drops any epoch cached in the meantime.
+    pub fn add_degradation(
+        &mut self,
+        server: usize,
+        start: f64,
+        end: f64,
+        cpu_frac: f64,
+        bw_frac: f64,
+    ) {
+        self.degradations[server].push(Spike {
+            start,
+            end,
+            cpu_frac: cpu_frac.clamp(0.0, 0.9),
+            bw_frac: bw_frac.clamp(0.0, 0.9),
+        });
+        self.degradations[server]
+            .sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        self.generation += 1;
+    }
+
+    /// Degraded capacity fraction on `server` at `t` (0 when no window
+    /// from the fault plan overlaps). Windows are start-ordered, so the
+    /// scan stops at the first window opening after `t` — this sits on
+    /// the `available` hot path (every share-epoch fill).
+    pub fn degradation_frac(&self, server: usize, res: Res, t: f64) -> f64 {
+        let mut frac: f64 = 0.0;
+        for w in &self.degradations[server] {
+            if w.start > t {
+                break;
+            }
+            if t < w.end {
+                frac += match res {
+                    Res::Cpu => w.cpu_frac,
+                    Res::Bw => w.bw_frac,
+                };
+            }
+        }
+        frac.min(0.9)
     }
 
     /// Set a task's dynamic caps (§IV-D1 prevention / equalization),
@@ -529,14 +620,17 @@ impl Cluster {
         frac.min(0.9)
     }
 
-    /// Available capacity of `res` on `server` at time `t`.
+    /// Available capacity of `res` on `server` at time `t`: nameplate
+    /// minus smooth background load minus any fault-plan degradation
+    /// window overlapping `t`.
     pub fn available(&self, server: usize, res: Res, t: f64) -> f64 {
         let cap = match res {
             Res::Cpu => self.servers[server].cpus,
             Res::Bw => self.servers[server].bw_gbps,
         };
         let bg = self.background_frac(server, res, t);
-        (cap * (1.0 - bg)).max(0.05 * cap)
+        let deg = self.degradation_frac(server, res, t);
+        (cap * (1.0 - (bg + deg).min(0.95))).max(0.05 * cap)
     }
 
     /// Fill the (server, res) share epoch for time `t` unless it is
@@ -947,6 +1041,102 @@ mod tests {
                 _ => {}
             }
         }
+    }
+
+    #[test]
+    fn suspend_excludes_from_shares_and_resume_restores() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let mut ids = Vec::new();
+        for j in 0..10 {
+            let mut t = worker(j, 0, 12.0, 0.5);
+            t.role = Role::Ps { idx: 0 };
+            ids.push(c.add_task(t));
+        }
+        let t = 10.0;
+        let before = c.share_of(ids[0], Res::Cpu, t);
+        assert!(before > 0.0);
+        let others_before = c.share_of(ids[1], Res::Cpu, t);
+
+        let g = c.generation();
+        c.suspend_task(ids[0]);
+        assert!(c.is_suspended(ids[0]));
+        assert!(c.generation() > g, "suspension must invalidate the share cache");
+        assert_eq!(c.share_of(ids[0], Res::Cpu, t), 0.0, "suspended task draws nothing");
+        // survivors split the freed capacity
+        assert!(c.share_of(ids[1], Res::Cpu, t) > others_before);
+        // double-suspend is a no-op (no generation churn)
+        let g2 = c.generation();
+        c.suspend_task(ids[0]);
+        assert_eq!(g2, c.generation());
+
+        c.resume_task(ids[0]);
+        assert!(!c.is_suspended(ids[0]));
+        assert!(c.share_of(ids[0], Res::Cpu, t) > 0.0);
+    }
+
+    #[test]
+    fn suspended_worker_keeps_gpu_slot_until_removed() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let id = c.add_task(worker(0, 0, 2.0, 1.0));
+        assert_eq!(c.free_gpus(0), 7);
+        c.suspend_task(id);
+        assert_eq!(c.free_gpus(0), 7, "restart-in-place holds the slot");
+        c.remove_task(id);
+        assert_eq!(c.free_gpus(0), 8);
+        assert!(!c.is_suspended(id), "removal clears suspension");
+    }
+
+    #[test]
+    fn suspended_ps_not_counted() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let mut ps = worker(0, 3, 4.0, 2.0);
+        ps.role = Role::Ps { idx: 0 };
+        let id = c.add_task(ps);
+        assert_eq!(c.ps_count(3), 1);
+        c.suspend_task(id);
+        assert_eq!(c.ps_count(3), 0);
+        c.resume_task(id);
+        assert_eq!(c.ps_count(3), 1);
+    }
+
+    #[test]
+    fn degradation_window_cuts_available_capacity() {
+        let base = Cluster::new(ClusterConfig::default());
+        let mut degraded = Cluster::new(ClusterConfig::default());
+        degraded.add_degradation(0, 100.0, 200.0, 0.5, 0.5);
+        for &t in &[50.0, 150.0, 250.0] {
+            for res in [Res::Cpu, Res::Bw] {
+                let a = base.available(0, res, t);
+                let b = degraded.available(0, res, t);
+                if (100.0..200.0).contains(&t) {
+                    assert!(b < a, "window must cut capacity at t={t}");
+                } else {
+                    assert_eq!(a, b, "no effect outside the window at t={t}");
+                }
+            }
+        }
+        // other servers untouched
+        assert_eq!(base.available(1, Res::Cpu, 150.0), degraded.available(1, Res::Cpu, 150.0));
+    }
+
+    #[test]
+    fn degradation_shrinks_shares_under_contention() {
+        let mk = || {
+            let mut c = Cluster::new(ClusterConfig::default());
+            let mut ids = Vec::new();
+            for j in 0..10 {
+                let mut t = worker(j, 0, 12.0, 0.5);
+                t.role = Role::Ps { idx: 0 };
+                ids.push(c.add_task(t));
+            }
+            (c, ids)
+        };
+        let (mut base, ids) = mk();
+        let (mut deg, _) = mk();
+        deg.add_degradation(0, 0.0, 1000.0, 0.6, 0.0);
+        let a = base.share_of(ids[0], Res::Cpu, 10.0);
+        let b = deg.share_of(ids[0], Res::Cpu, 10.0);
+        assert!(b < a, "degraded CPU must shrink the contended share: {b} vs {a}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use std::collections::BTreeMap;
 
 use crate::cluster::{Cluster, ClusterConfig, Res, TaskId};
+use crate::faults::{Fault, FaultPlan};
 use crate::models::ModelSpec;
 use crate::predict::{Confusion, History, IterTimeModel, ResourcePredictor, STRAGGLER_DEV};
 use crate::prevent::CommTree;
@@ -64,6 +65,10 @@ pub struct RoundObs<'a> {
     pub value: f64,
     /// per-worker straggler flags STAR predicted (from predicted_times)
     pub predicted_stragglers: &'a [bool],
+    /// per-worker liveness (fault injection): policies must not build
+    /// schedules around dead workers — the driver already excludes them
+    /// from barriers, groups and rings
+    pub live: &'a [bool],
 }
 
 /// A policy's decision for the upcoming window.
@@ -163,6 +168,11 @@ pub struct JobStats {
     /// (sim time since job start, value) samples taken at decision points
     pub value_series: Vec<(f64, f64)>,
     pub mode_switches: u64,
+    /// total seconds the job's workers spent dead (summed per worker)
+    /// plus PS-restart stalls (fault injection)
+    pub downtime_s: f64,
+    /// checkpoint rollbacks suffered (PS crashes / server outages)
+    pub rollbacks: u64,
 }
 
 /// Cap on recorded iteration rows per worker (sampled with stride).
@@ -186,6 +196,9 @@ pub struct DriverConfig {
     /// static throttles applied at placement: (job, worker_rank,
     /// cpu_frac, bw_frac) — the paper's cpulimit/tc experiments
     pub throttles: Vec<(usize, usize, f64, f64)>,
+    /// injected failure schedule (empty = fault-free, bit-identical to
+    /// the pre-faults simulator)
+    pub faults: FaultPlan,
 }
 
 impl Default for DriverConfig {
@@ -201,6 +214,7 @@ impl Default for DriverConfig {
             server_sample_period_s: 0.0,
             tree_branching: 3,
             throttles: Vec::new(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -257,6 +271,27 @@ struct JobRun {
     /// no iteration may start before this time (decision pause, §V)
     pause_until: f64,
 
+    // fault state
+    /// per-worker liveness; dead workers are excluded from barriers,
+    /// groups and rings until their restart event fires
+    alive: Vec<bool>,
+    /// crash time per down worker (NaN while alive) — downtime accounting
+    down_since: Vec<f64>,
+    /// per-worker restart deadline: a later fault (e.g. a server outage
+    /// hitting an already-crashed worker) pushes it out, and earlier
+    /// pending restart events become stale
+    restart_at: Vec<f64>,
+    /// per-PS restart deadline (same extension rule)
+    ps_restart_at: Vec<f64>,
+    /// PSs of this job currently down; updates stall while > 0
+    ps_down: usize,
+    /// when the current PS stall window opened (NaN while all PSs are
+    /// up) — overlapping PS crashes count the union window once
+    ps_down_since: f64,
+    /// rollback target for PS crashes (refreshed every
+    /// `faults.checkpoint_every_updates` updates)
+    checkpoint: crate::progress::Snapshot,
+
     // per-iteration-index straggler accounting
     round_times: BTreeMap<u64, Vec<(usize, f64, bool)>>,
     straggling: Vec<bool>,
@@ -274,6 +309,12 @@ enum Event {
     WorkerDone { job: usize, worker: usize, iter: u64 },
     ArFlush { job: usize },
     ServerSample,
+    /// an entry of the fault plan comes due (index into `cfg.faults`)
+    Fault(usize),
+    /// a crashed worker finishes restarting
+    WorkerRestart { job: usize, worker: usize },
+    /// a crashed PS finishes restarting
+    PsRestart { job: usize, ps_idx: usize },
 }
 
 /// The trace driver: runs all jobs to completion under their policies.
@@ -298,13 +339,32 @@ impl Driver {
     ) -> Self {
         let mut cluster_cfg = cfg.cluster.clone();
         cluster_cfg.seed ^= cfg.seed;
-        let cluster = Cluster::new(cluster_cfg);
+        let mut cluster = Cluster::new(cluster_cfg);
         let mut engine = Engine::new();
         for j in &specs {
             engine.schedule_at(j.arrival_s, Event::Arrive(j.id));
         }
         if cfg.server_sample_period_s > 0.0 {
             engine.schedule_at(cfg.server_sample_period_s, Event::ServerSample);
+        }
+        // inject the fault plan: crash/outage entries become events;
+        // degradation windows are stateless capacity cuts, registered with
+        // the cluster up-front so share epochs see them at any time
+        for (i, pf) in cfg.faults.faults.iter().enumerate() {
+            match pf.fault {
+                Fault::Degradation { server, dur_s, cpu_frac, bw_frac } => {
+                    if server < cluster.server_count() {
+                        cluster.add_degradation(
+                            server,
+                            pf.at,
+                            pf.at + dur_s,
+                            cpu_frac,
+                            bw_frac,
+                        );
+                    }
+                }
+                _ => engine.schedule_at(pf.at, Event::Fault(i)),
+            }
         }
         let n_jobs = specs.len();
         Driver {
@@ -322,7 +382,15 @@ impl Driver {
     }
 
     /// Run the full trace; returns (per-job stats, server records).
-    pub fn run(mut self) -> (Vec<JobStats>, Vec<ServerRecord>) {
+    pub fn run(self) -> (Vec<JobStats>, Vec<ServerRecord>) {
+        let (stats, records, _) = self.run_counted();
+        (stats, records)
+    }
+
+    /// Like [`Driver::run`], additionally returning the number of events
+    /// the engine processed — the determinism suite compares this across
+    /// replays to pin the FIFO tie-break and event-machine structure.
+    pub fn run_counted(mut self) -> (Vec<JobStats>, Vec<ServerRecord>, u64) {
         while let Some((t, ev)) = self.engine.next() {
             match ev {
                 Event::Arrive(job) => self.try_place(job, t),
@@ -335,9 +403,13 @@ impl Driver {
                             .schedule_in(self.cfg.server_sample_period_s, Event::ServerSample);
                     }
                 }
+                Event::Fault(idx) => self.handle_fault(idx, t),
+                Event::WorkerRestart { job, worker } => self.worker_restart(job, worker, t),
+                Event::PsRestart { job, ps_idx } => self.ps_restart(job, ps_idx, t),
             }
         }
-        (self.finished, self.server_records)
+        let events = self.engine.events_processed();
+        (self.finished, self.server_records, events)
     }
 
     fn sample_servers(&mut self, t: f64) {
@@ -366,8 +438,17 @@ impl Driver {
                 } else {
                     CommTree::flat(n)
                 };
+                let progress = ProgressModel::new(model_spec, n);
+                let checkpoint = progress.snapshot();
                 let run = JobRun {
-                    progress: ProgressModel::new(model_spec, n),
+                    progress,
+                    checkpoint,
+                    alive: vec![true; n],
+                    down_since: vec![f64::NAN; n],
+                    restart_at: vec![f64::NAN; n],
+                    ps_restart_at: vec![f64::NAN; placement.ps_tasks.len()],
+                    ps_down: 0,
+                    ps_down_since: f64::NAN,
                     placement,
                     mode: DriverMode::Sync(SyncMode::Ssgd),
                     lr_rescaled: true,
@@ -417,6 +498,8 @@ impl Driver {
                         series: vec![Vec::new(); n],
                         value_series: Vec::new(),
                         mode_switches: 0,
+                        downtime_s: 0.0,
+                        rollbacks: 0,
                     },
                     policy,
                     job: spec,
@@ -484,7 +567,7 @@ impl Driver {
     fn start_iteration(&mut self, job: usize, worker: usize, t: f64) {
         let t = {
             let run = self.jobs[job].as_mut().expect("job running");
-            if run.finished || run.busy[worker] {
+            if run.finished || run.busy[worker] || !run.alive[worker] {
                 return;
             }
             t.max(run.pause_until)
@@ -554,15 +637,18 @@ impl Driver {
             let dur = t - run.iter_start[worker];
             let version = run.param_version_at_start[worker];
             // AR ring: a removed worker's gradient that missed its round's
-            // aggregation window is discarded (the ring has moved on)
+            // aggregation window is discarded (the ring has moved on).
+            // The ring is chained over *live* workers only — dead members
+            // are re-chained around per §IV-B's removed-straggler
+            // machinery, so removal counts apply to the survivors.
             let mut dropped = false;
             if let DriverMode::Sync(SyncMode::ArRing { removed, .. }) = &run.mode {
                 if *removed > 0 && run.iter_start[worker] < run.last_ar_flush_t {
                     let n = run.job.workers;
                     let pt = run.predicted_times_safe();
-                    let mut order: Vec<usize> = (0..n).collect();
+                    let mut order: Vec<usize> = (0..n).filter(|&w| run.alive[w]).collect();
                     order.sort_by(|&a, &b| pt[a].partial_cmp(&pt[b]).unwrap());
-                    let cut = n - (*removed).min(n - 1);
+                    let cut = order.len() - (*removed).min(order.len().saturating_sub(1));
                     if order[cut..].contains(&worker) {
                         dropped = true;
                     }
@@ -600,10 +686,12 @@ impl Driver {
         // group into updates per current mode
         self.process_pending(job, t);
 
-        // re-decide roughly once per round
+        // re-decide roughly once per round (of the *live* membership —
+        // shrunken rounds still get their per-round decision cadence)
         let redecide = {
             let Some(run) = self.jobs[job].as_ref() else { return };
-            !run.finished && run.reports_since_decision >= run.job.workers
+            let live = run.alive.iter().filter(|&&a| a).count().max(1);
+            !run.finished && run.reports_since_decision >= live
         };
         if redecide {
             self.decide(job, t);
@@ -631,17 +719,24 @@ impl Driver {
     }
 
     /// Apply mode-specific grouping to pending reports at time `t`.
+    ///
+    /// All membership counts are over the *live* workers (fault
+    /// injection): an SSGD barrier shrinks when a member dies
+    /// mid-iteration, x-order groups re-form over survivors, and the AR
+    /// ring re-chains around dead workers. With no faults `live == n`
+    /// and the grouping is bit-identical to the fault-free engine.
     fn process_pending(&mut self, job: usize, t: f64) {
         loop {
             let action = {
                 let Some(run) = self.jobs[job].as_ref() else { return };
-                if run.finished {
+                if run.finished || run.ps_down > 0 {
+                    // a crashed PS holds all updates until it restarts
                     return;
                 }
-                let n = run.job.workers;
+                let live = run.alive.iter().filter(|&&a| a).count();
                 match &run.mode {
                     DriverMode::Sync(SyncMode::Ssgd) => {
-                        if run.pending.len() >= n {
+                        if live > 0 && run.pending.len() >= live {
                             Some(run.pending.iter().map(|&(w, _, _)| w).collect::<Vec<_>>())
                         } else {
                             None
@@ -651,7 +746,7 @@ impl Driver {
                         run.pending.first().map(|&(w, _, _)| vec![w])
                     }
                     DriverMode::Sync(SyncMode::StaticX(x)) => {
-                        let x = (*x).clamp(1, n);
+                        let x = (*x).clamp(1, live.max(1));
                         if run.pending.len() >= x {
                             Some(run.pending[..x].iter().map(|&(w, _, _)| w).collect())
                         } else {
@@ -663,15 +758,16 @@ impl Driver {
                         let groups: std::collections::BTreeSet<usize> =
                             run.pending.iter().map(|&(w, _, _)| run.dyn_groups[w]).collect();
                         for g in groups {
-                            let needed =
-                                (0..n).filter(|&w| run.dyn_groups[w] == g).count();
+                            let needed = (0..run.job.workers)
+                                .filter(|&w| run.alive[w] && run.dyn_groups[w] == g)
+                                .count();
                             let have: Vec<usize> = run
                                 .pending
                                 .iter()
                                 .filter(|&&(w, _, _)| run.dyn_groups[w] == g)
                                 .map(|&(w, _, _)| w)
                                 .collect();
-                            if have.len() == needed {
+                            if !have.is_empty() && have.len() >= needed {
                                 fire = Some(have);
                                 break;
                             }
@@ -698,12 +794,17 @@ impl Driver {
         match special {
             DriverMode::Sync(SyncMode::ArRing { removed, tw_ms }) => {
                 let Some(run) = self.jobs[job].as_mut() else { return };
-                let n = run.job.workers;
-                let removed = removed.min(n - 1);
-                let mut order: Vec<usize> = (0..n).collect();
+                // the ring chains over live workers; dead members are
+                // bypassed like removed stragglers (§IV-B)
+                let mut order: Vec<usize> =
+                    (0..run.job.workers).filter(|&w| run.alive[w]).collect();
+                if order.is_empty() {
+                    return;
+                }
+                let removed = removed.min(order.len() - 1);
                 let pt = run.predicted_times_safe();
                 order.sort_by(|&a, &b| pt[a].partial_cmp(&pt[b]).unwrap());
-                let ring: Vec<usize> = order[..n - removed].to_vec();
+                let ring: Vec<usize> = order[..order.len() - removed].to_vec();
                 let ring_reported =
                     ring.iter().all(|&w| run.pending.iter().any(|&(pw, _, _)| pw == w));
                 if ring_reported && !run.ar_flush_scheduled {
@@ -714,15 +815,13 @@ impl Driver {
             DriverMode::FirstK(k) => {
                 let (fire, members) = {
                     let Some(run) = self.jobs[job].as_mut() else { return };
-                    let n = run.job.workers;
-                    let k = k.clamp(1, n);
-                    if run.pending.len() >= k {
+                    let live = run.alive.iter().filter(|&&a| a).count();
+                    let arrival: Vec<usize> =
+                        run.pending.iter().map(|&(w, _, _)| w).collect();
+                    let (members, dropped) = first_k_split(&arrival, k, live);
+                    if !members.is_empty() {
                         // first K by arrival; later arrivals are dropped as
                         // they come (their pending entries are flushed)
-                        let members: Vec<usize> =
-                            run.pending[..k].iter().map(|&(w, _, _)| w).collect();
-                        let dropped: Vec<usize> =
-                            run.pending[k..].iter().map(|&(w, _, _)| w).collect();
                         run.pending.retain(|&(w, _, _)| members.contains(&w));
                         (true, (members, dropped))
                     } else {
@@ -756,7 +855,7 @@ impl Driver {
         }
         let members = {
             let Some(run) = self.jobs[job].as_mut() else { return };
-            if run.finished || !run.ar_flush_scheduled {
+            if run.finished || !run.ar_flush_scheduled || run.ps_down > 0 {
                 return;
             }
             run.ar_flush_scheduled = false;
@@ -779,7 +878,9 @@ impl Driver {
             let mut found = 0usize;
             run.pending.retain(|&(w, _, v)| {
                 if members.contains(&w) {
-                    staleness_sum += (version_now - v) as f64;
+                    // saturating: a checkpoint rollback can revert the
+                    // step counter below a report's read version
+                    staleness_sum += version_now.saturating_sub(v) as f64;
                     found += 1;
                     false
                 } else {
@@ -812,6 +913,12 @@ impl Driver {
             if run.stats.tta_s.is_none() && run.progress.reached_target() {
                 run.stats.tta_s = Some(t - run.started_at);
             }
+
+            // periodic checkpoint: the PS-crash rollback target
+            let every = self.cfg.faults.checkpoint_every_updates;
+            if every > 0 && run.progress.step % every == 0 {
+                run.checkpoint = run.progress.snapshot();
+            }
         }
 
         for &w in members {
@@ -835,6 +942,13 @@ impl Driver {
             let spec = run.job.spec();
             let predicted = run.predicted_times_safe();
             run.predicted_flags = crate::predict::straggler_flags(&predicted);
+            // a dead worker is not a straggler — it is outside the round
+            // entirely until it restarts
+            for w in 0..run.job.workers {
+                if !run.alive[w] {
+                    run.predicted_flags[w] = false;
+                }
+            }
             let obs = RoundObs {
                 job,
                 n: run.job.workers,
@@ -847,6 +961,7 @@ impl Driver {
                 last_times: &run.last_times,
                 value: run.progress.value(),
                 predicted_stragglers: &run.predicted_flags,
+                live: &run.alive,
             };
             run.policy.decide(&obs)
         };
@@ -948,6 +1063,17 @@ impl Driver {
                 run.stats.end_s = t;
                 run.stats.jct_s = t - run.started_at;
                 run.stats.converged_value = run.progress.value();
+                // close out downtime for workers/PSs still dead at the end
+                for w in 0..run.job.workers {
+                    if !run.alive[w] && run.down_since[w].is_finite() {
+                        run.stats.downtime_s += t - run.down_since[w];
+                        run.down_since[w] = f64::NAN;
+                    }
+                }
+                if run.ps_down > 0 && run.ps_down_since.is_finite() {
+                    run.stats.downtime_s += t - run.ps_down_since;
+                    run.ps_down_since = f64::NAN;
+                }
             }
             done
         };
@@ -968,6 +1094,217 @@ impl Driver {
             self.try_place(j, t);
         }
     }
+
+    // -- fault injection (DESIGN.md §7) -------------------------------------
+
+    fn handle_fault(&mut self, idx: usize, t: f64) {
+        let fault = self.cfg.faults.faults[idx].fault.clone();
+        match fault {
+            Fault::WorkerCrash { job, rank, restart_s } => {
+                self.crash_worker(job, rank, t, restart_s);
+            }
+            Fault::PsCrash { job, idx, restart_s } => {
+                self.crash_ps(job, idx, t, restart_s);
+            }
+            Fault::ServerOutage { server, dur_s, restart_s } => {
+                self.server_outage(server, t, dur_s, restart_s);
+            }
+            // degradation windows are registered with the cluster at
+            // construction and never become events
+            Fault::Degradation { .. } => {}
+        }
+    }
+
+    /// Worker `rank` of `job` dies at `t`: its in-flight gradient is
+    /// lost, its cluster task suspends (invalidating the share cache),
+    /// and the current round re-forms over the survivors. It restarts
+    /// `restart_s` later. Crashing an *already-down* worker (a server
+    /// outage catching one mid-restart) extends its restart deadline —
+    /// the earlier pending restart event goes stale.
+    fn crash_worker(&mut self, job: usize, worker: usize, t: f64, restart_s: f64) {
+        let due = t + restart_s.max(0.0);
+        let task = {
+            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
+            if run.finished || worker >= run.job.workers {
+                return;
+            }
+            if !run.alive[worker] {
+                // already down: only push the restart deadline out
+                if run.restart_at[worker].is_nan() || run.restart_at[worker] < due {
+                    run.restart_at[worker] = due;
+                    self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
+                }
+                return;
+            }
+            run.alive[worker] = false;
+            run.busy[worker] = false;
+            // invalidate the in-flight WorkerDone (its iter no longer
+            // matches); the skipped index leaves at most one permanently
+            // incomplete straggler-accounting row per crash
+            run.iter_idx[worker] += 1;
+            run.pending.retain(|&(w, _, _)| w != worker);
+            run.down_since[worker] = t;
+            run.restart_at[worker] = due;
+            run.straggling[worker] = false;
+            run.placement.worker_tasks[worker]
+        };
+        self.cluster.suspend_task(task);
+        self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
+        // a shrunken barrier / group may now be complete
+        self.process_pending(job, t);
+        self.check_termination(job, t);
+    }
+
+    fn worker_restart(&mut self, job: usize, worker: usize, t: f64) {
+        let task = {
+            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
+            if run.finished || worker >= run.job.workers || run.alive[worker] {
+                return;
+            }
+            if t < run.restart_at[worker] {
+                return; // stale: a later fault extended the restart
+            }
+            run.alive[worker] = true;
+            if run.down_since[worker].is_finite() {
+                run.stats.downtime_s += t - run.down_since[worker];
+            }
+            run.down_since[worker] = f64::NAN;
+            run.restart_at[worker] = f64::NAN;
+            run.placement.worker_tasks[worker]
+        };
+        self.cluster.resume_task(task);
+        self.start_iteration(job, worker, t);
+    }
+
+    /// PS `idx` of `job` dies at `t`: parameter state is lost — progress
+    /// rolls back to the last checkpoint, unapplied reports are
+    /// discarded, and updates stall until the PS restarts `restart_s`
+    /// later. Crashing an already-down PS (server outage mid-restart)
+    /// extends the restart deadline without a second rollback — the
+    /// parameter state is already lost.
+    fn crash_ps(&mut self, job: usize, idx: usize, t: f64, restart_s: f64) {
+        let due = t + restart_s.max(0.0);
+        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished && idx < run.placement.ps_tasks.len() => {
+                run.placement.ps_tasks[idx]
+            }
+            _ => return,
+        };
+        if self.cluster.is_suspended(task) {
+            // already down: only push the restart deadline out
+            let run = self.jobs[job].as_mut().expect("checked above");
+            if run.ps_restart_at[idx].is_nan() || run.ps_restart_at[idx] < due {
+                run.ps_restart_at[idx] = due;
+                self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
+            }
+            return;
+        }
+        self.cluster.suspend_task(task);
+        {
+            let run = self.jobs[job].as_mut().expect("checked above");
+            let now_rel = t - run.started_at;
+            run.progress.restore(&run.checkpoint, now_rel);
+            run.stats.rollbacks += 1;
+            // reports computed against the lost parameter state are
+            // discarded; `ps_down` stalls all updates until the restart
+            // (deliberately NOT via `pause_until`: a long pause would make
+            // iteration starts query cluster shares far in the future,
+            // outside the share engine's non-decreasing-time contract).
+            // Downtime is measured as the *realized* stall window (like
+            // worker downtime), so overlapping PS crashes — e.g. a server
+            // outage hitting several PSs of one job — count once
+            if run.ps_down == 0 {
+                run.ps_down_since = t;
+            }
+            run.ps_restart_at[idx] = due;
+            run.pending.clear();
+            run.ps_down += 1;
+            run.ar_flush_scheduled = false;
+        }
+        self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
+        self.check_termination(job, t);
+    }
+
+    fn ps_restart(&mut self, job: usize, ps_idx: usize, t: f64) {
+        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished && ps_idx < run.placement.ps_tasks.len() => {
+                run.placement.ps_tasks[ps_idx]
+            }
+            _ => return,
+        };
+        if !self.cluster.is_suspended(task) {
+            return;
+        }
+        {
+            let run = self.jobs[job].as_ref().expect("checked above");
+            if t < run.ps_restart_at[ps_idx] {
+                return; // stale: a later fault extended the restart
+            }
+        }
+        self.cluster.resume_task(task);
+        let all_up = {
+            let run = self.jobs[job].as_mut().expect("checked above");
+            run.ps_restart_at[ps_idx] = f64::NAN;
+            run.ps_down = run.ps_down.saturating_sub(1);
+            if run.ps_down == 0 && run.ps_down_since.is_finite() {
+                run.stats.downtime_s += t - run.ps_down_since;
+                run.ps_down_since = f64::NAN;
+            }
+            run.ps_down == 0
+        };
+        if all_up {
+            self.process_pending(job, t);
+            self.kick_idle_workers(job, t);
+        }
+    }
+
+    /// Whole-server outage: every co-located task of every running job on
+    /// `server` fails at once — workers crash, PSs roll back — and all of
+    /// them restart once the server returns (`dur_s + restart_s` later).
+    /// Tasks already down when the outage hits have their restart
+    /// deadlines extended (crash_worker/crash_ps handle that case).
+    fn server_outage(&mut self, server: usize, t: f64, dur_s: f64, restart_s: f64) {
+        let mut workers: Vec<(usize, usize)> = Vec::new();
+        let mut pss: Vec<(usize, usize)> = Vec::new();
+        for (job, slot) in self.jobs.iter().enumerate() {
+            let Some(run) = slot else { continue };
+            if run.finished {
+                continue;
+            }
+            for (w, &tid) in run.placement.worker_tasks.iter().enumerate() {
+                if self.cluster.task(tid).server == server {
+                    workers.push((job, w));
+                }
+            }
+            for (i, &tid) in run.placement.ps_tasks.iter().enumerate() {
+                if self.cluster.task(tid).server == server {
+                    pss.push((job, i));
+                }
+            }
+        }
+        let back = dur_s.max(0.0) + restart_s.max(0.0);
+        for (job, w) in workers {
+            self.crash_worker(job, w, t, back);
+        }
+        for (job, i) in pss {
+            self.crash_ps(job, i, t, back);
+        }
+    }
+
+    /// Start an iteration on every live worker that is neither computing
+    /// nor waiting in a pending set (used after PS recovery, when cleared
+    /// reports would otherwise leave reporters idle forever).
+    fn kick_idle_workers(&mut self, job: usize, t: f64) {
+        let idle: Vec<usize> = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished => (0..run.job.workers)
+                .filter(|&w| run.alive[w] && !run.busy[w] && !waiting_in_pending(run, w))
+                .collect(),
+            _ => return,
+        };
+        for w in idle {
+            self.start_iteration(job, w, t);
+        }
+    }
 }
 
 impl JobRun {
@@ -982,6 +1319,19 @@ impl JobRun {
 
 fn waiting_in_pending(run: &JobRun, worker: usize) -> bool {
     run.pending.iter().any(|&(w, _, _)| w == worker)
+}
+
+/// The LGC first-K grouping rule as a pure function: given the pending
+/// reporters in arrival order and `live` current members, the first
+/// `k` (clamped to the live count) form the update and the rest are
+/// explicitly dropped. Returns `([], [])` while the threshold is unmet.
+/// Exposed for the conservation property tests.
+pub fn first_k_split(arrival: &[usize], k: usize, live: usize) -> (Vec<usize>, Vec<usize>) {
+    let k = k.clamp(1, live.max(1));
+    if arrival.len() < k {
+        return (Vec::new(), Vec::new());
+    }
+    (arrival[..k].to_vec(), arrival[k..].to_vec())
 }
 
 /// AR(1) resource fallback predictor (stateless).
@@ -1015,6 +1365,7 @@ pub fn demand_factor(mode: &DriverMode, n: usize) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::PlannedFault;
     use crate::trace::TraceConfig;
 
     /// Trivial fixed-mode policy for driver tests.
@@ -1154,6 +1505,213 @@ mod tests {
         // all must still finish via the wait queue
         let stats = run_with(DriverMode::Sync(SyncMode::Ssgd), 12);
         assert_eq!(stats.len(), 12);
+    }
+
+    fn plan_of(faults: Vec<PlannedFault>) -> FaultPlan {
+        FaultPlan { faults, checkpoint_every_updates: 50 }
+    }
+
+    fn run_with_faults(mode: DriverMode, n_jobs: usize, faults: Vec<PlannedFault>) -> Vec<JobStats> {
+        let cfg = DriverConfig {
+            max_updates_per_job: 4000,
+            max_iters_per_job: 8000,
+            max_job_duration_s: 8000.0,
+            faults: plan_of(faults),
+            ..Default::default()
+        };
+        let driver = Driver::new(
+            cfg,
+            tiny_trace(n_jobs),
+            Box::new(move |_| Box::new(Always(mode.clone(), "test")) as Box<dyn Policy>),
+        );
+        let (stats, _) = driver.run();
+        stats
+    }
+
+    #[test]
+    fn worker_crash_shrinks_barrier_and_job_completes() {
+        // crash worker 0 of every job early, restart 300 s later: SSGD
+        // must keep firing (shrunken barrier) and every job still finishes
+        // t=150: every job has arrived (the tiny trace spans 100 s)
+        let faults: Vec<PlannedFault> = (0..3)
+            .map(|j| PlannedFault {
+                at: 150.0 + j as f64,
+                fault: Fault::WorkerCrash { job: j, rank: 0, restart_s: 300.0 },
+            })
+            .collect();
+        let stats = run_with_faults(DriverMode::Sync(SyncMode::Ssgd), 3, faults);
+        assert_eq!(stats.len(), 3);
+        for s in &stats {
+            assert!(s.updates > 0, "job {} made no updates", s.job);
+            assert!(s.downtime_s > 0.0, "crash must accrue downtime");
+        }
+    }
+
+    #[test]
+    fn ps_crash_rolls_back_and_inflates_jct() {
+        let clean = run_with(DriverMode::Sync(SyncMode::Ssgd), 2);
+        let faults: Vec<PlannedFault> = (0..2)
+            .flat_map(|j| {
+                (1..6).map(move |k| PlannedFault {
+                    at: 250.0 * k as f64 + j as f64,
+                    fault: Fault::PsCrash { job: j, idx: 0, restart_s: 60.0 },
+                })
+            })
+            .collect();
+        let faulted = run_with_faults(DriverMode::Sync(SyncMode::Ssgd), 2, faults);
+        let jct = |v: &[JobStats]| v.iter().map(|s| s.jct_s).sum::<f64>();
+        assert!(
+            jct(&faulted) > jct(&clean),
+            "rollbacks must inflate JCT: {} !> {}",
+            jct(&faulted),
+            jct(&clean)
+        );
+        let rollbacks: u64 = faulted.iter().map(|s| s.rollbacks).sum();
+        assert!(rollbacks > 0, "PS crashes must register rollbacks");
+    }
+
+    #[test]
+    fn all_modes_survive_faults() {
+        for mode in [
+            DriverMode::Sync(SyncMode::Ssgd),
+            DriverMode::Sync(SyncMode::Asgd),
+            DriverMode::Sync(SyncMode::StaticX(2)),
+            DriverMode::Sync(SyncMode::DynamicX),
+            DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 60.0 }),
+            DriverMode::FirstK(3),
+        ] {
+            let faults = vec![
+                PlannedFault {
+                    at: 60.0,
+                    fault: Fault::WorkerCrash { job: 0, rank: 1, restart_s: 120.0 },
+                },
+                PlannedFault {
+                    at: 200.0,
+                    fault: Fault::PsCrash { job: 0, idx: 0, restart_s: 45.0 },
+                },
+                PlannedFault {
+                    at: 400.0,
+                    fault: Fault::ServerOutage { server: 0, dur_s: 90.0, restart_s: 30.0 },
+                },
+                PlannedFault {
+                    at: 600.0,
+                    fault: Fault::Degradation {
+                        server: 1,
+                        dur_s: 120.0,
+                        cpu_frac: 0.5,
+                        bw_frac: 0.5,
+                    },
+                },
+            ];
+            let stats = run_with_faults(mode.clone(), 2, faults);
+            assert_eq!(stats.len(), 2, "{mode:?}");
+            for s in &stats {
+                assert!(s.updates > 0, "{mode:?}: no updates under faults");
+            }
+        }
+    }
+
+    #[test]
+    fn outage_extends_restart_of_already_down_workers() {
+        // 4 workers on GPU server 0 (PS on a CPU server, unaffected).
+        // Worker 0 crashes at t=150 (restart due 250); a server outage at
+        // t=200 (300 s + 30 s restart) must pull it into the outage —
+        // everyone returns at 530, and the stale restart at 250 is void.
+        let spec = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            model: 0,
+            workers: 4,
+            ps_count: 1,
+            ps_on_gpu_servers: false,
+        };
+        let faults = vec![
+            PlannedFault {
+                at: 150.0,
+                fault: Fault::WorkerCrash { job: 0, rank: 0, restart_s: 100.0 },
+            },
+            PlannedFault {
+                at: 200.0,
+                fault: Fault::ServerOutage { server: 0, dur_s: 300.0, restart_s: 30.0 },
+            },
+        ];
+        let cfg = DriverConfig {
+            max_updates_per_job: 4000,
+            max_iters_per_job: 8000,
+            max_job_duration_s: 8000.0,
+            faults: plan_of(faults),
+            ..Default::default()
+        };
+        let driver = Driver::new(
+            cfg,
+            vec![spec],
+            Box::new(|_| {
+                Box::new(Always(DriverMode::Sync(SyncMode::Ssgd), "test")) as Box<dyn Policy>
+            }),
+        );
+        let (stats, _) = driver.run();
+        // worker 0: 150→530 (380 s); workers 1–3: 200→530 (330 s each)
+        let want = 380.0 + 3.0 * 330.0;
+        assert!(
+            (stats[0].downtime_s - want).abs() < 1e-6,
+            "downtime {} != {want} (outage must extend the earlier crash)",
+            stats[0].downtime_s
+        );
+    }
+
+    #[test]
+    fn faulted_replay_is_deterministic() {
+        let faults = || {
+            vec![
+                PlannedFault {
+                    at: 50.0,
+                    fault: Fault::WorkerCrash { job: 0, rank: 0, restart_s: 150.0 },
+                },
+                PlannedFault {
+                    at: 300.0,
+                    fault: Fault::PsCrash { job: 1, idx: 0, restart_s: 40.0 },
+                },
+                PlannedFault {
+                    at: 500.0,
+                    fault: Fault::ServerOutage { server: 0, dur_s: 60.0, restart_s: 20.0 },
+                },
+            ]
+        };
+        let a = run_with_faults(DriverMode::Sync(SyncMode::Ssgd), 2, faults());
+        let b = run_with_faults(DriverMode::Sync(SyncMode::Ssgd), 2, faults());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.jct_s, y.jct_s);
+            assert_eq!(x.updates, y.updates);
+            assert_eq!(x.downtime_s, y.downtime_s);
+            assert_eq!(x.rollbacks, y.rollbacks);
+        }
+    }
+
+    #[test]
+    fn fault_events_on_finished_or_unknown_jobs_are_ignored() {
+        let faults = vec![
+            // job id beyond the trace
+            PlannedFault {
+                at: 10.0,
+                fault: Fault::WorkerCrash { job: 99, rank: 0, restart_s: 10.0 },
+            },
+            // rank beyond the job's workers
+            PlannedFault {
+                at: 20.0,
+                fault: Fault::WorkerCrash { job: 0, rank: 99, restart_s: 10.0 },
+            },
+            // far past every job's completion
+            PlannedFault {
+                at: 1e7,
+                fault: Fault::PsCrash { job: 0, idx: 0, restart_s: 10.0 },
+            },
+        ];
+        let stats = run_with_faults(DriverMode::Sync(SyncMode::Ssgd), 2, faults);
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.downtime_s, 0.0);
+            assert_eq!(s.rollbacks, 0);
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub fn ablation_systems() -> Vec<&'static str> {
 pub fn fig23_to_27(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
     for arch in [Arch::Ps, Arch::AllReduce] {
         let tag = if arch == Arch::Ps { "ps" } else { "ar" };
-        let results = run_systems(ctx, &ablation_systems(), arch);
+        let results = run_systems(ctx, &ablation_systems(), arch)?;
 
         let mk = |title: String, cols: &[&str]| Table::new(&title, cols);
         let mut t23 = mk(format!("Fig 23 ({tag}) — TTA per job (s), STAR variants"),

@@ -64,7 +64,7 @@ pub fn fig17(ctx: &ExpCtx) -> crate::Result<()> {
     );
 
     // offline baselines over the SSGD measurement run
-    let (stats_ssgd, _) = run_system(ctx, "SSGD", Arch::Ps, true, 0.0);
+    let (stats_ssgd, _) = run_system(ctx, "SSGD", Arch::Ps, true, 0.0)?;
     let _ = &stats_ssgd;
     let mut fixed_fp = Vec::new();
     let mut fixed_fn = Vec::new();
@@ -106,7 +106,7 @@ pub fn fig17(ctx: &ExpCtx) -> crate::Result<()> {
         ("ratio-series LSTM", ratio_fp, ratio_fn),
     ];
     for sys in ["STAR-H", "STAR-"] {
-        let (stats, _) = run_system(ctx, sys, Arch::Ps, false, 0.0);
+        let (stats, _) = run_system(ctx, sys, Arch::Ps, false, 0.0)?;
         let fps: Vec<f64> = stats.iter().map(|s| s.prediction.fp_rate() * 100.0).collect();
         let fns: Vec<f64> = stats.iter().map(|s| s.prediction.fn_rate() * 100.0).collect();
         rows.push((if sys == "STAR-H" { "STAR" } else { "STAR-" }, fps, fns));
@@ -142,7 +142,7 @@ pub fn eval_systems(arch: Arch) -> Vec<&'static str> {
 pub fn fig18_to_22(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
     for arch in [Arch::Ps, Arch::AllReduce] {
         let tag = if arch == Arch::Ps { "ps" } else { "ar" };
-        let results = run_systems(ctx, &eval_systems(arch), arch);
+        let results = run_systems(ctx, &eval_systems(arch), arch)?;
 
         let mut t18 = Table::new(
             &format!("Fig 18 ({tag}) — TTA per job (s): mean, p1, p99"),

@@ -90,7 +90,7 @@ pub fn run_single(
 
 pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
     eprintln!("[exp] measurement run (SSGD, series)…");
-    let (stats, _) = run_system(ctx, "SSGD", Arch::Ps, true, 0.0);
+    let (stats, _) = run_system(ctx, "SSGD", Arch::Ps, true, 0.0)?;
 
     // per-job per-iteration rows of (total, pre, gpu, comm) deviations
     let mut dev_total = Vec::new();
@@ -392,7 +392,7 @@ pub fn fig8(ctx: &ExpCtx) -> crate::Result<()> {
 
 pub fn fig9_10(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
     eprintln!("[exp] measurement run with server sampling…");
-    let (_stats, records) = run_system(ctx, "SSGD", Arch::Ps, true, 25.0);
+    let (_stats, records) = run_system(ctx, "SSGD", Arch::Ps, true, 25.0)?;
 
     if which == "fig9" || which == "all" {
         let mut t = Table::new(
@@ -448,7 +448,8 @@ pub fn fig9_10(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
 
                 });
             }
-            let driver = Driver::new(cfg, specs, Box::new(|_| make_policy("SSGD")));
+            let driver =
+                Driver::new(cfg, specs, Box::new(|_| make_policy("SSGD").expect("known system")));
             let (all, _) = driver.run();
             let s = all.iter().find(|s| s.job == 0).unwrap();
             let iters = s.series.iter().map(|w| w.len()).min().unwrap_or(0);
@@ -503,7 +504,7 @@ pub fn fig11(ctx: &ExpCtx) -> crate::Result<()> {
             if j.id == 0 {
                 Box::new(SwitchAt { at_step: switch_step, rescaled_after: false })
             } else {
-                make_policy("SSGD")
+                make_policy("SSGD").expect("known system")
             }
         }),
     );
@@ -565,7 +566,7 @@ pub fn fig12_13(ctx: &ExpCtx, cpu: bool) -> crate::Result<()> {
                 let s = run_single(
                     mi,
                     4,
-                    Box::new(move |_| make_policy(&name)),
+                    Box::new(move |_| make_policy(&name).expect("known system")),
                     Some(throttle),
                     ctx.seed,
                 );
@@ -624,8 +625,20 @@ pub fn tab1(ctx: &ExpCtx) -> crate::Result<()> {
         s.jct_s * frac
     };
 
-    let wo = run_single(dense, 4, Box::new(|_| make_policy("SSGD")), None, ctx.seed);
-    let w = run_single(dense, 4, Box::new(|_| make_policy("SSGD")), Some((0.2, 1.0)), ctx.seed);
+    let wo = run_single(
+        dense,
+        4,
+        Box::new(|_| make_policy("SSGD").expect("known system")),
+        None,
+        ctx.seed,
+    );
+    let w = run_single(
+        dense,
+        4,
+        Box::new(|_| make_policy("SSGD").expect("known system")),
+        Some((0.2, 1.0)),
+        ctx.seed,
+    );
 
     let mut t = Table::new(
         "Table I — accuracy improvement in 2 min from each stage (DenseNet121, %)",
@@ -675,7 +688,13 @@ pub fn fig14(ctx: &ExpCtx) -> crate::Result<()> {
     let dense = ZOO.iter().position(|m| m.name == "DenseNet121").unwrap();
     let lstm = ZOO.iter().position(|m| m.name == "LSTM").unwrap();
     for (mi, n) in [(dense, 4), (dense, 8), (lstm, 4), (lstm, 8)] {
-        let ssgd = run_single(mi, n, Box::new(|_| make_policy("SSGD")), None, ctx.seed);
+        let ssgd = run_single(
+            mi,
+            n,
+            Box::new(|_| make_policy("SSGD").expect("known system")),
+            None,
+            ctx.seed,
+        );
         let asgd_base = run_single(
             mi,
             n,

@@ -7,12 +7,14 @@ pub mod ablation;
 pub mod eval;
 pub mod measure;
 pub mod overhead;
+pub mod resilience;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats, ServerRecord};
+use crate::faults::{plan_at_rate, span_for, FaultPlan};
 use crate::stats::Band;
 use crate::table::Table;
 use crate::trace::{generate, Arch, TraceConfig};
@@ -25,11 +27,25 @@ pub struct ExpCtx {
     pub out_dir: PathBuf,
     /// shrink everything for smoke tests
     pub quick: bool,
+    /// fault-injection rate multiplier (`--fault-rate`): 0 = fault-free;
+    /// 1 = the default MTBFs of [`crate::faults::FaultConfig`]; >1 =
+    /// proportionally more failures. Applies to every experiment run
+    /// through [`run_system`].
+    pub fault_rate: f64,
+    /// fault-plan seed (`--fault-seed`), independent of the trace seed
+    pub fault_seed: u64,
 }
 
 impl Default for ExpCtx {
     fn default() -> Self {
-        ExpCtx { jobs: 120, seed: 0, out_dir: PathBuf::from("results"), quick: false }
+        ExpCtx {
+            jobs: 120,
+            seed: 0,
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            fault_rate: 0.0,
+            fault_seed: 0,
+        }
     }
 }
 
@@ -54,6 +70,18 @@ impl ExpCtx {
         generate(&cfg)
     }
 
+    /// The context's fault plan for `trace` (empty when `fault_rate` ≤ 0).
+    pub fn fault_plan(&self, trace: &[crate::trace::JobSpec]) -> FaultPlan {
+        let cfg = DriverConfig::default();
+        plan_at_rate(
+            self.fault_rate,
+            self.fault_seed,
+            trace,
+            span_for(trace, cfg.max_job_duration_s),
+            cfg.cluster.total_servers(),
+        )
+    }
+
     pub fn save(&self, name: &str, t: &Table) {
         let path = self.out_dir.join(format!("{name}.csv"));
         if let Err(e) = t.save_csv(&path) {
@@ -62,24 +90,35 @@ impl ExpCtx {
     }
 }
 
-/// Run one system over the context's trace.
+/// Run one system over the context's trace. Unknown system names error
+/// (surfaced through [`dispatch`]) instead of aborting the process.
 pub fn run_system(
     ctx: &ExpCtx,
     system: &str,
     arch: Arch,
     record_series: bool,
     server_sample_s: f64,
-) -> (Vec<JobStats>, Vec<ServerRecord>) {
+) -> crate::Result<(Vec<JobStats>, Vec<ServerRecord>)> {
+    // validate the name before building anything: the per-job factory
+    // below runs mid-simulation, where failing is no longer an option
+    make_policy(system)?;
+    let trace = ctx.trace();
+    let faults = ctx.fault_plan(&trace);
     let cfg = DriverConfig {
         arch,
         seed: ctx.seed,
         record_series,
         server_sample_period_s: server_sample_s,
+        faults,
         ..Default::default()
     };
     let name = system.to_string();
-    let driver = Driver::new(cfg, ctx.trace(), Box::new(move |_| make_policy(&name)));
-    driver.run()
+    let driver = Driver::new(
+        cfg,
+        trace,
+        Box::new(move |_| make_policy(&name).expect("validated above")),
+    );
+    Ok(driver.run())
 }
 
 /// Run several systems; returns name → stats.
@@ -87,16 +126,16 @@ pub fn run_systems(
     ctx: &ExpCtx,
     systems: &[&str],
     arch: Arch,
-) -> BTreeMap<String, Vec<JobStats>> {
+) -> crate::Result<BTreeMap<String, Vec<JobStats>>> {
     let mut out = BTreeMap::new();
     for sys in systems {
         eprintln!("[exp] running {sys} ({arch:?}, {} jobs)…", ctx.effective_jobs());
         let t0 = std::time::Instant::now();
-        let (stats, _) = run_system(ctx, sys, arch, false, 0.0);
+        let (stats, _) = run_system(ctx, sys, arch, false, 0.0)?;
         eprintln!("[exp]   {sys}: {:.1}s wall", t0.elapsed().as_secs_f64());
         out.insert(sys.to_string(), stats);
     }
-    out
+    Ok(out)
 }
 
 /// The §V summary triple: mean, p1, p99 (the paper's error bars).
@@ -113,13 +152,17 @@ pub fn band_str_f(b: Band, d: usize) -> Vec<String> {
 }
 
 /// TTAs (jobs that reached target), JCTs, accuracies, perplexities,
-/// straggler episodes of a stat set.
+/// straggler episodes, downtime and rollback counts of a stat set.
 pub struct Summary {
     pub tta: Vec<f64>,
     pub jct: Vec<f64>,
     pub acc: Vec<f64>,
     pub ppl: Vec<f64>,
     pub stragglers: Vec<f64>,
+    /// per-job seconds lost to crashes / PS stalls (fault injection)
+    pub downtime: Vec<f64>,
+    /// per-job checkpoint rollbacks (fault injection)
+    pub rollbacks: Vec<f64>,
     pub tta_reached: usize,
     pub jobs: usize,
 }
@@ -131,6 +174,8 @@ pub fn summarize(stats: &[JobStats]) -> Summary {
         acc: stats.iter().filter(|s| !s.is_nlp).map(|s| s.converged_value).collect(),
         ppl: stats.iter().filter(|s| s.is_nlp).map(|s| s.converged_value).collect(),
         stragglers: stats.iter().map(|s| s.straggler_episodes as f64).collect(),
+        downtime: stats.iter().map(|s| s.downtime_s).collect(),
+        rollbacks: stats.iter().map(|s| s.rollbacks as f64).collect(),
         tta_reached: stats.iter().filter(|s| s.tta_s.is_some()).count(),
         jobs: stats.len(),
     }
@@ -155,10 +200,11 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
         "fig23" | "fig24" | "fig25" | "fig26" | "fig27" => ablation::fig23_to_27(ctx, id),
         "fig28" => overhead::fig28(ctx),
         "fig29" => overhead::fig29(ctx),
+        "resilience" => resilience::resilience(ctx),
         "all" => {
             for id in [
                 "fig1", "fig8", "fig9", "fig11", "fig12", "fig13", "tab1", "fig14", "fig16",
-                "fig17", "fig18", "fig23", "fig28", "fig29",
+                "fig17", "fig18", "fig23", "fig28", "fig29", "resilience",
             ] {
                 // fig1 emits figs 1–7; fig9 emits 9–10; fig18 emits 18–22;
                 // fig23 emits 23–27
@@ -166,7 +212,9 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment {other:?} (try `all` or figN/tab1)"),
+        other => {
+            anyhow::bail!("unknown experiment {other:?} (try `all`, figN/tab1, or resilience)")
+        }
     }
 }
 
@@ -186,15 +234,41 @@ mod tests {
     #[test]
     fn summarize_partitions_models() {
         let ctx = quick_ctx();
-        let (stats, _) = run_system(&ctx, "SSGD", Arch::Ps, false, 0.0);
+        let (stats, _) = run_system(&ctx, "SSGD", Arch::Ps, false, 0.0).unwrap();
         let s = summarize(&stats);
         assert_eq!(s.jobs, stats.len());
         assert_eq!(s.acc.len() + s.ppl.len(), s.jobs);
         assert!(s.tta_reached <= s.jobs);
+        assert_eq!(s.downtime.len(), s.jobs);
+        assert!(s.downtime.iter().all(|&d| d == 0.0), "fault-free context");
     }
 
     #[test]
     fn dispatch_rejects_unknown() {
         assert!(dispatch("fig99", &quick_ctx()).is_err());
+    }
+
+    #[test]
+    fn run_system_surfaces_unknown_system_as_error() {
+        let err = run_system(&quick_ctx(), "NotASystem", Arch::Ps, false, 0.0)
+            .err()
+            .expect("unknown system must error");
+        assert!(format!("{err:#}").contains("unknown system"));
+    }
+
+    #[test]
+    fn fault_rate_produces_plan_and_downtime() {
+        let ctx = ExpCtx { fault_rate: 3.0, jobs: 3, ..quick_ctx() };
+        let trace = ctx.trace();
+        let plan = ctx.fault_plan(&trace);
+        assert!(!plan.is_empty(), "rate 3 must schedule faults");
+        assert!(ctx.fault_plan(&trace) == plan, "plan is deterministic");
+        let (stats, _) = run_system(&ctx, "SSGD", Arch::Ps, false, 0.0).unwrap();
+        let downtime: f64 = stats.iter().map(|s| s.downtime_s).sum();
+        let rollbacks: u64 = stats.iter().map(|s| s.rollbacks).sum();
+        assert!(
+            downtime > 0.0 || rollbacks > 0,
+            "a heavy fault plan must leave traces in the stats"
+        );
     }
 }

@@ -25,7 +25,7 @@ pub fn fig28(ctx: &ExpCtx) -> crate::Result<()> {
         &["system", "mean", "p1", "p99", "decisions"],
     );
     let systems = ["Sync-Switch", "LB-BSP", "LGC", "Zeno++", "STAR-H", "STAR-ML", "STAR-"];
-    let results = run_systems(ctx, &systems, Arch::Ps);
+    let results = run_systems(ctx, &systems, Arch::Ps)?;
     for sys in systems {
         let stats_v: Vec<f64> =
             results[sys].iter().map(|s| s.decision_overhead_total_s).collect();

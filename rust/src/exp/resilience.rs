@@ -1,0 +1,215 @@
+//! `resilience` — the experiment axis the paper's title promises but its
+//! evaluation never isolates: TTA / JCT / downtime under injected
+//! failures, swept over failure rate × policy on the same trace.
+//!
+//! For every rate the *same* seeded [`FaultPlan`] is injected into every
+//! policy's replay, so differences are attributable to the policy alone.
+//! Emits the usual CSV table plus a `star-bench-v1` JSON artifact
+//! (`results/resilience.json`) so the TTA-under-failures trajectory is
+//! tracked across PRs exactly like the perf benches.
+
+use super::{summarize, ExpCtx};
+use crate::baselines::make_policy;
+use crate::driver::{Driver, DriverConfig, JobStats};
+use crate::faults::{plan_at_rate, span_for, FaultPlan};
+use crate::jsonio::{self, Json};
+use crate::stats;
+use crate::table::{self, Table};
+use crate::trace::Arch;
+
+/// Failure-rate multipliers swept (0 = the fault-free control).
+pub const RATES: [f64; 3] = [0.0, 1.0, 4.0];
+
+fn systems(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["SSGD", "LGC", "STAR-H"]
+    } else {
+        vec![
+            "SSGD", "ASGD", "Sync-Switch", "LB-BSP", "LGC", "Zeno++", "STAR-H", "STAR-ML",
+        ]
+    }
+}
+
+fn run_with_plan(
+    ctx: &ExpCtx,
+    system: &str,
+    trace: &[crate::trace::JobSpec],
+    plan: &FaultPlan,
+) -> crate::Result<Vec<JobStats>> {
+    make_policy(system)?;
+    let mut cfg = DriverConfig {
+        arch: Arch::Ps,
+        seed: ctx.seed,
+        record_series: false,
+        faults: plan.clone(),
+        ..Default::default()
+    };
+    if ctx.quick {
+        // under heavy failure rates a job may never converge; keep smoke
+        // runs bounded instead of riding the 40 000 s duration cap
+        cfg.max_job_duration_s = 12_000.0;
+        cfg.max_updates_per_job = 25_000;
+        cfg.max_iters_per_job = 40_000;
+    }
+    let name = system.to_string();
+    let driver = Driver::new(
+        cfg,
+        trace.to_vec(),
+        Box::new(move |_| make_policy(&name).expect("validated above")),
+    );
+    Ok(driver.run().0)
+}
+
+pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
+    let trace = ctx.trace();
+    let base_cfg = DriverConfig::default();
+    let servers = base_cfg.cluster.total_servers();
+    let span = span_for(&trace, base_cfg.max_job_duration_s);
+
+    let mut t = Table::new(
+        "Resilience — TTA/JCT/downtime under injected failures (PS architecture)",
+        &[
+            "system",
+            "fault_rate",
+            "faults",
+            "tta_mean_s",
+            "jct_mean_s",
+            "downtime_mean_s",
+            "rollbacks",
+            "reached",
+        ],
+    );
+    let mut results_json: Vec<Json> = Vec::new();
+    let mut ssgd_jct_by_rate: Vec<(f64, f64)> = Vec::new();
+
+    for &rate in &RATES {
+        let plan = plan_at_rate(rate, ctx.fault_seed, &trace, span, servers);
+        for sys in systems(ctx.quick) {
+            eprintln!(
+                "[exp] resilience: {sys} @ rate {rate} ({} faults, {} jobs)…",
+                plan.len(),
+                trace.len()
+            );
+            let stats = run_with_plan(ctx, sys, &trace, &plan)?;
+            let s = summarize(&stats);
+            // -1 = "no job reached the target" (NaN is not valid JSON)
+            let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+            let jct_mean = stats::mean(&s.jct);
+            let downtime_mean = stats::mean(&s.downtime);
+            let rollbacks: f64 = s.rollbacks.iter().sum();
+            if sys == "SSGD" {
+                ssgd_jct_by_rate.push((rate, jct_mean));
+            }
+            t.rowf(&[
+                table::s(sys),
+                table::f(rate, 1),
+                table::i(plan.len() as i64),
+                table::f(tta_mean, 0),
+                table::f(jct_mean, 0),
+                table::f(downtime_mean, 1),
+                table::i(rollbacks as i64),
+                table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+            ]);
+            results_json.push(jsonio::obj(vec![
+                ("name", jsonio::s(&format!("resilience/{sys}/rate={rate}"))),
+                ("iters", jsonio::num(s.jobs as f64)),
+                // headline metric in the bench schema's slot: mean JCT
+                // (includes jobs that never reach TTA under failures)
+                ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+                ("tta_mean_s", jsonio::num(tta_mean)),
+                ("jct_mean_s", jsonio::num(jct_mean)),
+                ("downtime_mean_s", jsonio::num(downtime_mean)),
+                ("rollbacks", jsonio::num(rollbacks)),
+                ("tta_reached", jsonio::num(s.tta_reached as f64)),
+                ("fault_count", jsonio::num(plan.len() as f64)),
+            ]));
+        }
+    }
+
+    t.print();
+    for w in ssgd_jct_by_rate.windows(2) {
+        let ((r0, j0), (r1, j1)) = (w[0], w[1]);
+        println!(
+            "SSGD mean JCT {j0:.0}s @ rate {r0} -> {j1:.0}s @ rate {r1} ({:+.0}%)",
+            (j1 / j0.max(1e-9) - 1.0) * 100.0
+        );
+    }
+    println!("(failures must cost the barrier-bound SSGD most; STAR's x-order modes absorb them)\n");
+    ctx.save("resilience", &t);
+
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::exp::resilience")),
+        ("results", Json::Arr(results_json)),
+    ]);
+    let path = ctx.out_dir.join("resilience.json");
+    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
+        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
+    }
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("resilience results written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resilience_runs_end_to_end_quick() {
+        let ctx = ExpCtx {
+            jobs: 3,
+            quick: true,
+            fault_seed: 7,
+            out_dir: std::env::temp_dir().join("star_resilience_test"),
+            ..Default::default()
+        };
+        resilience(&ctx).unwrap();
+        // the JSON artifact parses and carries the schema tag
+        let doc = Json::parse_file(&ctx.out_dir.join("resilience.json")).unwrap();
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        let results = doc.get("results").unwrap().arr().unwrap();
+        assert_eq!(results.len(), RATES.len() * systems(true).len());
+        for r in results {
+            assert!(r.get("jct_mean_s").unwrap().num().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn faults_strictly_increase_ssgd_tta() {
+        // acceptance criterion: on the same trace, the injected plan must
+        // strictly increase SSGD's time-to-accuracy (proxied by JCT for
+        // jobs the faults keep from ever reaching the target)
+        let ctx = ExpCtx {
+            jobs: 3,
+            quick: true,
+            fault_seed: 7,
+            out_dir: std::env::temp_dir().join("star_resilience_test2"),
+            ..Default::default()
+        };
+        let trace = ctx.trace();
+        let cfg = DriverConfig::default();
+        let plan = plan_at_rate(
+            6.0,
+            ctx.fault_seed,
+            &trace,
+            span_for(&trace, cfg.max_job_duration_s),
+            cfg.cluster.total_servers(),
+        );
+        assert!(!plan.is_empty());
+        let clean = run_with_plan(&ctx, "SSGD", &trace, &FaultPlan::default()).unwrap();
+        let faulted = run_with_plan(&ctx, "SSGD", &trace, &plan).unwrap();
+        // TTA where both runs reached it, JCT as the censored fallback
+        let score = |v: &[JobStats]| -> f64 {
+            v.iter().map(|s| s.tta_s.unwrap_or(s.jct_s)).sum::<f64>()
+        };
+        assert!(
+            score(&faulted) > score(&clean),
+            "faults must strictly increase SSGD TTA: {} !> {}",
+            score(&faulted),
+            score(&clean)
+        );
+    }
+}

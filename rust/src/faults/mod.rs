@@ -1,0 +1,396 @@
+//! Fault-injection subsystem — the "Resilient" half of the paper's title.
+//!
+//! The contention model makes stragglers *emerge*; failures, by contrast,
+//! are *injected* from a deterministic, seeded [`FaultPlan`] generated
+//! per-trace from a [`FaultConfig`] (the same pattern Lin et al.'s
+//! what-if analysis uses for machine failure/recovery trace events).
+//! Four fault classes:
+//!
+//! * **worker crash** — the task suspends, its in-flight gradient is
+//!   lost, and the sync round re-forms around the survivors (SSGD
+//!   barriers shrink, x-order groups re-cluster, AR rings re-chain per
+//!   §IV-B's removed-straggler machinery); the worker rejoins after a
+//!   restart delay.
+//! * **PS crash** — parameter state is lost: job progress rolls back to
+//!   the last checkpoint (re-training time is charged implicitly by the
+//!   reverted progress), unapplied reports are discarded, and updates
+//!   stall until the PS restarts.
+//! * **server outage** — every co-located task of every job on the
+//!   server fails at once (workers crash, PSs roll back), recovering
+//!   when the server returns.
+//! * **degradation window** — the server loses a fraction of CPU /
+//!   bandwidth capacity for a bounded interval, then recovers. Distinct
+//!   from the contention spikes of `cluster`: windows model NIC flaps
+//!   and co-located-job bursts, are part of the *plan* (known shape,
+//!   sweepable rate), and subtract from available capacity directly.
+//!
+//! The plan is a pure function of its config (seed included), so a replay
+//! with the same trace + plan is bit-identical — the determinism and
+//! golden-trace suites pin exactly that.
+
+use crate::simrng::Rng;
+use crate::trace::JobSpec;
+
+/// One injected fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Worker `rank` of `job` crashes; it restarts `restart_s` later.
+    WorkerCrash { job: usize, rank: usize, restart_s: f64 },
+    /// PS `idx` of `job` crashes: progress reverts to the last
+    /// checkpoint and updates stall for `restart_s`.
+    PsCrash { job: usize, idx: usize, restart_s: f64 },
+    /// Whole-server outage: all co-located tasks of every job on
+    /// `server` fail for `dur_s`, then restart `restart_s` later.
+    ServerOutage { server: usize, dur_s: f64, restart_s: f64 },
+    /// Transient degradation: `server` loses `cpu_frac`/`bw_frac` of its
+    /// capacity for `dur_s`, with full recovery afterwards.
+    Degradation { server: usize, dur_s: f64, cpu_frac: f64, bw_frac: f64 },
+}
+
+/// A fault scheduled at an absolute simulation time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedFault {
+    pub at: f64,
+    pub fault: Fault,
+}
+
+/// Seeded fault-scenario parameters. Every `*_mtbf_s` is the mean gap
+/// (exponential) between events of that class across the whole cluster /
+/// trace; `0` disables the class.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// mean seconds between worker crashes (trace-wide)
+    pub worker_mtbf_s: f64,
+    /// mean seconds between PS crashes (trace-wide)
+    pub ps_mtbf_s: f64,
+    /// mean seconds between whole-server outages
+    pub server_mtbf_s: f64,
+    /// mean seconds between degradation windows
+    pub degradation_mtbf_s: f64,
+    /// worker/PS restart latency range, seconds
+    pub restart_s: (f64, f64),
+    /// server outage duration range, seconds
+    pub outage_s: (f64, f64),
+    /// degradation window duration range, seconds
+    pub degradation_s: (f64, f64),
+    /// degradation magnitude range (fraction of capacity lost)
+    pub degradation_mag: (f64, f64),
+    /// parameter updates between checkpoints (PS rollback granularity);
+    /// 0 means "checkpoint only at step 0" (a PS crash restarts the job)
+    pub checkpoint_every_updates: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            worker_mtbf_s: 1800.0,
+            ps_mtbf_s: 3600.0,
+            server_mtbf_s: 14_400.0,
+            degradation_mtbf_s: 2400.0,
+            restart_s: (20.0, 90.0),
+            outage_s: (60.0, 300.0),
+            degradation_s: (30.0, 240.0),
+            degradation_mag: (0.3, 0.7),
+            checkpoint_every_updates: 200,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Scale all failure rates by `rate` (MTBFs divide by it); `0.0`
+    /// disables every class — the sweep knob of the `resilience`
+    /// experiment and the `--fault-rate` CLI option.
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        if rate <= 0.0 {
+            self.worker_mtbf_s = 0.0;
+            self.ps_mtbf_s = 0.0;
+            self.server_mtbf_s = 0.0;
+            self.degradation_mtbf_s = 0.0;
+        } else {
+            self.worker_mtbf_s /= rate;
+            self.ps_mtbf_s /= rate;
+            self.server_mtbf_s /= rate;
+            self.degradation_mtbf_s /= rate;
+        }
+        self
+    }
+}
+
+/// The per-trace fault schedule the driver injects. Empty by default, so
+/// fault-free runs are bit-identical to the pre-faults simulator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// time-ordered injected faults
+    pub faults: Vec<PlannedFault>,
+    /// parameter updates between checkpoints (0 = initial state only)
+    pub checkpoint_every_updates: u64,
+}
+
+impl FaultPlan {
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Count of planned faults matching `pred` (diagnostics/tests).
+    pub fn count(&self, pred: impl Fn(&Fault) -> bool) -> usize {
+        self.faults.iter().filter(|f| pred(&f.fault)).count()
+    }
+}
+
+/// Simulated span a fault plan should cover for `trace`: the last
+/// arrival plus the per-job duration cap (jobs keep running past the
+/// final arrival, but never longer than the cap).
+pub fn span_for(trace: &[JobSpec], max_job_duration_s: f64) -> f64 {
+    trace.iter().map(|j| j.arrival_s).fold(0.0, f64::max) + max_job_duration_s
+}
+
+/// The standard rate-scaled plan behind the `--fault-rate`/`--fault-seed`
+/// CLI knobs: default MTBFs scaled by `rate` (≤ 0 = empty plan). Every
+/// entry point (experiments harness, `star simulate|replay`, tests)
+/// builds plans through this one recipe so the same knobs always inject
+/// the same schedule.
+pub fn plan_at_rate(
+    rate: f64,
+    seed: u64,
+    jobs: &[JobSpec],
+    span_s: f64,
+    servers: usize,
+) -> FaultPlan {
+    if rate <= 0.0 {
+        return FaultPlan::default();
+    }
+    generate_plan(
+        &FaultConfig { seed, ..Default::default() }.with_rate(rate),
+        jobs,
+        span_s,
+        servers,
+    )
+}
+
+/// Generate a deterministic fault plan for `jobs` over `span_s` seconds
+/// of simulated time on a `servers`-server cluster. Each fault class
+/// draws from its own forked RNG stream, so enabling one class never
+/// perturbs another's schedule (the same discipline the contention
+/// streams use, DESIGN.md §6).
+pub fn generate_plan(
+    cfg: &FaultConfig,
+    jobs: &[JobSpec],
+    span_s: f64,
+    servers: usize,
+) -> FaultPlan {
+    let mut root = Rng::new(cfg.seed, 0xFA17);
+    // fork every class stream unconditionally: disabling one class must
+    // not shift another's schedule
+    let mut worker_rng = root.fork(1);
+    let mut ps_rng = root.fork(2);
+    let mut server_rng = root.fork(3);
+    let mut degrade_rng = root.fork(4);
+    let mut faults: Vec<PlannedFault> = Vec::new();
+
+    // worker crashes: uniformly victimize a (job, rank)
+    if cfg.worker_mtbf_s > 0.0 && !jobs.is_empty() {
+        let rng = &mut worker_rng;
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.worker_mtbf_s);
+            if t > span_s {
+                break;
+            }
+            let j = &jobs[rng.usize(0, jobs.len() - 1)];
+            let rank = rng.usize(0, j.workers.saturating_sub(1));
+            let restart_s = rng.range(cfg.restart_s.0, cfg.restart_s.1);
+            faults.push(PlannedFault {
+                at: t,
+                fault: Fault::WorkerCrash { job: j.id, rank, restart_s },
+            });
+        }
+    }
+
+    // PS crashes: uniformly victimize a (job, ps index)
+    if cfg.ps_mtbf_s > 0.0 && !jobs.is_empty() {
+        let rng = &mut ps_rng;
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.ps_mtbf_s);
+            if t > span_s {
+                break;
+            }
+            let j = &jobs[rng.usize(0, jobs.len() - 1)];
+            let idx = rng.usize(0, j.ps_count.saturating_sub(1));
+            let restart_s = rng.range(cfg.restart_s.0, cfg.restart_s.1);
+            faults.push(PlannedFault {
+                at: t,
+                fault: Fault::PsCrash { job: j.id, idx, restart_s },
+            });
+        }
+    }
+
+    // whole-server outages
+    if cfg.server_mtbf_s > 0.0 && servers > 0 {
+        let rng = &mut server_rng;
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.server_mtbf_s);
+            if t > span_s {
+                break;
+            }
+            let server = rng.usize(0, servers - 1);
+            let dur_s = rng.range(cfg.outage_s.0, cfg.outage_s.1);
+            let restart_s = rng.range(cfg.restart_s.0, cfg.restart_s.1);
+            faults.push(PlannedFault {
+                at: t,
+                fault: Fault::ServerOutage { server, dur_s, restart_s },
+            });
+        }
+    }
+
+    // degradation windows
+    if cfg.degradation_mtbf_s > 0.0 && servers > 0 {
+        let rng = &mut degrade_rng;
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / cfg.degradation_mtbf_s);
+            if t > span_s {
+                break;
+            }
+            let server = rng.usize(0, servers - 1);
+            let dur_s = rng.range(cfg.degradation_s.0, cfg.degradation_s.1);
+            // NIC flap vs CPU burst vs both, like the spike streams
+            let both = rng.chance(0.3);
+            let on_cpu = both || rng.chance(0.5);
+            let mag = rng.range(cfg.degradation_mag.0, cfg.degradation_mag.1);
+            faults.push(PlannedFault {
+                at: t,
+                fault: Fault::Degradation {
+                    server,
+                    dur_s,
+                    cpu_frac: if on_cpu { mag } else { 0.0 },
+                    bw_frac: if !on_cpu || both { mag } else { 0.0 },
+                },
+            });
+        }
+    }
+
+    // stable sort: ties keep class order (worker < ps < server < degrade)
+    faults.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    FaultPlan { faults, checkpoint_every_updates: cfg.checkpoint_every_updates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    fn jobs() -> Vec<JobSpec> {
+        crate::trace::generate(&TraceConfig { jobs: 10, span_s: 2000.0, ..Default::default() })
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cfg = FaultConfig::default();
+        let a = generate_plan(&cfg, &jobs(), 20_000.0, 8);
+        let b = generate_plan(&cfg, &jobs(), 20_000.0, 8);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate_plan(&FaultConfig::default(), &jobs(), 20_000.0, 8);
+        let b = generate_plan(
+            &FaultConfig { seed: 1, ..Default::default() },
+            &jobs(),
+            20_000.0,
+            8,
+        );
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn plan_is_time_ordered_and_within_span() {
+        let plan = generate_plan(&FaultConfig::default(), &jobs(), 20_000.0, 8);
+        let mut last = 0.0;
+        for f in &plan.faults {
+            assert!(f.at >= last, "out of order: {} < {last}", f.at);
+            assert!(f.at <= 20_000.0);
+            last = f.at;
+        }
+    }
+
+    #[test]
+    fn all_classes_present_and_valid() {
+        let plan = generate_plan(&FaultConfig::default(), &jobs(), 100_000.0, 8);
+        assert!(plan.count(|f| matches!(f, Fault::WorkerCrash { .. })) > 0);
+        assert!(plan.count(|f| matches!(f, Fault::PsCrash { .. })) > 0);
+        assert!(plan.count(|f| matches!(f, Fault::ServerOutage { .. })) > 0);
+        assert!(plan.count(|f| matches!(f, Fault::Degradation { .. })) > 0);
+        let js = jobs();
+        for pf in &plan.faults {
+            match pf.fault {
+                Fault::WorkerCrash { job, rank, restart_s } => {
+                    let j = js.iter().find(|j| j.id == job).unwrap();
+                    assert!(rank < j.workers);
+                    assert!((20.0..=90.0).contains(&restart_s));
+                }
+                Fault::PsCrash { job, idx, .. } => {
+                    let j = js.iter().find(|j| j.id == job).unwrap();
+                    assert!(idx < j.ps_count);
+                }
+                Fault::ServerOutage { server, dur_s, .. } => {
+                    assert!(server < 8);
+                    assert!((60.0..=300.0).contains(&dur_s));
+                }
+                Fault::Degradation { server, dur_s, cpu_frac, bw_frac } => {
+                    assert!(server < 8);
+                    assert!((30.0..=240.0).contains(&dur_s));
+                    assert!(cpu_frac > 0.0 || bw_frac > 0.0);
+                    assert!(cpu_frac <= 0.7 && bw_frac <= 0.7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rate_scales_fault_counts() {
+        let base = generate_plan(&FaultConfig::default(), &jobs(), 50_000.0, 8);
+        let heavy =
+            generate_plan(&FaultConfig::default().with_rate(4.0), &jobs(), 50_000.0, 8);
+        assert!(heavy.len() > 2 * base.len(), "{} !> 2*{}", heavy.len(), base.len());
+        let off = generate_plan(&FaultConfig::default().with_rate(0.0), &jobs(), 50_000.0, 8);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn single_class_schedule_is_stream_independent() {
+        // disabling other classes must not move worker-crash times
+        let all = generate_plan(&FaultConfig::default(), &jobs(), 20_000.0, 8);
+        let only_workers = generate_plan(
+            &FaultConfig {
+                ps_mtbf_s: 0.0,
+                server_mtbf_s: 0.0,
+                degradation_mtbf_s: 0.0,
+                ..Default::default()
+            },
+            &jobs(),
+            20_000.0,
+            8,
+        );
+        let wa: Vec<&PlannedFault> = all
+            .faults
+            .iter()
+            .filter(|f| matches!(f.fault, Fault::WorkerCrash { .. }))
+            .collect();
+        let wb: Vec<&PlannedFault> = only_workers.faults.iter().collect();
+        assert_eq!(wa.len(), wb.len());
+        for (a, b) in wa.iter().zip(&wb) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.fault, b.fault);
+        }
+    }
+}

@@ -31,6 +31,7 @@ pub mod cluster;
 pub mod decide;
 pub mod driver;
 pub mod exp;
+pub mod faults;
 pub mod jsonio;
 pub mod metrics;
 pub mod models;

@@ -32,8 +32,8 @@ fn main() {
                 "usage: star <train|simulate|replay|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
-                 simulate   --system SSGD|ASGD|…|STAR-ML --jobs N [--arch ps|ar] [--seed S]\n\
-                 replay     --trace FILE.csv --system NAME [--arch ps|ar]\n\
+                 simulate   --system SSGD|ASGD|…|STAR-ML --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S]\n\
+                 replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  artifacts  [--dir artifacts]"
             );
             2
@@ -100,29 +100,33 @@ fn train(args: &Args) -> star::Result<()> {
 }
 
 fn simulate(args: &Args) -> star::Result<()> {
-    args.check_known(&["system", "jobs", "arch", "seed"])?;
+    args.check_known(&["system", "jobs", "arch", "seed", "fault-rate", "fault-seed"])?;
     let system = args.str_or("system", "STAR-ML");
     let jobs = args.usize_or("jobs", 60)?;
     let seed = args.u64_or("seed", 0)?;
     let arch = parse_arch(&args.str_or("arch", "ps"))?;
+    let fault_rate = args.f64_or("fault-rate", 0.0)?;
+    let fault_seed = args.u64_or("fault-seed", 0)?;
     let trace = generate(&TraceConfig {
         jobs,
         seed,
         span_s: jobs as f64 * 280.0,
         ..Default::default()
     });
-    run_and_report(&system, arch, seed, trace)
+    run_and_report(&system, arch, seed, trace, fault_rate, fault_seed)
 }
 
 fn replay(args: &Args) -> star::Result<()> {
-    args.check_known(&["trace", "system", "arch", "seed"])?;
+    args.check_known(&["trace", "system", "arch", "seed", "fault-rate", "fault-seed"])?;
     let path = args.require("trace")?;
     let system = args.str_or("system", "STAR-ML");
     let seed = args.u64_or("seed", 0)?;
     let arch = parse_arch(&args.str_or("arch", "ps"))?;
+    let fault_rate = args.f64_or("fault-rate", 0.0)?;
+    let fault_seed = args.u64_or("fault-seed", 0)?;
     let text = std::fs::read_to_string(path)?;
     let trace = star::trace::parse_philly_csv(&text, &TraceConfig::default())?;
-    run_and_report(&system, arch, seed, trace)
+    run_and_report(&system, arch, seed, trace, fault_rate, fault_seed)
 }
 
 fn run_and_report(
@@ -130,10 +134,26 @@ fn run_and_report(
     arch: Arch,
     seed: u64,
     trace: Vec<star::trace::JobSpec>,
+    fault_rate: f64,
+    fault_seed: u64,
 ) -> star::Result<()> {
-    let cfg = DriverConfig { arch, seed, record_series: false, ..Default::default() };
+    // validate the system name before the simulation starts
+    make_policy(system)?;
+    let base_cfg = DriverConfig::default();
+    let faults = star::faults::plan_at_rate(
+        fault_rate,
+        fault_seed,
+        &trace,
+        star::faults::span_for(&trace, base_cfg.max_job_duration_s),
+        base_cfg.cluster.total_servers(),
+    );
+    let cfg = DriverConfig { arch, seed, record_series: false, faults, ..Default::default() };
     let name = system.to_string();
-    let driver = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name)));
+    let driver = Driver::new(
+        cfg,
+        trace,
+        Box::new(move |_| make_policy(&name).expect("validated above")),
+    );
     let (stats_v, _) = driver.run();
     let mut t = Table::new(
         &format!("{system} over {} jobs ({arch:?})", stats_v.len()),

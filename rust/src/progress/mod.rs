@@ -28,6 +28,19 @@ const MIX_EMA: f64 = 0.05;
 pub const EVAL_PERIOD_S: f64 = 40.0;
 pub const EVAL_WINDOW: usize = 5;
 
+/// Checkpointed training state: everything a PS crash rolls back
+/// (fault subsystem, DESIGN.md §7). Evaluation history is *not* part of
+/// a checkpoint — it restarts after a rollback so a pre-crash plateau
+/// cannot masquerade as convergence.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub step: u64,
+    pub progress: f64,
+    x_over_n_ema: f64,
+    stale_frac_ema: f64,
+    lr_ok_ema: f64,
+}
+
 /// Evolving training state of one job.
 #[derive(Clone, Debug)]
 pub struct ProgressModel {
@@ -62,6 +75,32 @@ impl ProgressModel {
             evals: Vec::new(),
             eval_due: EVAL_PERIOD_S,
         }
+    }
+
+    /// Capture a checkpoint of the statistical training state.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            step: self.step,
+            progress: self.progress,
+            x_over_n_ema: self.x_over_n_ema,
+            stale_frac_ema: self.stale_frac_ema,
+            lr_ok_ema: self.lr_ok_ema,
+        }
+    }
+
+    /// Roll back to `snap` (PS crash): statistical progress and the step
+    /// counter revert — the re-training time between checkpoint and crash
+    /// is charged implicitly because those updates must be redone.
+    /// Evaluation bookkeeping restarts at `now_rel` (seconds since job
+    /// start) so stale plateau evidence is discarded.
+    pub fn restore(&mut self, snap: &Snapshot, now_rel: f64) {
+        self.step = snap.step;
+        self.progress = snap.progress;
+        self.x_over_n_ema = snap.x_over_n_ema;
+        self.stale_frac_ema = snap.stale_frac_ema;
+        self.lr_ok_ema = snap.lr_ok_ema;
+        self.evals.clear();
+        self.eval_due = now_rel.max(0.0) + EVAL_PERIOD_S;
     }
 
     /// Total batch M summed across workers (§III: 128/worker).
@@ -300,6 +339,39 @@ mod tests {
             // vanilla ASGD's own asymptote equals the target exactly
             assert!((spec.converged_value_stale(1.0, false) - target).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_rolls_back_progress_and_step() {
+        let mut p = pm(0, 8);
+        for _ in 0..500 {
+            p.apply_update(8, 0.0, true);
+        }
+        let snap = p.snapshot();
+        let (step_at, prog_at, val_at) = (p.step, p.progress, p.value());
+        for _ in 0..500 {
+            p.apply_update(8, 0.0, true);
+        }
+        assert!(p.progress > prog_at && p.step > step_at);
+        p.restore(&snap, 1234.0);
+        assert_eq!(p.step, step_at);
+        assert_eq!(p.progress, prog_at);
+        assert_eq!(p.value(), val_at);
+    }
+
+    #[test]
+    fn restore_resets_convergence_evidence() {
+        let mut p = pm(0, 4);
+        for _ in 0..100_000 {
+            p.apply_update(4, 0.0, true);
+        }
+        let snap = p.snapshot();
+        assert!(p.converged_at(400.0), "plateau detected pre-crash");
+        p.restore(&snap, 400.0);
+        // immediately after rollback the five-eval window is empty again
+        assert!(!p.converged_at(401.0), "rollback must clear plateau evidence");
+        // but a sustained plateau re-converges
+        assert!(p.converged_at(400.0 + 6.0 * EVAL_PERIOD_S));
     }
 
     #[test]

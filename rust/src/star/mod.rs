@@ -182,7 +182,7 @@ impl Policy for Star {
         let wall = Instant::now();
 
         // -- straggler prediction (§IV-A; /SP swaps in the [29] rule) -----
-        let predicted: Vec<f64> = if self.ablation.use_fixed_duration_prediction {
+        let mut predicted: Vec<f64> = if self.ablation.use_fixed_duration_prediction {
             let rule = self
                 .fixed_rule
                 .get_or_insert_with(|| crate::predict::FixedDurationRule::new(obs.n, 5.0));
@@ -207,6 +207,23 @@ impl Policy for Star {
         };
         if self.kind == DeciderKind::Early {
             self.early_prev_predictions = obs.predicted_times.to_vec();
+        }
+
+        // dead workers (fault injection) are outside the round: give them
+        // the live minimum so they neither read as stragglers nor distort
+        // the x-order grouping the driver re-forms over survivors
+        let live_min = predicted
+            .iter()
+            .zip(obs.live)
+            .filter(|&(_, &a)| a)
+            .map(|(&p, _)| p)
+            .fold(f64::INFINITY, f64::min);
+        if live_min.is_finite() {
+            for (p, &a) in predicted.iter_mut().zip(obs.live) {
+                if !a {
+                    *p = live_min;
+                }
+            }
         }
 
         let flags = crate::predict::straggler_flags(&predicted);
@@ -394,6 +411,9 @@ mod tests {
     use super::*;
     use crate::models::ZOO;
 
+    /// all-live mask large enough for every test's worker count
+    const LIVE: [bool; 16] = [true; 16];
+
     fn obs<'a>(
         predicted: &'a [f64],
         last: &'a [f64],
@@ -412,6 +432,7 @@ mod tests {
             last_times: last,
             value: 50.0,
             predicted_stragglers: flags,
+            live: &LIVE[..predicted.len()],
         }
     }
 
@@ -435,6 +456,20 @@ mod tests {
         assert_ne!(d.mode, DriverMode::Sync(SyncMode::Ssgd));
         assert!(d.pause_s > 0.0);
         assert!(d.lr_rescaled);
+    }
+
+    #[test]
+    fn dead_worker_is_not_a_straggler() {
+        let mut star = Star::new(DeciderKind::Heuristic);
+        let mut p = vec![0.3; 8];
+        p[0] = 3.0; // would be a straggler…
+        let f = crate::predict::straggler_flags(&p);
+        let mut o = obs(&p, &p, &f, Arch::Ps);
+        let mut live = vec![true; 8];
+        live[0] = false; // …but it is dead: the driver runs without it
+        o.live = &live;
+        let d = star.decide(&o);
+        assert_eq!(d.mode, DriverMode::Sync(SyncMode::Ssgd), "no live straggler => SSGD");
     }
 
     #[test]

@@ -5,6 +5,16 @@
 //! parameter update fire, from how many gradient reports, and at what
 //! staleness — consumed by both the simulator driver and the real PJRT
 //! training loop in `examples/e2e_train.rs`.
+//!
+//! Conservation contract (pinned by `tests/proptest_coordinator.rs`):
+//! every gradient report is applied in exactly one update — except the
+//! AR ring, where a removed straggler that misses the parent wait is
+//! *explicitly* dropped, and the driver-level first-K rule
+//! ([`crate::driver::first_k_split`]), which drops everything after the
+//! K-th arrival. Under fault injection the driver evaluates these round
+//! rules over the *live* membership (DESIGN.md §7); the planner here
+//! stays membership-agnostic — callers pass the durations of whichever
+//! workers are actually in the round.
 
 use crate::simrng::Rng;
 

@@ -1,0 +1,238 @@
+//! Golden-trace regression suite: a small seeded PS and AR replay —
+//! *including* a seeded fault plan, so the resilience machinery is under
+//! regression too — runs through every policy (STAR-H/ML/Early + the six
+//! §V baselines); the resulting `Summary` metrics are snapshotted to
+//! `tests/golden/{ps,ar}.json` and compared within 1e-9.
+//!
+//! Workflow (DESIGN.md §7.3):
+//! * normal runs compare against the committed snapshots and fail on any
+//!   drift — an unintended semantic change in the simulator, a policy,
+//!   or the fault engine shows up as a diff here;
+//! * `GOLDEN_UPDATE=1 cargo test --test golden_traces` regenerates the
+//!   snapshots after an *intended* change (commit the diff);
+//! * a missing snapshot file is bootstrapped on first run (and the run
+//!   passes), so a fresh checkout without goldens self-heals — commit
+//!   the generated files to arm the regression.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use star::baselines::make_policy;
+use star::driver::{Driver, DriverConfig, JobStats};
+use star::exp::summarize;
+use star::faults::{generate_plan, FaultConfig};
+use star::jsonio::{self, Json};
+use star::trace::{generate, Arch, TraceConfig};
+
+/// Every policy of the §V evaluation: STAR-H / STAR-ML / STAR- (early)
+/// plus the six comparison systems.
+const POLICIES: [&str; 9] = [
+    "SSGD",
+    "ASGD",
+    "Sync-Switch",
+    "LB-BSP",
+    "LGC",
+    "Zeno++",
+    "STAR-H",
+    "STAR-ML",
+    "STAR-",
+];
+
+const TRACE_SEED: u64 = 42;
+const FAULT_SEED: u64 = 9;
+
+fn build_driver(arch: Arch, system: &str) -> Driver {
+    let trace =
+        generate(&TraceConfig { jobs: 3, span_s: 300.0, seed: TRACE_SEED, ..Default::default() });
+    let faults = generate_plan(
+        &FaultConfig { seed: FAULT_SEED, ..Default::default() }.with_rate(3.0),
+        &trace,
+        6000.0,
+        8,
+    );
+    let cfg = DriverConfig {
+        arch,
+        seed: TRACE_SEED,
+        record_series: false,
+        max_updates_per_job: 2500,
+        max_iters_per_job: 5000,
+        max_job_duration_s: 5000.0,
+        faults,
+        ..Default::default()
+    };
+    let name = system.to_string();
+    Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system")))
+}
+
+fn replay(arch: Arch, system: &str) -> Vec<JobStats> {
+    build_driver(arch, system).run().0
+}
+
+/// Summary metrics of one policy's replay as a JSON object.
+fn snapshot(stats: &[JobStats]) -> Json {
+    let s = summarize(stats);
+    let updates: u64 = stats.iter().map(|x| x.updates).sum();
+    let iters: u64 = stats.iter().map(|x| x.iters_total).sum();
+    jsonio::obj(vec![
+        ("tta", jsonio::nums(&s.tta)),
+        ("jct", jsonio::nums(&s.jct)),
+        ("acc", jsonio::nums(&s.acc)),
+        ("ppl", jsonio::nums(&s.ppl)),
+        ("stragglers", jsonio::nums(&s.stragglers)),
+        ("downtime", jsonio::nums(&s.downtime)),
+        ("rollbacks", jsonio::nums(&s.rollbacks)),
+        ("tta_reached", jsonio::num(s.tta_reached as f64)),
+        ("jobs", jsonio::num(s.jobs as f64)),
+        ("updates", jsonio::num(updates as f64)),
+        ("iters", jsonio::num(iters as f64)),
+    ])
+}
+
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Structural diff with 1e-9 numeric tolerance; appends one line per
+/// mismatch so a drift report names every affected metric.
+fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            if !close(*a, *b) {
+                errs.push(format!("{path}: {a} != {b}"));
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                errs.push(format!("{path}: length {} != {}", a.len(), b.len()));
+                return;
+            }
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                diff(&format!("{path}[{i}]"), x, y, errs);
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for key in a.keys().chain(b.keys().filter(|k| !a.contains_key(*k))) {
+                match (a.get(key), b.get(key)) {
+                    (Some(x), Some(y)) => diff(&format!("{path}/{key}"), x, y, errs),
+                    (Some(_), None) => errs.push(format!("{path}/{key}: missing in new run")),
+                    (None, Some(_)) => errs.push(format!("{path}/{key}: not in golden file")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (a, b) => {
+            if a != b {
+                errs.push(format!("{path}: {a:?} != {b:?}"));
+            }
+        }
+    }
+}
+
+fn run_golden(arch: Arch, file: &str) {
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    for sys in POLICIES {
+        doc.insert(sys.to_string(), snapshot(&replay(arch, sys)));
+    }
+    let got = Json::Obj(doc);
+
+    let path = golden_path(file);
+    let update = std::env::var("GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        // GOLDEN_REQUIRE=1 (for CI once snapshots are committed) turns a
+        // missing snapshot into a failure instead of a silent bootstrap —
+        // bootstrap-against-self can never detect cross-commit drift
+        let require = std::env::var("GOLDEN_REQUIRE").map(|v| v == "1").unwrap_or(false);
+        assert!(
+            update || !require,
+            "golden snapshot {} is missing and GOLDEN_REQUIRE=1",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_string_pretty()).unwrap();
+        eprintln!(
+            "golden: {} {}",
+            if update { "regenerated" } else { "bootstrapped (commit it to arm the regression)" },
+            path.display()
+        );
+        return;
+    }
+
+    let want = Json::parse_file(&path).unwrap();
+    let mut errs = Vec::new();
+    diff("", &want, &got, &mut errs);
+    assert!(
+        errs.is_empty(),
+        "golden drift vs {} ({} metric(s)):\n  {}\n\
+         If this change is intended, regenerate with:\n  \
+         GOLDEN_UPDATE=1 cargo test --test golden_traces",
+        path.display(),
+        errs.len(),
+        errs.join("\n  ")
+    );
+}
+
+#[test]
+fn golden_ps_replay_all_policies() {
+    run_golden(Arch::Ps, "ps.json");
+}
+
+#[test]
+fn golden_ar_replay_all_policies() {
+    run_golden(Arch::AllReduce, "ar.json");
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: the same trace + fault plan must replay bit-identically
+// ---------------------------------------------------------------------------
+
+fn assert_bit_identical(a: &[JobStats], b: &[JobStats]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.job, y.job);
+        assert_eq!(x.start_s, y.start_s, "job {}", x.job);
+        assert_eq!(x.end_s, y.end_s, "job {}", x.job);
+        assert_eq!(x.tta_s, y.tta_s, "job {}", x.job);
+        assert_eq!(x.jct_s, y.jct_s, "job {}", x.job);
+        assert_eq!(x.converged_value, y.converged_value, "job {}", x.job);
+        assert_eq!(x.updates, y.updates, "job {}", x.job);
+        assert_eq!(x.iters_total, y.iters_total, "job {}", x.job);
+        assert_eq!(x.straggler_iters, y.straggler_iters, "job {}", x.job);
+        assert_eq!(x.straggler_episodes, y.straggler_episodes, "job {}", x.job);
+        assert_eq!(x.mode_switches, y.mode_switches, "job {}", x.job);
+        assert_eq!(x.downtime_s, y.downtime_s, "job {}", x.job);
+        assert_eq!(x.rollbacks, y.rollbacks, "job {}", x.job);
+        assert_eq!(x.decision_count, y.decision_count, "job {}", x.job);
+        assert_eq!(x.value_series, y.value_series, "job {}", x.job);
+    }
+}
+
+#[test]
+fn faulted_replay_is_bit_identical_including_event_counts() {
+    // pins the Engine's FIFO tie-break and the per-stream `simrng`
+    // discipline: identical inputs must produce identical event machines,
+    // down to the number of processed events
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        for sys in ["SSGD", "STAR-H"] {
+            let (a, _, ea) = build_driver(arch, sys).run_counted();
+            let (b, _, eb) = build_driver(arch, sys).run_counted();
+            assert_eq!(ea, eb, "{sys} {arch:?}: event counts diverged");
+            assert_bit_identical(&a, &b);
+        }
+    }
+}
+
+#[test]
+fn fault_plan_actually_bites_in_golden_runs() {
+    // the goldens must exercise the fault machinery, not just tolerate it
+    let stats = replay(Arch::Ps, "SSGD");
+    let downtime: f64 = stats.iter().map(|s| s.downtime_s).sum();
+    let rollbacks: u64 = stats.iter().map(|s| s.rollbacks).sum();
+    assert!(
+        downtime > 0.0 || rollbacks > 0,
+        "golden fault plan produced no observable failures"
+    );
+}

@@ -4,6 +4,7 @@
 
 use star::cluster::{water_fill, water_fill_into, Cluster, ClusterConfig, Res, Role, Task};
 use star::decide::{choose_ps_heuristic, expected_reports, time_to_progress_ps};
+use star::driver::first_k_split;
 use star::predict::{deviation_ratios, straggler_flags};
 use star::prevent::{equalize_group, sensitivity_deprivation, CommTree, Victim};
 use star::progress::ProgressModel;
@@ -58,6 +59,138 @@ fn prop_every_plan_partitions_workers() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_round_conservation_across_all_modes() {
+    // every gradient report is applied in exactly one update — or, for the
+    // AR ring, explicitly left out when it misses the aggregation window —
+    // and update batch sizes agree with `shrinks_batch`
+    forall("round-conservation", 300, times_gen, |times| {
+        let n = times.len();
+        let mut rng = Rng::seeded(n as u64 ^ 0xC0FFEE);
+        let modes = vec![
+            SyncMode::Ssgd,
+            SyncMode::Asgd,
+            SyncMode::StaticX(rng.usize(1, n)),
+            SyncMode::DynamicX,
+            SyncMode::ArRing { removed: rng.usize(0, n - 1), tw_ms: rng.range(0.0, 300.0) },
+        ];
+        for mode in modes {
+            let p = plan_round(&mode, times, times);
+            let used: usize = p.updates.iter().map(|u| u.members.len()).sum();
+            if used != p.reports_used {
+                return Err(format!(
+                    "{mode:?}: reports_used {} != member total {used}",
+                    p.reports_used
+                ));
+            }
+            let mut seen = vec![false; n];
+            for u in &p.updates {
+                if u.members.is_empty() {
+                    return Err(format!("{mode:?}: empty update"));
+                }
+                for &m in &u.members {
+                    if seen[m] {
+                        return Err(format!("{mode:?}: worker {m} applied twice"));
+                    }
+                    seen[m] = true;
+                }
+            }
+            let applied = seen.iter().filter(|&&s| s).count();
+            match &mode {
+                SyncMode::ArRing { removed, .. } => {
+                    // ring members always apply; removed stragglers apply
+                    // iff they beat the window — the rest are the
+                    // explicitly dropped set
+                    let removed = (*removed).min(n - 1);
+                    if applied < n - removed {
+                        return Err(format!("{mode:?}: a ring member's report vanished"));
+                    }
+                    if n - applied > removed {
+                        return Err(format!("{mode:?}: dropped more than the removed set"));
+                    }
+                }
+                _ => {
+                    if applied != n {
+                        return Err(format!(
+                            "{mode:?}: {applied}/{n} reports applied (none may drop)"
+                        ));
+                    }
+                }
+            }
+            // batch sizes vs shrinks_batch
+            let max_batch = p.updates.iter().map(|u| u.members.len()).max().unwrap_or(0);
+            if max_batch > n {
+                return Err(format!("{mode:?}: batch {max_batch} > {n}"));
+            }
+            if !mode.shrinks_batch(n) && p.updates.iter().any(|u| u.members.len() != n) {
+                return Err(format!(
+                    "{mode:?}: claims the full batch but fired a partial update"
+                ));
+            }
+            match &mode {
+                SyncMode::Asgd if n > 1 => {
+                    if max_batch != 1 {
+                        return Err("ASGD: batch must be exactly one report".into());
+                    }
+                }
+                SyncMode::StaticX(x) if *x < n => {
+                    if max_batch > *x {
+                        return Err(format!("{x}-order: batch {max_batch} > x"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_first_k_applies_k_and_drops_the_rest() {
+    // the driver's LGC first-K rule: once K live reports have arrived,
+    // the first K (by arrival) form the update and the rest are
+    // explicitly dropped — nothing is lost, nothing applied twice
+    forall(
+        "first-k",
+        300,
+        |rng| {
+            let n = rng.usize(1, 12);
+            let k = rng.usize(1, 14);
+            let live = rng.usize(1, n);
+            let mut workers: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut workers);
+            let arrived = rng.usize(0, n);
+            workers.truncate(arrived);
+            (workers, k, live)
+        },
+        |(arrival, k, live)| {
+            let (members, dropped) = first_k_split(arrival, *k, *live);
+            let kk = (*k).clamp(1, (*live).max(1));
+            if arrival.len() < kk {
+                if !members.is_empty() || !dropped.is_empty() {
+                    return Err("below threshold: all reports must stay pending".into());
+                }
+                return Ok(());
+            }
+            if members.len() != kk {
+                return Err(format!("update batch {} != clamped K {kk}", members.len()));
+            }
+            if members[..] != arrival[..kk] {
+                return Err("members must be the first K arrivals".into());
+            }
+            // conservation: members ++ dropped is exactly the arrival set
+            let mut all = members.clone();
+            all.extend(dropped.iter().copied());
+            if all != *arrival {
+                return Err(format!(
+                    "report lost or duplicated: {all:?} vs {arrival:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -20,7 +20,7 @@ fn run(arch: Arch, system: &str, cache: bool) -> (Vec<JobStats>, Vec<ServerRecor
         ..Default::default()
     };
     let name = system.to_string();
-    let mut driver = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name)));
+    let mut driver = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system")));
     driver.cluster.set_share_cache_enabled(cache);
     driver.run()
 }

@@ -9,7 +9,7 @@ fn run(system: &str, arch: Arch, jobs: usize) -> Vec<JobStats> {
     let trace = generate(&TraceConfig { jobs, span_s: jobs as f64 * 280.0, ..Default::default() });
     let cfg = DriverConfig { arch, record_series: false, ..Default::default() };
     let name = system.to_string();
-    let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name))).run();
+    let (stats, _) = Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system"))).run();
     stats
 }
 
@@ -109,8 +109,8 @@ fn seeds_change_outcomes_but_structure_holds() {
     let trace_a = generate(&TraceConfig { jobs: 5, span_s: 1500.0, seed: 1, ..Default::default() });
     let trace_b = generate(&TraceConfig { jobs: 5, span_s: 1500.0, seed: 2, ..Default::default() });
     let cfg = |seed| DriverConfig { seed, record_series: false, ..Default::default() };
-    let (a, _) = Driver::new(cfg(1), trace_a, Box::new(|_| make_policy("SSGD"))).run();
-    let (b, _) = Driver::new(cfg(2), trace_b, Box::new(|_| make_policy("SSGD"))).run();
+    let (a, _) = Driver::new(cfg(1), trace_a, Box::new(|_| make_policy("SSGD").expect("known system"))).run();
+    let (b, _) = Driver::new(cfg(2), trace_b, Box::new(|_| make_policy("SSGD").expect("known system"))).run();
     assert_eq!(a.len(), 5);
     assert_eq!(b.len(), 5);
     let ja: f64 = a.iter().map(|s| s.jct_s).sum();
@@ -135,4 +135,70 @@ fn prediction_confusion_is_populated_for_star() {
     );
     assert!(fp < 0.5, "fp {fp}");
     assert!(fn_ < 0.6, "fn {fn_}");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection (resilience subsystem)
+// ---------------------------------------------------------------------------
+
+fn run_faulted(system: &str, arch: Arch, jobs: usize, rate: f64) -> Vec<JobStats> {
+    let trace = generate(&TraceConfig { jobs, span_s: jobs as f64 * 280.0, ..Default::default() });
+    let faults = star::faults::plan_at_rate(
+        rate,
+        0,
+        &trace,
+        star::faults::span_for(&trace, 20_000.0),
+        8,
+    );
+    let cfg = DriverConfig {
+        arch,
+        record_series: false,
+        faults,
+        // heavy failure rates can keep a job from ever converging; bound
+        // the run instead of riding the 40 000 s duration cap
+        max_job_duration_s: 15_000.0,
+        max_updates_per_job: 30_000,
+        max_iters_per_job: 50_000,
+        ..Default::default()
+    };
+    let name = system.to_string();
+    let (stats, _) =
+        Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system"))).run();
+    stats
+}
+
+#[test]
+fn every_eval_system_survives_injected_failures() {
+    // worker crashes, PS rollbacks, server outages and degradation
+    // windows on both architectures: every policy must still complete
+    // every job without scheduling dead workers
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        for sys in star::exp::eval::eval_systems(arch) {
+            let stats = run_faulted(sys, arch, 4, 4.0);
+            assert_eq!(stats.len(), 4, "{sys} {arch:?}");
+            for s in &stats {
+                assert!(s.updates > 0, "{sys} {arch:?}: no updates under faults");
+                assert!(s.converged_value.is_finite(), "{sys} {arch:?}");
+                assert!(s.downtime_s >= 0.0 && s.downtime_s.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn faults_increase_ssgd_tta_on_the_same_trace() {
+    let clean = run("SSGD", Arch::Ps, 4);
+    let faulted = run_faulted("SSGD", Arch::Ps, 4, 6.0);
+    let score = |v: &[JobStats]| -> f64 {
+        v.iter().map(|s| s.tta_s.unwrap_or(s.jct_s)).sum::<f64>()
+    };
+    assert!(
+        score(&faulted) > score(&clean),
+        "injected failures must cost SSGD time: {} !> {}",
+        score(&faulted),
+        score(&clean)
+    );
+    let touched: f64 = faulted.iter().map(|s| s.downtime_s).sum();
+    let rollbacks: u64 = faulted.iter().map(|s| s.rollbacks).sum();
+    assert!(touched > 0.0 || rollbacks > 0, "plan must actually bite");
 }
