@@ -46,7 +46,7 @@ fn run() -> star::Result<()> {
     println!("\nSTAR-H picks: {} (est {:.3})\n", d.mode.name(), d.est);
 
     // validate in the simulator: chosen mode vs full ring
-    let mk_fixed = |mode: SyncMode| -> Box<dyn Fn(&JobSpec) -> Box<dyn star::driver::Policy>> {
+    let mk_fixed = |mode: SyncMode| -> star::driver::PolicyFactory {
         Box::new(move |_| {
             Box::new(star::exp::measure::Fixed {
                 mode: DriverMode::Sync(mode.clone()),

@@ -109,7 +109,7 @@ impl Policy for Lgc {
         // the driver's AR ring is chained over the live set — so the
         // removal count is live-relative too (dead workers are already
         // outside the ring; counting them here would shrink it twice)
-        let live = obs.live.iter().filter(|&&a| a).count().max(1);
+        let live = obs.live_set().count().max(1);
         let k = self.k.min(live);
         let mut d = match obs.arch {
             Arch::Ps => PolicyDecision::simple(DriverMode::FirstK(k)),
@@ -207,7 +207,7 @@ impl Policy for LbBsp {
             obs.last_times.iter().map(|&t| if t.is_finite() { t } else { f64::NAN }).collect();
         // batch resizing only ever shifts load between *live* workers —
         // a dead worker's stale time must not be mistaken for "fast"
-        let live_ids: Vec<usize> = (0..obs.n).filter(|&w| obs.live[w]).collect();
+        let live_ids: Vec<usize> = obs.live_set().ids();
         if live_ids.len() >= 2 && live_ids.iter().all(|&w| last[w].is_finite()) {
             let fast = *live_ids
                 .iter()
@@ -318,6 +318,16 @@ pub fn baseline_names(arch: Arch) -> Vec<&'static str> {
         Arch::Ps => vec!["SSGD", "ASGD", "Sync-Switch", "LB-BSP", "LGC", "Zeno++"],
         Arch::AllReduce => vec!["SSGD", "LB-BSP", "LGC"],
     }
+}
+
+/// Validate a whole system list up-front. Sweep cells run on worker
+/// threads where an unknown name is a panic, not an `Err` — callers
+/// check the full list here before spawning anything.
+pub fn validate_systems<S: AsRef<str>>(systems: &[S]) -> crate::Result<()> {
+    for s in systems {
+        make_policy(s.as_ref())?;
+    }
+    Ok(())
 }
 
 /// Instantiate a policy (baseline or STAR variant) by its §V name.

@@ -3,13 +3,15 @@
 //!
 //! ```text
 //! experiments <id> [--jobs N] [--seed S] [--out results] [--quick]
-//!             [--fault-rate R] [--fault-seed S]
+//!             [--fault-rate R] [--fault-seed S] [--threads N]
 //!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, all }
 //! ```
 //!
 //! `--fault-rate` injects a seeded failure plan (worker/PS crashes,
 //! server outages, degradation windows — DESIGN.md §7) into every run;
 //! the `resilience` experiment sweeps its own rates and ignores it.
+//! `--threads N` caps the parallel sweep harness (`exp::sweep`); 0 or
+//! absent = all available cores. Output is byte-identical at any value.
 
 use star::cli::Args;
 use star::exp::{dispatch, ExpCtx};
@@ -19,13 +21,15 @@ fn main() {
     let Some(id) = args.subcommand() else {
         eprintln!(
             "usage: experiments <figN|tab1|resilience|all> [--jobs N] [--seed S] [--out DIR] \
-             [--quick] [--fault-rate R] [--fault-seed S]\n\
+             [--quick] [--fault-rate R] [--fault-seed S] [--threads N]\n\
              experiment index: DESIGN.md §4"
         );
         std::process::exit(2);
     };
     let run = || -> star::Result<()> {
-        args.check_known(&["jobs", "seed", "out", "quick", "fault-rate", "fault-seed"])?;
+        args.check_known(&[
+            "jobs", "seed", "out", "quick", "fault-rate", "fault-seed", "threads",
+        ])?;
         let ctx = ExpCtx {
             jobs: args.usize_or("jobs", 120)?,
             seed: args.u64_or("seed", 0)?,
@@ -33,6 +37,7 @@ fn main() {
             quick: args.flag("quick"),
             fault_rate: args.f64_or("fault-rate", 0.0)?,
             fault_seed: args.u64_or("fault-seed", 0)?,
+            threads: star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?),
         };
         let t0 = std::time::Instant::now();
         dispatch(id, &ctx)?;

@@ -1,0 +1,35 @@
+//! Event vocabulary of the trace driver.
+//!
+//! The driver is a discrete-event machine: every state change enters
+//! through exactly one of the [`Event`] variants below, scheduled on a
+//! stable-heap queue ([`crate::sim::Engine`]) whose ties break FIFO by
+//! insertion sequence — the property that makes replays bit-identical
+//! (pinned by `tests/golden_traces.rs` via processed-event counts).
+//!
+//! Layering (DESIGN.md §8): this module owns *what can happen*;
+//! [`super::membership`] owns *who is in the round*, [`super::itertime`]
+//! owns *how long an iteration takes*, [`super::faulting`] owns the §7
+//! failure transitions, and `mod.rs` orchestrates.
+
+use crate::sim::Engine;
+
+/// One schedulable driver event.
+pub enum Event {
+    /// a job from the trace reaches its arrival time
+    Arrive(usize),
+    /// a worker's iteration completes (stale if `iter` no longer matches)
+    WorkerDone { job: usize, worker: usize, iter: u64 },
+    /// the AR ring's parent-wait window closes (§IV-B)
+    ArFlush { job: usize },
+    /// periodic server-utilization sampling tick (Fig 9)
+    ServerSample,
+    /// an entry of the fault plan comes due (index into `cfg.faults`)
+    Fault(usize),
+    /// a crashed worker finishes restarting
+    WorkerRestart { job: usize, worker: usize },
+    /// a crashed PS finishes restarting
+    PsRestart { job: usize, ps_idx: usize },
+}
+
+/// The driver's event queue: a stable binary heap with FIFO tie-break.
+pub type EventQueue = Engine<Event>;

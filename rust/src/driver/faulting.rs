@@ -1,0 +1,241 @@
+//! Fault-injection layer (DESIGN.md §7): plan-event translation plus the
+//! crash / restart / outage transitions of the driver state machine.
+//!
+//! The membership consequences of a fault (shrunken barriers, re-formed
+//! groups, re-chained rings) live in [`super::membership`]; this module
+//! owns the *state* transitions — suspending cluster tasks, rollback to
+//! the last checkpoint, restart-deadline extension, downtime accrual —
+//! and hands control back to the orchestrator's `process_pending` /
+//! `check_termination` so the shrunken round can fire.
+
+use crate::faults::Fault;
+
+use super::*;
+
+/// Translate a fault plan into driver inputs: degradation windows are
+/// stateless capacity cuts, registered with the cluster up-front so share
+/// epochs see them at any time; everything else becomes a scheduled
+/// [`Event::Fault`].
+pub(super) fn register_plan(plan: &FaultPlan, cluster: &mut Cluster, engine: &mut EventQueue) {
+    for (i, pf) in plan.faults.iter().enumerate() {
+        match pf.fault {
+            Fault::Degradation { server, dur_s, cpu_frac, bw_frac } => {
+                if server < cluster.server_count() {
+                    cluster.add_degradation(server, pf.at, pf.at + dur_s, cpu_frac, bw_frac);
+                }
+            }
+            _ => engine.schedule_at(pf.at, Event::Fault(i)),
+        }
+    }
+}
+
+impl Driver {
+    pub(super) fn handle_fault(&mut self, idx: usize, t: f64) {
+        let fault = self.cfg.faults.faults[idx].fault.clone();
+        match fault {
+            Fault::WorkerCrash { job, rank, restart_s } => {
+                self.crash_worker(job, rank, t, restart_s);
+            }
+            Fault::PsCrash { job, idx, restart_s } => {
+                self.crash_ps(job, idx, t, restart_s);
+            }
+            Fault::ServerOutage { server, dur_s, restart_s } => {
+                self.server_outage(server, t, dur_s, restart_s);
+            }
+            // degradation windows are registered with the cluster at
+            // construction and never become events
+            Fault::Degradation { .. } => {}
+        }
+    }
+
+    /// Worker `rank` of `job` dies at `t`: its in-flight gradient is
+    /// lost, its cluster task suspends (invalidating the share cache),
+    /// and the current round re-forms over the survivors. It restarts
+    /// `restart_s` later. Crashing an *already-down* worker (a server
+    /// outage catching one mid-restart) extends its restart deadline —
+    /// the earlier pending restart event goes stale.
+    pub(super) fn crash_worker(&mut self, job: usize, worker: usize, t: f64, restart_s: f64) {
+        let due = t + restart_s.max(0.0);
+        let task = {
+            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
+            if run.finished || worker >= run.job.workers {
+                return;
+            }
+            if !run.alive[worker] {
+                // already down: only push the restart deadline out
+                if run.restart_at[worker].is_nan() || run.restart_at[worker] < due {
+                    run.restart_at[worker] = due;
+                    self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
+                }
+                return;
+            }
+            run.alive[worker] = false;
+            run.busy[worker] = false;
+            // invalidate the in-flight WorkerDone (its iter no longer
+            // matches); the skipped index leaves at most one permanently
+            // incomplete straggler-accounting row per crash
+            run.iter_idx[worker] += 1;
+            run.pending.retain(|&(w, _, _)| w != worker);
+            run.down_since[worker] = t;
+            run.restart_at[worker] = due;
+            run.straggling[worker] = false;
+            run.placement.worker_tasks[worker]
+        };
+        self.cluster.suspend_task(task);
+        self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
+        // a shrunken barrier / group may now be complete
+        self.process_pending(job, t);
+        self.check_termination(job, t);
+    }
+
+    pub(super) fn worker_restart(&mut self, job: usize, worker: usize, t: f64) {
+        let task = {
+            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
+            if run.finished || worker >= run.job.workers || run.alive[worker] {
+                return;
+            }
+            if t < run.restart_at[worker] {
+                return; // stale: a later fault extended the restart
+            }
+            run.alive[worker] = true;
+            if run.down_since[worker].is_finite() {
+                run.stats.downtime_s += t - run.down_since[worker];
+            }
+            run.down_since[worker] = f64::NAN;
+            run.restart_at[worker] = f64::NAN;
+            run.placement.worker_tasks[worker]
+        };
+        self.cluster.resume_task(task);
+        self.start_iteration(job, worker, t);
+    }
+
+    /// PS `idx` of `job` dies at `t`: parameter state is lost — progress
+    /// rolls back to the last checkpoint, unapplied reports are
+    /// discarded, and updates stall until the PS restarts `restart_s`
+    /// later. Crashing an already-down PS (server outage mid-restart)
+    /// extends the restart deadline without a second rollback — the
+    /// parameter state is already lost.
+    pub(super) fn crash_ps(&mut self, job: usize, idx: usize, t: f64, restart_s: f64) {
+        let due = t + restart_s.max(0.0);
+        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished && idx < run.placement.ps_tasks.len() => {
+                run.placement.ps_tasks[idx]
+            }
+            _ => return,
+        };
+        if self.cluster.is_suspended(task) {
+            // already down: only push the restart deadline out
+            let run = self.jobs[job].as_mut().expect("checked above");
+            if run.ps_restart_at[idx].is_nan() || run.ps_restart_at[idx] < due {
+                run.ps_restart_at[idx] = due;
+                self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
+            }
+            return;
+        }
+        self.cluster.suspend_task(task);
+        {
+            let run = self.jobs[job].as_mut().expect("checked above");
+            let now_rel = t - run.started_at;
+            run.progress.restore(&run.checkpoint, now_rel);
+            run.stats.rollbacks += 1;
+            // reports computed against the lost parameter state are
+            // discarded; `ps_down` stalls all updates until the restart
+            // (deliberately NOT via `pause_until`: a long pause would make
+            // iteration starts query cluster shares far in the future,
+            // outside the share engine's non-decreasing-time contract).
+            // Downtime is measured as the *realized* stall window (like
+            // worker downtime), so overlapping PS crashes — e.g. a server
+            // outage hitting several PSs of one job — count once
+            if run.ps_down == 0 {
+                run.ps_down_since = t;
+            }
+            run.ps_restart_at[idx] = due;
+            run.pending.clear();
+            run.ps_down += 1;
+            run.ar_flush_scheduled = false;
+        }
+        self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
+        self.check_termination(job, t);
+    }
+
+    pub(super) fn ps_restart(&mut self, job: usize, ps_idx: usize, t: f64) {
+        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished && ps_idx < run.placement.ps_tasks.len() => {
+                run.placement.ps_tasks[ps_idx]
+            }
+            _ => return,
+        };
+        if !self.cluster.is_suspended(task) {
+            return;
+        }
+        {
+            let run = self.jobs[job].as_ref().expect("checked above");
+            if t < run.ps_restart_at[ps_idx] {
+                return; // stale: a later fault extended the restart
+            }
+        }
+        self.cluster.resume_task(task);
+        let all_up = {
+            let run = self.jobs[job].as_mut().expect("checked above");
+            run.ps_restart_at[ps_idx] = f64::NAN;
+            run.ps_down = run.ps_down.saturating_sub(1);
+            if run.ps_down == 0 && run.ps_down_since.is_finite() {
+                run.stats.downtime_s += t - run.ps_down_since;
+                run.ps_down_since = f64::NAN;
+            }
+            run.ps_down == 0
+        };
+        if all_up {
+            self.process_pending(job, t);
+            self.kick_idle_workers(job, t);
+        }
+    }
+
+    /// Whole-server outage: every co-located task of every running job on
+    /// `server` fails at once — workers crash, PSs roll back — and all of
+    /// them restart once the server returns (`dur_s + restart_s` later).
+    /// Tasks already down when the outage hits have their restart
+    /// deadlines extended (crash_worker/crash_ps handle that case).
+    pub(super) fn server_outage(&mut self, server: usize, t: f64, dur_s: f64, restart_s: f64) {
+        let mut workers: Vec<(usize, usize)> = Vec::new();
+        let mut pss: Vec<(usize, usize)> = Vec::new();
+        for (job, slot) in self.jobs.iter().enumerate() {
+            let Some(run) = slot else { continue };
+            if run.finished {
+                continue;
+            }
+            for (w, &tid) in run.placement.worker_tasks.iter().enumerate() {
+                if self.cluster.task(tid).server == server {
+                    workers.push((job, w));
+                }
+            }
+            for (i, &tid) in run.placement.ps_tasks.iter().enumerate() {
+                if self.cluster.task(tid).server == server {
+                    pss.push((job, i));
+                }
+            }
+        }
+        let back = dur_s.max(0.0) + restart_s.max(0.0);
+        for (job, w) in workers {
+            self.crash_worker(job, w, t, back);
+        }
+        for (job, i) in pss {
+            self.crash_ps(job, i, t, back);
+        }
+    }
+
+    /// Start an iteration on every live worker that is neither computing
+    /// nor waiting in a pending set (used after PS recovery, when cleared
+    /// reports would otherwise leave reporters idle forever).
+    pub(super) fn kick_idle_workers(&mut self, job: usize, t: f64) {
+        let idle: Vec<usize> = match self.jobs.get(job).and_then(|j| j.as_ref()) {
+            Some(run) if !run.finished => (0..run.job.workers)
+                .filter(|&w| run.alive[w] && !run.busy[w] && !waiting_in_pending(run, w))
+                .collect(),
+            _ => return,
+        };
+        for w in idle {
+            self.start_iteration(job, w, t);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! §2.2 iteration-time composition: one worker's iteration duration from
+//! its resource shares at the iteration's start.
+//!
+//! * preprocess ∝ `worker_cpu / cpu_share` (full-demand cost scaled by
+//!   the granted CPU),
+//! * GPU compute constant per model — homogeneous GPUs — with ±2%
+//!   jitter drawn from the driver's RNG stream,
+//! * communication ∝ `bytes / min(worker link, PS fan-in / flows)` with
+//!   the §IV-D2b tree's hop penalty (PS), or `bytes / link` (AR).
+//!
+//! The function mutates `cluster` (share-epoch fills) and `rng` (GPU
+//! jitter) in exactly the order the monolithic driver did, so replays
+//! stay bit-identical across the refactor.
+
+use crate::cluster::{Cluster, TaskId};
+use crate::models::ModelSpec;
+use crate::prevent::CommTree;
+use crate::simrng::Rng;
+use crate::trace::Arch;
+
+use super::stats::IterBreakdown;
+
+/// Immutable inputs of one composition: the job's architecture, model
+/// spec, installed communication tree, the worker/PS task handles, and
+/// the worker's current batch fraction (LB-BSP resizing).
+pub struct IterInputs<'a> {
+    pub arch: Arch,
+    pub spec: &'static ModelSpec,
+    pub tree: &'a CommTree,
+    pub worker_task: TaskId,
+    pub ps_tasks: &'a [TaskId],
+    pub batch_frac: f64,
+}
+
+/// Compose one worker's iteration breakdown from cluster state at `t`.
+///
+/// Share queries are batched through the cluster's epoch cache: the
+/// worker's CPU+BW pair and the PS fan-in sum cost one water-fill per
+/// (server, resource) per simulated instant, no matter how many workers
+/// start an iteration at that instant (SSGD rounds start a whole group
+/// at once).
+pub fn breakdown(cluster: &mut Cluster, rng: &mut Rng, inp: &IterInputs, t: f64) -> IterBreakdown {
+    let spec = inp.spec;
+    let bf = inp.batch_frac;
+    let (cpu_share, bw_share) = cluster.worker_shares(inp.worker_task, t);
+    let cpu_share = cpu_share.max(1e-3);
+    let bw_share = bw_share.max(1e-3);
+
+    // preprocess: pre_cpu_ms at full demand share, scaled by granted CPU
+    let pre_s = spec.pre_cpu_ms / 1000.0 * bf * (spec.worker_cpu / cpu_share);
+    // GPU compute: constant per model (homogeneous GPUs), mild jitter
+    let gpu_s = spec.gpu_ms / 1000.0 * bf * rng.range(0.98, 1.02);
+
+    // communication: min(worker link, PS-side aggregate / direct flows)
+    let gbits = 2.0 * spec.grad_mb * 8.0 / 1000.0;
+    let comm_s = match inp.arch {
+        Arch::Ps => {
+            let ps_share: f64 = cluster.bw_share_sum(inp.ps_tasks, t).max(1e-3);
+            let flows = inp.tree.effective_flows() as f64;
+            let eff = bw_share.min(ps_share / flows);
+            gbits / eff * inp.tree.hop_penalty(0.03)
+        }
+        Arch::AllReduce => gbits / bw_share,
+    };
+    let total = pre_s + gpu_s + comm_s;
+    IterBreakdown { pre_s, gpu_s, comm_s, total_s: total, cpu_share, bw_share }
+}

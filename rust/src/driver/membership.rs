@@ -1,0 +1,333 @@
+//! Round membership (DESIGN.md §8): *who is in the round* as a
+//! first-class layer.
+//!
+//! Under fault injection every grouping rule must count the **live**
+//! workers — an SSGD barrier shrinks when a member dies mid-iteration,
+//! x-order groups re-form over survivors, the AR ring re-chains around
+//! dead members, and LGC's first-K clamps to the live count. Before this
+//! module each policy and each driver branch re-derived that arithmetic
+//! ad hoc, which is exactly where the double-shrink LGC and stale-restart
+//! bugs of the resilience work came from. Now the driver, `sync`'s round
+//! semantics, the STAR controller and the `baselines` all consume the
+//! same primitives:
+//!
+//! * [`LiveSet`] — a view over a per-worker liveness mask (counts, ids),
+//!   reachable from policies through `RoundObs::live_set`;
+//! * [`next_update_group`] — which pending gradient reports form the next
+//!   parameter update under a [`DriverMode`] (the SSGD barrier, ASGD
+//!   per-report, static/dynamic x-order group rules);
+//! * [`ring_order`] / [`ring_split`] — AR ring chaining over the live
+//!   set, ordered by predicted iteration time, with the removed-straggler
+//!   tail split off (`removed` clamped so the ring keeps ≥ 1 member);
+//! * [`first_k_split`] — LGC's first-K-by-arrival rule with its
+//!   explicit drop set;
+//! * [`mask_dead_with_live_min`] — the policy-side convention that a
+//!   dead worker is *outside* the round, not a straggler inside it.
+//!
+//! Contract: with no faults (`live == n`, all true) every function here
+//! reduces bit-identically to the fault-free grouping rules — pinned by
+//! the golden-trace suite.
+
+use std::collections::BTreeSet;
+
+use crate::sync::SyncMode;
+
+use super::DriverMode;
+
+/// A read-only membership view over a job's per-worker liveness mask.
+#[derive(Clone, Copy)]
+pub struct LiveSet<'a> {
+    mask: &'a [bool],
+}
+
+impl<'a> LiveSet<'a> {
+    pub fn new(mask: &'a [bool]) -> Self {
+        LiveSet { mask }
+    }
+
+    /// Number of live workers — the barrier size of a shrunken SSGD
+    /// round. (Deliberately no `len`/`is_empty`: on a type named
+    /// `LiveSet` they would read as live-membership queries while a
+    /// mask-length reading would also be defensible — an ambiguity trap
+    /// in the layer everything else trusts.)
+    pub fn count(&self) -> usize {
+        live_count(self.mask)
+    }
+
+    /// Live worker ranks in rank order.
+    pub fn ids(&self) -> Vec<usize> {
+        live_ids(self.mask)
+    }
+
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.mask.get(worker).copied().unwrap_or(false)
+    }
+}
+
+/// Number of live workers in `mask`.
+pub fn live_count(mask: &[bool]) -> usize {
+    mask.iter().filter(|&&a| a).count()
+}
+
+/// Live worker ranks in rank order.
+pub fn live_ids(mask: &[bool]) -> Vec<usize> {
+    mask.iter().enumerate().filter(|&(_, &a)| a).map(|(w, _)| w).collect()
+}
+
+/// Replace dead workers' predicted times with the live minimum, so they
+/// neither read as stragglers nor distort x-order grouping (a dead worker
+/// is outside the round entirely until it restarts). No-op when no live
+/// worker has a finite prediction.
+pub fn mask_dead_with_live_min(predicted: &mut [f64], live: &[bool]) {
+    let live_min = predicted
+        .iter()
+        .zip(live)
+        .filter(|&(_, &a)| a)
+        .map(|(&p, _)| p)
+        .fold(f64::INFINITY, f64::min);
+    if live_min.is_finite() {
+        for (p, &a) in predicted.iter_mut().zip(live) {
+            if !a {
+                *p = live_min;
+            }
+        }
+    }
+}
+
+/// Which pending reports form the next parameter update under `mode`.
+///
+/// `pending` holds `(worker, ready_at, version_at_start)` in arrival
+/// order; `dyn_groups` is the worker → cluster assignment used by
+/// DynamicX. Returns `None` while no rule fires — the AR ring and
+/// first-K are *not* handled here (they need scheduled / threshold
+/// handling, see [`ring_order`] and [`first_k_split`]).
+pub fn next_update_group(
+    mode: &DriverMode,
+    pending: &[(usize, f64, u64)],
+    live: &[bool],
+    dyn_groups: &[usize],
+) -> Option<Vec<usize>> {
+    let n_live = live_count(live);
+    match mode {
+        DriverMode::Sync(SyncMode::Ssgd) => {
+            // barrier over the live membership
+            if n_live > 0 && pending.len() >= n_live {
+                Some(pending.iter().map(|&(w, _, _)| w).collect())
+            } else {
+                None
+            }
+        }
+        DriverMode::Sync(SyncMode::Asgd) => pending.first().map(|&(w, _, _)| vec![w]),
+        DriverMode::Sync(SyncMode::StaticX(x)) => {
+            let x = (*x).clamp(1, n_live.max(1));
+            if pending.len() >= x {
+                Some(pending[..x].iter().map(|&(w, _, _)| w).collect())
+            } else {
+                None
+            }
+        }
+        DriverMode::Sync(SyncMode::DynamicX) => {
+            // a group fires when every *live* member has reported
+            let groups: BTreeSet<usize> =
+                pending.iter().map(|&(w, _, _)| dyn_groups[w]).collect();
+            for g in groups {
+                let needed = live
+                    .iter()
+                    .enumerate()
+                    .filter(|&(w, &a)| a && dyn_groups[w] == g)
+                    .count();
+                let have: Vec<usize> = pending
+                    .iter()
+                    .filter(|&&(w, _, _)| dyn_groups[w] == g)
+                    .map(|&(w, _, _)| w)
+                    .collect();
+                if !have.is_empty() && have.len() >= needed {
+                    return Some(have);
+                }
+            }
+            None
+        }
+        DriverMode::Sync(SyncMode::ArRing { .. }) | DriverMode::FirstK(_) => None,
+    }
+}
+
+/// AR ring chaining order: the live workers sorted by predicted
+/// iteration time (dead members are bypassed like §IV-B's removed
+/// stragglers). Empty when no worker is live.
+pub fn ring_order(live: &[bool], predicted: &[f64]) -> Vec<usize> {
+    let mut order = live_ids(live);
+    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+    order
+}
+
+/// Split a ring order into `(ring, removed_tail)`. `removed` is clamped
+/// so the ring keeps at least one member; removal counts are relative to
+/// the *live* order (counting dead workers again would shrink the ring
+/// twice).
+pub fn ring_split(order: &[usize], removed: usize) -> (&[usize], &[usize]) {
+    let r = removed.min(order.len().saturating_sub(1));
+    order.split_at(order.len() - r)
+}
+
+/// The LGC first-K grouping rule as a pure function: given the pending
+/// reporters in arrival order and `live` current members, the first
+/// `k` (clamped to the live count) form the update and the rest are
+/// explicitly dropped. Returns `([], [])` while the threshold is unmet.
+/// Exposed for the conservation property tests.
+pub fn first_k_split(arrival: &[usize], k: usize, live: usize) -> (Vec<usize>, Vec<usize>) {
+    let k = k.clamp(1, live.max(1));
+    if arrival.len() < k {
+        return (Vec::new(), Vec::new());
+    }
+    (arrival[..k].to_vec(), arrival[k..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_set_counts_and_ids() {
+        let mask = [true, false, true, true, false];
+        let ls = LiveSet::new(&mask);
+        assert_eq!(ls.count(), 3);
+        assert_eq!(ls.ids(), vec![0, 2, 3]);
+        assert!(ls.is_live(0) && !ls.is_live(1));
+        assert!(!ls.is_live(99), "out-of-range rank is not live");
+        let empty = LiveSet::new(&[]);
+        assert_eq!(empty.count(), 0);
+        assert!(empty.ids().is_empty());
+    }
+
+    // -- first_k_split edge cases (issue satellite) ----------------------
+
+    #[test]
+    fn first_k_zero_clamps_to_one() {
+        // k = 0 is a degenerate request: the rule still forms an update
+        // from the first arrival (an update needs ≥ 1 gradient)
+        let (members, dropped) = first_k_split(&[3, 1, 2], 0, 3);
+        assert_eq!(members, vec![3]);
+        assert_eq!(dropped, vec![1, 2]);
+    }
+
+    #[test]
+    fn first_k_exceeding_live_clamps_to_live() {
+        // K > live: the barrier can never exceed the live membership
+        let (members, dropped) = first_k_split(&[4, 0, 2], 10, 3);
+        assert_eq!(members, vec![4, 0, 2]);
+        assert!(dropped.is_empty());
+        // with only 2 live the same arrivals split at 2
+        let (members, dropped) = first_k_split(&[4, 0, 2], 10, 2);
+        assert_eq!(members, vec![4, 0]);
+        assert_eq!(dropped, vec![2]);
+    }
+
+    #[test]
+    fn first_k_empty_arrival_is_below_threshold() {
+        assert_eq!(first_k_split(&[], 3, 8), (Vec::new(), Vec::new()));
+        // even the k = 0 degenerate form needs one arrival
+        assert_eq!(first_k_split(&[], 0, 8), (Vec::new(), Vec::new()));
+    }
+
+    #[test]
+    fn first_k_single_live_worker() {
+        // live = 1 clamps any k to 1: the sole survivor forms the update
+        let (members, dropped) = first_k_split(&[5], 3, 1);
+        assert_eq!(members, vec![5]);
+        assert!(dropped.is_empty());
+        // live = 0 (transiently possible mid-outage) behaves like live = 1
+        let (members, _) = first_k_split(&[5], 3, 0);
+        assert_eq!(members, vec![5]);
+    }
+
+    // -- ring chaining ---------------------------------------------------
+
+    #[test]
+    fn ring_order_skips_dead_and_sorts_by_prediction() {
+        let live = [true, true, false, true];
+        let pred = [0.9, 0.3, 0.1, 0.5];
+        // worker 2 is fastest but dead; live order sorts 1 < 3 < 0
+        assert_eq!(ring_order(&live, &pred), vec![1, 3, 0]);
+    }
+
+    #[test]
+    fn ring_split_clamps_to_keep_one_member() {
+        let order = [1, 3, 0];
+        let (ring, out) = ring_split(&order, 1);
+        assert_eq!(ring, &[1, 3]);
+        assert_eq!(out, &[0]);
+        // removal can never empty the ring
+        let (ring, out) = ring_split(&order, 10);
+        assert_eq!(ring, &[1]);
+        assert_eq!(out, &[3, 0]);
+        // empty order stays empty on both sides
+        let (ring, out) = ring_split(&[], 2);
+        assert!(ring.is_empty() && out.is_empty());
+    }
+
+    // -- update grouping over live membership ----------------------------
+
+    #[test]
+    fn ssgd_barrier_shrinks_to_live_count() {
+        let mode = DriverMode::Sync(SyncMode::Ssgd);
+        let live = [true, false, true, true];
+        let groups = [0usize; 4];
+        // 2 of 3 live reported: barrier not met
+        let pending = [(0, 1.0, 0u64), (2, 1.1, 0)];
+        assert_eq!(next_update_group(&mode, &pending, &live, &groups), None);
+        // all 3 live reported: fires with exactly the pending reporters
+        let pending = [(0, 1.0, 0u64), (2, 1.1, 0), (3, 1.2, 0)];
+        assert_eq!(
+            next_update_group(&mode, &pending, &live, &groups),
+            Some(vec![0, 2, 3])
+        );
+    }
+
+    #[test]
+    fn asgd_fires_per_report_static_x_clamps_to_live() {
+        let live = [true, true, false, false];
+        let groups = [0usize; 4];
+        let pending = [(1, 1.0, 0u64)];
+        assert_eq!(
+            next_update_group(&DriverMode::Sync(SyncMode::Asgd), &pending, &live, &groups),
+            Some(vec![1])
+        );
+        // x = 3 > 2 live: clamps to 2, fires once two reports are in
+        let mode = DriverMode::Sync(SyncMode::StaticX(3));
+        assert_eq!(next_update_group(&mode, &pending, &live, &groups), None);
+        let pending = [(1, 1.0, 0u64), (0, 1.2, 0)];
+        assert_eq!(next_update_group(&mode, &pending, &live, &groups), Some(vec![1, 0]));
+    }
+
+    #[test]
+    fn dynamic_x_counts_only_live_group_members() {
+        let mode = DriverMode::Sync(SyncMode::DynamicX);
+        let live = [true, true, false, true];
+        let groups = [0usize, 0, 0, 1];
+        // group 0 has live members {0, 1}; dead worker 2 must not hold it
+        let pending = [(0, 1.0, 0u64), (1, 1.1, 0)];
+        assert_eq!(next_update_group(&mode, &pending, &live, &groups), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn ar_and_first_k_are_not_grouped_here() {
+        let live = [true; 3];
+        let groups = [0usize; 3];
+        let pending = [(0, 1.0, 0u64), (1, 1.1, 0), (2, 1.2, 0)];
+        let ar = DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 60.0 });
+        assert_eq!(next_update_group(&ar, &pending, &live, &groups), None);
+        assert_eq!(next_update_group(&DriverMode::FirstK(2), &pending, &live, &groups), None);
+    }
+
+    #[test]
+    fn dead_predictions_masked_to_live_min() {
+        let live = [true, false, true];
+        let mut pred = [0.6, 9.0, 0.4];
+        mask_dead_with_live_min(&mut pred, &live);
+        assert_eq!(pred, [0.6, 0.4, 0.4]);
+        // no finite live prediction: untouched
+        let mut pred = [f64::INFINITY, 3.0];
+        mask_dead_with_live_min(&mut pred, &[true, false]);
+        assert_eq!(pred[1], 3.0);
+    }
+}

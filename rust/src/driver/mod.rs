@@ -13,19 +13,38 @@
 //!   predicted-time clusters, first-K, AR ring + parent wait),
 //! * every update advances the PGNS progress model; TTA/JCT/convergence
 //!   are read off it, straggler counts off the §II deviation ratios.
+//!
+//! The engine is layered (DESIGN.md §8); this file is the orchestrator:
+//!
+//! * [`events`] — the [`Event`] vocabulary + stable-heap scheduling,
+//! * [`membership`] — round membership over the live set ([`LiveSet`],
+//!   barrier/group rules, AR ring chaining, [`first_k_split`]),
+//! * [`itertime`] — the §2.2 iteration-time composition,
+//! * [`faulting`] — §7 plan-event translation and crash/restart logic,
+//! * [`stats`] — [`JobStats`]/[`IterBreakdown`]/[`ServerRecord`]
+//!   accumulation.
 
 use std::collections::BTreeMap;
 
 use crate::cluster::{Cluster, ClusterConfig, Res, TaskId};
-use crate::faults::{Fault, FaultPlan};
+use crate::faults::FaultPlan;
 use crate::models::ModelSpec;
-use crate::predict::{Confusion, History, IterTimeModel, ResourcePredictor, STRAGGLER_DEV};
+use crate::predict::{Confusion, History, IterTimeModel, ResourcePredictor};
 use crate::prevent::CommTree;
 use crate::progress::ProgressModel;
-use crate::sim::Engine;
 use crate::simrng::Rng;
 use crate::sync::SyncMode;
 use crate::trace::{place_job, Arch, JobSpec, Placement};
+
+pub mod events;
+mod faulting;
+pub mod itertime;
+pub mod membership;
+pub mod stats;
+
+pub use self::events::{Event, EventQueue};
+pub use self::membership::{first_k_split, LiveSet};
+pub use self::stats::{IterBreakdown, JobStats, ServerRecord, SERIES_CAP};
 
 /// Extended mode set used at driver level: LGC's first-K is a distinct
 /// grouping rule (uses only the K fastest reports per round).
@@ -37,7 +56,17 @@ pub enum DriverMode {
 }
 
 impl DriverMode {
-    pub fn name(&self) -> String {
+    /// Allocation-free label for hot logging/stats paths. The
+    /// parameterized form (x, K, t_w values) is [`DriverMode::describe`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverMode::Sync(m) => m.static_name(),
+            DriverMode::FirstK(_) => "first-K",
+        }
+    }
+
+    /// Human-readable form including the mode's parameters (allocates).
+    pub fn describe(&self) -> String {
         match self {
             DriverMode::Sync(m) => m.name(),
             DriverMode::FirstK(k) => format!("first-{k}"),
@@ -69,6 +98,14 @@ pub struct RoundObs<'a> {
     /// schedules around dead workers — the driver already excludes them
     /// from barriers, groups and rings
     pub live: &'a [bool],
+}
+
+impl<'a> RoundObs<'a> {
+    /// Membership view over the liveness mask — the shared primitive
+    /// policies use instead of re-counting live workers by hand.
+    pub fn live_set(&self) -> LiveSet<'a> {
+        LiveSet::new(self.live)
+    }
 }
 
 /// A policy's decision for the upcoming window.
@@ -113,7 +150,11 @@ impl PolicyDecision {
 }
 
 /// A per-job synchronization policy (system under test).
-pub trait Policy {
+///
+/// `Send` so a whole run cell — cluster, driver, and its policies — can
+/// be constructed and executed inside a sweep worker thread
+/// ([`crate::exp::sweep`]).
+pub trait Policy: Send {
     fn name(&self) -> &'static str;
     /// Called roughly once per round (every N gradient reports).
     fn decide(&mut self, obs: &RoundObs) -> PolicyDecision;
@@ -130,53 +171,9 @@ pub trait Policy {
     }
 }
 
-/// Per-iteration measured breakdown.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct IterBreakdown {
-    pub pre_s: f64,
-    pub gpu_s: f64,
-    pub comm_s: f64,
-    pub total_s: f64,
-    pub cpu_share: f64,
-    pub bw_share: f64,
-}
-
-/// Recorded per-job outcome.
-#[derive(Clone, Debug)]
-pub struct JobStats {
-    pub job: usize,
-    pub model: usize,
-    pub workers: usize,
-    pub system: String,
-    pub arrival_s: f64,
-    pub start_s: f64,
-    pub end_s: f64,
-    pub tta_s: Option<f64>,
-    pub jct_s: f64,
-    pub converged_value: f64,
-    pub is_nlp: bool,
-    pub updates: u64,
-    pub iters_total: u64,
-    pub straggler_iters: u64,
-    pub straggler_episodes: u64,
-    pub decision_pause_total_s: f64,
-    pub decision_overhead_total_s: f64,
-    pub decision_count: u64,
-    pub prediction: Confusion,
-    /// sampled per-iteration series per worker (bounded by `SERIES_CAP`)
-    pub series: Vec<Vec<IterBreakdown>>,
-    /// (sim time since job start, value) samples taken at decision points
-    pub value_series: Vec<(f64, f64)>,
-    pub mode_switches: u64,
-    /// total seconds the job's workers spent dead (summed per worker)
-    /// plus PS-restart stalls (fault injection)
-    pub downtime_s: f64,
-    /// checkpoint rollbacks suffered (PS crashes / server outages)
-    pub rollbacks: u64,
-}
-
-/// Cap on recorded iteration rows per worker (sampled with stride).
-pub const SERIES_CAP: usize = 500;
+/// Factory building one fresh [`Policy`] per admitted job. `Send` (like
+/// the policies it makes) so drivers can be built inside sweep threads.
+pub type PolicyFactory = Box<dyn Fn(&JobSpec) -> Box<dyn Policy> + Send>;
 
 /// Driver configuration.
 #[derive(Clone, Debug)]
@@ -217,16 +214,6 @@ impl Default for DriverConfig {
             faults: FaultPlan::default(),
         }
     }
-}
-
-/// A server-utilization record (Fig 9 / Fig 10 evidence).
-#[derive(Clone, Copy, Debug)]
-pub struct ServerRecord {
-    pub time: f64,
-    pub server: usize,
-    pub ps_hosted: usize,
-    pub cpu_util: f64,
-    pub bw_util: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -304,68 +291,33 @@ struct JobRun {
     finished: bool,
 }
 
-enum Event {
-    Arrive(usize),
-    WorkerDone { job: usize, worker: usize, iter: u64 },
-    ArFlush { job: usize },
-    ServerSample,
-    /// an entry of the fault plan comes due (index into `cfg.faults`)
-    Fault(usize),
-    /// a crashed worker finishes restarting
-    WorkerRestart { job: usize, worker: usize },
-    /// a crashed PS finishes restarting
-    PsRestart { job: usize, ps_idx: usize },
-}
-
 /// The trace driver: runs all jobs to completion under their policies.
 pub struct Driver {
     pub cfg: DriverConfig,
     pub cluster: Cluster,
-    engine: Engine<Event>,
+    engine: EventQueue,
     rng: Rng,
     jobs: Vec<Option<JobRun>>,
     specs: Vec<JobSpec>,
     wait_queue: Vec<usize>,
-    make_policy: Box<dyn Fn(&JobSpec) -> Box<dyn Policy>>,
+    make_policy: PolicyFactory,
     pub finished: Vec<JobStats>,
     pub server_records: Vec<ServerRecord>,
 }
 
 impl Driver {
-    pub fn new(
-        cfg: DriverConfig,
-        specs: Vec<JobSpec>,
-        make_policy: Box<dyn Fn(&JobSpec) -> Box<dyn Policy>>,
-    ) -> Self {
+    pub fn new(cfg: DriverConfig, specs: Vec<JobSpec>, make_policy: PolicyFactory) -> Self {
         let mut cluster_cfg = cfg.cluster.clone();
         cluster_cfg.seed ^= cfg.seed;
         let mut cluster = Cluster::new(cluster_cfg);
-        let mut engine = Engine::new();
+        let mut engine = EventQueue::new();
         for j in &specs {
             engine.schedule_at(j.arrival_s, Event::Arrive(j.id));
         }
         if cfg.server_sample_period_s > 0.0 {
             engine.schedule_at(cfg.server_sample_period_s, Event::ServerSample);
         }
-        // inject the fault plan: crash/outage entries become events;
-        // degradation windows are stateless capacity cuts, registered with
-        // the cluster up-front so share epochs see them at any time
-        for (i, pf) in cfg.faults.faults.iter().enumerate() {
-            match pf.fault {
-                Fault::Degradation { server, dur_s, cpu_frac, bw_frac } => {
-                    if server < cluster.server_count() {
-                        cluster.add_degradation(
-                            server,
-                            pf.at,
-                            pf.at + dur_s,
-                            cpu_frac,
-                            bw_frac,
-                        );
-                    }
-                }
-                _ => engine.schedule_at(pf.at, Event::Fault(i)),
-            }
-        }
+        faulting::register_plan(&cfg.faults, &mut cluster, &mut engine);
         let n_jobs = specs.len();
         Driver {
             rng: Rng::new(cfg.seed, 0xd21fe4),
@@ -527,41 +479,18 @@ impl Driver {
         }
     }
 
-    /// Compute one worker's iteration breakdown from cluster state at `t`.
-    ///
-    /// Share queries are batched through the cluster's epoch cache: the
-    /// worker's CPU+BW pair and the PS fan-in sum cost one water-fill per
-    /// (server, resource) per simulated instant, no matter how many
-    /// workers start an iteration at that instant (SSGD rounds start a
-    /// whole group at once).
+    /// One worker's §2.2 iteration breakdown at `t` (see [`itertime`]).
     fn iteration_breakdown(&mut self, job: usize, worker: usize, t: f64) -> IterBreakdown {
         let run = self.jobs[job].as_ref().expect("job running");
-        let spec = run.job.spec();
-        let wt = run.placement.worker_tasks[worker];
-        let bf = run.batch_frac[worker];
-        let (cpu_share, bw_share) = self.cluster.worker_shares(wt, t);
-        let cpu_share = cpu_share.max(1e-3);
-        let bw_share = bw_share.max(1e-3);
-
-        // preprocess: pre_cpu_ms at full demand share, scaled by granted CPU
-        let pre_s = spec.pre_cpu_ms / 1000.0 * bf * (spec.worker_cpu / cpu_share);
-        // GPU compute: constant per model (homogeneous GPUs), mild jitter
-        let gpu_s = spec.gpu_ms / 1000.0 * bf * self.rng.range(0.98, 1.02);
-
-        // communication: min(worker link, PS-side aggregate / direct flows)
-        let gbits = 2.0 * spec.grad_mb * 8.0 / 1000.0;
-        let comm_s = match self.cfg.arch {
-            Arch::Ps => {
-                let ps_share: f64 =
-                    self.cluster.bw_share_sum(&run.placement.ps_tasks, t).max(1e-3);
-                let flows = run.tree.effective_flows() as f64;
-                let eff = bw_share.min(ps_share / flows);
-                gbits / eff * run.tree.hop_penalty(0.03)
-            }
-            Arch::AllReduce => gbits / bw_share,
+        let inp = itertime::IterInputs {
+            arch: self.cfg.arch,
+            spec: run.job.spec(),
+            tree: &run.tree,
+            worker_task: run.placement.worker_tasks[worker],
+            ps_tasks: &run.placement.ps_tasks,
+            batch_frac: run.batch_frac[worker],
         };
-        let total = pre_s + gpu_s + comm_s;
-        IterBreakdown { pre_s, gpu_s, comm_s, total_s: total, cpu_share, bw_share }
+        itertime::breakdown(&mut self.cluster, &mut self.rng, &inp, t)
     }
 
     fn start_iteration(&mut self, job: usize, worker: usize, t: f64) {
@@ -644,12 +573,10 @@ impl Driver {
             let mut dropped = false;
             if let DriverMode::Sync(SyncMode::ArRing { removed, .. }) = &run.mode {
                 if *removed > 0 && run.iter_start[worker] < run.last_ar_flush_t {
-                    let n = run.job.workers;
                     let pt = run.predicted_times_safe();
-                    let mut order: Vec<usize> = (0..n).filter(|&w| run.alive[w]).collect();
-                    order.sort_by(|&a, &b| pt[a].partial_cmp(&pt[b]).unwrap());
-                    let cut = order.len() - (*removed).min(order.len().saturating_sub(1));
-                    if order[cut..].contains(&worker) {
+                    let order = membership::ring_order(&run.alive, &pt);
+                    let (_, out) = membership::ring_split(&order, *removed);
+                    if out.contains(&worker) {
                         dropped = true;
                     }
                 }
@@ -661,26 +588,15 @@ impl Driver {
 
             // straggler accounting for this iteration index
             let flag_pred = run.predicted_flags[worker];
-            run.round_times.entry(iter).or_default().push((worker, dur, flag_pred));
-            let n = run.job.workers;
-            if run.round_times.get(&iter).map(|v| v.len()) == Some(n) {
-                let row = run.round_times.remove(&iter).unwrap();
-                let min =
-                    row.iter().map(|&(_, d, _)| d).fold(f64::INFINITY, f64::min).max(1e-9);
-                for &(w, d, pred) in &row {
-                    let is_straggler = (d - min) / min > STRAGGLER_DEV;
-                    run.stats.prediction.add(pred, is_straggler);
-                    if is_straggler {
-                        run.stats.straggler_iters += 1;
-                        if !run.straggling[w] {
-                            run.stats.straggler_episodes += 1;
-                            run.straggling[w] = true;
-                        }
-                    } else {
-                        run.straggling[w] = false;
-                    }
-                }
-            }
+            stats::record_report(
+                &mut run.stats,
+                &mut run.round_times,
+                &mut run.straggling,
+                iter,
+                worker,
+                dur,
+                flag_pred,
+            );
         }
 
         // group into updates per current mode
@@ -690,7 +606,7 @@ impl Driver {
         // shrunken rounds still get their per-round decision cadence)
         let redecide = {
             let Some(run) = self.jobs[job].as_ref() else { return };
-            let live = run.alive.iter().filter(|&&a| a).count().max(1);
+            let live = membership::live_count(&run.alive).max(1);
             !run.finished && run.reports_since_decision >= live
         };
         if redecide {
@@ -720,11 +636,12 @@ impl Driver {
 
     /// Apply mode-specific grouping to pending reports at time `t`.
     ///
-    /// All membership counts are over the *live* workers (fault
-    /// injection): an SSGD barrier shrinks when a member dies
-    /// mid-iteration, x-order groups re-form over survivors, and the AR
-    /// ring re-chains around dead workers. With no faults `live == n`
-    /// and the grouping is bit-identical to the fault-free engine.
+    /// All membership counts go through [`membership`] and are over the
+    /// *live* workers (fault injection): an SSGD barrier shrinks when a
+    /// member dies mid-iteration, x-order groups re-form over survivors,
+    /// and the AR ring re-chains around dead workers. With no faults
+    /// `live == n` and the grouping is bit-identical to the fault-free
+    /// engine.
     fn process_pending(&mut self, job: usize, t: f64) {
         loop {
             let action = {
@@ -733,49 +650,12 @@ impl Driver {
                     // a crashed PS holds all updates until it restarts
                     return;
                 }
-                let live = run.alive.iter().filter(|&&a| a).count();
-                match &run.mode {
-                    DriverMode::Sync(SyncMode::Ssgd) => {
-                        if live > 0 && run.pending.len() >= live {
-                            Some(run.pending.iter().map(|&(w, _, _)| w).collect::<Vec<_>>())
-                        } else {
-                            None
-                        }
-                    }
-                    DriverMode::Sync(SyncMode::Asgd) => {
-                        run.pending.first().map(|&(w, _, _)| vec![w])
-                    }
-                    DriverMode::Sync(SyncMode::StaticX(x)) => {
-                        let x = (*x).clamp(1, live.max(1));
-                        if run.pending.len() >= x {
-                            Some(run.pending[..x].iter().map(|&(w, _, _)| w).collect())
-                        } else {
-                            None
-                        }
-                    }
-                    DriverMode::Sync(SyncMode::DynamicX) => {
-                        let mut fire = None;
-                        let groups: std::collections::BTreeSet<usize> =
-                            run.pending.iter().map(|&(w, _, _)| run.dyn_groups[w]).collect();
-                        for g in groups {
-                            let needed = (0..run.job.workers)
-                                .filter(|&w| run.alive[w] && run.dyn_groups[w] == g)
-                                .count();
-                            let have: Vec<usize> = run
-                                .pending
-                                .iter()
-                                .filter(|&&(w, _, _)| run.dyn_groups[w] == g)
-                                .map(|&(w, _, _)| w)
-                                .collect();
-                            if !have.is_empty() && have.len() >= needed {
-                                fire = Some(have);
-                                break;
-                            }
-                        }
-                        fire
-                    }
-                    DriverMode::Sync(SyncMode::ArRing { .. }) | DriverMode::FirstK(_) => None,
-                }
+                membership::next_update_group(
+                    &run.mode,
+                    &run.pending,
+                    &run.alive,
+                    &run.dyn_groups,
+                )
             };
 
             match action {
@@ -796,15 +676,12 @@ impl Driver {
                 let Some(run) = self.jobs[job].as_mut() else { return };
                 // the ring chains over live workers; dead members are
                 // bypassed like removed stragglers (§IV-B)
-                let mut order: Vec<usize> =
-                    (0..run.job.workers).filter(|&w| run.alive[w]).collect();
+                let pt = run.predicted_times_safe();
+                let order = membership::ring_order(&run.alive, &pt);
                 if order.is_empty() {
                     return;
                 }
-                let removed = removed.min(order.len() - 1);
-                let pt = run.predicted_times_safe();
-                order.sort_by(|&a, &b| pt[a].partial_cmp(&pt[b]).unwrap());
-                let ring: Vec<usize> = order[..order.len() - removed].to_vec();
+                let (ring, _) = membership::ring_split(&order, removed);
                 let ring_reported =
                     ring.iter().all(|&w| run.pending.iter().any(|&(pw, _, _)| pw == w));
                 if ring_reported && !run.ar_flush_scheduled {
@@ -815,7 +692,7 @@ impl Driver {
             DriverMode::FirstK(k) => {
                 let (fire, members) = {
                     let Some(run) = self.jobs[job].as_mut() else { return };
-                    let live = run.alive.iter().filter(|&&a| a).count();
+                    let live = membership::live_count(&run.alive);
                     let arrival: Vec<usize> =
                         run.pending.iter().map(|&(w, _, _)| w).collect();
                     let (members, dropped) = first_k_split(&arrival, k, live);
@@ -1094,217 +971,6 @@ impl Driver {
             self.try_place(j, t);
         }
     }
-
-    // -- fault injection (DESIGN.md §7) -------------------------------------
-
-    fn handle_fault(&mut self, idx: usize, t: f64) {
-        let fault = self.cfg.faults.faults[idx].fault.clone();
-        match fault {
-            Fault::WorkerCrash { job, rank, restart_s } => {
-                self.crash_worker(job, rank, t, restart_s);
-            }
-            Fault::PsCrash { job, idx, restart_s } => {
-                self.crash_ps(job, idx, t, restart_s);
-            }
-            Fault::ServerOutage { server, dur_s, restart_s } => {
-                self.server_outage(server, t, dur_s, restart_s);
-            }
-            // degradation windows are registered with the cluster at
-            // construction and never become events
-            Fault::Degradation { .. } => {}
-        }
-    }
-
-    /// Worker `rank` of `job` dies at `t`: its in-flight gradient is
-    /// lost, its cluster task suspends (invalidating the share cache),
-    /// and the current round re-forms over the survivors. It restarts
-    /// `restart_s` later. Crashing an *already-down* worker (a server
-    /// outage catching one mid-restart) extends its restart deadline —
-    /// the earlier pending restart event goes stale.
-    fn crash_worker(&mut self, job: usize, worker: usize, t: f64, restart_s: f64) {
-        let due = t + restart_s.max(0.0);
-        let task = {
-            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
-            if run.finished || worker >= run.job.workers {
-                return;
-            }
-            if !run.alive[worker] {
-                // already down: only push the restart deadline out
-                if run.restart_at[worker].is_nan() || run.restart_at[worker] < due {
-                    run.restart_at[worker] = due;
-                    self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
-                }
-                return;
-            }
-            run.alive[worker] = false;
-            run.busy[worker] = false;
-            // invalidate the in-flight WorkerDone (its iter no longer
-            // matches); the skipped index leaves at most one permanently
-            // incomplete straggler-accounting row per crash
-            run.iter_idx[worker] += 1;
-            run.pending.retain(|&(w, _, _)| w != worker);
-            run.down_since[worker] = t;
-            run.restart_at[worker] = due;
-            run.straggling[worker] = false;
-            run.placement.worker_tasks[worker]
-        };
-        self.cluster.suspend_task(task);
-        self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
-        // a shrunken barrier / group may now be complete
-        self.process_pending(job, t);
-        self.check_termination(job, t);
-    }
-
-    fn worker_restart(&mut self, job: usize, worker: usize, t: f64) {
-        let task = {
-            let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
-            if run.finished || worker >= run.job.workers || run.alive[worker] {
-                return;
-            }
-            if t < run.restart_at[worker] {
-                return; // stale: a later fault extended the restart
-            }
-            run.alive[worker] = true;
-            if run.down_since[worker].is_finite() {
-                run.stats.downtime_s += t - run.down_since[worker];
-            }
-            run.down_since[worker] = f64::NAN;
-            run.restart_at[worker] = f64::NAN;
-            run.placement.worker_tasks[worker]
-        };
-        self.cluster.resume_task(task);
-        self.start_iteration(job, worker, t);
-    }
-
-    /// PS `idx` of `job` dies at `t`: parameter state is lost — progress
-    /// rolls back to the last checkpoint, unapplied reports are
-    /// discarded, and updates stall until the PS restarts `restart_s`
-    /// later. Crashing an already-down PS (server outage mid-restart)
-    /// extends the restart deadline without a second rollback — the
-    /// parameter state is already lost.
-    fn crash_ps(&mut self, job: usize, idx: usize, t: f64, restart_s: f64) {
-        let due = t + restart_s.max(0.0);
-        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
-            Some(run) if !run.finished && idx < run.placement.ps_tasks.len() => {
-                run.placement.ps_tasks[idx]
-            }
-            _ => return,
-        };
-        if self.cluster.is_suspended(task) {
-            // already down: only push the restart deadline out
-            let run = self.jobs[job].as_mut().expect("checked above");
-            if run.ps_restart_at[idx].is_nan() || run.ps_restart_at[idx] < due {
-                run.ps_restart_at[idx] = due;
-                self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
-            }
-            return;
-        }
-        self.cluster.suspend_task(task);
-        {
-            let run = self.jobs[job].as_mut().expect("checked above");
-            let now_rel = t - run.started_at;
-            run.progress.restore(&run.checkpoint, now_rel);
-            run.stats.rollbacks += 1;
-            // reports computed against the lost parameter state are
-            // discarded; `ps_down` stalls all updates until the restart
-            // (deliberately NOT via `pause_until`: a long pause would make
-            // iteration starts query cluster shares far in the future,
-            // outside the share engine's non-decreasing-time contract).
-            // Downtime is measured as the *realized* stall window (like
-            // worker downtime), so overlapping PS crashes — e.g. a server
-            // outage hitting several PSs of one job — count once
-            if run.ps_down == 0 {
-                run.ps_down_since = t;
-            }
-            run.ps_restart_at[idx] = due;
-            run.pending.clear();
-            run.ps_down += 1;
-            run.ar_flush_scheduled = false;
-        }
-        self.engine.schedule_at(due, Event::PsRestart { job, ps_idx: idx });
-        self.check_termination(job, t);
-    }
-
-    fn ps_restart(&mut self, job: usize, ps_idx: usize, t: f64) {
-        let task = match self.jobs.get(job).and_then(|j| j.as_ref()) {
-            Some(run) if !run.finished && ps_idx < run.placement.ps_tasks.len() => {
-                run.placement.ps_tasks[ps_idx]
-            }
-            _ => return,
-        };
-        if !self.cluster.is_suspended(task) {
-            return;
-        }
-        {
-            let run = self.jobs[job].as_ref().expect("checked above");
-            if t < run.ps_restart_at[ps_idx] {
-                return; // stale: a later fault extended the restart
-            }
-        }
-        self.cluster.resume_task(task);
-        let all_up = {
-            let run = self.jobs[job].as_mut().expect("checked above");
-            run.ps_restart_at[ps_idx] = f64::NAN;
-            run.ps_down = run.ps_down.saturating_sub(1);
-            if run.ps_down == 0 && run.ps_down_since.is_finite() {
-                run.stats.downtime_s += t - run.ps_down_since;
-                run.ps_down_since = f64::NAN;
-            }
-            run.ps_down == 0
-        };
-        if all_up {
-            self.process_pending(job, t);
-            self.kick_idle_workers(job, t);
-        }
-    }
-
-    /// Whole-server outage: every co-located task of every running job on
-    /// `server` fails at once — workers crash, PSs roll back — and all of
-    /// them restart once the server returns (`dur_s + restart_s` later).
-    /// Tasks already down when the outage hits have their restart
-    /// deadlines extended (crash_worker/crash_ps handle that case).
-    fn server_outage(&mut self, server: usize, t: f64, dur_s: f64, restart_s: f64) {
-        let mut workers: Vec<(usize, usize)> = Vec::new();
-        let mut pss: Vec<(usize, usize)> = Vec::new();
-        for (job, slot) in self.jobs.iter().enumerate() {
-            let Some(run) = slot else { continue };
-            if run.finished {
-                continue;
-            }
-            for (w, &tid) in run.placement.worker_tasks.iter().enumerate() {
-                if self.cluster.task(tid).server == server {
-                    workers.push((job, w));
-                }
-            }
-            for (i, &tid) in run.placement.ps_tasks.iter().enumerate() {
-                if self.cluster.task(tid).server == server {
-                    pss.push((job, i));
-                }
-            }
-        }
-        let back = dur_s.max(0.0) + restart_s.max(0.0);
-        for (job, w) in workers {
-            self.crash_worker(job, w, t, back);
-        }
-        for (job, i) in pss {
-            self.crash_ps(job, i, t, back);
-        }
-    }
-
-    /// Start an iteration on every live worker that is neither computing
-    /// nor waiting in a pending set (used after PS recovery, when cleared
-    /// reports would otherwise leave reporters idle forever).
-    fn kick_idle_workers(&mut self, job: usize, t: f64) {
-        let idle: Vec<usize> = match self.jobs.get(job).and_then(|j| j.as_ref()) {
-            Some(run) if !run.finished => (0..run.job.workers)
-                .filter(|&w| run.alive[w] && !run.busy[w] && !waiting_in_pending(run, w))
-                .collect(),
-            _ => return,
-        };
-        for w in idle {
-            self.start_iteration(job, w, t);
-        }
-    }
 }
 
 impl JobRun {
@@ -1319,19 +985,6 @@ impl JobRun {
 
 fn waiting_in_pending(run: &JobRun, worker: usize) -> bool {
     run.pending.iter().any(|&(w, _, _)| w == worker)
-}
-
-/// The LGC first-K grouping rule as a pure function: given the pending
-/// reporters in arrival order and `live` current members, the first
-/// `k` (clamped to the live count) form the update and the rest are
-/// explicitly dropped. Returns `([], [])` while the threshold is unmet.
-/// Exposed for the conservation property tests.
-pub fn first_k_split(arrival: &[usize], k: usize, live: usize) -> (Vec<usize>, Vec<usize>) {
-    let k = k.clamp(1, live.max(1));
-    if arrival.len() < k {
-        return (Vec::new(), Vec::new());
-    }
-    (arrival[..k].to_vec(), arrival[k..].to_vec())
 }
 
 /// AR(1) resource fallback predictor (stateless).
@@ -1365,7 +1018,7 @@ pub fn demand_factor(mode: &DriverMode, n: usize) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::faults::PlannedFault;
+    use crate::faults::{Fault, PlannedFault};
     use crate::trace::TraceConfig;
 
     /// Trivial fixed-mode policy for driver tests.
@@ -1402,6 +1055,15 @@ mod tests {
         );
         let (stats, _) = driver.run();
         stats
+    }
+
+    #[test]
+    fn driver_is_send() {
+        // the sweep harness builds one driver per worker thread; a non-
+        // Send field sneaking into the run cell must fail to compile here
+        fn is_send<T: Send>() {}
+        is_send::<Driver>();
+        is_send::<PolicyFactory>();
     }
 
     #[test]
@@ -1500,6 +1162,39 @@ mod tests {
     }
 
     #[test]
+    fn demand_factor_edge_cases() {
+        // n = 1: no mode can be asynchronous with a single worker — every
+        // factor collapses to SSGD-like demand
+        assert_eq!(demand_factor(&DriverMode::Sync(SyncMode::Asgd), 1), (1.0, 1.0));
+        assert_eq!(demand_factor(&DriverMode::Sync(SyncMode::Ssgd), 1), (1.0, 1.0));
+        assert_eq!(demand_factor(&DriverMode::Sync(SyncMode::DynamicX), 1), (1.0, 1.0));
+        assert_eq!(demand_factor(&DriverMode::FirstK(1), 1), (1.0, 1.0));
+        // FirstK with k ≥ n is one group per round, i.e. SSGD-like
+        assert_eq!(demand_factor(&DriverMode::FirstK(8), 8), (1.0, 1.0));
+        // degenerate k = 0 saturates to the full-ASGD factor instead of
+        // dividing by zero (k = 0 is unreachable from the policies, which
+        // clamp K to the live count ≥ 1 — pinned here as documentation)
+        assert_eq!(demand_factor(&DriverMode::FirstK(0), 8), (2.0, 2.0));
+    }
+
+    #[test]
+    fn driver_mode_names_are_static() {
+        // name() is allocation-free for hot logging/stats paths…
+        assert_eq!(DriverMode::Sync(SyncMode::Ssgd).name(), "SSGD");
+        assert_eq!(DriverMode::Sync(SyncMode::Asgd).name(), "ASGD");
+        assert_eq!(DriverMode::Sync(SyncMode::StaticX(3)).name(), "static-x");
+        assert_eq!(DriverMode::Sync(SyncMode::DynamicX).name(), "dynamic-x");
+        assert_eq!(
+            DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 60.0 }).name(),
+            "ring"
+        );
+        assert_eq!(DriverMode::FirstK(5).name(), "first-K");
+        // …while describe() keeps the parameterized form
+        assert_eq!(DriverMode::FirstK(5).describe(), "first-5");
+        assert_eq!(DriverMode::Sync(SyncMode::StaticX(3)).describe(), "3-order");
+    }
+
+    #[test]
     fn queueing_admits_jobs_later() {
         // 12 jobs over a tiny arrival window exceed the 40-GPU cluster;
         // all must still finish via the wait queue
@@ -1511,7 +1206,11 @@ mod tests {
         FaultPlan { faults, checkpoint_every_updates: 50 }
     }
 
-    fn run_with_faults(mode: DriverMode, n_jobs: usize, faults: Vec<PlannedFault>) -> Vec<JobStats> {
+    fn run_with_faults(
+        mode: DriverMode,
+        n_jobs: usize,
+        faults: Vec<PlannedFault>,
+    ) -> Vec<JobStats> {
         let cfg = DriverConfig {
             max_updates_per_job: 4000,
             max_iters_per_job: 8000,

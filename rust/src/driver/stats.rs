@@ -1,0 +1,103 @@
+//! Per-job outcome records and their accumulation: [`IterBreakdown`]
+//! rows, [`JobStats`], [`ServerRecord`] samples, and the §II straggler
+//! accounting over completed iteration indices.
+//!
+//! This layer is write-only bookkeeping — nothing here feeds back into
+//! scheduling decisions, so moving a stat cannot change a trace.
+
+use std::collections::BTreeMap;
+
+use crate::predict::{Confusion, STRAGGLER_DEV};
+
+/// Per-iteration measured breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterBreakdown {
+    pub pre_s: f64,
+    pub gpu_s: f64,
+    pub comm_s: f64,
+    pub total_s: f64,
+    pub cpu_share: f64,
+    pub bw_share: f64,
+}
+
+/// Recorded per-job outcome.
+#[derive(Clone, Debug)]
+pub struct JobStats {
+    pub job: usize,
+    pub model: usize,
+    pub workers: usize,
+    pub system: String,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub tta_s: Option<f64>,
+    pub jct_s: f64,
+    pub converged_value: f64,
+    pub is_nlp: bool,
+    pub updates: u64,
+    pub iters_total: u64,
+    pub straggler_iters: u64,
+    pub straggler_episodes: u64,
+    pub decision_pause_total_s: f64,
+    pub decision_overhead_total_s: f64,
+    pub decision_count: u64,
+    pub prediction: Confusion,
+    /// sampled per-iteration series per worker (bounded by `SERIES_CAP`)
+    pub series: Vec<Vec<IterBreakdown>>,
+    /// (sim time since job start, value) samples taken at decision points
+    pub value_series: Vec<(f64, f64)>,
+    pub mode_switches: u64,
+    /// total seconds the job's workers spent dead (summed per worker)
+    /// plus PS-restart stalls (fault injection)
+    pub downtime_s: f64,
+    /// checkpoint rollbacks suffered (PS crashes / server outages)
+    pub rollbacks: u64,
+}
+
+/// Cap on recorded iteration rows per worker (sampled with stride).
+pub const SERIES_CAP: usize = 500;
+
+/// A server-utilization record (Fig 9 / Fig 10 evidence).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerRecord {
+    pub time: f64,
+    pub server: usize,
+    pub ps_hosted: usize,
+    pub cpu_util: f64,
+    pub bw_util: f64,
+}
+
+/// Record one completed iteration into the per-index straggler
+/// accounting. When every worker's duration for `iter` is in, the row is
+/// scored against the §II deviation-ratio threshold: prediction confusion
+/// updates, straggler iterations count, and episode boundaries are
+/// tracked through `straggling` (one flag per worker, `len == n`).
+pub(crate) fn record_report(
+    stats: &mut JobStats,
+    round_times: &mut BTreeMap<u64, Vec<(usize, f64, bool)>>,
+    straggling: &mut [bool],
+    iter: u64,
+    worker: usize,
+    dur: f64,
+    flag_pred: bool,
+) {
+    round_times.entry(iter).or_default().push((worker, dur, flag_pred));
+    let n = straggling.len();
+    if round_times.get(&iter).map(|v| v.len()) == Some(n) {
+        let row = round_times.remove(&iter).unwrap();
+        let min = row.iter().map(|&(_, d, _)| d).fold(f64::INFINITY, f64::min).max(1e-9);
+        for &(w, d, pred) in &row {
+            let is_straggler = (d - min) / min > STRAGGLER_DEV;
+            stats.prediction.add(pred, is_straggler);
+            if is_straggler {
+                stats.straggler_iters += 1;
+                if !straggling[w] {
+                    stats.straggler_episodes += 1;
+                    straggling[w] = true;
+                }
+            } else {
+                straggling[w] = false;
+            }
+        }
+    }
+}

@@ -3,7 +3,7 @@
 use super::{run_system, ExpCtx};
 use crate::baselines::make_policy;
 use crate::driver::{
-    Driver, DriverConfig, DriverMode, JobStats, Policy, PolicyDecision, RoundObs,
+    Driver, DriverConfig, DriverMode, JobStats, Policy, PolicyDecision, PolicyFactory, RoundObs,
 };
 use crate::models::ZOO;
 use crate::predict::STRAGGLER_DEV;
@@ -71,7 +71,7 @@ pub fn single_job(model: usize, workers: usize) -> Vec<JobSpec> {
 pub fn run_single(
     model: usize,
     workers: usize,
-    make: Box<dyn Fn(&JobSpec) -> Box<dyn Policy>>,
+    make: PolicyFactory,
     throttle: Option<(f64, f64)>,
     seed: u64,
 ) -> JobStats {

@@ -8,6 +8,7 @@ pub mod eval;
 pub mod measure;
 pub mod overhead;
 pub mod resilience;
+pub mod sweep;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -34,6 +35,11 @@ pub struct ExpCtx {
     pub fault_rate: f64,
     /// fault-plan seed (`--fault-seed`), independent of the trace seed
     pub fault_seed: u64,
+    /// sweep worker threads (`--threads`): independent experiment cells
+    /// (one cluster+driver per cell) run `threads`-wide through
+    /// [`sweep::run_indexed`]. Defaults to the available parallelism;
+    /// results are byte-identical at any value (cells share no state).
+    pub threads: usize,
 }
 
 impl Default for ExpCtx {
@@ -45,6 +51,7 @@ impl Default for ExpCtx {
             quick: false,
             fault_rate: 0.0,
             fault_seed: 0,
+            threads: sweep::available_threads(),
         }
     }
 }
@@ -121,21 +128,41 @@ pub fn run_system(
     Ok(driver.run())
 }
 
-/// Run several systems; returns name → stats.
+/// Run several systems; returns name → stats. Systems are independent
+/// cells (each builds its own cluster + driver from the shared context),
+/// so they sweep `ctx.threads`-wide — the output is identical to a
+/// serial loop because [`sweep::run_indexed`] preserves item order.
 pub fn run_systems(
     ctx: &ExpCtx,
     systems: &[&str],
     arch: Arch,
 ) -> crate::Result<BTreeMap<String, Vec<JobStats>>> {
-    let mut out = BTreeMap::new();
-    for sys in systems {
-        eprintln!("[exp] running {sys} ({arch:?}, {} jobs)…", ctx.effective_jobs());
-        let t0 = std::time::Instant::now();
-        let (stats, _) = run_system(ctx, sys, arch, false, 0.0)?;
-        eprintln!("[exp]   {sys}: {:.1}s wall", t0.elapsed().as_secs_f64());
-        out.insert(sys.to_string(), stats);
-    }
-    Ok(out)
+    crate::baselines::validate_systems(systems)?;
+    eprintln!(
+        "[exp] running {} systems ({arch:?}, {} jobs) on {} thread(s)…",
+        systems.len(),
+        ctx.effective_jobs(),
+        ctx.threads
+    );
+    // cells return Result and errors propagate after the join: a future
+    // fallible step in run_system must surface through dispatch, not as
+    // a context-free worker-thread panic
+    let results = sweep::run_indexed(
+        systems,
+        ctx.threads,
+        |_, sys| -> crate::Result<Vec<JobStats>> {
+            let t0 = std::time::Instant::now();
+            let (stats, _) = run_system(ctx, sys, arch, false, 0.0)?;
+            eprintln!("[exp]   {sys}: {:.1}s wall", t0.elapsed().as_secs_f64());
+            Ok(stats)
+        },
+    );
+    let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+    Ok(systems
+        .iter()
+        .zip(results)
+        .map(|(sys, stats)| (sys.to_string(), stats))
+        .collect())
 }
 
 /// The §V summary triple: mean, p1, p99 (the paper's error bars).

@@ -4,11 +4,17 @@
 //!
 //! For every rate the *same* seeded [`FaultPlan`] is injected into every
 //! policy's replay, so differences are attributable to the policy alone.
-//! Emits the usual CSV table plus a `star-bench-v1` JSON artifact
-//! (`results/resilience.json`) so the TTA-under-failures trajectory is
-//! tracked across PRs exactly like the perf benches.
+//! Each (rate, policy) cell is an independent cluster+driver pair and a
+//! pure function of its inputs, so the grid runs `ctx.threads`-wide
+//! through [`super::sweep`]; rows are emitted in sweep order, which makes
+//! `--threads N` output byte-identical to `--threads 1` (pinned by the
+//! tests below and a CI diff). Emits the usual CSV table plus a
+//! `star-bench-v1` JSON artifact (`results/resilience.json`) so the
+//! TTA-under-failures trajectory is tracked across PRs exactly like the
+//! perf benches, and `results/BENCH_sweep.json` recording the sweep's
+//! wall time and realized concurrency (see [`super::sweep`]).
 
-use super::{summarize, ExpCtx};
+use super::{summarize, sweep, ExpCtx};
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats};
 use crate::faults::{plan_at_rate, span_for, FaultPlan};
@@ -65,6 +71,47 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
     let base_cfg = DriverConfig::default();
     let servers = base_cfg.cluster.total_servers();
     let span = span_for(&trace, base_cfg.max_job_duration_s);
+    let systems = systems(ctx.quick);
+    crate::baselines::validate_systems(&systems)?;
+
+    // the sweep grid, rate-major (the serial row order)
+    let plans: Vec<(f64, FaultPlan)> = RATES
+        .iter()
+        .map(|&rate| (rate, plan_at_rate(rate, ctx.fault_seed, &trace, span, servers)))
+        .collect();
+    let mut cells: Vec<(usize, &'static str)> = Vec::new();
+    for ri in 0..plans.len() {
+        for &sys in &systems {
+            cells.push((ri, sys));
+        }
+    }
+
+    eprintln!(
+        "[exp] resilience: {} cells ({} rates × {} systems, {} jobs) on {} thread(s)…",
+        cells.len(),
+        plans.len(),
+        systems.len(),
+        trace.len(),
+        ctx.threads
+    );
+    // cells return Result and errors propagate after the join (a worker-
+    // thread panic would abort the whole sweep without naming the cell)
+    let (results, cell_s, wall_s) = sweep::run_cells(
+        &cells,
+        ctx.threads,
+        |_, &(ri, sys)| -> crate::Result<Vec<JobStats>> {
+            let (rate, plan) = &plans[ri];
+            let t0 = std::time::Instant::now();
+            let stats = run_with_plan(ctx, sys, &trace, plan)?;
+            eprintln!(
+                "[exp]   {sys} @ rate {rate} ({} faults): {:.1}s wall",
+                plan.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(stats)
+        },
+    );
+    let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
 
     let mut t = Table::new(
         "Resilience — TTA/JCT/downtime under injected failures (PS architecture)",
@@ -82,48 +129,41 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
     let mut results_json: Vec<Json> = Vec::new();
     let mut ssgd_jct_by_rate: Vec<(f64, f64)> = Vec::new();
 
-    for &rate in &RATES {
-        let plan = plan_at_rate(rate, ctx.fault_seed, &trace, span, servers);
-        for sys in systems(ctx.quick) {
-            eprintln!(
-                "[exp] resilience: {sys} @ rate {rate} ({} faults, {} jobs)…",
-                plan.len(),
-                trace.len()
-            );
-            let stats = run_with_plan(ctx, sys, &trace, &plan)?;
-            let s = summarize(&stats);
-            // -1 = "no job reached the target" (NaN is not valid JSON)
-            let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
-            let jct_mean = stats::mean(&s.jct);
-            let downtime_mean = stats::mean(&s.downtime);
-            let rollbacks: f64 = s.rollbacks.iter().sum();
-            if sys == "SSGD" {
-                ssgd_jct_by_rate.push((rate, jct_mean));
-            }
-            t.rowf(&[
-                table::s(sys),
-                table::f(rate, 1),
-                table::i(plan.len() as i64),
-                table::f(tta_mean, 0),
-                table::f(jct_mean, 0),
-                table::f(downtime_mean, 1),
-                table::i(rollbacks as i64),
-                table::s(format!("{}/{}", s.tta_reached, s.jobs)),
-            ]);
-            results_json.push(jsonio::obj(vec![
-                ("name", jsonio::s(&format!("resilience/{sys}/rate={rate}"))),
-                ("iters", jsonio::num(s.jobs as f64)),
-                // headline metric in the bench schema's slot: mean JCT
-                // (includes jobs that never reach TTA under failures)
-                ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
-                ("tta_mean_s", jsonio::num(tta_mean)),
-                ("jct_mean_s", jsonio::num(jct_mean)),
-                ("downtime_mean_s", jsonio::num(downtime_mean)),
-                ("rollbacks", jsonio::num(rollbacks)),
-                ("tta_reached", jsonio::num(s.tta_reached as f64)),
-                ("fault_count", jsonio::num(plan.len() as f64)),
-            ]));
+    for (&(ri, sys), stats) in cells.iter().zip(&results) {
+        let (rate, plan) = &plans[ri];
+        let rate = *rate;
+        let s = summarize(stats);
+        // -1 = "no job reached the target" (NaN is not valid JSON)
+        let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+        let jct_mean = stats::mean(&s.jct);
+        let downtime_mean = stats::mean(&s.downtime);
+        let rollbacks: f64 = s.rollbacks.iter().sum();
+        if sys == "SSGD" {
+            ssgd_jct_by_rate.push((rate, jct_mean));
         }
+        t.rowf(&[
+            table::s(sys),
+            table::f(rate, 1),
+            table::i(plan.len() as i64),
+            table::f(tta_mean, 0),
+            table::f(jct_mean, 0),
+            table::f(downtime_mean, 1),
+            table::i(rollbacks as i64),
+            table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+        ]);
+        results_json.push(jsonio::obj(vec![
+            ("name", jsonio::s(&format!("resilience/{sys}/rate={rate}"))),
+            ("iters", jsonio::num(s.jobs as f64)),
+            // headline metric in the bench schema's slot: mean JCT
+            // (includes jobs that never reach TTA under failures)
+            ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+            ("tta_mean_s", jsonio::num(tta_mean)),
+            ("jct_mean_s", jsonio::num(jct_mean)),
+            ("downtime_mean_s", jsonio::num(downtime_mean)),
+            ("rollbacks", jsonio::num(rollbacks)),
+            ("tta_reached", jsonio::num(s.tta_reached as f64)),
+            ("fault_count", jsonio::num(plan.len() as f64)),
+        ]));
     }
 
     t.print();
@@ -135,6 +175,9 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
         );
     }
     println!("(failures must cost the barrier-bound SSGD most; STAR's x-order modes absorb them)\n");
+    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
+        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
+    }
     ctx.save("resilience", &t);
 
     let doc = jsonio::obj(vec![
@@ -143,13 +186,20 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
         ("results", Json::Arr(results_json)),
     ]);
     let path = ctx.out_dir.join("resilience.json");
-    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
-        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
-    }
     match std::fs::write(&path, doc.to_string_pretty()) {
         Ok(()) => println!("resilience results written to {}", path.display()),
         Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
     }
+
+    // the parallelism win, tracked across PRs (deliberately a separate
+    // artifact: wall times vary run to run, resilience.json must not)
+    sweep::write_sweep_bench(
+        &ctx.out_dir.join("BENCH_sweep.json"),
+        "sweep/resilience",
+        ctx.threads,
+        &cell_s,
+        wall_s,
+    );
     Ok(())
 }
 
@@ -175,6 +225,43 @@ mod tests {
         for r in results {
             assert!(r.get("jct_mean_s").unwrap().num().unwrap() > 0.0);
         }
+        // the sweep bench artifact records the grid and thread count
+        let bench = Json::parse_file(&ctx.out_dir.join("BENCH_sweep.json")).unwrap();
+        let cell = &bench.get("results").unwrap().arr().unwrap()[0];
+        assert_eq!(cell.get("name").unwrap().str().unwrap(), "sweep/resilience");
+        assert_eq!(
+            cell.get("cells").unwrap().num().unwrap() as usize,
+            RATES.len() * systems(true).len()
+        );
+        assert_eq!(cell.get("threads").unwrap().num().unwrap() as usize, ctx.threads);
+        assert!(cell.get("concurrency").unwrap().num().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        // the acceptance contract: `--threads 1` and `--threads N` must
+        // produce the same resilience.json and CSV, byte for byte.
+        // One job keeps the doubled sweep cheap under debug `cargo test`;
+        // CI additionally diffs the full `--quick --jobs 4` grid in
+        // release (serial vs parallel `experiments resilience` runs)
+        let mk = |tag: &str, threads: usize| ExpCtx {
+            jobs: 1,
+            quick: true,
+            fault_seed: 7,
+            threads,
+            out_dir: std::env::temp_dir().join(format!("star_resilience_{tag}")),
+            ..Default::default()
+        };
+        let serial = mk("serial", 1);
+        let parallel = mk("parallel", sweep::available_threads().max(2));
+        resilience(&serial).unwrap();
+        resilience(&parallel).unwrap();
+        let a = std::fs::read(serial.out_dir.join("resilience.json")).unwrap();
+        let b = std::fs::read(parallel.out_dir.join("resilience.json")).unwrap();
+        assert_eq!(a, b, "parallel resilience.json differs from serial");
+        let a = std::fs::read(serial.out_dir.join("resilience.csv")).unwrap();
+        let b = std::fs::read(parallel.out_dir.join("resilience.csv")).unwrap();
+        assert_eq!(a, b, "parallel resilience.csv differs from serial");
     }
 
     #[test]

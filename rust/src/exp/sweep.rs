@@ -1,0 +1,210 @@
+//! Parallel sweep harness: run independent experiment cells — one
+//! (cluster, driver) pair per (seed, policy, rate) combination — across
+//! every core with `std::thread::scope`.
+//!
+//! Each cell is a pure function of its inputs (the simulator owns all of
+//! its RNG state, see DESIGN.md §6), so parallel execution is safe and
+//! the only thing the harness must guarantee is **ordering**: results
+//! come back in item order regardless of which thread finished first,
+//! making a `--threads N` sweep byte-identical to `--threads 1` (pinned
+//! by `exp::resilience` tests and the CI diff step). No RNG, cluster, or
+//! driver state is ever shared across threads — workers pull cell
+//! *indices* from an atomic counter and build everything cell-local.
+//!
+//! The harness also times each cell, so a sweep can report its
+//! parallelism: `cells_s_sum` (Σ per-cell wall) vs `wall_s` (sweep
+//! wall) gives the realized concurrency, recorded in a `star-bench-v1`
+//! artifact (`BENCH_sweep.json`) and tracked across PRs like the perf
+//! benches. The true wall-time *speedup* is the `wall_s` ratio between
+//! a `--threads 1` and a `--threads N` artifact of the same grid (CI
+//! computes it from its serial + parallel resilience runs).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::jsonio::{self, Json};
+
+/// Default worker count: all available cores (1 if undetectable).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a `--threads` request: 0 (the CLI default when the flag is
+/// absent) means all available cores.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Run `f(index, &item)` over every item on up to `threads` workers and
+/// return the results **in item order**. `threads <= 1` runs inline
+/// (bit-and-byte identical output either way — the contract callers rely
+/// on for deterministic sweep artifacts).
+pub fn run_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    run_cells(items, threads, f).0
+}
+
+/// Like [`run_indexed`], additionally returning per-cell wall seconds
+/// (item order) and the sweep's total wall seconds.
+pub fn run_cells<T, R, F>(items: &[T], threads: usize, f: F) -> (Vec<R>, Vec<f64>, f64)
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let t0 = Instant::now();
+    let threads = threads.clamp(1, items.len().max(1));
+    let mut tagged: Vec<(usize, R, f64)> = Vec::with_capacity(items.len());
+    if threads <= 1 {
+        for (i, item) in items.iter().enumerate() {
+            let c0 = Instant::now();
+            let r = f(i, item);
+            tagged.push((i, r, c0.elapsed().as_secs_f64()));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let next_ref = &next;
+        let f_ref = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut out: Vec<(usize, R, f64)> = Vec::new();
+                        loop {
+                            let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            let c0 = Instant::now();
+                            let r = f_ref(i, &items[i]);
+                            out.push((i, r, c0.elapsed().as_secs_f64()));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                tagged.extend(h.join().expect("sweep worker panicked"));
+            }
+        });
+        tagged.sort_by_key(|&(i, _, _)| i);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut results = Vec::with_capacity(tagged.len());
+    let mut cell_s = Vec::with_capacity(tagged.len());
+    for (_, r, dt) in tagged {
+        results.push(r);
+        cell_s.push(dt);
+    }
+    (results, cell_s, wall)
+}
+
+/// Write a `star-bench-v1` artifact recording a sweep's wall time, the
+/// summed per-cell wall seconds, thread count, and the realized
+/// concurrency (`cells_s_sum / wall_s` — how many cells were in flight
+/// on average). Concurrency is *not* the serial-vs-parallel wall
+/// speedup: under memory/cache contention concurrent cells individually
+/// slow down, inflating `cells_s_sum` relative to a true serial run.
+/// The honest speedup number is the ratio of `wall_s` between two
+/// artifacts of the same sweep at `--threads 1` and `--threads N` —
+/// which is exactly what CI computes from its serial and parallel
+/// resilience runs.
+pub fn write_sweep_bench(path: &Path, name: &str, threads: usize, cell_s: &[f64], wall_s: f64) {
+    let cells = cell_s.len();
+    let cells_s_sum: f64 = cell_s.iter().sum();
+    let concurrency = if wall_s > 0.0 { cells_s_sum / wall_s } else { 1.0 };
+    let per_cell_ns = if cells > 0 { wall_s * 1e9 / cells as f64 } else { 0.0 };
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::exp::sweep")),
+        (
+            "results",
+            Json::Arr(vec![jsonio::obj(vec![
+                ("name", jsonio::s(name)),
+                ("iters", jsonio::num(cells as f64)),
+                ("ns_per_iter", jsonio::num(per_cell_ns)),
+                ("threads", jsonio::num(threads as f64)),
+                ("cells", jsonio::num(cells as f64)),
+                ("wall_s", jsonio::num(wall_s)),
+                ("cells_s_sum", jsonio::num(cells_s_sum)),
+                ("concurrency", jsonio::num(concurrency)),
+            ])]),
+        ),
+    ]);
+    if let Err(e) = std::fs::write(path, doc.to_string_pretty()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("sweep bench written to {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_item_order() {
+        let items: Vec<usize> = (0..64).collect();
+        for threads in [1, 2, 8, 100] {
+            let out = run_indexed(&items, threads, |i, &x| {
+                assert_eq!(i, x);
+                x * 3
+            });
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_exactly() {
+        // a cell whose output depends only on its inputs must sweep to
+        // identical results at any thread count
+        let items: Vec<u64> = (0..40).collect();
+        let cell = |_: usize, &seed: &u64| -> Vec<f64> {
+            let mut rng = crate::simrng::Rng::seeded(seed);
+            (0..100).map(|_| rng.range(0.0, 1.0)).collect()
+        };
+        let serial = run_indexed(&items, 1, cell);
+        let parallel = run_indexed(&items, available_threads().max(2), cell);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn empty_and_single_item_sweeps() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(run_indexed(&empty, 8, |_, &x| x).is_empty());
+        assert_eq!(run_indexed(&[7u32], 8, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn cells_are_timed_and_wall_reported() {
+        let items = [1u32, 2, 3];
+        let (out, cell_s, wall_s) = run_cells(&items, 2, |_, &x| x);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(cell_s.len(), 3);
+        assert!(cell_s.iter().all(|&t| t >= 0.0));
+        assert!(wall_s >= 0.0);
+    }
+
+    #[test]
+    fn bench_artifact_roundtrips() {
+        let path = std::env::temp_dir().join("star_sweep_bench_test.json");
+        write_sweep_bench(&path, "sweep/test", 4, &[0.5, 0.5, 1.0], 0.5);
+        let doc = Json::parse_file(&path).unwrap();
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        let r = &doc.get("results").unwrap().arr().unwrap()[0];
+        assert_eq!(r.get("name").unwrap().str().unwrap(), "sweep/test");
+        assert_eq!(r.get("threads").unwrap().num().unwrap(), 4.0);
+        assert_eq!(r.get("cells").unwrap().num().unwrap(), 3.0);
+        assert!((r.get("concurrency").unwrap().num().unwrap() - 4.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+}

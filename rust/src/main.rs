@@ -32,7 +32,7 @@ fn main() {
                 "usage: star <train|simulate|replay|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
-                 simulate   --system SSGD|ASGD|…|STAR-ML --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S]\n\
+                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  artifacts  [--dir artifacts]"
             );
@@ -100,20 +100,42 @@ fn train(args: &Args) -> star::Result<()> {
 }
 
 fn simulate(args: &Args) -> star::Result<()> {
-    args.check_known(&["system", "jobs", "arch", "seed", "fault-rate", "fault-seed"])?;
-    let system = args.str_or("system", "STAR-ML");
+    args.check_known(&[
+        "system", "jobs", "arch", "seed", "fault-rate", "fault-seed", "threads",
+    ])?;
+    // `--system` accepts a comma-separated list; each system is an
+    // independent run cell over the same trace, swept `--threads`-wide
+    // (reports print in command-line order regardless of finish order)
+    let systems_arg = args.str_or("system", "STAR-ML");
+    let systems: Vec<String> = systems_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if systems.is_empty() {
+        anyhow::bail!("--system expects at least one system name");
+    }
     let jobs = args.usize_or("jobs", 60)?;
     let seed = args.u64_or("seed", 0)?;
     let arch = parse_arch(&args.str_or("arch", "ps"))?;
     let fault_rate = args.f64_or("fault-rate", 0.0)?;
     let fault_seed = args.u64_or("fault-seed", 0)?;
+    let threads = star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?);
+    // validate every name before spawning sweep workers
+    star::baselines::validate_systems(&systems)?;
     let trace = generate(&TraceConfig {
         jobs,
         seed,
         span_s: jobs as f64 * 280.0,
         ..Default::default()
     });
-    run_and_report(&system, arch, seed, trace, fault_rate, fault_seed)
+    let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
+        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed)
+    });
+    for (sys, stats) in systems.iter().zip(&all) {
+        report(sys, arch, stats);
+    }
+    Ok(())
 }
 
 fn replay(args: &Args) -> star::Result<()> {
@@ -139,6 +161,22 @@ fn run_and_report(
 ) -> star::Result<()> {
     // validate the system name before the simulation starts
     make_policy(system)?;
+    let stats_v = run_stats(system, arch, seed, trace, fault_rate, fault_seed);
+    report(system, arch, &stats_v);
+    Ok(())
+}
+
+/// One run cell: a fresh driver over `trace` under `system`. Callers
+/// must have validated the system name (the per-job factory runs
+/// mid-simulation, where failing is no longer an option).
+fn run_stats(
+    system: &str,
+    arch: Arch,
+    seed: u64,
+    trace: Vec<star::trace::JobSpec>,
+    fault_rate: f64,
+    fault_seed: u64,
+) -> Vec<star::driver::JobStats> {
     let base_cfg = DriverConfig::default();
     let faults = star::faults::plan_at_rate(
         fault_rate,
@@ -152,9 +190,12 @@ fn run_and_report(
     let driver = Driver::new(
         cfg,
         trace,
-        Box::new(move |_| make_policy(&name).expect("validated above")),
+        Box::new(move |_| make_policy(&name).expect("validated by caller")),
     );
-    let (stats_v, _) = driver.run();
+    driver.run().0
+}
+
+fn report(system: &str, arch: Arch, stats_v: &[star::driver::JobStats]) {
     let mut t = Table::new(
         &format!("{system} over {} jobs ({arch:?})", stats_v.len()),
         &["metric", "mean", "p1", "p99"],
@@ -179,7 +220,6 @@ fn run_and_report(
         ]);
     }
     t.print();
-    Ok(())
 }
 
 fn parse_arch(s: &str) -> star::Result<Arch> {

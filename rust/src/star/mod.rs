@@ -209,22 +209,11 @@ impl Policy for Star {
             self.early_prev_predictions = obs.predicted_times.to_vec();
         }
 
-        // dead workers (fault injection) are outside the round: give them
-        // the live minimum so they neither read as stragglers nor distort
-        // the x-order grouping the driver re-forms over survivors
-        let live_min = predicted
-            .iter()
-            .zip(obs.live)
-            .filter(|&(_, &a)| a)
-            .map(|(&p, _)| p)
-            .fold(f64::INFINITY, f64::min);
-        if live_min.is_finite() {
-            for (p, &a) in predicted.iter_mut().zip(obs.live) {
-                if !a {
-                    *p = live_min;
-                }
-            }
-        }
+        // dead workers (fault injection) are outside the round: the
+        // shared membership layer gives them the live minimum so they
+        // neither read as stragglers nor distort the x-order grouping the
+        // driver re-forms over survivors
+        crate::driver::membership::mask_dead_with_live_min(&mut predicted, obs.live);
 
         let flags = crate::predict::straggler_flags(&predicted);
         let stragglers = flags.iter().filter(|&&f| f).count();

@@ -12,9 +12,10 @@
 //! *explicitly* dropped, and the driver-level first-K rule
 //! ([`crate::driver::first_k_split`]), which drops everything after the
 //! K-th arrival. Under fault injection the driver evaluates these round
-//! rules over the *live* membership (DESIGN.md §7); the planner here
-//! stays membership-agnostic — callers pass the durations of whichever
-//! workers are actually in the round.
+//! rules over the *live* membership through the shared
+//! [`crate::driver::membership`] layer (DESIGN.md §7/§8); the planner
+//! here stays membership-agnostic — callers pass the durations of
+//! whichever workers are actually in the round.
 
 use crate::simrng::Rng;
 
@@ -42,6 +43,18 @@ impl SyncMode {
             SyncMode::StaticX(x) => format!("{x}-order"),
             SyncMode::DynamicX => "dynamic-x".into(),
             SyncMode::ArRing { removed, tw_ms } => format!("ring(-{removed},{tw_ms}ms)"),
+        }
+    }
+
+    /// Allocation-free label (drops the parameters of [`SyncMode::name`])
+    /// for hot logging/stats paths.
+    pub fn static_name(&self) -> &'static str {
+        match self {
+            SyncMode::Ssgd => "SSGD",
+            SyncMode::Asgd => "ASGD",
+            SyncMode::StaticX(_) => "static-x",
+            SyncMode::DynamicX => "dynamic-x",
+            SyncMode::ArRing { .. } => "ring",
         }
     }
 
