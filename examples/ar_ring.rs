@@ -49,7 +49,7 @@ fn run() -> star::Result<()> {
     let mk_fixed = |mode: SyncMode| -> star::driver::PolicyFactory {
         Box::new(move |_| {
             Box::new(star::exp::measure::Fixed {
-                mode: DriverMode::Sync(mode.clone()),
+                mode: DriverMode::Sync(mode),
                 rescaled: true,
                 label: "ring",
             })
@@ -61,7 +61,7 @@ fn run() -> star::Result<()> {
     let chosen_name = d.mode.name();
     for (label, mode) in [
         ("full ring".to_string(), SyncMode::ArRing { removed: 0, tw_ms: 0.0 }),
-        (chosen_name, d.mode.clone()),
+        (chosen_name, d.mode),
     ] {
         let mut cfg = DriverConfig {
             arch: Arch::AllReduce,

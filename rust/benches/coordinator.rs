@@ -102,5 +102,18 @@ fn main() {
     });
     b.throughput("share-queries", 20.0);
 
+    // allocation-free epoch fill: same water-fill, reused output buffer.
+    // (The driver's own hot path batches through worker_shares/
+    // bw_share_sum; shares_into/shares_view are the slice-returning
+    // forms for whole-server consumers — tests, benches, tooling.)
+    let mut tv = tc;
+    let mut buf: Vec<(usize, f64)> = Vec::new();
+    b.bench("cluster shares_into epoch fill (20 tasks)", || {
+        tv += 0.37;
+        c.shares_into(0, Res::Cpu, tv, &mut buf);
+        buf.len()
+    });
+    b.throughput("share-queries", 1.0);
+
     b.write_json_env("BENCH_coordinator.json");
 }

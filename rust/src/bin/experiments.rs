@@ -3,13 +3,16 @@
 //!
 //! ```text
 //! experiments <id> [--jobs N] [--seed S] [--out results] [--quick]
-//!             [--fault-rate R] [--fault-seed S] [--threads N]
-//!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, all }
+//!             [--fault-rate R] [--fault-seed S] [--threads N] [--smoke]
+//!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, scale, all }
 //! ```
 //!
 //! `--fault-rate` injects a seeded failure plan (worker/PS crashes,
 //! server outages, degradation windows — DESIGN.md §7) into every run;
-//! the `resilience` experiment sweeps its own rates and ignores it.
+//! the `resilience` experiment sweeps its own rates and ignores it, and
+//! `scale` (the cluster-scale driver-throughput benchmark,
+//! `BENCH_driver.json`) always runs with faults on. `--smoke` is an
+//! alias for `--quick` (the `scale --smoke` CI step's spelling).
 //! `--threads N` caps the parallel sweep harness (`exp::sweep`); 0 or
 //! absent = all available cores. Output is byte-identical at any value.
 
@@ -20,21 +23,21 @@ fn main() {
     let args = Args::parse_env();
     let Some(id) = args.subcommand() else {
         eprintln!(
-            "usage: experiments <figN|tab1|resilience|all> [--jobs N] [--seed S] [--out DIR] \
-             [--quick] [--fault-rate R] [--fault-seed S] [--threads N]\n\
+            "usage: experiments <figN|tab1|resilience|scale|all> [--jobs N] [--seed S] \
+             [--out DIR] [--quick|--smoke] [--fault-rate R] [--fault-seed S] [--threads N]\n\
              experiment index: DESIGN.md §4"
         );
         std::process::exit(2);
     };
     let run = || -> star::Result<()> {
         args.check_known(&[
-            "jobs", "seed", "out", "quick", "fault-rate", "fault-seed", "threads",
+            "jobs", "seed", "out", "quick", "smoke", "fault-rate", "fault-seed", "threads",
         ])?;
         let ctx = ExpCtx {
             jobs: args.usize_or("jobs", 120)?,
             seed: args.u64_or("seed", 0)?,
             out_dir: args.str_or("out", "results").into(),
-            quick: args.flag("quick"),
+            quick: args.flag("quick") || args.flag("smoke"),
             fault_rate: args.f64_or("fault-rate", 0.0)?,
             fault_seed: args.u64_or("fault-seed", 0)?,
             threads: star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?),

@@ -238,6 +238,11 @@ pub struct Cluster {
     noise_seed: u64,
     /// bumped on any share-relevant mutation; epoch keys compare to it
     generation: u64,
+    /// server ids by kind, precomputed at construction (the server set is
+    /// immutable after `new`, so these never invalidate); placement asks
+    /// for them on every job admission
+    gpu_ids: Vec<usize>,
+    cpu_ids: Vec<usize>,
     /// `servers.len() * 2` epochs, indexed `server * 2 + res_idx(res)`
     cache: Vec<ShareEpoch>,
     cache_enabled: bool,
@@ -350,6 +355,8 @@ impl Cluster {
         let by_server = vec![Vec::new(); servers.len()];
         let cache = vec![ShareEpoch::default(); servers.len() * 2];
         let degradations = vec![Vec::new(); servers.len()];
+        let gpu_ids = (0..servers.len()).filter(|&s| servers[s].kind == ServerKind::Gpu).collect();
+        let cpu_ids = (0..servers.len()).filter(|&s| servers[s].kind == ServerKind::Cpu).collect();
         Cluster {
             cfg,
             servers,
@@ -360,6 +367,8 @@ impl Cluster {
             task_events: Vec::new(),
             noise_seed,
             generation: 0,
+            gpu_ids,
+            cpu_ids,
             cache,
             cache_enabled: true,
             scratch_demands: Vec::new(),
@@ -367,12 +376,16 @@ impl Cluster {
         }
     }
 
-    pub fn gpu_server_ids(&self) -> Vec<usize> {
-        (0..self.servers.len()).filter(|&s| self.servers[s].kind == ServerKind::Gpu).collect()
+    /// GPU-server ids, ascending — precomputed at construction (the
+    /// server set never changes after `new`), so callers get a slice
+    /// instead of a freshly collected `Vec` per placement.
+    pub fn gpu_server_ids(&self) -> &[usize] {
+        &self.gpu_ids
     }
 
-    pub fn cpu_server_ids(&self) -> Vec<usize> {
-        (0..self.servers.len()).filter(|&s| self.servers[s].kind == ServerKind::Cpu).collect()
+    /// CPU-server ids, ascending (see [`Cluster::gpu_server_ids`]).
+    pub fn cpu_server_ids(&self) -> &[usize] {
+        &self.cpu_ids
     }
 
     // -- task registry -------------------------------------------------------
@@ -684,9 +697,30 @@ impl Cluster {
     /// Max–min fair share of `res` for every active task on `server` at
     /// time `t`. Returns (task_id, share) pairs.
     pub fn shares(&mut self, server: usize, res: Res, t: f64) -> Vec<(TaskId, f64)> {
+        let mut out = Vec::new();
+        self.shares_into(server, res, t, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Cluster::shares`]: fills `out` (cleared first)
+    /// with the same (task_id, share) pairs in the same order — with a
+    /// reused buffer, repeat queries allocate nothing. Bit-identical to
+    /// `shares` (pinned by a proptest).
+    pub fn shares_into(&mut self, server: usize, res: Res, t: f64, out: &mut Vec<(TaskId, f64)>) {
         self.ensure_epoch(server, res, t);
         let e = &self.cache[server * 2 + res_idx(res)];
-        e.ids.iter().copied().zip(e.shares.iter().copied()).collect()
+        out.clear();
+        out.extend(e.ids.iter().copied().zip(e.shares.iter().copied()));
+    }
+
+    /// Zero-copy view of the (server, res, t) share epoch: parallel
+    /// `(task_ids, shares)` slices straight out of the cache. Valid until
+    /// the next `&mut self` call; for callers that only scan, this is the
+    /// cheapest form — no pair-building at all.
+    pub fn shares_view(&mut self, server: usize, res: Res, t: f64) -> (&[TaskId], &[f64]) {
+        self.ensure_epoch(server, res, t);
+        let e = &self.cache[server * 2 + res_idx(res)];
+        (&e.ids, &e.shares)
     }
 
     /// Interference fraction in [0, 0.85] on one task: smooth per-task
@@ -890,6 +924,74 @@ mod tests {
             for (x, d) in a.iter().zip(&demands) {
                 assert!(*x <= d + 1e-9);
                 assert!(*x >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn water_fill_zero_capacity_grants_nothing() {
+        // capacity 0 with demand: everyone shares the 0 remainder
+        let a = water_fill(&[1.0, 4.0], 0.0);
+        assert_eq!(a, vec![0.0, 0.0]);
+        let mut order = vec![9]; // dirty scratch
+        let mut alloc = vec![7.0];
+        water_fill_into(&[1.0, 4.0], 0.0, &mut order, &mut alloc);
+        assert_eq!(alloc, vec![0.0, 0.0]);
+        // zero capacity, zero demands: under-capacity branch, all zero
+        assert_eq!(water_fill(&[0.0, 0.0], 0.0), vec![0.0, 0.0]);
+        // no tasks at all
+        assert_eq!(water_fill(&[], 0.0), Vec::<f64>::new());
+        water_fill_into(&[], 5.0, &mut order, &mut alloc);
+        assert!(alloc.is_empty());
+    }
+
+    #[test]
+    fn water_fill_all_zero_demands_grant_zero() {
+        let a = water_fill(&[0.0, 0.0, 0.0], 10.0);
+        assert_eq!(a, vec![0.0, 0.0, 0.0]);
+        let mut order = Vec::new();
+        let mut alloc = Vec::new();
+        water_fill_into(&[0.0, 0.0, 0.0], 10.0, &mut order, &mut alloc);
+        assert_eq!(alloc, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn water_fill_single_task_at_exact_capacity() {
+        // total == capacity takes the under-capacity fast path exactly
+        let a = water_fill(&[6.0], 6.0);
+        assert_eq!(a, vec![6.0]);
+        let mut order = Vec::new();
+        let mut alloc = Vec::new();
+        water_fill_into(&[6.0], 6.0, &mut order, &mut alloc);
+        assert_eq!(alloc, vec![6.0]);
+        // one epsilon over: the fair-split branch, still exactly capacity
+        let a = water_fill(&[6.0 + 1e-12], 6.0);
+        assert_eq!(a.len(), 1);
+        assert!((a[0] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_into_and_view_match_shares() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        for j in 0..10 {
+            let mut t = worker(j, j % 3, 12.0, 0.5);
+            t.role = Role::Ps { idx: 0 };
+            c.add_task(t);
+        }
+        let mut buf = vec![(99usize, 9.9)]; // dirty scratch
+        for step in 0..5 {
+            let t = 10.0 + step as f64 * 3.3;
+            for server in 0..8 {
+                for res in [Res::Cpu, Res::Bw] {
+                    let want = c.shares(server, res, t);
+                    c.shares_into(server, res, t, &mut buf);
+                    assert_eq!(want, buf, "server {server} {res:?} t {t}");
+                    let (ids, shares) = c.shares_view(server, res, t);
+                    assert_eq!(ids.len(), shares.len());
+                    let pairs: Vec<(TaskId, f64)> =
+                        ids.iter().copied().zip(shares.iter().copied()).collect();
+                    assert_eq!(want, pairs);
+                }
             }
         }
     }

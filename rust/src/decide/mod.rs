@@ -164,7 +164,7 @@ fn decision_from(
     predicted: &[f64],
     ranked: Vec<(SyncMode, f64)>,
 ) -> Decision {
-    let (mode, est) = ranked[0].clone();
+    let (mode, est) = ranked[0];
     let lr = lr_for_mode(spec, n, &mode, predicted);
     Decision { mode, lr, est, ranked }
 }

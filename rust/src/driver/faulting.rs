@@ -31,7 +31,7 @@ pub(super) fn register_plan(plan: &FaultPlan, cluster: &mut Cluster, engine: &mu
 
 impl Driver {
     pub(super) fn handle_fault(&mut self, idx: usize, t: f64) {
-        let fault = self.cfg.faults.faults[idx].fault.clone();
+        let fault = self.cfg.faults.faults[idx].fault;
         match fault {
             Fault::WorkerCrash { job, rank, restart_s } => {
                 self.crash_worker(job, rank, t, restart_s);
@@ -72,8 +72,10 @@ impl Driver {
             run.alive[worker] = false;
             run.busy[worker] = false;
             // invalidate the in-flight WorkerDone (its iter no longer
-            // matches); the skipped index leaves at most one permanently
-            // incomplete straggler-accounting row per crash
+            // matches). The skipped index can never complete its
+            // straggler-accounting row — mark it dead so the round slab
+            // reclaims it (the old BTreeMap leaked one row per crash)
+            run.round_times.mark_dead(run.iter_idx[worker]);
             run.iter_idx[worker] += 1;
             run.pending.retain(|&(w, _, _)| w != worker);
             run.down_since[worker] = t;

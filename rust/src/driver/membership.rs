@@ -28,8 +28,6 @@
 //! reduces bit-identically to the fault-free grouping rules — pinned by
 //! the golden-trace suite.
 
-use std::collections::BTreeSet;
-
 use crate::sync::SyncMode;
 
 use super::DriverMode;
@@ -107,47 +105,84 @@ pub fn next_update_group(
     live: &[bool],
     dyn_groups: &[usize],
 ) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    if next_update_group_into(mode, pending, live, dyn_groups, &mut out) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// Allocation-free [`next_update_group`]: fills `out` with the firing
+/// group's workers and returns whether a rule fired (`out` is cleared
+/// either way). This is the driver's per-report hot path — with a reused
+/// `out` buffer the grouping decision allocates nothing.
+pub fn next_update_group_into(
+    mode: &DriverMode,
+    pending: &[(usize, f64, u64)],
+    live: &[bool],
+    dyn_groups: &[usize],
+    out: &mut Vec<usize>,
+) -> bool {
+    out.clear();
     let n_live = live_count(live);
     match mode {
         DriverMode::Sync(SyncMode::Ssgd) => {
             // barrier over the live membership
             if n_live > 0 && pending.len() >= n_live {
-                Some(pending.iter().map(|&(w, _, _)| w).collect())
+                out.extend(pending.iter().map(|&(w, _, _)| w));
+                true
             } else {
-                None
+                false
             }
         }
-        DriverMode::Sync(SyncMode::Asgd) => pending.first().map(|&(w, _, _)| vec![w]),
+        DriverMode::Sync(SyncMode::Asgd) => match pending.first() {
+            Some(&(w, _, _)) => {
+                out.push(w);
+                true
+            }
+            None => false,
+        },
         DriverMode::Sync(SyncMode::StaticX(x)) => {
             let x = (*x).clamp(1, n_live.max(1));
             if pending.len() >= x {
-                Some(pending[..x].iter().map(|&(w, _, _)| w).collect())
+                out.extend(pending[..x].iter().map(|&(w, _, _)| w));
+                true
             } else {
-                None
+                false
             }
         }
         DriverMode::Sync(SyncMode::DynamicX) => {
-            // a group fires when every *live* member has reported
-            let groups: BTreeSet<usize> =
-                pending.iter().map(|&(w, _, _)| dyn_groups[w]).collect();
-            for g in groups {
+            // a group fires when every *live* member has reported.
+            // Group ids index the prediction clusters, so they are dense
+            // in [0, n): scanning ids in ascending order visits exactly
+            // the groups the old BTreeSet pass did, in the same order,
+            // without building the set. Groups with no pending reports
+            // are skipped before the O(n) live-membership count, so the
+            // common case (one pending report) stays O(n + p).
+            for g in 0..live.len() {
+                out.extend(
+                    pending
+                        .iter()
+                        .filter(|&&(w, _, _)| dyn_groups[w] == g)
+                        .map(|&(w, _, _)| w),
+                );
+                if out.is_empty() {
+                    continue;
+                }
                 let needed = live
                     .iter()
                     .enumerate()
                     .filter(|&(w, &a)| a && dyn_groups[w] == g)
                     .count();
-                let have: Vec<usize> = pending
-                    .iter()
-                    .filter(|&&(w, _, _)| dyn_groups[w] == g)
-                    .map(|&(w, _, _)| w)
-                    .collect();
-                if !have.is_empty() && have.len() >= needed {
-                    return Some(have);
+                if out.len() >= needed {
+                    return true;
                 }
+                out.clear();
             }
-            None
+            false
         }
-        DriverMode::Sync(SyncMode::ArRing { .. }) | DriverMode::FirstK(_) => None,
+        DriverMode::Sync(SyncMode::ArRing { .. }) | DriverMode::FirstK(_) => false,
     }
 }
 
@@ -155,9 +190,17 @@ pub fn next_update_group(
 /// iteration time (dead members are bypassed like §IV-B's removed
 /// stragglers). Empty when no worker is live.
 pub fn ring_order(live: &[bool], predicted: &[f64]) -> Vec<usize> {
-    let mut order = live_ids(live);
-    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
+    let mut order = Vec::new();
+    ring_order_into(live, predicted, &mut order);
     order
+}
+
+/// Allocation-free [`ring_order`]: fills `order` in place (cleared
+/// first). Same stable sort, same tie-breaking — bit-identical chains.
+pub fn ring_order_into(live: &[bool], predicted: &[f64], order: &mut Vec<usize>) {
+    order.clear();
+    order.extend(live.iter().enumerate().filter(|&(_, &a)| a).map(|(w, _)| w));
+    order.sort_by(|&a, &b| predicted[a].partial_cmp(&predicted[b]).unwrap());
 }
 
 /// Split a ring order into `(ring, removed_tail)`. `removed` is clamped
@@ -175,11 +218,31 @@ pub fn ring_split(order: &[usize], removed: usize) -> (&[usize], &[usize]) {
 /// explicitly dropped. Returns `([], [])` while the threshold is unmet.
 /// Exposed for the conservation property tests.
 pub fn first_k_split(arrival: &[usize], k: usize, live: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut members = Vec::new();
+    let mut dropped = Vec::new();
+    first_k_split_into(arrival, k, live, &mut members, &mut dropped);
+    (members, dropped)
+}
+
+/// Allocation-free [`first_k_split`]: fills `members`/`dropped` in place
+/// (both cleared first) and returns whether the threshold was met — with
+/// reused buffers the per-report first-K check allocates nothing.
+pub fn first_k_split_into(
+    arrival: &[usize],
+    k: usize,
+    live: usize,
+    members: &mut Vec<usize>,
+    dropped: &mut Vec<usize>,
+) -> bool {
+    members.clear();
+    dropped.clear();
     let k = k.clamp(1, live.max(1));
     if arrival.len() < k {
-        return (Vec::new(), Vec::new());
+        return false;
     }
-    (arrival[..k].to_vec(), arrival[k..].to_vec())
+    members.extend_from_slice(&arrival[..k]);
+    dropped.extend_from_slice(&arrival[k..]);
+    true
 }
 
 #[cfg(test)]
@@ -317,6 +380,60 @@ mod tests {
         let ar = DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 60.0 });
         assert_eq!(next_update_group(&ar, &pending, &live, &groups), None);
         assert_eq!(next_update_group(&DriverMode::FirstK(2), &pending, &live, &groups), None);
+    }
+
+    // -- scratch-buffer variants match the allocating forms --------------
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let mut rng = crate::simrng::Rng::seeded(31);
+        let mut group = vec![99usize]; // deliberately dirty scratch
+        let mut order = vec![7usize];
+        let mut members = vec![1usize];
+        let mut dropped = vec![2usize];
+        for _ in 0..300 {
+            let n = rng.usize(1, 12);
+            let live: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+            let dyn_groups: Vec<usize> = (0..n).map(|_| rng.usize(0, n - 1)).collect();
+            let predicted: Vec<f64> = (0..n).map(|_| rng.range(0.05, 5.0)).collect();
+            let mut pending: Vec<(usize, f64, u64)> = Vec::new();
+            for w in 0..n {
+                if rng.chance(0.6) {
+                    pending.push((w, rng.range(0.0, 9.0), 0));
+                }
+            }
+            // arrival order is not rank order in general
+            if pending.len() > 1 {
+                let i = rng.usize(0, pending.len() - 1);
+                pending.swap(0, i);
+            }
+            for mode in [
+                DriverMode::Sync(SyncMode::Ssgd),
+                DriverMode::Sync(SyncMode::Asgd),
+                DriverMode::Sync(SyncMode::StaticX(rng.usize(1, n))),
+                DriverMode::Sync(SyncMode::DynamicX),
+                DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 30.0 }),
+                DriverMode::FirstK(rng.usize(0, n)),
+            ] {
+                let want = next_update_group(&mode, &pending, &live, &dyn_groups);
+                let fired =
+                    next_update_group_into(&mode, &pending, &live, &dyn_groups, &mut group);
+                assert_eq!(want.is_some(), fired, "{mode:?}");
+                if let Some(w) = want {
+                    assert_eq!(w, group, "{mode:?}");
+                }
+            }
+            ring_order_into(&live, &predicted, &mut order);
+            assert_eq!(ring_order(&live, &predicted), order);
+            let arrival: Vec<usize> = pending.iter().map(|&(w, _, _)| w).collect();
+            let k = rng.usize(0, n);
+            let lc = live_count(&live);
+            let (wm, wd) = first_k_split(&arrival, k, lc);
+            let fired = first_k_split_into(&arrival, k, lc, &mut members, &mut dropped);
+            assert_eq!(fired, !wm.is_empty());
+            assert_eq!(wm, members);
+            assert_eq!(wd, dropped);
+        }
     }
 
     #[test]

@@ -23,8 +23,16 @@
 //! * [`faulting`] — §7 plan-event translation and crash/restart logic,
 //! * [`stats`] — [`JobStats`]/[`IterBreakdown`]/[`ServerRecord`]
 //!   accumulation.
-
-use std::collections::BTreeMap;
+//!
+//! ## Hot-path discipline (DESIGN.md §3)
+//!
+//! The per-event dispatch path is **zero-clone and allocation-free in
+//! steady state**: [`crate::trace::JobSpec`], [`DriverMode`] and
+//! [`crate::faults::Fault`] are `Copy`; throttle lists and placement
+//! vectors are read in place through disjoint field borrows; round
+//! membership fills reusable scratch buffers
+//! (`membership::*_into`); and per-iteration straggler rows live in a
+//! ring-indexed slab (`stats::RoundSlab`) instead of a `BTreeMap`.
 
 use crate::cluster::{Cluster, ClusterConfig, Res, TaskId};
 use crate::faults::FaultPlan;
@@ -47,8 +55,9 @@ pub use self::membership::{first_k_split, LiveSet};
 pub use self::stats::{IterBreakdown, JobStats, ServerRecord, SERIES_CAP};
 
 /// Extended mode set used at driver level: LGC's first-K is a distinct
-/// grouping rule (uses only the K fastest reports per round).
-#[derive(Clone, Debug, PartialEq)]
+/// grouping rule (uses only the K fastest reports per round). `Copy` —
+/// modes are read on every dispatch and must never be cloned there.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DriverMode {
     Sync(SyncMode),
     /// one update per round from the first K reports; the rest are dropped
@@ -196,6 +205,10 @@ pub struct DriverConfig {
     /// injected failure schedule (empty = fault-free, bit-identical to
     /// the pre-faults simulator)
     pub faults: FaultPlan,
+    /// collect per-phase wall-clock counters ([`PhaseProfile`], the
+    /// `star simulate --profile` table). Off by default: the timers cost
+    /// two `Instant::now` calls per event when enabled, zero when not.
+    pub profile: bool,
 }
 
 impl Default for DriverConfig {
@@ -212,6 +225,53 @@ impl Default for DriverConfig {
             tree_branching: 3,
             throttles: Vec::new(),
             faults: FaultPlan::default(),
+            profile: false,
+        }
+    }
+}
+
+/// Lightweight per-phase wall-clock counters (`star simulate --profile`):
+/// where a run's real time goes, from plain `Instant` pairs instead of a
+/// profiler. The sub-phases nest inside `dispatch_s` (total event
+/// handling), so `dispatch_s - (itertime_s + decide_s + stats_s)` is the
+/// residual orchestration cost (grouping, queue ops, fault transitions).
+/// All zeros unless [`DriverConfig::profile`] was set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseProfile {
+    /// total event-dispatch wall seconds (contains the sub-phases)
+    pub dispatch_s: f64,
+    /// share fills + iteration-time composition ([`itertime::breakdown`])
+    pub itertime_s: f64,
+    /// policy decision time ([`Policy::decide`])
+    pub decide_s: f64,
+    /// straggler-accounting time ([`stats`] row recording/scoring)
+    pub stats_s: f64,
+    pub itertime_calls: u64,
+    pub decide_calls: u64,
+    pub stats_calls: u64,
+}
+
+/// Run-level instrumentation returned by [`Driver::run_instrumented`]:
+/// the numbers `BENCH_driver.json` tracks across PRs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunMetrics {
+    /// events the engine processed (the determinism probe)
+    pub events: u64,
+    /// high-water mark of the event queue
+    pub peak_queue_depth: usize,
+    /// wall-clock seconds of the event loop
+    pub wall_s: f64,
+    /// per-phase timing counters (all zero unless `cfg.profile`)
+    pub profile: PhaseProfile,
+}
+
+impl RunMetrics {
+    /// Events per wall-clock second — the headline throughput figure.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events as f64 / self.wall_s
+        } else {
+            0.0
         }
     }
 }
@@ -279,8 +339,8 @@ struct JobRun {
     /// `faults.checkpoint_every_updates` updates)
     checkpoint: crate::progress::Snapshot,
 
-    // per-iteration-index straggler accounting
-    round_times: BTreeMap<u64, Vec<(usize, f64, bool)>>,
+    // per-iteration-index straggler accounting (ring slab, DESIGN.md §3)
+    round_times: stats::RoundSlab,
     straggling: Vec<bool>,
 
     /// deprivations this job imposed on co-located tasks (§IV-D1), undone
@@ -303,6 +363,23 @@ pub struct Driver {
     make_policy: PolicyFactory,
     pub finished: Vec<JobStats>,
     pub server_records: Vec<ServerRecord>,
+
+    // hot-loop scratch, reused across events (DESIGN.md §3). Buffers are
+    // `mem::take`n around re-entrant calls, so the loop allocates nothing
+    // once they reach working-set size.
+    /// NaN-safe predicted times (`fill_predicted_safe` target)
+    pt_scratch: Vec<f64>,
+    /// AR ring chaining order
+    order_scratch: Vec<usize>,
+    /// firing update group / first-K members
+    group_scratch: Vec<usize>,
+    /// first-K dropped workers
+    drop_scratch: Vec<usize>,
+    /// first-K arrival order
+    arrival_scratch: Vec<usize>,
+
+    profile_on: bool,
+    profile: PhaseProfile,
 }
 
 impl Driver {
@@ -321,6 +398,7 @@ impl Driver {
         let n_jobs = specs.len();
         Driver {
             rng: Rng::new(cfg.seed, 0xd21fe4),
+            profile_on: cfg.profile,
             cfg,
             cluster,
             engine,
@@ -330,6 +408,12 @@ impl Driver {
             make_policy,
             finished: Vec::new(),
             server_records: Vec::new(),
+            pt_scratch: Vec::new(),
+            order_scratch: Vec::new(),
+            group_scratch: Vec::new(),
+            drop_scratch: Vec::new(),
+            arrival_scratch: Vec::new(),
+            profile: PhaseProfile::default(),
         }
     }
 
@@ -342,8 +426,19 @@ impl Driver {
     /// Like [`Driver::run`], additionally returning the number of events
     /// the engine processed — the determinism suite compares this across
     /// replays to pin the FIFO tie-break and event-machine structure.
-    pub fn run_counted(mut self) -> (Vec<JobStats>, Vec<ServerRecord>, u64) {
+    pub fn run_counted(self) -> (Vec<JobStats>, Vec<ServerRecord>, u64) {
+        let (stats, records, metrics) = self.run_instrumented();
+        (stats, records, metrics.events)
+    }
+
+    /// Like [`Driver::run`], additionally returning [`RunMetrics`]:
+    /// processed events, peak queue depth, wall seconds, and — when
+    /// [`DriverConfig::profile`] is set — the per-phase timing counters.
+    /// Instrumentation reads clocks only; it cannot perturb the trace.
+    pub fn run_instrumented(mut self) -> (Vec<JobStats>, Vec<ServerRecord>, RunMetrics) {
+        let run_t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.engine.next() {
+            let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
             match ev {
                 Event::Arrive(job) => self.try_place(job, t),
                 Event::WorkerDone { job, worker, iter } => self.worker_done(job, worker, iter, t),
@@ -359,9 +454,17 @@ impl Driver {
                 Event::WorkerRestart { job, worker } => self.worker_restart(job, worker, t),
                 Event::PsRestart { job, ps_idx } => self.ps_restart(job, ps_idx, t),
             }
+            if let Some(t0) = t0 {
+                self.profile.dispatch_s += t0.elapsed().as_secs_f64();
+            }
         }
-        let events = self.engine.events_processed();
-        (self.finished, self.server_records, events)
+        let metrics = RunMetrics {
+            events: self.engine.events_processed(),
+            peak_queue_depth: self.engine.peak_pending(),
+            wall_s: run_t0.elapsed().as_secs_f64(),
+            profile: self.profile,
+        };
+        (self.finished, self.server_records, metrics)
     }
 
     fn sample_servers(&mut self, t: f64) {
@@ -378,7 +481,7 @@ impl Driver {
     }
 
     fn try_place(&mut self, job: usize, t: f64) {
-        let spec = self.specs[job].clone();
+        let spec = self.specs[job];
         let policy = (self.make_policy)(&spec);
         let balanced = policy.balanced_placement();
         match place_job(&mut self.cluster, &spec, balanced) {
@@ -424,7 +527,7 @@ impl Driver {
                     last_ar_flush_t: -1.0,
                     mode_just_switched: false,
                     pause_until: 0.0,
-                    round_times: BTreeMap::new(),
+                    round_times: stats::RoundSlab::default(),
                     straggling: vec![false; n],
                     imposed: Vec::new(),
                     stats: JobStats {
@@ -457,7 +560,10 @@ impl Driver {
                     job: spec,
                     finished: false,
                 };
-                for &(tj, rank, cpu, bw) in &self.cfg.throttles.clone() {
+                // re-apply static throttles in place: the list is read
+                // through a disjoint field borrow, never cloned (this
+                // path re-runs on every wait-queue re-placement)
+                for &(tj, rank, cpu, bw) in &self.cfg.throttles {
                     if tj == job && rank < n {
                         let tid = run.placement.worker_tasks[rank];
                         self.cluster.set_throttles(
@@ -490,7 +596,13 @@ impl Driver {
             ps_tasks: &run.placement.ps_tasks,
             batch_frac: run.batch_frac[worker],
         };
-        itertime::breakdown(&mut self.cluster, &mut self.rng, &inp, t)
+        let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
+        let bd = itertime::breakdown(&mut self.cluster, &mut self.rng, &inp, t);
+        if let Some(t0) = t0 {
+            self.profile.itertime_s += t0.elapsed().as_secs_f64();
+            self.profile.itertime_calls += 1;
+        }
+        bd
     }
 
     fn start_iteration(&mut self, job: usize, worker: usize, t: f64) {
@@ -571,11 +683,19 @@ impl Driver {
             // are re-chained around per §IV-B's removed-straggler
             // machinery, so removal counts apply to the survivors.
             let mut dropped = false;
-            if let DriverMode::Sync(SyncMode::ArRing { removed, .. }) = &run.mode {
-                if *removed > 0 && run.iter_start[worker] < run.last_ar_flush_t {
-                    let pt = run.predicted_times_safe();
-                    let order = membership::ring_order(&run.alive, &pt);
-                    let (_, out) = membership::ring_split(&order, *removed);
+            if let DriverMode::Sync(SyncMode::ArRing { removed, .. }) = run.mode {
+                if removed > 0 && run.iter_start[worker] < run.last_ar_flush_t {
+                    fill_predicted_safe(
+                        &run.predicted_times,
+                        &run.last_times,
+                        &mut self.pt_scratch,
+                    );
+                    membership::ring_order_into(
+                        &run.alive,
+                        &self.pt_scratch,
+                        &mut self.order_scratch,
+                    );
+                    let (_, out) = membership::ring_split(&self.order_scratch, removed);
                     if out.contains(&worker) {
                         dropped = true;
                     }
@@ -586,17 +706,23 @@ impl Driver {
             }
             run.reports_since_decision += 1;
 
-            // straggler accounting for this iteration index
+            // straggler accounting for this iteration index; the minimum
+            // per-worker index is the slab's reclamation watermark
             let flag_pred = run.predicted_flags[worker];
+            let min_iter = run.iter_idx.iter().copied().min().unwrap_or(0);
+            let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
             stats::record_report(
                 &mut run.stats,
                 &mut run.round_times,
                 &mut run.straggling,
                 iter,
-                worker,
-                dur,
-                flag_pred,
+                min_iter,
+                (worker, dur, flag_pred),
             );
+            if let Some(t0) = t0 {
+                self.profile.stats_s += t0.elapsed().as_secs_f64();
+                self.profile.stats_calls += 1;
+            }
         }
 
         // group into updates per current mode
@@ -644,44 +770,46 @@ impl Driver {
     /// engine.
     fn process_pending(&mut self, job: usize, t: f64) {
         loop {
-            let action = {
+            let fired = {
                 let Some(run) = self.jobs[job].as_ref() else { return };
                 if run.finished || run.ps_down > 0 {
                     // a crashed PS holds all updates until it restarts
                     return;
                 }
-                membership::next_update_group(
+                membership::next_update_group_into(
                     &run.mode,
                     &run.pending,
                     &run.alive,
                     &run.dyn_groups,
+                    &mut self.group_scratch,
                 )
             };
-
-            match action {
-                Some(members) => {
-                    self.fire_update(job, &members, t);
-                }
-                None => break,
+            if !fired {
+                break;
             }
+            // take the buffer around the re-entrant call; its capacity is
+            // reused, so the loop still allocates nothing in steady state
+            let members = std::mem::take(&mut self.group_scratch);
+            self.fire_update(job, &members, t);
+            self.group_scratch = members;
         }
 
         // AR-ring and first-K need scheduled/threshold handling
         let special = {
             let Some(run) = self.jobs[job].as_ref() else { return };
-            run.mode.clone()
+            run.mode
         };
         match special {
             DriverMode::Sync(SyncMode::ArRing { removed, tw_ms }) => {
                 let Some(run) = self.jobs[job].as_mut() else { return };
                 // the ring chains over live workers; dead members are
                 // bypassed like removed stragglers (§IV-B)
-                let pt = run.predicted_times_safe();
-                let order = membership::ring_order(&run.alive, &pt);
-                if order.is_empty() {
+                fill_predicted_safe(&run.predicted_times, &run.last_times, &mut self.pt_scratch);
+                membership::ring_order_into(&run.alive, &self.pt_scratch, &mut self.order_scratch);
+                if self.order_scratch.is_empty() {
                     return;
                 }
-                let (ring, _) = membership::ring_split(&order, removed);
+                let (ring, _) = membership::ring_split(&self.order_scratch, removed);
                 let ring_reported =
                     ring.iter().all(|&w| run.pending.iter().any(|&(pw, _, _)| pw == w));
                 if ring_reported && !run.ar_flush_scheduled {
@@ -690,29 +818,37 @@ impl Driver {
                 }
             }
             DriverMode::FirstK(k) => {
-                let (fire, members) = {
+                let fire = {
                     let Some(run) = self.jobs[job].as_mut() else { return };
                     let live = membership::live_count(&run.alive);
-                    let arrival: Vec<usize> =
-                        run.pending.iter().map(|&(w, _, _)| w).collect();
-                    let (members, dropped) = first_k_split(&arrival, k, live);
-                    if !members.is_empty() {
+                    self.arrival_scratch.clear();
+                    self.arrival_scratch.extend(run.pending.iter().map(|&(w, _, _)| w));
+                    let fired = membership::first_k_split_into(
+                        &self.arrival_scratch,
+                        k,
+                        live,
+                        &mut self.group_scratch,
+                        &mut self.drop_scratch,
+                    );
+                    if fired {
                         // first K by arrival; later arrivals are dropped as
                         // they come (their pending entries are flushed)
+                        let members = &self.group_scratch;
                         run.pending.retain(|&(w, _, _)| members.contains(&w));
-                        (true, (members, dropped))
-                    } else {
-                        (false, (Vec::new(), Vec::new()))
                     }
+                    fired
                 };
                 if fire {
-                    let (members, dropped) = members;
+                    let members = std::mem::take(&mut self.group_scratch);
                     self.fire_update(job, &members, t);
+                    self.group_scratch = members;
                     // dropped workers restart immediately (their gradient
                     // is discarded)
-                    for w in dropped {
+                    let dropped = std::mem::take(&mut self.drop_scratch);
+                    for &w in &dropped {
                         self.start_iteration(job, w, t);
                     }
+                    self.drop_scratch = dropped;
                 }
             }
             _ => {}
@@ -730,17 +866,21 @@ impl Driver {
             self.process_pending(job, t);
             return;
         }
-        let members = {
+        let fire = {
             let Some(run) = self.jobs[job].as_mut() else { return };
             if run.finished || !run.ar_flush_scheduled || run.ps_down > 0 {
                 return;
             }
             run.ar_flush_scheduled = false;
             run.last_ar_flush_t = t;
-            run.pending.iter().map(|&(w, _, _)| w).collect::<Vec<_>>()
+            self.group_scratch.clear();
+            self.group_scratch.extend(run.pending.iter().map(|&(w, _, _)| w));
+            !self.group_scratch.is_empty()
         };
-        if !members.is_empty() {
+        if fire {
+            let members = std::mem::take(&mut self.group_scratch);
             self.fire_update(job, &members, t);
+            self.group_scratch = members;
         }
         self.check_termination(job, t);
     }
@@ -804,21 +944,23 @@ impl Driver {
     }
 
     fn decide(&mut self, job: usize, t: f64) {
-        // undo previously imposed deprivations
-        let imposed: Vec<(TaskId, f64, f64)> = {
+        // undo previously imposed deprivations — in place, through
+        // disjoint field borrows (jobs vs cluster), so nothing is cloned
+        // or reallocated
+        {
             let Some(run) = self.jobs[job].as_mut() else { return };
-            std::mem::take(&mut run.imposed)
-        };
-        for (task, cpu_cap, bw_cap) in imposed {
-            self.cluster.set_caps(task, cpu_cap, bw_cap);
+            for &(task, cpu_cap, bw_cap) in &run.imposed {
+                self.cluster.set_caps(task, cpu_cap, bw_cap);
+            }
+            run.imposed.clear();
         }
 
         let decision = {
             let run = self.jobs[job].as_mut().unwrap();
             run.reports_since_decision = 0;
             let spec = run.job.spec();
-            let predicted = run.predicted_times_safe();
-            run.predicted_flags = crate::predict::straggler_flags(&predicted);
+            fill_predicted_safe(&run.predicted_times, &run.last_times, &mut self.pt_scratch);
+            run.predicted_flags = crate::predict::straggler_flags(&self.pt_scratch);
             // a dead worker is not a straggler — it is outside the round
             // entirely until it restarts
             for w in 0..run.job.workers {
@@ -834,13 +976,19 @@ impl Driver {
                 step: run.progress.step,
                 progress: run.progress.progress,
                 now: t,
-                predicted_times: &predicted,
+                predicted_times: &self.pt_scratch,
                 last_times: &run.last_times,
                 value: run.progress.value(),
                 predicted_stragglers: &run.predicted_flags,
                 live: &run.alive,
             };
-            run.policy.decide(&obs)
+            let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
+            let d = run.policy.decide(&obs);
+            if let Some(t0) = t0 {
+                self.profile.decide_s += t0.elapsed().as_secs_f64();
+                self.profile.decide_calls += 1;
+            }
+            d
         };
 
         let run = self.jobs[job].as_mut().unwrap();
@@ -850,7 +998,8 @@ impl Driver {
             run.ar_flush_scheduled = false;
         }
         if matches!(decision.mode, DriverMode::Sync(SyncMode::DynamicX)) {
-            let clusters = crate::sync::cluster_times(&run.predicted_times_safe(), 0.15, 0.02);
+            // pt_scratch still holds this decision's predicted times
+            let clusters = crate::sync::cluster_times(&self.pt_scratch, 0.15, 0.02);
             for (g, c) in clusters.iter().enumerate() {
                 for &w in c {
                     run.dyn_groups[w] = g;
@@ -881,27 +1030,26 @@ impl Driver {
             run.stats.value_series.push((t - run.started_at, run.progress.value()));
         }
 
-        // demand factors for the selected mode (O5)
+        // demand factors for the selected mode (O5). The placement
+        // vectors are iterated in place (jobs and cluster are disjoint
+        // fields) — the old per-decision clones of worker_tasks/ps_tasks/
+        // self_caps/deprive are gone.
         let (fc, fb) = demand_factor(&run.mode, run.job.workers);
         let spec = run.job.spec();
-        let worker_tasks = run.placement.worker_tasks.clone();
-        let ps_tasks = run.placement.ps_tasks.clone();
-        let deprive = decision.deprive.clone();
         let (asgd_c, asgd_b) = (spec.asgd_cpu_factor, spec.asgd_bw_factor);
         let (base_wc, base_wb) = (spec.worker_cpu, spec.worker_bw);
         let (ps_fc, ps_fb) = (spec.ps_cpu_factor, spec.ps_bw_factor);
-        let self_caps = decision.self_caps.clone();
-        for (w, &wt) in worker_tasks.iter().enumerate() {
+        for (w, &wt) in run.placement.worker_tasks.iter().enumerate() {
             self.cluster.set_demands(
                 wt,
                 base_wc * (1.0 + (asgd_c - 1.0) * (fc - 1.0)),
                 base_wb * (1.0 + (asgd_b - 1.0) * (fb - 1.0)),
             );
             // §IV-D1 group equalization: fast members yield headroom
-            let cap = self_caps.get(w).copied().unwrap_or(1.0).clamp(0.05, 1.0);
+            let cap = decision.self_caps.get(w).copied().unwrap_or(1.0).clamp(0.05, 1.0);
             self.cluster.set_caps(wt, cap, cap);
         }
-        for &pt in &ps_tasks {
+        for &pt in &run.placement.ps_tasks {
             self.cluster.set_demands(
                 pt,
                 base_wc * ps_fc * (1.0 + (asgd_c - 1.0) * (fc - 1.0)),
@@ -910,8 +1058,7 @@ impl Driver {
         }
 
         // §IV-D1 deprivations requested by the policy
-        let run = self.jobs[job].as_mut().unwrap();
-        for (task, frac) in deprive {
+        for (task, frac) in decision.deprive {
             if task < self.cluster.task_count() && self.cluster.task(task).active {
                 let old_c = self.cluster.task(task).cpu_cap;
                 let old_b = self.cluster.task(task).bw_cap;
@@ -973,14 +1120,21 @@ impl Driver {
     }
 }
 
-impl JobRun {
-    fn predicted_times_safe(&self) -> Vec<f64> {
-        self.predicted_times
-            .iter()
-            .zip(&self.last_times)
-            .map(|(&p, &l)| if p.is_finite() { p } else if l.is_finite() { l } else { 0.5 })
-            .collect()
-    }
+/// Fill `out` with NaN-safe predicted iteration times: the prediction if
+/// finite, else the last measured time, else 0.5 s (bootstrap). The
+/// allocation-free replacement for the old `JobRun::predicted_times_safe`
+/// (which built a fresh `Vec` on every AR-drop check and decision).
+fn fill_predicted_safe(predicted: &[f64], last: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(predicted.iter().zip(last).map(|(&p, &l)| {
+        if p.is_finite() {
+            p
+        } else if l.is_finite() {
+            l
+        } else {
+            0.5
+        }
+    }));
 }
 
 fn waiting_in_pending(run: &JobRun, worker: usize) -> bool {
@@ -1030,7 +1184,7 @@ mod tests {
         }
 
         fn decide(&mut self, _obs: &RoundObs) -> PolicyDecision {
-            let mut d = PolicyDecision::simple(self.0.clone());
+            let mut d = PolicyDecision::simple(self.0);
             d.lr_rescaled = true;
             d
         }
@@ -1051,7 +1205,7 @@ mod tests {
         let driver = Driver::new(
             cfg,
             tiny_trace(n_jobs),
-            Box::new(move |_| Box::new(Always(mode.clone(), "test")) as Box<dyn Policy>),
+            Box::new(move |_| Box::new(Always(mode, "test")) as Box<dyn Policy>),
         );
         let (stats, _) = driver.run();
         stats
@@ -1098,7 +1252,7 @@ mod tests {
             DriverMode::Sync(SyncMode::ArRing { removed: 1, tw_ms: 60.0 }),
             DriverMode::FirstK(3),
         ] {
-            let stats = run_with(mode.clone(), 2);
+            let stats = run_with(mode, 2);
             assert_eq!(stats.len(), 2, "{mode:?}");
             for s in &stats {
                 assert!(s.updates > 0, "{mode:?}");
@@ -1115,6 +1269,55 @@ mod tests {
             assert_eq!(x.updates, y.updates);
             assert_eq!(x.straggler_iters, y.straggler_iters);
         }
+    }
+
+    #[test]
+    fn run_metrics_report_events_and_queue_depth() {
+        let mk = |profile: bool| {
+            let cfg = DriverConfig {
+                max_updates_per_job: 500,
+                max_iters_per_job: 2000,
+                max_job_duration_s: 4000.0,
+                profile,
+                ..Default::default()
+            };
+            Driver::new(
+                cfg,
+                tiny_trace(2),
+                Box::new(|_| {
+                    Box::new(Always(DriverMode::Sync(SyncMode::Ssgd), "t")) as Box<dyn Policy>
+                }),
+            )
+        };
+        let (stats, _, m) = mk(false).run_instrumented();
+        assert_eq!(stats.len(), 2);
+        assert!(m.events > 0);
+        assert!(m.peak_queue_depth > 0);
+        assert!(m.wall_s > 0.0);
+        assert!(m.events_per_sec() > 0.0);
+        // profiling off: no timers accumulate
+        assert_eq!(m.profile.dispatch_s, 0.0);
+        assert_eq!(m.profile.decide_calls, 0);
+
+        // profiling on: phases accumulate, sub-phases nest under dispatch,
+        // and the trace itself is unchanged (instrumentation only reads
+        // clocks)
+        let (stats_p, _, mp) = mk(true).run_instrumented();
+        assert_eq!(mp.events, m.events, "profiling must not perturb the trace");
+        for (a, b) in stats.iter().zip(&stats_p) {
+            assert_eq!(a.jct_s, b.jct_s);
+            assert_eq!(a.updates, b.updates);
+        }
+        assert!(mp.profile.dispatch_s > 0.0);
+        assert!(mp.profile.itertime_calls > 0);
+        assert!(mp.profile.decide_calls > 0);
+        assert!(mp.profile.stats_calls > 0);
+        let subs = mp.profile.itertime_s + mp.profile.decide_s + mp.profile.stats_s;
+        assert!(
+            subs <= mp.profile.dispatch_s + 1e-6,
+            "sub-phases ({subs}) must nest inside dispatch ({})",
+            mp.profile.dispatch_s
+        );
     }
 
     #[test]
@@ -1221,7 +1424,7 @@ mod tests {
         let driver = Driver::new(
             cfg,
             tiny_trace(n_jobs),
-            Box::new(move |_| Box::new(Always(mode.clone(), "test")) as Box<dyn Policy>),
+            Box::new(move |_| Box::new(Always(mode, "test")) as Box<dyn Policy>),
         );
         let (stats, _) = driver.run();
         stats
@@ -1302,7 +1505,7 @@ mod tests {
                     },
                 },
             ];
-            let stats = run_with_faults(mode.clone(), 2, faults);
+            let stats = run_with_faults(mode, 2, faults);
             assert_eq!(stats.len(), 2, "{mode:?}");
             for s in &stats {
                 assert!(s.updates > 0, "{mode:?}: no updates under faults");

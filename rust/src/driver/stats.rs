@@ -5,8 +5,6 @@
 //! This layer is write-only bookkeeping — nothing here feeds back into
 //! scheduling decisions, so moving a stat cannot change a trace.
 
-use std::collections::BTreeMap;
-
 use crate::predict::{Confusion, STRAGGLER_DEV};
 
 /// Per-iteration measured breakdown.
@@ -67,26 +65,164 @@ pub struct ServerRecord {
     pub bw_util: f64,
 }
 
+/// Per-iteration-index round state: a ring-indexed slab keyed on round
+/// offset (DESIGN.md §3), replacing the old `BTreeMap<u64, Vec<…>>`.
+///
+/// Iteration indices arrive from a narrow sliding window — each worker
+/// walks its own index counter forward by one — so the live rows fit a
+/// power-of-two ring addressed by `iter & mask`. `base` trails the
+/// slowest worker's counter: the driver passes its current minimum and
+/// the ring reclaims every slot behind it. Completed rows flip a
+/// `present` bit and keep their entry buffers, so steady-state recording
+/// allocates nothing; crash-skipped indices are [`RoundSlab::mark_dead`]
+/// so a row that can never complete (the old map kept it forever) is
+/// dropped instead of pinning the ring.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct RoundSlab {
+    /// lowest iteration index the ring can still hold a row for
+    base: u64,
+    /// power-of-two ring; a row for `iter` lives at `iter & (len - 1)`
+    rows: Vec<RoundRow>,
+    /// indices ≥ `base` that can never complete (a crash skipped them);
+    /// reports for them are discarded, exactly as the map's leaked rows
+    /// were never scored
+    dead: Vec<u64>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct RoundRow {
+    iter: u64,
+    present: bool,
+    entries: Vec<(usize, f64, bool)>,
+}
+
+impl RoundSlab {
+    /// Record one `(worker, duration, predicted-flag)` report for `iter`.
+    /// Returns the completed row's entries (in arrival order, exactly as
+    /// the map accumulated them) once all `n` workers have reported, else
+    /// `None`. `min_iter` is the caller's current minimum per-worker
+    /// iteration index — the watermark below which no further report can
+    /// arrive.
+    fn record(
+        &mut self,
+        iter: u64,
+        report: (usize, f64, bool),
+        n: usize,
+        min_iter: u64,
+    ) -> Option<&[(usize, f64, bool)]> {
+        if self.dead.contains(&iter) {
+            return None;
+        }
+        // the row being filled right now must stay addressable
+        self.advance(min_iter.min(iter));
+        self.ensure_capacity(iter);
+        let mask = self.rows.len() as u64 - 1;
+        let slot = (iter & mask) as usize;
+        let row = &mut self.rows[slot];
+        if !row.present {
+            row.present = true;
+            row.iter = iter;
+            row.entries.clear();
+        }
+        debug_assert_eq!(row.iter, iter, "round slab collision");
+        row.entries.push(report);
+        if row.entries.len() == n {
+            row.present = false;
+            Some(&self.rows[slot].entries)
+        } else {
+            None
+        }
+    }
+
+    /// A crash skipped `iter` for some worker: the row can never reach
+    /// `n` reports. Drop what exists and discard future reports for it.
+    pub(crate) fn mark_dead(&mut self, iter: u64) {
+        if iter < self.base {
+            return;
+        }
+        if !self.rows.is_empty() {
+            let slot = (iter & (self.rows.len() as u64 - 1)) as usize;
+            let row = &mut self.rows[slot];
+            if row.present && row.iter == iter {
+                row.present = false;
+            }
+        }
+        if !self.dead.contains(&iter) {
+            self.dead.push(iter);
+        }
+    }
+
+    /// Slide `base` up to `min_iter`, reclaiming empty/dead slots. A
+    /// present row below `min_iter` cannot exist (every worker either
+    /// reported or crash-skipped each index it passed), so the walk only
+    /// crosses reclaimable slots.
+    fn advance(&mut self, min_iter: u64) {
+        if self.rows.is_empty() {
+            self.base = self.base.max(min_iter);
+        } else {
+            let mask = self.rows.len() as u64 - 1;
+            while self.base < min_iter {
+                let row = &self.rows[(self.base & mask) as usize];
+                if row.present && row.iter == self.base {
+                    // cannot happen (see doc comment) — but never reclaim
+                    // a live row if the invariant is somehow violated
+                    break;
+                }
+                self.base += 1;
+            }
+        }
+        if !self.dead.is_empty() {
+            let base = self.base;
+            self.dead.retain(|&d| d >= base);
+        }
+    }
+
+    /// Grow the ring so `iter` is addressable from `base` (next power of
+    /// two, rows re-homed by their own index).
+    fn ensure_capacity(&mut self, iter: u64) {
+        debug_assert!(iter >= self.base);
+        let needed = (iter - self.base + 1) as usize;
+        if needed <= self.rows.len() {
+            return;
+        }
+        let new_len = needed.next_power_of_two().max(8);
+        let new_mask = new_len as u64 - 1;
+        let mut new_rows = vec![RoundRow::default(); new_len];
+        for row in self.rows.drain(..) {
+            if row.present {
+                let slot = (row.iter & new_mask) as usize;
+                new_rows[slot] = row;
+            }
+        }
+        self.rows = new_rows;
+    }
+
+    #[cfg(test)]
+    fn occupied(&self) -> usize {
+        self.rows.iter().filter(|r| r.present).count()
+    }
+}
+
 /// Record one completed iteration into the per-index straggler
 /// accounting. When every worker's duration for `iter` is in, the row is
 /// scored against the §II deviation-ratio threshold: prediction confusion
 /// updates, straggler iterations count, and episode boundaries are
 /// tracked through `straggling` (one flag per worker, `len == n`).
+/// `report` is `(worker, duration, predicted-flag)`; `min_iter` is the
+/// job's minimum per-worker iteration index (the slab's reclamation
+/// watermark — it never affects what gets scored).
 pub(crate) fn record_report(
     stats: &mut JobStats,
-    round_times: &mut BTreeMap<u64, Vec<(usize, f64, bool)>>,
+    round_times: &mut RoundSlab,
     straggling: &mut [bool],
     iter: u64,
-    worker: usize,
-    dur: f64,
-    flag_pred: bool,
+    min_iter: u64,
+    report: (usize, f64, bool),
 ) {
-    round_times.entry(iter).or_default().push((worker, dur, flag_pred));
     let n = straggling.len();
-    if round_times.get(&iter).map(|v| v.len()) == Some(n) {
-        let row = round_times.remove(&iter).unwrap();
+    if let Some(row) = round_times.record(iter, report, n, min_iter) {
         let min = row.iter().map(|&(_, d, _)| d).fold(f64::INFINITY, f64::min).max(1e-9);
-        for &(w, d, pred) in &row {
+        for &(w, d, pred) in row {
             let is_straggler = (d - min) / min > STRAGGLER_DEV;
             stats.prediction.add(pred, is_straggler);
             if is_straggler {
@@ -99,5 +235,121 @@ pub(crate) fn record_report(
                 straggling[w] = false;
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> JobStats {
+        JobStats {
+            job: 0,
+            model: 0,
+            workers: 3,
+            system: "test".into(),
+            arrival_s: 0.0,
+            start_s: 0.0,
+            end_s: 0.0,
+            tta_s: None,
+            jct_s: 0.0,
+            converged_value: 0.0,
+            is_nlp: false,
+            updates: 0,
+            iters_total: 0,
+            straggler_iters: 0,
+            straggler_episodes: 0,
+            decision_pause_total_s: 0.0,
+            decision_overhead_total_s: 0.0,
+            decision_count: 0,
+            prediction: Confusion::default(),
+            series: Vec::new(),
+            value_series: Vec::new(),
+            mode_switches: 0,
+            downtime_s: 0.0,
+            rollbacks: 0,
+        }
+    }
+
+    #[test]
+    fn slab_scores_complete_rows_like_the_map_did() {
+        let mut s = stats();
+        let mut slab = RoundSlab::default();
+        let mut straggling = [false; 3];
+        // iteration 0: worker 2 is 2x the min -> one straggler iteration
+        record_report(&mut s, &mut slab, &mut straggling, 0, 0, (0, 1.0, false));
+        record_report(&mut s, &mut slab, &mut straggling, 0, 0, (1, 1.05, false));
+        assert_eq!(s.straggler_iters, 0, "incomplete row must not score");
+        record_report(&mut s, &mut slab, &mut straggling, 0, 0, (2, 2.0, true));
+        assert_eq!(s.straggler_iters, 1);
+        assert_eq!(s.straggler_episodes, 1);
+        assert!(straggling[2]);
+        assert_eq!(slab.occupied(), 0, "completed row must free its slot");
+        // iteration 1: all tight -> episode closes
+        for w in 0..3 {
+            record_report(&mut s, &mut slab, &mut straggling, 1, 1, (w, 1.0, false));
+        }
+        assert_eq!(s.straggler_iters, 1);
+        assert!(!straggling[2]);
+    }
+
+    #[test]
+    fn slab_interleaved_rounds_and_base_reclamation() {
+        let mut s = stats();
+        let mut slab = RoundSlab::default();
+        let mut straggling = [false; 2];
+        // two workers drift apart: w0 races ahead, w1 lags
+        for iter in 0..40u64 {
+            record_report(&mut s, &mut slab, &mut straggling, iter, 0, (0, 1.0, false));
+        }
+        assert_eq!(slab.occupied(), 40);
+        for iter in 0..40u64 {
+            // w1 catches up; min_iter trails at `iter`
+            record_report(&mut s, &mut slab, &mut straggling, iter, iter, (1, 1.0, false));
+        }
+        assert_eq!(slab.occupied(), 0);
+        assert!(slab.base >= 39, "base must reclaim completed slots");
+        assert_eq!(s.straggler_iters, 0);
+    }
+
+    #[test]
+    fn slab_dead_rows_are_dropped_and_discarded() {
+        let mut s = stats();
+        let mut slab = RoundSlab::default();
+        let mut straggling = [false; 3];
+        // w0 and w1 report iteration 5; w2 crash-skips it
+        record_report(&mut s, &mut slab, &mut straggling, 5, 5, (0, 1.0, false));
+        record_report(&mut s, &mut slab, &mut straggling, 5, 5, (1, 9.0, true));
+        slab.mark_dead(5);
+        assert_eq!(slab.occupied(), 0, "dead row must release its slot");
+        // a late report for the dead index is discarded, not re-created
+        record_report(&mut s, &mut slab, &mut straggling, 5, 5, (2, 1.0, false));
+        assert_eq!(slab.occupied(), 0);
+        assert_eq!(s.straggler_iters, 0, "dead rows never score");
+        // marking dead before any report also discards later reports
+        slab.mark_dead(6);
+        record_report(&mut s, &mut slab, &mut straggling, 6, 5, (0, 1.0, false));
+        assert_eq!(slab.occupied(), 0);
+        // the dead list drains once the watermark passes the index
+        record_report(&mut s, &mut slab, &mut straggling, 9, 9, (0, 1.0, false));
+        assert!(slab.dead.is_empty(), "passed dead indices must be pruned");
+    }
+
+    #[test]
+    fn slab_grows_past_initial_capacity() {
+        let mut s = stats();
+        let mut slab = RoundSlab::default();
+        let mut straggling = [false; 2];
+        // spread 0..100 with the watermark pinned at 0 forces growth
+        for iter in 0..100u64 {
+            record_report(&mut s, &mut slab, &mut straggling, iter, 0, (0, 1.0, false));
+        }
+        assert_eq!(slab.occupied(), 100);
+        assert!(slab.rows.len() >= 100);
+        // completing them all (in a scrambled order) still scores rows
+        for iter in (0..100u64).rev() {
+            record_report(&mut s, &mut slab, &mut straggling, iter, 0, (1, 1.0, false));
+        }
+        assert_eq!(slab.occupied(), 0);
     }
 }

@@ -25,7 +25,7 @@ impl Policy for Fixed {
     }
 
     fn decide(&mut self, _obs: &RoundObs) -> PolicyDecision {
-        let mut d = PolicyDecision::simple(self.mode.clone());
+        let mut d = PolicyDecision::simple(self.mode);
         d.lr_rescaled = self.rescaled;
         d
     }

@@ -8,6 +8,7 @@ pub mod eval;
 pub mod measure;
 pub mod overhead;
 pub mod resilience;
+pub mod scale;
 pub mod sweep;
 
 use std::collections::BTreeMap;
@@ -228,6 +229,10 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
         "fig28" => overhead::fig28(ctx),
         "fig29" => overhead::fig29(ctx),
         "resilience" => resilience::resilience(ctx),
+        // deliberately not part of `all`: the full grid's 50x cell is a
+        // long-running benchmark, not a paper artifact (`--quick`/
+        // `--smoke` selects the down-sized CI grid)
+        "scale" => scale::scale(ctx, ctx.quick),
         "all" => {
             for id in [
                 "fig1", "fig8", "fig9", "fig11", "fig12", "fig13", "tab1", "fig14", "fig16",
@@ -240,7 +245,9 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
             Ok(())
         }
         other => {
-            anyhow::bail!("unknown experiment {other:?} (try `all`, figN/tab1, or resilience)")
+            anyhow::bail!(
+                "unknown experiment {other:?} (try `all`, figN/tab1, resilience, or scale)"
+            )
         }
     }
 }

@@ -1,0 +1,332 @@
+//! `scale` — the cluster-scale single-run throughput benchmark: drives
+//! synthetic clusters at 1×/10×/50× the paper's testbed (hundreds of
+//! servers, thousands of workers, PS and AR, faults on) through one
+//! `Driver::run` each and reports **events/sec**, wall seconds, and the
+//! peak event-queue depth per cell (`BENCH_driver.json`,
+//! `star-bench-v1`). This is the datapoint the sweep-level benches
+//! cannot give: how fast one *inner* event loop runs, which is what the
+//! Parsimon-style what-if ambitions of the ROADMAP are bounded by.
+//!
+//! Cells are independent (one cluster+driver each) but run **serially**
+//! — unlike every other sweep — because the per-cell wall-clock IS the
+//! measurement: concurrent cells would contend for cores and distort
+//! the events/sec figure the baseline diff regresses against.
+//! The artifact embeds a committed pre-refactor
+//! baseline (`BENCH_driver.baseline.json`, override with
+//! `STAR_DRIVER_BASELINE`) when one is present, so the events/sec
+//! trajectory is diffable per cell; CI's `scale --smoke` step warns on
+//! >15% regressions (advisory — wall-clock numbers are machine-noisy).
+
+use std::path::Path;
+
+use super::{sweep, ExpCtx};
+use crate::baselines::make_policy;
+use crate::cluster::ClusterConfig;
+use crate::driver::{Driver, DriverConfig, RunMetrics};
+use crate::faults::{plan_at_rate, span_for};
+use crate::jsonio::{self, Json};
+use crate::table::{self, Table};
+use crate::trace::{generate, Arch, TraceConfig};
+
+/// One grid cell: (label, cluster-scale factor, jobs). A factor-k cell
+/// runs 5·k GPU + 3·k CPU servers (so 50× = 250 + 150 = 400 servers).
+pub type ScaleSpec = (&'static str, usize, usize);
+
+/// The benchmark grid. Smoke keeps CI wall time bounded; the full grid's
+/// 50× cell is 400 servers / ~16k workers.
+pub fn default_grid(smoke: bool) -> Vec<ScaleSpec> {
+    if smoke {
+        vec![("paper", 1, 8), ("10x", 10, 40)]
+    } else {
+        vec![("paper", 1, 40), ("10x", 10, 400), ("50x", 50, 2000)]
+    }
+}
+
+/// The injected failure-rate multiplier: the throughput figure must be
+/// measured with the resilience machinery live, not on the easy path.
+const FAULT_RATE: f64 = 1.0;
+
+struct CellOut {
+    label: &'static str,
+    arch: Arch,
+    servers: usize,
+    workers: usize,
+    /// the grid's requested job count — keys the baseline diff, so it
+    /// must be a pure grid parameter, not a run outcome
+    jobs: usize,
+    /// jobs that actually ran to completion (reported, never a key)
+    finished: usize,
+    metrics: RunMetrics,
+}
+
+fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool) -> CellOut {
+    let (label, factor, jobs) = spec;
+    let cluster = ClusterConfig {
+        gpu_servers: 5 * factor,
+        cpu_servers: 3 * factor,
+        ..Default::default()
+    };
+    let servers = cluster.total_servers();
+    // arrival rate scales with the cluster so concurrency stays high at
+    // every factor (the paper cell reduces to the usual 280 s/job pacing)
+    let trace = generate(&TraceConfig {
+        jobs,
+        seed: ctx.seed,
+        span_s: jobs as f64 * 280.0 / factor as f64,
+        ..Default::default()
+    });
+    let workers: usize = trace.iter().map(|j| j.workers).sum();
+    let mut cfg = DriverConfig {
+        arch,
+        cluster,
+        seed: ctx.seed,
+        record_series: false,
+        ..Default::default()
+    };
+    if smoke {
+        // bounded smoke cells (heavily faulted jobs may never converge)
+        cfg.max_job_duration_s = 6000.0;
+        cfg.max_updates_per_job = 10_000;
+        cfg.max_iters_per_job = 20_000;
+    }
+    cfg.faults = plan_at_rate(
+        FAULT_RATE,
+        ctx.fault_seed,
+        &trace,
+        span_for(&trace, cfg.max_job_duration_s),
+        servers,
+    );
+    let name = system.to_string();
+    let driver = Driver::new(
+        cfg,
+        trace,
+        Box::new(move |_| make_policy(&name).expect("validated by caller")),
+    );
+    let (stats, _, metrics) = driver.run_instrumented();
+    CellOut { label, arch, servers, workers, jobs, finished: stats.len(), metrics }
+}
+
+fn arch_tag(arch: Arch) -> &'static str {
+    match arch {
+        Arch::Ps => "ps",
+        Arch::AllReduce => "ar",
+    }
+}
+
+/// Baseline events/sec per cell name, read from a previously committed
+/// `BENCH_driver.json`-format file. `None` when no baseline is available
+/// — including the committed empty-results placeholder (a fresh checkout
+/// before the first toolchain run must still print the arming hint).
+fn load_baseline() -> Option<Json> {
+    let path = std::env::var("STAR_DRIVER_BASELINE")
+        .unwrap_or_else(|_| "BENCH_driver.baseline.json".into());
+    let doc = Json::parse_file(Path::new(&path)).ok()?;
+    match doc.get("results").ok().and_then(|r| r.arr().ok()) {
+        Some(results) if !results.is_empty() => Some(doc),
+        _ => None,
+    }
+}
+
+fn baseline_events_per_sec(baseline: &Json, name: &str) -> Option<f64> {
+    for r in baseline.get("results").ok()?.arr().ok()? {
+        if r.get("name").ok().and_then(|n| n.str().ok()) == Some(name) {
+            return r.get("events_per_sec").ok()?.num().ok();
+        }
+    }
+    None
+}
+
+pub fn scale(ctx: &ExpCtx, smoke: bool) -> crate::Result<()> {
+    run_grid(ctx, &default_grid(smoke), smoke)
+}
+
+/// Run a scale grid (each (cell, arch) pair is an independent driver)
+/// and emit the table + `BENCH_driver.json` under `ctx.out_dir`.
+pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<()> {
+    let system = "STAR-H";
+    make_policy(system)?;
+    let runs: Vec<(ScaleSpec, Arch)> = grid
+        .iter()
+        .flat_map(|&spec| [(spec, Arch::Ps), (spec, Arch::AllReduce)])
+        .collect();
+    eprintln!(
+        "[exp] scale: {} cells ({} scales × 2 archs, {system}, faults at rate {FAULT_RATE}), \
+         run serially — wall-clock per cell is the measurement (the grid fixes each cell's \
+         job count; --jobs/--threads are ignored here)",
+        runs.len(),
+        grid.len(),
+    );
+    // threads fixed at 1: concurrent cells would contend for cores and
+    // corrupt the events/sec figure the baseline diff regresses against
+    let (results, _cell_s, sweep_wall_s) = sweep::run_cells(&runs, 1, |_, run| {
+        let (spec, arch) = *run;
+        let t0 = std::time::Instant::now();
+        let out = run_cell(ctx, system, spec, arch, smoke);
+        eprintln!(
+            "[exp]   {}/{}: {} events in {:.1}s wall ({:.0} events/s)",
+            out.label,
+            arch_tag(out.arch),
+            out.metrics.events,
+            t0.elapsed().as_secs_f64(),
+            out.metrics.events_per_sec()
+        );
+        out
+    });
+
+    let baseline = load_baseline();
+    let mut t = Table::new(
+        &format!("Scale — single-run driver throughput ({system}, faults on)"),
+        &[
+            "cell",
+            "arch",
+            "servers",
+            "workers",
+            "jobs",
+            "events",
+            "events_per_sec",
+            "wall_s",
+            "peak_queue",
+        ],
+    );
+    let mut results_json: Vec<Json> = Vec::new();
+    for out in &results {
+        let m = &out.metrics;
+        let eps = m.events_per_sec();
+        t.rowf(&[
+            table::s(out.label),
+            table::s(arch_tag(out.arch)),
+            table::i(out.servers as i64),
+            table::i(out.workers as i64),
+            table::i(out.jobs as i64),
+            table::i(m.events as i64),
+            table::f(eps, 0),
+            table::f(m.wall_s, 2),
+            table::i(m.peak_queue_depth as i64),
+        ]);
+        // the name keys the baseline diff, so it must pin the workload
+        // from pure grid parameters (requested jobs, smoke caps): the
+        // smoke and full grids reuse cell labels with different jobs and
+        // caps, and a run-outcome-derived key would silently rename a
+        // cell whenever behavior changes — disarming the very guard
+        let name = format!(
+            "driver/scale={}/{}/jobs={}{}",
+            out.label,
+            arch_tag(out.arch),
+            out.jobs,
+            if smoke { "/smoke" } else { "" }
+        );
+        let ns_per_event = if m.events > 0 { m.wall_s * 1e9 / m.events as f64 } else { 0.0 };
+        let mut pairs = vec![
+            ("name", jsonio::s(&name)),
+            ("iters", jsonio::num(m.events as f64)),
+            ("ns_per_iter", jsonio::num(ns_per_event)),
+            ("events", jsonio::num(m.events as f64)),
+            ("events_per_sec", jsonio::num(eps)),
+            ("wall_s", jsonio::num(m.wall_s)),
+            ("peak_queue_depth", jsonio::num(m.peak_queue_depth as f64)),
+            ("servers", jsonio::num(out.servers as f64)),
+            ("workers", jsonio::num(out.workers as f64)),
+            ("jobs", jsonio::num(out.jobs as f64)),
+            ("jobs_finished", jsonio::num(out.finished as f64)),
+        ];
+        if let Some(b) = baseline.as_ref() {
+            match baseline_events_per_sec(b, &name) {
+                Some(base) => {
+                    let delta_pct = if base > 0.0 { (eps / base - 1.0) * 100.0 } else { 0.0 };
+                    pairs.push(("baseline_events_per_sec", jsonio::num(base)));
+                    pairs.push(("delta_pct", jsonio::num(delta_pct)));
+                    println!(
+                        "{name}: {eps:.0} events/s vs baseline {base:.0} ({delta_pct:+.1}%)"
+                    );
+                }
+                // an armed baseline that cannot see a cell is a blind
+                // guard — say so instead of silently skipping
+                None => println!(
+                    "warning: {name}: no matching baseline entry — events/sec diff skipped \
+                     for this cell (grid changed? regenerate the baseline)"
+                ),
+            }
+        }
+        results_json.push(jsonio::obj(pairs));
+    }
+    t.print();
+    if baseline.is_none() {
+        println!(
+            "(no BENCH_driver.baseline.json with results — commit one from a pre-change run \
+             to arm the events/sec diff)"
+        );
+    }
+
+    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
+        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
+    }
+    ctx.save("scale", &t);
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::exp::scale")),
+        ("sweep_wall_s", jsonio::num(sweep_wall_s)),
+        ("results", Json::Arr(results_json)),
+    ]);
+    let path = ctx.out_dir.join("BENCH_driver.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("driver bench written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_grid_runs_and_artifact_parses() {
+        let ctx = ExpCtx {
+            jobs: 2,
+            quick: true,
+            out_dir: std::env::temp_dir().join("star_scale_test"),
+            ..Default::default()
+        };
+        // a tiny grid keeps the debug-mode test cheap; the cell machinery
+        // (scaled cluster, fault plan, instrumented run) is the real one
+        run_grid(&ctx, &[("tiny", 1, 2)], true).unwrap();
+        let doc = Json::parse_file(&ctx.out_dir.join("BENCH_driver.json")).unwrap();
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        let results = doc.get("results").unwrap().arr().unwrap();
+        assert_eq!(results.len(), 2, "one PS and one AR cell");
+        for r in results {
+            assert!(r.get("events").unwrap().num().unwrap() > 0.0);
+            assert!(r.get("events_per_sec").unwrap().num().unwrap() > 0.0);
+            assert!(r.get("peak_queue_depth").unwrap().num().unwrap() > 0.0);
+            assert!(r.get("wall_s").unwrap().num().unwrap() > 0.0);
+        }
+        let names: Vec<&str> =
+            results.iter().map(|r| r.get("name").unwrap().str().unwrap()).collect();
+        // names pin the workload (jobs + smoke caps) so baseline diffs
+        // can never compare across grids
+        assert!(names.contains(&"driver/scale=tiny/ps/jobs=2/smoke"), "{names:?}");
+        assert!(names.contains(&"driver/scale=tiny/ar/jobs=2/smoke"), "{names:?}");
+    }
+
+    #[test]
+    fn scaled_cluster_cells_use_bigger_clusters() {
+        let ctx = ExpCtx {
+            out_dir: std::env::temp_dir().join("star_scale_test2"),
+            ..Default::default()
+        };
+        let out = run_cell(&ctx, "SSGD", ("2x", 2, 2), Arch::Ps, true);
+        assert_eq!(out.servers, 16, "factor 2 doubles the 8-server testbed");
+        assert!(out.workers >= 8, "trace workers counted");
+        assert!(out.metrics.events > 0);
+    }
+
+    #[test]
+    fn default_grids_cover_paper_and_10x() {
+        for smoke in [true, false] {
+            let g = default_grid(smoke);
+            assert!(g.iter().any(|&(l, f, _)| l == "paper" && f == 1));
+            assert!(g.iter().any(|&(l, f, _)| l == "10x" && f == 10));
+        }
+        assert!(default_grid(false).iter().any(|&(l, f, _)| l == "50x" && f == 50));
+    }
+}

@@ -31,8 +31,9 @@
 use crate::simrng::Rng;
 use crate::trace::JobSpec;
 
-/// One injected fault.
-#[derive(Clone, Debug, PartialEq)]
+/// One injected fault. `Copy` so `Event::Fault` handling reads the plan
+/// entry without cloning on the dispatch path.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Fault {
     /// Worker `rank` of `job` crashes; it restarts `restart_s` later.
     WorkerCrash { job: usize, rank: usize, restart_s: f64 },
@@ -48,7 +49,7 @@ pub enum Fault {
 }
 
 /// A fault scheduled at an absolute simulation time.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PlannedFault {
     pub at: f64,
     pub fault: Fault,

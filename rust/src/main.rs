@@ -32,7 +32,7 @@ fn main() {
                 "usage: star <train|simulate|replay|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
-                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N]\n\
+                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  artifacts  [--dir artifacts]"
             );
@@ -101,7 +101,7 @@ fn train(args: &Args) -> star::Result<()> {
 
 fn simulate(args: &Args) -> star::Result<()> {
     args.check_known(&[
-        "system", "jobs", "arch", "seed", "fault-rate", "fault-seed", "threads",
+        "system", "jobs", "arch", "seed", "fault-rate", "fault-seed", "threads", "profile",
     ])?;
     // `--system` accepts a comma-separated list; each system is an
     // independent run cell over the same trace, swept `--threads`-wide
@@ -121,6 +121,10 @@ fn simulate(args: &Args) -> star::Result<()> {
     let fault_rate = args.f64_or("fault-rate", 0.0)?;
     let fault_seed = args.u64_or("fault-seed", 0)?;
     let threads = star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?);
+    // --profile: per-phase timing counters (event dispatch / share fills
+    // / policy decide / stats) from the instrumented run, printed as a
+    // table per system — where the wall time goes, without a profiler
+    let profile = args.flag("profile");
     // validate every name before spawning sweep workers
     star::baselines::validate_systems(&systems)?;
     let trace = generate(&TraceConfig {
@@ -130,10 +134,13 @@ fn simulate(args: &Args) -> star::Result<()> {
         ..Default::default()
     });
     let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
-        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed)
+        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile)
     });
-    for (sys, stats) in systems.iter().zip(&all) {
+    for (sys, (stats, metrics)) in systems.iter().zip(&all) {
         report(sys, arch, stats);
+        if profile {
+            print_profile(sys, metrics);
+        }
     }
     Ok(())
 }
@@ -161,7 +168,7 @@ fn run_and_report(
 ) -> star::Result<()> {
     // validate the system name before the simulation starts
     make_policy(system)?;
-    let stats_v = run_stats(system, arch, seed, trace, fault_rate, fault_seed);
+    let (stats_v, _) = run_stats(system, arch, seed, trace, fault_rate, fault_seed, false);
     report(system, arch, &stats_v);
     Ok(())
 }
@@ -176,7 +183,8 @@ fn run_stats(
     trace: Vec<star::trace::JobSpec>,
     fault_rate: f64,
     fault_seed: u64,
-) -> Vec<star::driver::JobStats> {
+    profile: bool,
+) -> (Vec<star::driver::JobStats>, star::driver::RunMetrics) {
     let base_cfg = DriverConfig::default();
     let faults = star::faults::plan_at_rate(
         fault_rate,
@@ -185,14 +193,56 @@ fn run_stats(
         star::faults::span_for(&trace, base_cfg.max_job_duration_s),
         base_cfg.cluster.total_servers(),
     );
-    let cfg = DriverConfig { arch, seed, record_series: false, faults, ..Default::default() };
+    let cfg = DriverConfig {
+        arch,
+        seed,
+        record_series: false,
+        faults,
+        profile,
+        ..Default::default()
+    };
     let name = system.to_string();
     let driver = Driver::new(
         cfg,
         trace,
         Box::new(move |_| make_policy(&name).expect("validated by caller")),
     );
-    driver.run().0
+    let (stats, _, metrics) = driver.run_instrumented();
+    (stats, metrics)
+}
+
+/// The `--profile` table: per-phase wall seconds from the driver's
+/// lightweight counters. Sub-phases nest inside the dispatch total;
+/// "other" is grouping/queue/fault-transition residue.
+fn print_profile(system: &str, m: &star::driver::RunMetrics) {
+    let p = &m.profile;
+    let other = (p.dispatch_s - (p.itertime_s + p.decide_s + p.stats_s)).max(0.0);
+    let mut t = Table::new(
+        &format!(
+            "{system} — per-phase timing ({} events, {:.0} events/s, peak queue {})",
+            m.events,
+            m.events_per_sec(),
+            m.peak_queue_depth
+        ),
+        &["phase", "wall_s", "share_pct", "calls"],
+    );
+    let total = p.dispatch_s.max(1e-12);
+    let rows: [(&str, f64, u64); 5] = [
+        ("event dispatch (total)", p.dispatch_s, m.events),
+        ("- share fills / iter time", p.itertime_s, p.itertime_calls),
+        ("- policy decide", p.decide_s, p.decide_calls),
+        ("- stats accounting", p.stats_s, p.stats_calls),
+        ("- other (grouping, queue, faults)", other, 0),
+    ];
+    for (name, secs, calls) in rows {
+        t.rowf(&[
+            table::s(name),
+            table::f(secs, 3),
+            table::f(secs / total * 100.0, 1),
+            table::i(calls as i64),
+        ]);
+    }
+    t.print();
 }
 
 fn report(system: &str, arch: Arch, stats_v: &[star::driver::JobStats]) {

@@ -47,6 +47,9 @@ pub struct Engine<E> {
     now: SimTime,
     seq: u64,
     processed: u64,
+    /// high-water mark of `heap.len()` — the queue-depth figure the
+    /// driver's throughput benchmarks report (`BENCH_driver.json`)
+    peak: usize,
 }
 
 impl<E> Default for Engine<E> {
@@ -57,7 +60,7 @@ impl<E> Default for Engine<E> {
 
 impl<E> Engine<E> {
     pub fn new() -> Self {
-        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0, peak: 0 }
     }
 
     pub fn now(&self) -> SimTime {
@@ -72,12 +75,20 @@ impl<E> Engine<E> {
         self.heap.len()
     }
 
+    /// Highest number of events ever simultaneously pending.
+    pub fn peak_pending(&self) -> usize {
+        self.peak
+    }
+
     /// Schedule `event` at absolute time `at` (clamped to now).
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
         debug_assert!(at.is_finite(), "non-finite event time");
         let at = if at < self.now { self.now } else { at };
         self.heap.push(Entry { at, seq: self.seq, event });
         self.seq += 1;
+        if self.heap.len() > self.peak {
+            self.peak = self.heap.len();
+        }
     }
 
     /// Schedule `event` after a relative delay.
@@ -144,6 +155,26 @@ mod tests {
         e.schedule_in(2.5, "second");
         let (t, _) = e.next().unwrap();
         assert!((t - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_pending_tracks_high_water_mark() {
+        let mut e = Engine::new();
+        assert_eq!(e.peak_pending(), 0);
+        for i in 0..5 {
+            e.schedule_at(i as f64, i);
+        }
+        assert_eq!(e.peak_pending(), 5);
+        e.next();
+        e.next();
+        // draining does not lower the high-water mark
+        assert_eq!(e.peak_pending(), 5);
+        e.schedule_at(9.0, 99);
+        assert_eq!(e.peak_pending(), 5, "4 pending < peak of 5");
+        for i in 0..3 {
+            e.schedule_at(10.0 + i as f64, i);
+        }
+        assert_eq!(e.peak_pending(), 7);
     }
 
     #[test]

@@ -152,13 +152,13 @@ impl Star {
                         })
                         .collect();
                     ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-                    let (mode, est) = ranked[0].clone();
+                    let (mode, est) = ranked[0];
                     let lr = crate::decide::lr_for_mode(obs.spec, obs.n, &mode, predicted);
                     Decision { mode, lr, est, ranked }
                 } else if self.ablation.no_dynamic {
                     let mut d = choose_ps_heuristic(obs.spec, obs.progress, obs.n, predicted);
                     d.ranked.retain(|(m, _)| *m != SyncMode::DynamicX);
-                    let (mode, est) = d.ranked[0].clone();
+                    let (mode, est) = d.ranked[0];
                     d.mode = mode;
                     d.est = est;
                     d
@@ -224,7 +224,7 @@ impl Policy for Star {
                 Arch::Ps => SyncMode::Ssgd,
                 Arch::AllReduce => SyncMode::ArRing { removed: 0, tw_ms: 0.0 },
             };
-            self.last_mode = Some(mode.clone());
+            self.last_mode = Some(mode);
             let mode = DriverMode::Sync(mode);
             self.wall_ns_total += wall.elapsed().as_nanos();
             self.wall_decisions += 1;
@@ -266,12 +266,12 @@ impl Policy for Star {
         if let Some(last) = &self.last_mode {
             if let Some((_, last_est)) = decision.ranked.iter().find(|(m, _)| m == last) {
                 if *last_est <= decision.est * (1.0 + self.hysteresis) {
-                    decision.mode = last.clone();
+                    decision.mode = *last;
                     decision.est = *last_est;
                 }
             }
         }
-        self.last_mode = Some(decision.mode.clone());
+        self.last_mode = Some(decision.mode);
 
         // remember features for online ML training (trained on heuristic
         // outcomes first, then refined; §IV-C2)

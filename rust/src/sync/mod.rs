@@ -19,8 +19,10 @@
 
 use crate::simrng::Rng;
 
-/// A synchronization mode.
-#[derive(Clone, Debug, PartialEq)]
+/// A synchronization mode. `Copy` on purpose: modes are read on the
+/// driver's per-event dispatch path, and a copyable mode is what keeps
+/// that path free of `.clone()` calls (DESIGN.md §3).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SyncMode {
     /// bulk-synchronous: one update from all N workers
     Ssgd,

@@ -19,8 +19,9 @@ pub enum Arch {
     AllReduce,
 }
 
-/// One job drawn from the trace.
-#[derive(Clone, Debug)]
+/// One job drawn from the trace. `Copy`: six machine words, read per
+/// placement on the driver's dispatch path — copying beats cloning.
+#[derive(Clone, Copy, Debug)]
 pub struct JobSpec {
     pub id: usize,
     /// arrival offset from trace start, seconds
@@ -159,7 +160,7 @@ pub fn place_job(
         assignment.extend(std::iter::repeat(s).take(job.workers));
     } else {
         // spill: greedy most-free-first
-        let mut by_free: Vec<usize> = gpu_ids.clone();
+        let mut by_free: Vec<usize> = gpu_ids.to_vec();
         by_free.sort_by_key(|&s| std::cmp::Reverse(cluster.free_gpus(s)));
         let mut need = job.workers;
         for &s in &by_free {
@@ -190,11 +191,12 @@ pub fn place_job(
         })
         .collect();
 
-    // -- PSs
-    let candidates = if job.ps_on_gpu_servers {
-        cluster.gpu_server_ids()
+    // -- PSs (copied out of the cluster's cached id lists: the selection
+    // loop below mutates the cluster via `add_task`)
+    let candidates: Vec<usize> = if job.ps_on_gpu_servers {
+        cluster.gpu_server_ids().to_vec()
     } else {
-        cluster.cpu_server_ids()
+        cluster.cpu_server_ids().to_vec()
     };
     let mut ps_tasks = Vec::with_capacity(job.ps_count);
     for idx in 0..job.ps_count {
@@ -306,7 +308,8 @@ mod tests {
     fn placement_spills_when_fragmented() {
         let mut c = Cluster::new(ClusterConfig::default());
         // consume 5 GPUs on every GPU server
-        for (j, s) in c.gpu_server_ids().into_iter().enumerate() {
+        let gpu_ids: Vec<usize> = c.gpu_server_ids().to_vec();
+        for (j, s) in gpu_ids.into_iter().enumerate() {
             for r in 0..5 {
                 c.add_task(Task {
                     job: 1000 + j,

@@ -407,6 +407,65 @@ fn prop_cached_shares_match_direct_under_mutation() {
 }
 
 #[test]
+fn prop_shares_into_bit_identical_to_shares() {
+    // the slice-returning epoch APIs are pure refactors of `shares`:
+    // same pairs, same order, every float bit-identical
+    forall(
+        "shares-into-equivalence",
+        30,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut c = Cluster::new(ClusterConfig { seed, ..Default::default() });
+            let mut rng = Rng::seeded(seed ^ 0x51AB);
+            let n = rng.usize(0, 20);
+            for j in 0..n {
+                c.add_task(Task {
+                    job: j,
+                    role: Role::Ps { idx: 0 },
+                    server: rng.usize(0, 7),
+                    cpu_demand: rng.range(0.0, 20.0),
+                    bw_demand: rng.range(0.0, 8.0),
+                    cpu_cap: rng.range(0.05, 1.0),
+                    bw_cap: 1.0,
+                    cpu_throttle: rng.range(0.2, 1.0),
+                    bw_throttle: 1.0,
+                    active: true,
+                });
+            }
+            let mut buf: Vec<(usize, f64)> = vec![(42, 4.2)]; // dirty scratch
+            let mut t = 0.0;
+            for _ in 0..20 {
+                t += rng.range(0.1, 40.0);
+                for server in 0..8 {
+                    for res in [Res::Cpu, Res::Bw] {
+                        let want = c.shares(server, res, t);
+                        c.shares_into(server, res, t, &mut buf);
+                        if want != buf {
+                            return Err(format!(
+                                "shares_into differs at t={t} server={server} {res:?}"
+                            ));
+                        }
+                        let (ids, sh) = c.shares_view(server, res, t);
+                        if ids.len() != sh.len()
+                            || want
+                                .iter()
+                                .zip(ids.iter().zip(sh))
+                                .any(|(&(wi, ws), (&gi, &gs))| wi != gi || ws != gs)
+                            || want.len() != ids.len()
+                        {
+                            return Err(format!(
+                                "shares_view differs at t={t} server={server} {res:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_cluster_shares_never_exceed_capacity() {
     forall(
         "cluster-shares",
