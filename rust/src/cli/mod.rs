@@ -42,6 +42,12 @@ impl Args {
         self.positional.first().map(|s| s.as_str())
     }
 
+    /// The `i`-th positional argument (0 = the subcommand). Multi-word
+    /// subcommands (`star scenario run FILE`) read their operands here.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -103,6 +109,16 @@ mod tests {
         assert_eq!(a.str_or("arch", "ar"), "ps");
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_operands() {
+        let a = parse("scenario run examples/x.json --quick");
+        assert_eq!(a.subcommand(), Some("scenario"));
+        assert_eq!(a.pos(1), Some("run"));
+        assert_eq!(a.pos(2), Some("examples/x.json"));
+        assert_eq!(a.pos(3), None);
+        assert!(a.flag("quick"));
     }
 
     #[test]

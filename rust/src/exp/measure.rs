@@ -1,4 +1,9 @@
 //! §III measurement study: Figs 1–14 + Table I.
+//!
+//! The whole family is also addressable as the built-in `measure`
+//! scenario (`star scenario run measure`) — a delegated
+//! [`crate::scenario::Scenario`] that reproduces these outputs
+//! byte-identically through the same [`ExpCtx`] knobs.
 
 use super::{run_system, ExpCtx};
 use crate::baselines::make_policy;

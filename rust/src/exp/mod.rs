@@ -16,10 +16,10 @@ use std::path::PathBuf;
 
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats, ServerRecord};
-use crate::faults::{plan_at_rate, span_for, FaultPlan};
+use crate::faults::{span_for, FaultPlan};
 use crate::stats::Band;
 use crate::table::Table;
-use crate::trace::{generate, Arch, TraceConfig};
+use crate::trace::Arch;
 
 /// Shared experiment context (CLI-derived).
 #[derive(Clone, Debug)]
@@ -66,28 +66,22 @@ impl ExpCtx {
         }
     }
 
+    /// The context's workload: the scenario layer's classic Philly
+    /// family, which delegates to [`crate::trace::generate`] at the
+    /// `jobs · 280 s` pacing — byte-identical to the pre-scenario
+    /// `TraceConfig` construction (pinned by the golden suites).
     pub fn trace(&self) -> Vec<crate::trace::JobSpec> {
-        let jobs = self.effective_jobs();
-        let cfg = TraceConfig {
-            jobs,
-            seed: self.seed,
-            // keep the cluster busy: scale the span with job count
-            span_s: jobs as f64 * 280.0,
-            ..Default::default()
-        };
-        generate(&cfg)
+        let spec = crate::scenario::WorkloadSpec::philly(self.jobs, self.seed);
+        crate::scenario::workload::build(&spec, self.effective_jobs())
+            .expect("the classic Philly family has no failing configuration")
     }
 
-    /// The context's fault plan for `trace` (empty when `fault_rate` ≤ 0).
+    /// The context's fault plan for `trace` (empty when `fault_rate` ≤ 0):
+    /// the scenario layer's rate regime, i.e. the `--fault-rate` recipe.
     pub fn fault_plan(&self, trace: &[crate::trace::JobSpec]) -> FaultPlan {
         let cfg = DriverConfig::default();
-        plan_at_rate(
-            self.fault_rate,
-            self.fault_seed,
-            trace,
-            span_for(trace, cfg.max_job_duration_s),
-            cfg.cluster.total_servers(),
-        )
+        crate::scenario::FaultRegime::Rate { rate: self.fault_rate, seed: self.fault_seed }
+            .plan(trace, span_for(trace, cfg.max_job_duration_s), cfg.cluster.total_servers())
     }
 
     pub fn save(&self, name: &str, t: &Table) {
@@ -209,6 +203,18 @@ pub fn summarize(stats: &[JobStats]) -> Summary {
     }
 }
 
+/// Every experiment id [`dispatch`] accepts, §4-table order. The single
+/// source of truth for "what exists": the unknown-id error below, the
+/// scenario layer's delegation validation, and the CLI usage text all
+/// read this list (note fig15 deliberately does not exist — the paper
+/// has no such figure).
+pub const EXPERIMENT_IDS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "tab1", "fig14", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
+    "fig22", "fig23", "fig24", "fig25", "fig26", "fig27", "fig28", "fig29", "resilience",
+    "scale", "all",
+];
+
 /// Dispatch an experiment id. `all` runs everything.
 pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
     match id {
@@ -246,7 +252,8 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
         }
         other => {
             anyhow::bail!(
-                "unknown experiment {other:?} (try `all`, figN/tab1, resilience, or scale)"
+                "unknown experiment {other:?} (valid ids: {})",
+                EXPERIMENT_IDS.join(", ")
             )
         }
     }
@@ -278,8 +285,25 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_rejects_unknown() {
-        assert!(dispatch("fig99", &quick_ctx()).is_err());
+    fn dispatch_rejects_unknown_and_lists_valid_ids() {
+        let err = format!("{:#}", dispatch("fig99", &quick_ctx()).err().unwrap());
+        assert!(err.contains("fig99"), "{err}");
+        for id in ["fig12", "tab1", "resilience", "scale", "all"] {
+            assert!(err.contains(id), "error must list {id}: {err}");
+        }
+    }
+
+    #[test]
+    fn experiment_id_list_is_consistent() {
+        let ids = EXPERIMENT_IDS;
+        let mut sorted: Vec<&str> = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate experiment ids");
+        assert!(!ids.contains(&"fig15"), "the paper has no fig15");
+        for required in ["fig1", "fig29", "tab1", "resilience", "scale", "all"] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use super::{summarize, sweep, ExpCtx};
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats};
-use crate::faults::{plan_at_rate, span_for, FaultPlan};
+use crate::faults::{span_for, FaultPlan};
 use crate::jsonio::{self, Json};
 use crate::stats;
 use crate::table::{self, Table};
@@ -74,17 +74,19 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
     let systems = systems(ctx.quick);
     crate::baselines::validate_systems(&systems)?;
 
-    // the sweep grid, rate-major (the serial row order)
+    // the sweep grid, rate-major (the serial row order); plans come from
+    // the scenario layer's rate regime — the same `--fault-rate` recipe
+    // every other entry point injects (byte-identical to plan_at_rate)
     let plans: Vec<(f64, FaultPlan)> = RATES
         .iter()
-        .map(|&rate| (rate, plan_at_rate(rate, ctx.fault_seed, &trace, span, servers)))
+        .map(|&rate| {
+            let plan = crate::scenario::FaultRegime::Rate { rate, seed: ctx.fault_seed }
+                .plan(&trace, span, servers);
+            (rate, plan)
+        })
         .collect();
-    let mut cells: Vec<(usize, &'static str)> = Vec::new();
-    for ri in 0..plans.len() {
-        for &sys in &systems {
-            cells.push((ri, sys));
-        }
-    }
+    let rate_indices: Vec<usize> = (0..plans.len()).collect();
+    let cells: Vec<(usize, &'static str)> = sweep::cross(&rate_indices, &systems);
 
     eprintln!(
         "[exp] resilience: {} cells ({} rates × {} systems, {} jobs) on {} thread(s)…",
@@ -206,6 +208,7 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::plan_at_rate;
 
     #[test]
     fn resilience_runs_end_to_end_quick() {

@@ -23,8 +23,9 @@ use super::{sweep, ExpCtx};
 use crate::baselines::make_policy;
 use crate::cluster::ClusterConfig;
 use crate::driver::{Driver, DriverConfig, RunMetrics};
-use crate::faults::{plan_at_rate, span_for};
+use crate::faults::span_for;
 use crate::jsonio::{self, Json};
+use crate::scenario::arch_tag;
 use crate::table::{self, Table};
 use crate::trace::{generate, Arch, TraceConfig};
 
@@ -89,13 +90,10 @@ fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool
         cfg.max_updates_per_job = 10_000;
         cfg.max_iters_per_job = 20_000;
     }
-    cfg.faults = plan_at_rate(
-        FAULT_RATE,
-        ctx.fault_seed,
-        &trace,
-        span_for(&trace, cfg.max_job_duration_s),
-        servers,
-    );
+    // the scenario layer's rate regime — the same `--fault-rate` recipe
+    // as everywhere else (byte-identical to the old direct plan_at_rate)
+    cfg.faults = crate::scenario::FaultRegime::Rate { rate: FAULT_RATE, seed: ctx.fault_seed }
+        .plan(&trace, span_for(&trace, cfg.max_job_duration_s), servers);
     let name = system.to_string();
     let driver = Driver::new(
         cfg,
@@ -104,13 +102,6 @@ fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool
     );
     let (stats, _, metrics) = driver.run_instrumented();
     CellOut { label, arch, servers, workers, jobs, finished: stats.len(), metrics }
-}
-
-fn arch_tag(arch: Arch) -> &'static str {
-    match arch {
-        Arch::Ps => "ps",
-        Arch::AllReduce => "ar",
-    }
 }
 
 /// Baseline events/sec per cell name, read from a previously committed

@@ -40,6 +40,20 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Cross product in outer-major order — the canonical grid layout every
+/// sweep (resilience's rate × policy, a scenario's arch × policy) lays
+/// its cells out in, so tables and artifacts emit rows in the same order
+/// regardless of which harness built the grid.
+pub fn cross<A: Clone, B: Clone>(outer: &[A], inner: &[B]) -> Vec<(A, B)> {
+    let mut out = Vec::with_capacity(outer.len() * inner.len());
+    for a in outer {
+        for b in inner {
+            out.push((a.clone(), b.clone()));
+        }
+    }
+    out
+}
+
 /// Run `f(index, &item)` over every item on up to `threads` workers and
 /// return the results **in item order**. `threads <= 1` runs inline
 /// (bit-and-byte identical output either way — the contract callers rely
@@ -150,6 +164,16 @@ pub fn write_sweep_bench(path: &Path, name: &str, threads: usize, cell_s: &[f64]
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cross_is_outer_major() {
+        assert_eq!(
+            cross(&[0usize, 1], &["a", "b", "c"]),
+            vec![(0, "a"), (0, "b"), (0, "c"), (1, "a"), (1, "b"), (1, "c")]
+        );
+        assert!(cross::<usize, usize>(&[], &[1, 2]).is_empty());
+        assert!(cross(&[1, 2], &Vec::<usize>::new()).is_empty());
+    }
 
     #[test]
     fn results_come_back_in_item_order() {

@@ -142,6 +142,20 @@ impl FaultPlan {
     pub fn count(&self, pred: impl Fn(&Fault) -> bool) -> usize {
         self.faults.iter().filter(|f| pred(&f.fault)).count()
     }
+
+    /// Merge two plans into one time-ordered schedule (the scenario
+    /// layer's storm regime: a background plan plus in-window bursts).
+    /// Ties keep `self`'s entries first (stable sort — deterministic).
+    /// The checkpoint cadence comes from `self` unless it is unset (0),
+    /// in which case `other`'s cadence is adopted.
+    pub fn merge(mut self, other: FaultPlan) -> FaultPlan {
+        self.faults.extend(other.faults);
+        self.faults.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        if self.checkpoint_every_updates == 0 {
+            self.checkpoint_every_updates = other.checkpoint_every_updates;
+        }
+        self
+    }
 }
 
 /// Simulated span a fault plan should cover for `trace`: the last
@@ -355,6 +369,23 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn merge_is_time_ordered_and_adopts_checkpoint_cadence() {
+        let a = generate_plan(&FaultConfig::default(), &jobs(), 20_000.0, 8);
+        let b = generate_plan(&FaultConfig { seed: 9, ..Default::default() }, &jobs(), 20_000.0, 8);
+        let n = a.len() + b.len();
+        let merged = a.merge(b);
+        assert_eq!(merged.len(), n);
+        for w in merged.faults.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert_eq!(merged.checkpoint_every_updates, 200);
+        // an empty base (checkpoint 0) adopts the other plan's cadence
+        let other = generate_plan(&FaultConfig::default(), &jobs(), 5_000.0, 8);
+        let merged = FaultPlan::default().merge(other);
+        assert_eq!(merged.checkpoint_every_updates, 200);
     }
 
     #[test]

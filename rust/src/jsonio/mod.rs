@@ -70,6 +70,17 @@ impl Json {
         Ok(self.num()? as i64)
     }
 
+    /// Non-negative integer accessor (seeds, counts). Unlike [`Json::int`]
+    /// it rejects negative and fractional numbers instead of truncating —
+    /// a scenario spec with `"seed": -3` must error, not wrap.
+    pub fn u64(&self) -> Result<u64> {
+        let n = self.num()?;
+        if !(n >= 0.0) || n.fract() != 0.0 || n > 9e15 {
+            bail!("not a non-negative integer: {self:?}");
+        }
+        Ok(n as u64)
+    }
+
     pub fn boolean(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -195,6 +206,10 @@ pub fn num(n: f64) -> Json {
 
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
+}
+
+pub fn b(v: bool) -> Json {
+    Json::Bool(v)
 }
 
 pub fn nums(xs: &[f64]) -> Json {
@@ -410,8 +425,17 @@ mod tests {
 
     #[test]
     fn builders() {
-        let v = obj(vec![("xs", nums(&[1.0, 2.0])), ("name", s("t"))]);
+        let v = obj(vec![("xs", nums(&[1.0, 2.0])), ("name", s("t")), ("on", b(true))]);
         let parsed = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(parsed, v);
+    }
+
+    #[test]
+    fn u64_rejects_negative_and_fractional() {
+        assert_eq!(Json::parse("7").unwrap().u64().unwrap(), 7);
+        assert_eq!(Json::parse("0").unwrap().u64().unwrap(), 0);
+        assert!(Json::parse("-3").unwrap().u64().is_err());
+        assert!(Json::parse("2.5").unwrap().u64().is_err());
+        assert!(Json::parse("\"7\"").unwrap().u64().is_err());
     }
 }

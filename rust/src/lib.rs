@@ -11,8 +11,9 @@
 //!   controller; plus every substrate the paper's evaluation needs:
 //!   a discrete-event cluster simulator ([`sim`], [`cluster`]), the
 //!   ten-model zoo ([`models`]), a Philly-style trace generator
-//!   ([`trace`]), the training-progress model ([`progress`]), and the six
-//!   comparison systems ([`baselines`]).
+//!   ([`trace`]), the training-progress model ([`progress`]), the six
+//!   comparison systems ([`baselines`]), and a declarative what-if
+//!   scenario layer over all of it ([`scenario`]).
 //! * **L2/L1 (python, build time only)** — the per-worker compute:
 //!   a transformer-LM train step whose GEMMs and whose fused gradient
 //!   aggregation/SGD-apply run as Pallas kernels, AOT-lowered to HLO text.
@@ -39,6 +40,7 @@ pub mod predict;
 pub mod prevent;
 pub mod progress;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod simrng;
 pub mod star;

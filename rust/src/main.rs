@@ -7,10 +7,14 @@
 //! * `simulate` — run one system over a generated Philly-style trace and
 //!   print the per-job summary.
 //! * `replay` — like `simulate` but from a Philly CSV file.
+//! * `scenario` — the declarative what-if layer (DESIGN.md §9):
+//!   `scenario list` prints the built-ins, `scenario run <file.json|name>`
+//!   executes a spec file or built-in.
 //! * `artifacts` — inspect the AOT artifact manifest.
 //!
 //! Every experiment figure/table lives in the separate `experiments`
-//! binary (DESIGN.md §4).
+//! binary (DESIGN.md §4); each family is also runnable as a delegated
+//! built-in scenario.
 
 use star::baselines::make_policy;
 use star::cli::Args;
@@ -26,14 +30,16 @@ fn main() {
         Some("train") => cmd(train(&args)),
         Some("simulate") => cmd(simulate(&args)),
         Some("replay") => cmd(replay(&args)),
+        Some("scenario") => cmd(scenario(&args)),
         Some("artifacts") => cmd(artifacts(&args)),
         _ => {
             eprintln!(
-                "usage: star <train|simulate|replay|artifacts> [options]\n\
+                "usage: star <train|simulate|replay|scenario|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
                  simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
+                 scenario   list | run <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--threads N]\n\
                  artifacts  [--dir artifacts]"
             );
             2
@@ -127,12 +133,7 @@ fn simulate(args: &Args) -> star::Result<()> {
     let profile = args.flag("profile");
     // validate every name before spawning sweep workers
     star::baselines::validate_systems(&systems)?;
-    let trace = generate(&TraceConfig {
-        jobs,
-        seed,
-        span_s: jobs as f64 * 280.0,
-        ..Default::default()
-    });
+    let trace = generate(&TraceConfig::paced(jobs, seed));
     let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
         run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile)
     });
@@ -143,6 +144,54 @@ fn simulate(args: &Args) -> star::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `star scenario list | run <file.json|builtin>` — the declarative
+/// what-if layer. `list` (or `--list`) prints the built-in table;
+/// `run` resolves a spec file or built-in name and executes it.
+fn scenario(args: &Args) -> star::Result<()> {
+    args.check_known(&["quick", "jobs", "out", "threads", "list"])?;
+    let action = args.pos(1);
+    if args.flag("list") || action == Some("list") {
+        let mut t = Table::new(
+            "Built-in scenarios (star scenario run <name>; spec files: examples/scenarios/)",
+            &["name", "flavor", "description"],
+        );
+        for sc in star::scenario::builtins() {
+            t.rowf(&[
+                table::s(sc.name.as_str()),
+                table::s(if sc.experiments.is_empty() { "generic" } else { "delegated" }),
+                table::s(sc.description.as_str()),
+            ]);
+        }
+        t.print();
+        return Ok(());
+    }
+    match action {
+        Some("run") => {
+            let target = args.pos(2).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: star scenario run <file.json|builtin> \
+                     [--quick] [--jobs N] [--out DIR] [--threads N]"
+                )
+            })?;
+            let sc = star::scenario::load(target)?;
+            let opts = star::scenario::RunOpts {
+                quick: args.flag("quick"),
+                out_dir: args.str_or("out", "results").into(),
+                threads: star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?),
+                jobs_override: match args.get("jobs") {
+                    None => None,
+                    Some(_) => Some(args.usize_or("jobs", 0)?),
+                },
+            };
+            star::scenario::run(&sc, &opts)
+        }
+        other => anyhow::bail!(
+            "unknown scenario action {:?} (expected: list | run <file.json|builtin>)",
+            other.unwrap_or("<missing>")
+        ),
+    }
 }
 
 fn replay(args: &Args) -> star::Result<()> {
@@ -186,9 +235,8 @@ fn run_stats(
     profile: bool,
 ) -> (Vec<star::driver::JobStats>, star::driver::RunMetrics) {
     let base_cfg = DriverConfig::default();
-    let faults = star::faults::plan_at_rate(
-        fault_rate,
-        fault_seed,
+    // the scenario layer's rate regime — the shared --fault-rate recipe
+    let faults = star::scenario::FaultRegime::Rate { rate: fault_rate, seed: fault_seed }.plan(
         &trace,
         star::faults::span_for(&trace, base_cfg.max_job_duration_s),
         base_cfg.cluster.total_servers(),
@@ -272,12 +320,9 @@ fn report(system: &str, arch: Arch, stats_v: &[star::driver::JobStats]) {
     t.print();
 }
 
+/// `--arch` parsing, shared with the scenario spec's `archs` field.
 fn parse_arch(s: &str) -> star::Result<Arch> {
-    match s {
-        "ps" => Ok(Arch::Ps),
-        "ar" | "allreduce" => Ok(Arch::AllReduce),
-        other => anyhow::bail!("unknown arch {other:?} (ps|ar)"),
-    }
+    star::scenario::parse_arch(s)
 }
 
 fn artifacts(args: &Args) -> star::Result<()> {

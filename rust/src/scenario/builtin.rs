@@ -1,0 +1,178 @@
+//! Built-in scenarios: every existing experiment family re-expressed as
+//! a delegated [`Scenario`] (its grid knobs now live in data), plus the
+//! generator-family scenarios no `experiments` subcommand can express.
+//!
+//! `star scenario run <name>` resolves here before touching the
+//! filesystem; `star scenario list` prints this table.
+
+use super::spec::{
+    Arrival, ClusterShape, FaultRegime, PsSpec, Scenario, WorkloadSpec,
+};
+use crate::trace::Arch;
+
+fn delegated(name: &str, description: &str, ids: &[&str]) -> Scenario {
+    Scenario {
+        name: name.to_string(),
+        description: description.to_string(),
+        experiments: ids.iter().map(|s| s.to_string()).collect(),
+        ..Default::default()
+    }
+}
+
+/// The built-in scenario table. Delegated entries reproduce the
+/// `experiments` binary's outputs byte-identically (same `ExpCtx`
+/// defaults: 120 jobs, seed 0, fault-free unless the experiment sweeps
+/// its own rates); generic entries exercise the scenario engine.
+pub fn builtins() -> Vec<Scenario> {
+    vec![
+        // -- delegated: the paper evaluation, grids in data ----------------
+        delegated(
+            "measure",
+            "§III measurement study (figs 1-14 + table I) on the classic Philly workload",
+            &["fig1", "fig8", "fig9", "fig11", "fig12", "fig13", "tab1", "fig14"],
+        ),
+        delegated(
+            "eval",
+            "§V headline comparison vs the six systems (figs 16-22)",
+            &["fig16", "fig17", "fig18"],
+        ),
+        delegated("ablation", "§V-C ablations (figs 23-27)", &["fig23"]),
+        delegated("overhead", "decision-path + end-to-end overhead (figs 28-29)", &["fig28", "fig29"]),
+        delegated(
+            "resilience",
+            "TTA/JCT/downtime under failure rate x policy (DESIGN.md §7)",
+            &["resilience"],
+        ),
+        delegated(
+            "scale",
+            "cluster-scale driver throughput benchmark (BENCH_driver.json)",
+            &["scale"],
+        ),
+        delegated("all", "every paper artifact (the experiments binary's `all`)", &["all"]),
+        // -- generic: shapes no experiment subcommand can express ----------
+        Scenario {
+            name: "philly_default".to_string(),
+            description: "the classic Philly workload as a generic scenario \
+                          (byte-identical trace to `star simulate`)"
+                .to_string(),
+            workload: WorkloadSpec::philly(60, 0),
+            policies: vec!["SSGD".into(), "LGC".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            ..Default::default()
+        },
+        Scenario {
+            name: "fault_storm".to_string(),
+            description: "background failures plus two concentrated fault storms"
+                .to_string(),
+            workload: WorkloadSpec::philly(48, 0),
+            faults: FaultRegime::Storm {
+                seed: 7,
+                base_rate: 0.5,
+                storm_rate: 12.0,
+                windows: vec![(1800.0, 3000.0), (7200.0, 8400.0)],
+            },
+            policies: vec!["SSGD".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            ..Default::default()
+        },
+        Scenario {
+            name: "oversubscribed_cpu".to_string(),
+            description: "PS-heavy fleet on servers with 45% of the CPU headroom \
+                          (contention-driven stragglers)"
+                .to_string(),
+            cluster: ClusterShape { cpu_factor: 0.45, ..Default::default() },
+            workload: WorkloadSpec {
+                ps: PsSpec { on_gpu_prob: 0.8, min_per_job: 2, max_per_job: 0 },
+                ..WorkloadSpec::philly(40, 0)
+            },
+            policies: vec!["SSGD".into(), "LB-BSP".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            ..Default::default()
+        },
+        Scenario {
+            name: "bursty_storm_oversub".to_string(),
+            description: "bursty arrivals + fault storms on an oversubscribed \
+                          CPU/bandwidth fleet, PS and AR - the what-if shape the \
+                          experiment harness cannot express"
+                .to_string(),
+            cluster: ClusterShape { cpu_factor: 0.5, bw_factor: 0.7, ..Default::default() },
+            workload: WorkloadSpec {
+                arrival: Arrival::Bursty {
+                    span_s: 0.0, // auto: jobs·280 s
+                    burst_every_s: 2800.0,
+                    burst_len_s: 400.0,
+                    mult: 8.0,
+                },
+                ..WorkloadSpec::philly(48, 0)
+            },
+            faults: FaultRegime::Storm {
+                seed: 7,
+                base_rate: 0.5,
+                storm_rate: 10.0,
+                windows: vec![(2000.0, 3400.0), (9000.0, 10_400.0)],
+            },
+            policies: vec!["SSGD".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps, Arch::AllReduce],
+            ..Default::default()
+        },
+    ]
+}
+
+/// Built-in names, table order (error messages, `--list`).
+pub fn builtin_names() -> Vec<String> {
+    builtins().into_iter().map(|s| s.name).collect()
+}
+
+/// Look a built-in up by name.
+pub fn find_builtin(name: &str) -> Option<Scenario> {
+    builtins().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_unique_and_valid() {
+        let all = builtins();
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate built-in names");
+        for sc in &all {
+            sc.validate().unwrap_or_else(|e| panic!("builtin {:?}: {e:#}", sc.name));
+            assert!(!sc.description.is_empty(), "{}: description required", sc.name);
+        }
+    }
+
+    #[test]
+    fn builtins_round_trip_through_json() {
+        for sc in builtins() {
+            let j = sc.to_json();
+            let again = Scenario::from_json(&j)
+                .unwrap_or_else(|e| panic!("builtin {:?}: {e:#}", sc.name));
+            assert_eq!(j, again.to_json(), "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn find_builtin_resolves_known_names_only() {
+        assert!(find_builtin("resilience").is_some());
+        assert!(find_builtin("bursty_storm_oversub").is_some());
+        assert!(find_builtin("nope").is_none());
+        assert!(builtin_names().contains(&"philly_default".to_string()));
+    }
+
+    #[test]
+    fn delegated_builtins_reference_valid_experiment_ids() {
+        for sc in builtins() {
+            for id in &sc.experiments {
+                assert!(
+                    crate::exp::EXPERIMENT_IDS.contains(&id.as_str()),
+                    "{}: unknown experiment id {id:?}",
+                    sc.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Scenario subsystem (DESIGN.md §9): one declarative description of a
+//! whole what-if experiment — cluster shape, workload (arrival process,
+//! job mix, PS fleet), fault regime, policy × arch grid, driver knobs —
+//! parsed from JSON, validated with field-naming errors, and executed
+//! either generically or by delegating to the existing experiment
+//! harness (byte-identically).
+//!
+//! Layering (top-down):
+//!
+//! * [`spec`] — the [`Scenario`] description + JSON round-trip +
+//!   validation;
+//! * [`workload`] — spec → job trace; [`crate::trace::generate`] is the
+//!   classic Philly backend, scenario generator families cover the rest;
+//! * [`spec::FaultRegime`] — spec → [`crate::faults::FaultPlan`] (rate,
+//!   full-config, and storm front-ends over the `faults` generators);
+//! * [`runner`] — spec → results (sweep-parallel, artifact-emitting);
+//! * [`builtin`] — the named scenarios behind `star scenario run <name>`
+//!   (every experiment family as data, plus generator-family what-ifs).
+//!
+//! Example spec files live under `examples/scenarios/` and are parsed +
+//! smoke-run by `tests/scenario_examples.rs` and the CI scenario step.
+
+pub mod builtin;
+pub mod runner;
+pub mod spec;
+pub mod workload;
+
+pub use builtin::{builtin_names, builtins, find_builtin};
+pub use runner::{run, RunOpts};
+pub use spec::{
+    arch_tag, parse_arch, Arrival, ClusterShape, DriverKnobs, FaultRegime, ModelMix, PsSpec,
+    Scenario, WorkloadSpec,
+};
+
+/// Resolve a `star scenario run` target. Bare names resolve to
+/// built-ins first — a stray file or directory in the cwd named like a
+/// built-in must not shadow it (address such a file as `./name`).
+/// Anything path-like (a `.json` suffix or a separator) reads the
+/// filesystem; unknown bare names list the valid built-ins.
+pub fn load(target: &str) -> crate::Result<Scenario> {
+    let looks_like_path = target.ends_with(".json") || target.contains('/');
+    if !looks_like_path {
+        return find_builtin(target).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario {target:?} (built-ins: {}; or pass a .json spec file)",
+                builtin_names().join(", ")
+            )
+        });
+    }
+    let path = std::path::Path::new(target);
+    if path.is_file() {
+        return Scenario::from_file(path);
+    }
+    Err(anyhow::anyhow!("scenario spec file {target:?} not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_resolves_builtins_and_lists_them_on_error() {
+        assert_eq!(load("fault_storm").unwrap().name, "fault_storm");
+        let err = format!("{:#}", load("not_a_scenario").err().unwrap());
+        assert!(err.contains("philly_default"), "must list built-ins: {err}");
+        assert!(err.contains(".json"), "must mention the file path option: {err}");
+        // a missing path-like target names the file, not the built-ins
+        let err = format!("{:#}", load("no/such/spec.json").err().unwrap());
+        assert!(err.contains("not found"), "{err}");
+    }
+
+    #[test]
+    fn bare_builtin_names_never_read_the_filesystem() {
+        // a stray cwd file or directory named like a built-in must not
+        // hijack it: bare names resolve against the built-in table first
+        // (a same-named spec file is addressable as ./name or name.json)
+        assert_eq!(load("resilience").unwrap().name, "resilience");
+        assert_eq!(load("scale").unwrap().name, "scale");
+    }
+
+    #[test]
+    fn load_reads_spec_files() {
+        let dir = std::env::temp_dir().join("star_scenario_load_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        std::fs::write(&path, r#"{"name": "from-file", "policies": ["SSGD"]}"#).unwrap();
+        let sc = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(sc.name, "from-file");
+        // a malformed file errors with the path in the message
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(load(path.to_str().unwrap()).is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! Scenario execution: delegated scenarios route through
+//! [`crate::exp::dispatch`] (byte-identical to the `experiments`
+//! binary); generic scenarios build the described cluster, workload, and
+//! fault plan, then sweep the `arch × policy` grid through
+//! [`crate::exp::sweep`] exactly like the resilience experiment —
+//! per-cell drivers, order-preserving results, byte-identical at any
+//! `--threads`.
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use crate::baselines::make_policy;
+use crate::driver::{Driver, DriverConfig, JobStats};
+use crate::exp::{summarize, sweep, ExpCtx};
+use crate::faults::span_for;
+use crate::jsonio::{self, Json};
+use crate::stats;
+use crate::table::{self, Table};
+
+use super::spec::{arch_tag, Scenario};
+use super::workload;
+
+/// Invocation knobs (CLI-derived; the spec stays immutable on disk).
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// shrink for smoke runs: caps jobs at 12 and bounds driver limits
+    /// (the same clamps the resilience experiment's quick mode uses)
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    /// sweep width; results are byte-identical at any value
+    pub threads: usize,
+    /// `--jobs N`: run the scenario at a different job count without
+    /// editing the spec
+    pub jobs_override: Option<usize>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            quick: false,
+            out_dir: PathBuf::from("results"),
+            threads: sweep::available_threads(),
+            jobs_override: None,
+        }
+    }
+}
+
+/// Run a scenario. Validates first, so a hand-written spec fails with a
+/// field-naming error before any simulation starts.
+pub fn run(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
+    sc.validate().with_context(|| format!("scenario {:?}", sc.name))?;
+    // the override bypasses the spec's workload.jobs validation — re-check
+    // (a 0-job run would emit NaN means into the JSON artifact)
+    if opts.jobs_override == Some(0) {
+        anyhow::bail!("--jobs: a scenario run needs at least one job");
+    }
+    if !sc.experiments.is_empty() {
+        return run_delegated(sc, opts);
+    }
+    run_generic(sc, opts)
+}
+
+/// Delegated flavor: an `ExpCtx` derived from the spec, one
+/// `exp::dispatch` per experiment id. Byte-identity with the
+/// `experiments` binary holds because this is the same context type
+/// driving the same dispatch — the scenario only carries the knobs.
+fn run_delegated(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
+    let (fault_rate, fault_seed) = match sc.faults {
+        super::spec::FaultRegime::Rate { rate, seed } => (rate, seed),
+        _ => (0.0, 0), // validate_delegation rejects everything but Off/Rate
+    };
+    let ctx = ExpCtx {
+        jobs: opts.jobs_override.unwrap_or(sc.workload.jobs),
+        seed: sc.workload.seed,
+        out_dir: opts.out_dir.clone(),
+        quick: opts.quick,
+        fault_rate,
+        fault_seed,
+        threads: opts.threads,
+    };
+    for id in &sc.experiments {
+        eprintln!("[scenario] {} -> experiment {id}", sc.name);
+        crate::exp::dispatch(id, &ctx)?;
+    }
+    Ok(())
+}
+
+fn run_generic(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
+    let jobs = {
+        let j = opts.jobs_override.unwrap_or(sc.workload.jobs);
+        if opts.quick {
+            j.min(12)
+        } else {
+            j
+        }
+    };
+    let trace = workload::build(&sc.workload, jobs)?;
+    let cluster = sc.cluster.to_config();
+
+    // driver caps: spec overrides (0 = default), then quick-mode bounds
+    // (heavily faulted jobs may never converge — same clamps as the
+    // resilience experiment's quick mode)
+    let defaults = DriverConfig::default();
+    let mut max_job_duration_s = if sc.driver.max_job_duration_s > 0.0 {
+        sc.driver.max_job_duration_s
+    } else {
+        defaults.max_job_duration_s
+    };
+    let mut max_updates_per_job = if sc.driver.max_updates_per_job > 0 {
+        sc.driver.max_updates_per_job
+    } else {
+        defaults.max_updates_per_job
+    };
+    let mut max_iters_per_job = if sc.driver.max_iters_per_job > 0 {
+        sc.driver.max_iters_per_job
+    } else {
+        defaults.max_iters_per_job
+    };
+    if opts.quick {
+        max_job_duration_s = max_job_duration_s.min(12_000.0);
+        max_updates_per_job = max_updates_per_job.min(25_000);
+        max_iters_per_job = max_iters_per_job.min(40_000);
+    }
+
+    let span = span_for(&trace, max_job_duration_s);
+    let plan = sc.faults.plan(&trace, span, cluster.total_servers());
+
+    // policy names were checked by run()'s validate() — the per-cell
+    // factories below run mid-simulation, where failing is no longer an
+    // option (the same contract exp::run_system documents)
+    let policy_refs: Vec<&str> = sc.policies.iter().map(|s| s.as_str()).collect();
+    let cells = sweep::cross(&sc.archs, &policy_refs);
+    eprintln!(
+        "[scenario] {}: {} cells ({} archs x {} policies, {} jobs, {} faults) on {} thread(s)…",
+        sc.name,
+        cells.len(),
+        sc.archs.len(),
+        sc.policies.len(),
+        trace.len(),
+        plan.len(),
+        opts.threads
+    );
+    let results = sweep::run_indexed(
+        &cells,
+        opts.threads,
+        |_, &(arch, sys)| -> crate::Result<Vec<JobStats>> {
+            let cfg = DriverConfig {
+                arch,
+                cluster: cluster.clone(),
+                seed: sc.driver.seed,
+                record_series: false,
+                max_job_duration_s,
+                max_updates_per_job,
+                max_iters_per_job,
+                faults: plan.clone(),
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let name = sys.to_string();
+            let driver = Driver::new(
+                cfg,
+                trace.clone(),
+                Box::new(move |_| make_policy(&name).expect("validated above")),
+            );
+            let stats = driver.run().0;
+            eprintln!(
+                "[scenario]   {sys}/{}: {:.1}s wall",
+                arch_tag(arch),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(stats)
+        },
+    );
+    let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+
+    let mut t = Table::new(
+        &format!("Scenario {} — {}", sc.name, sc.description),
+        &[
+            "policy",
+            "arch",
+            "jobs",
+            "faults",
+            "tta_mean_s",
+            "jct_mean_s",
+            "downtime_mean_s",
+            "rollbacks",
+            "stragglers_mean",
+            "reached",
+        ],
+    );
+    let mut results_json: Vec<Json> = Vec::new();
+    for (&(arch, sys), stats) in cells.iter().zip(&results) {
+        let s = summarize(stats);
+        // -1 = "no job reached the target" (NaN is not valid JSON)
+        let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+        let jct_mean = stats::mean(&s.jct);
+        let downtime_mean = stats::mean(&s.downtime);
+        let rollbacks: f64 = s.rollbacks.iter().sum();
+        let straggler_mean = stats::mean(&s.stragglers);
+        t.rowf(&[
+            table::s(sys),
+            table::s(arch_tag(arch)),
+            table::i(s.jobs as i64),
+            table::i(plan.len() as i64),
+            table::f(tta_mean, 0),
+            table::f(jct_mean, 0),
+            table::f(downtime_mean, 1),
+            table::i(rollbacks as i64),
+            table::f(straggler_mean, 1),
+            table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+        ]);
+        results_json.push(jsonio::obj(vec![
+            ("name", jsonio::s(&format!("scenario/{}/{sys}/{}", sc.name, arch_tag(arch)))),
+            ("iters", jsonio::num(s.jobs as f64)),
+            // headline metric in the bench schema's slot: mean JCT
+            ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+            ("tta_mean_s", jsonio::num(tta_mean)),
+            ("jct_mean_s", jsonio::num(jct_mean)),
+            ("downtime_mean_s", jsonio::num(downtime_mean)),
+            ("rollbacks", jsonio::num(rollbacks)),
+            ("straggler_episodes_mean", jsonio::num(straggler_mean)),
+            ("tta_reached", jsonio::num(s.tta_reached as f64)),
+            ("jobs", jsonio::num(s.jobs as f64)),
+            ("fault_count", jsonio::num(plan.len() as f64)),
+        ]));
+    }
+    t.print();
+
+    if let Err(e) = std::fs::create_dir_all(&opts.out_dir) {
+        eprintln!("warning: could not create {}: {e}", opts.out_dir.display());
+    }
+    let csv = opts.out_dir.join(format!("scenario_{}.csv", sc.name));
+    if let Err(e) = t.save_csv(&csv) {
+        eprintln!("warning: could not save {}: {e}", csv.display());
+    }
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::scenario")),
+        ("scenario", sc.to_json()),
+        // what actually ran: --quick/--jobs change the workload without
+        // touching the spec, so the artifact records the effective
+        // invocation next to the (unmodified) spec it came from
+        (
+            "invocation",
+            jsonio::obj(vec![
+                ("quick", jsonio::b(opts.quick)),
+                ("jobs", jsonio::num(jobs as f64)),
+                ("threads", jsonio::num(opts.threads as f64)),
+                ("max_job_duration_s", jsonio::num(max_job_duration_s)),
+            ]),
+        ),
+        ("results", Json::Arr(results_json)),
+    ]);
+    let path = opts.out_dir.join(format!("scenario_{}.json", sc.name));
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("scenario results written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::builtin::find_builtin;
+    use crate::scenario::spec::{FaultRegime, WorkloadSpec};
+    use crate::trace::Arch;
+
+    fn opts(tag: &str) -> RunOpts {
+        RunOpts {
+            quick: true,
+            out_dir: std::env::temp_dir().join(format!("star_scenario_{tag}")),
+            threads: 1,
+            jobs_override: Some(2),
+        }
+    }
+
+    #[test]
+    fn generic_scenario_runs_and_artifact_parses() {
+        let sc = Scenario {
+            name: "test_generic".to_string(),
+            description: "storm on two policies".to_string(),
+            workload: WorkloadSpec::philly(4, 0),
+            faults: FaultRegime::Rate { rate: 2.0, seed: 7 },
+            policies: vec!["SSGD".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            ..Default::default()
+        };
+        let o = opts("generic");
+        run(&sc, &o).unwrap();
+        let doc = Json::parse_file(&o.out_dir.join("scenario_test_generic.json")).unwrap();
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        // the spec is embedded, so an artifact is self-describing
+        let embedded = doc.get("scenario").unwrap();
+        assert_eq!(embedded.get("name").unwrap().str().unwrap(), "test_generic");
+        let results = doc.get("results").unwrap().arr().unwrap();
+        assert_eq!(results.len(), 2, "2 policies x 1 arch");
+        for r in results {
+            assert!(r.get("jct_mean_s").unwrap().num().unwrap() > 0.0);
+            assert_eq!(r.get("jobs").unwrap().num().unwrap() as usize, 2);
+        }
+        // the artifact records what actually ran (overrides included)
+        let inv = doc.get("invocation").unwrap();
+        assert_eq!(inv.get("jobs").unwrap().num().unwrap() as usize, 2);
+        assert!(inv.get("quick").unwrap().boolean().unwrap());
+        assert!(o.out_dir.join("scenario_test_generic.csv").exists());
+    }
+
+    #[test]
+    fn delegated_builtin_is_byte_identical_to_dispatch() {
+        // the acceptance contract: `star scenario run resilience` must
+        // reproduce `experiments resilience` byte for byte
+        let direct = ExpCtx {
+            jobs: 2,
+            quick: true,
+            threads: 1,
+            out_dir: std::env::temp_dir().join("star_scenario_direct"),
+            ..Default::default()
+        };
+        crate::exp::dispatch("resilience", &direct).unwrap();
+        let sc = find_builtin("resilience").unwrap();
+        let o = opts("delegated");
+        run(&sc, &o).unwrap();
+        let a = std::fs::read(direct.out_dir.join("resilience.json")).unwrap();
+        let b = std::fs::read(o.out_dir.join("resilience.json")).unwrap();
+        assert_eq!(a, b, "scenario-run resilience.json differs from experiments-run");
+        let a = std::fs::read(direct.out_dir.join("resilience.csv")).unwrap();
+        let b = std::fs::read(o.out_dir.join("resilience.csv")).unwrap();
+        assert_eq!(a, b, "scenario-run resilience.csv differs from experiments-run");
+    }
+
+    #[test]
+    fn zero_jobs_override_is_rejected() {
+        let sc = find_builtin("philly_default").unwrap();
+        let o = RunOpts { jobs_override: Some(0), ..opts("zero") };
+        let err = format!("{:#}", run(&sc, &o).err().expect("0 jobs must be rejected"));
+        assert!(err.contains("--jobs"), "{err}");
+    }
+
+    #[test]
+    fn quick_mode_clamps_jobs() {
+        let sc = Scenario {
+            name: "clamp".to_string(),
+            description: "quick clamps".to_string(),
+            workload: WorkloadSpec::philly(500, 0),
+            policies: vec!["SSGD".into()],
+            ..Default::default()
+        };
+        let o = RunOpts { jobs_override: None, ..opts("clamp") };
+        run(&sc, &o).unwrap();
+        let doc = Json::parse_file(&o.out_dir.join("scenario_clamp.json")).unwrap();
+        let r = &doc.get("results").unwrap().arr().unwrap()[0];
+        assert_eq!(r.get("jobs").unwrap().num().unwrap() as usize, 12);
+    }
+}

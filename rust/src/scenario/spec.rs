@@ -1,0 +1,1248 @@
+//! The declarative [`Scenario`] spec: cluster shape, workload
+//! (arrival process / job mix / PS fleet), fault regime, policy × arch
+//! grid, and driver knobs — parsed from JSON ([`crate::jsonio`]),
+//! validated with field-naming errors, and emitted back in a canonical
+//! fully-expanded form (parse → emit → parse is identity; pinned by the
+//! round-trip tests below and `tests/scenario_examples.rs`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::cluster::ClusterConfig;
+use crate::faults::{generate_plan, plan_at_rate, FaultConfig, FaultPlan};
+use crate::jsonio::{self, Json};
+use crate::models::ModelSpec;
+use crate::trace::{Arch, JobSpec};
+
+/// A complete scenario description. Two flavors share the type:
+///
+/// * **generic** — `policies` × `archs` cells over the described
+///   workload/cluster/faults, run by [`crate::scenario::runner`];
+/// * **delegated** — `experiments` names existing experiment ids, run
+///   through [`crate::exp::dispatch`] with a context derived from this
+///   spec (byte-identical to invoking the `experiments` binary).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// non-empty = delegated: run these experiment ids via `exp::dispatch`
+    pub experiments: Vec<String>,
+    pub cluster: ClusterShape,
+    pub workload: WorkloadSpec,
+    pub faults: FaultRegime,
+    /// system names (see `baselines::make_policy`), generic flavor only
+    pub policies: Vec<String>,
+    pub archs: Vec<Arch>,
+    pub driver: DriverKnobs,
+}
+
+/// Cluster shape + oversubscription factors. Factors scale the default
+/// per-server capacities, so `cpu_factor: 0.5` is "the same testbed with
+/// half the CPU headroom" — the oversubscribed regimes of the ROADMAP.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterShape {
+    pub gpu_servers: usize,
+    pub cpu_servers: usize,
+    pub gpus_per_server: usize,
+    /// multiplies gpu/cpu-server CPU capacity (1.0 = the paper testbed)
+    pub cpu_factor: f64,
+    /// multiplies gpu/cpu-server network capacity
+    pub bw_factor: f64,
+}
+
+impl Default for ClusterShape {
+    fn default() -> Self {
+        let d = ClusterConfig::default();
+        ClusterShape {
+            gpu_servers: d.gpu_servers,
+            cpu_servers: d.cpu_servers,
+            gpus_per_server: d.gpus_per_server,
+            cpu_factor: 1.0,
+            bw_factor: 1.0,
+        }
+    }
+}
+
+impl ClusterShape {
+    /// Materialize as a simulator [`ClusterConfig`] (defaults scaled by
+    /// the oversubscription factors; contention knobs untouched).
+    pub fn to_config(&self) -> ClusterConfig {
+        let d = ClusterConfig::default();
+        ClusterConfig {
+            gpu_servers: self.gpu_servers,
+            cpu_servers: self.cpu_servers,
+            gpus_per_server: self.gpus_per_server,
+            gpu_server_cpus: d.gpu_server_cpus * self.cpu_factor,
+            cpu_server_cpus: d.cpu_server_cpus * self.cpu_factor,
+            gpu_server_bw: d.gpu_server_bw * self.bw_factor,
+            cpu_server_bw: d.cpu_server_bw * self.bw_factor,
+            ..d
+        }
+    }
+
+    fn from_json(j: &Json) -> crate::Result<ClusterShape> {
+        check_keys(
+            j,
+            "cluster",
+            &["gpu_servers", "cpu_servers", "gpus_per_server", "cpu_factor", "bw_factor"],
+        )?;
+        let d = ClusterShape::default();
+        Ok(ClusterShape {
+            gpu_servers: get_usize(j, "cluster", "gpu_servers", d.gpu_servers)?,
+            cpu_servers: get_usize(j, "cluster", "cpu_servers", d.cpu_servers)?,
+            gpus_per_server: get_usize(j, "cluster", "gpus_per_server", d.gpus_per_server)?,
+            cpu_factor: get_f64(j, "cluster", "cpu_factor", d.cpu_factor)?,
+            bw_factor: get_f64(j, "cluster", "bw_factor", d.bw_factor)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("gpu_servers", jsonio::num(self.gpu_servers as f64)),
+            ("cpu_servers", jsonio::num(self.cpu_servers as f64)),
+            ("gpus_per_server", jsonio::num(self.gpus_per_server as f64)),
+            ("cpu_factor", jsonio::num(self.cpu_factor)),
+            ("bw_factor", jsonio::num(self.bw_factor)),
+        ])
+    }
+}
+
+/// Workload description: how many jobs arrive, when, and shaped how.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub jobs: usize,
+    pub seed: u64,
+    pub arrival: Arrival,
+    pub min_workers: usize,
+    pub max_workers: usize,
+    pub models: ModelMix,
+    pub ps: PsSpec,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            jobs: 120,
+            seed: 0,
+            arrival: Arrival::Philly { span_s: 0.0 },
+            min_workers: 4,
+            max_workers: 12,
+            models: ModelMix::Uniform,
+            ps: PsSpec::default(),
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// The classic Philly family at the CLI pacing rule (`span_s: 0` =
+    /// auto `jobs · 280 s`) — what `ExpCtx` and `star simulate` run.
+    pub fn philly(jobs: usize, seed: u64) -> WorkloadSpec {
+        WorkloadSpec { jobs, seed, ..Default::default() }
+    }
+
+    /// True when this spec is exactly the Philly family (arrival +
+    /// uniform model mix + default PS fleet): the builder then delegates
+    /// to [`crate::trace::generate`], byte-identical to the pre-scenario
+    /// trace construction.
+    pub fn is_classic_philly(&self) -> bool {
+        matches!(self.arrival, Arrival::Philly { .. })
+            && self.models == ModelMix::Uniform
+            && self.ps == PsSpec::default()
+    }
+
+    /// The simulated span arrivals cover: explicit, or the pacing rule.
+    pub fn effective_span(&self, jobs: usize) -> f64 {
+        let span = *match &self.arrival {
+            Arrival::Philly { span_s }
+            | Arrival::Poisson { span_s }
+            | Arrival::Bursty { span_s, .. }
+            | Arrival::Diurnal { span_s, .. } => span_s,
+        };
+        if span > 0.0 {
+            span
+        } else {
+            jobs as f64 * 280.0
+        }
+    }
+
+    fn from_json(j: &Json) -> crate::Result<WorkloadSpec> {
+        check_keys(
+            j,
+            "workload",
+            &["jobs", "seed", "arrival", "min_workers", "max_workers", "models", "ps"],
+        )?;
+        let d = WorkloadSpec::default();
+        Ok(WorkloadSpec {
+            jobs: get_usize(j, "workload", "jobs", d.jobs)?,
+            seed: get_u64(j, "workload", "seed", d.seed)?,
+            arrival: match j.opt("arrival") {
+                None => d.arrival,
+                Some(v) => Arrival::from_json(v)?,
+            },
+            min_workers: get_usize(j, "workload", "min_workers", d.min_workers)?,
+            max_workers: get_usize(j, "workload", "max_workers", d.max_workers)?,
+            models: match j.opt("models") {
+                None => d.models,
+                Some(v) => ModelMix::from_json(v)?,
+            },
+            ps: match j.opt("ps") {
+                None => d.ps,
+                Some(v) => PsSpec::from_json(v)?,
+            },
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("jobs", jsonio::num(self.jobs as f64)),
+            ("seed", jsonio::num(self.seed as f64)),
+            ("arrival", self.arrival.to_json()),
+            ("min_workers", jsonio::num(self.min_workers as f64)),
+            ("max_workers", jsonio::num(self.max_workers as f64)),
+            ("models", self.models.to_json()),
+            ("ps", self.ps.to_json()),
+        ])
+    }
+}
+
+/// Arrival process family. `span_s: 0` always means "auto": the CLI
+/// pacing rule `jobs · 280 s`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arrival {
+    /// the paper's day/night two-level Poisson mix (§III)
+    Philly { span_s: f64 },
+    /// uniform-rate Poisson arrivals
+    Poisson { span_s: f64 },
+    /// baseline Poisson with periodic bursts: every `burst_every_s`
+    /// seconds the rate runs at `mult`× for `burst_len_s` seconds
+    Bursty { span_s: f64, burst_every_s: f64, burst_len_s: f64, mult: f64 },
+    /// sinusoidal day/night rate: 1× at the trough, `peak_mult`× at the
+    /// peak of each `period_s` cycle
+    Diurnal { span_s: f64, period_s: f64, peak_mult: f64 },
+}
+
+impl Arrival {
+    fn from_json(j: &Json) -> crate::Result<Arrival> {
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.str())
+            .context("workload.arrival.kind")?;
+        match kind {
+            "philly" => {
+                check_keys(j, "workload.arrival", &["kind", "span_s"])?;
+                Ok(Arrival::Philly { span_s: get_f64(j, "workload.arrival", "span_s", 0.0)? })
+            }
+            "poisson" => {
+                check_keys(j, "workload.arrival", &["kind", "span_s"])?;
+                Ok(Arrival::Poisson { span_s: get_f64(j, "workload.arrival", "span_s", 0.0)? })
+            }
+            "bursty" => {
+                check_keys(
+                    j,
+                    "workload.arrival",
+                    &["kind", "span_s", "burst_every_s", "burst_len_s", "mult"],
+                )?;
+                Ok(Arrival::Bursty {
+                    span_s: get_f64(j, "workload.arrival", "span_s", 0.0)?,
+                    burst_every_s: get_f64(j, "workload.arrival", "burst_every_s", 3600.0)?,
+                    burst_len_s: get_f64(j, "workload.arrival", "burst_len_s", 600.0)?,
+                    mult: get_f64(j, "workload.arrival", "mult", 6.0)?,
+                })
+            }
+            "diurnal" => {
+                check_keys(j, "workload.arrival", &["kind", "span_s", "period_s", "peak_mult"])?;
+                Ok(Arrival::Diurnal {
+                    span_s: get_f64(j, "workload.arrival", "span_s", 0.0)?,
+                    period_s: get_f64(j, "workload.arrival", "period_s", 86_400.0)?,
+                    peak_mult: get_f64(j, "workload.arrival", "peak_mult", 3.0)?,
+                })
+            }
+            other => bail!(
+                "workload.arrival.kind: unknown kind {other:?} (philly, poisson, bursty, diurnal)"
+            ),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            Arrival::Philly { span_s } => jsonio::obj(vec![
+                ("kind", jsonio::s("philly")),
+                ("span_s", jsonio::num(span_s)),
+            ]),
+            Arrival::Poisson { span_s } => jsonio::obj(vec![
+                ("kind", jsonio::s("poisson")),
+                ("span_s", jsonio::num(span_s)),
+            ]),
+            Arrival::Bursty { span_s, burst_every_s, burst_len_s, mult } => jsonio::obj(vec![
+                ("kind", jsonio::s("bursty")),
+                ("span_s", jsonio::num(span_s)),
+                ("burst_every_s", jsonio::num(burst_every_s)),
+                ("burst_len_s", jsonio::num(burst_len_s)),
+                ("mult", jsonio::num(mult)),
+            ]),
+            Arrival::Diurnal { span_s, period_s, peak_mult } => jsonio::obj(vec![
+                ("kind", jsonio::s("diurnal")),
+                ("span_s", jsonio::num(span_s)),
+                ("period_s", jsonio::num(period_s)),
+                ("peak_mult", jsonio::num(peak_mult)),
+            ]),
+        }
+    }
+}
+
+/// Per-job model sampling: uniform over the zoo (the Philly default),
+/// restricted to vision/NLP, or explicitly weighted by zoo name.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelMix {
+    Uniform,
+    Vision,
+    Nlp,
+    /// (zoo model name, weight ≥ 0) — sorted by name for canonical emit
+    Weighted(Vec<(String, f64)>),
+}
+
+impl ModelMix {
+    fn from_json(j: &Json) -> crate::Result<ModelMix> {
+        match j {
+            Json::Str(s) => match s.as_str() {
+                "uniform" => Ok(ModelMix::Uniform),
+                "vision" => Ok(ModelMix::Vision),
+                "nlp" => Ok(ModelMix::Nlp),
+                other => bail!(
+                    "workload.models: unknown mix {other:?} (uniform, vision, nlp, or \
+                     {{\"weights\": {{\"Model\": w, …}}}})"
+                ),
+            },
+            Json::Obj(_) => {
+                check_keys(j, "workload.models", &["weights"])?;
+                let w = j.get("weights").context("workload.models")?;
+                let map = w.obj().context("workload.models.weights")?;
+                let mut out = Vec::with_capacity(map.len());
+                for (name, v) in map {
+                    let weight = v
+                        .num()
+                        .with_context(|| format!("workload.models.weights.{name}"))?;
+                    out.push((name.clone(), weight));
+                }
+                Ok(ModelMix::Weighted(out))
+            }
+            _ => bail!("workload.models: must be a mix name or a weights object"),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ModelMix::Uniform => jsonio::s("uniform"),
+            ModelMix::Vision => jsonio::s("vision"),
+            ModelMix::Nlp => jsonio::s("nlp"),
+            ModelMix::Weighted(ws) => jsonio::obj(vec![(
+                "weights",
+                Json::Obj(ws.iter().map(|(n, w)| (n.clone(), Json::Num(*w))).collect()),
+            )]),
+        }
+    }
+}
+
+/// PS-fleet shape: where PSs land and how many a job runs. The Philly
+/// default is `U[1, workers]` PSs, half the jobs co-locating them on
+/// their GPU servers; a PS-heavy fleet raises `min_per_job` and
+/// `on_gpu_prob`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PsSpec {
+    /// probability a job's PSs land on its GPU servers (vs CPU servers)
+    pub on_gpu_prob: f64,
+    /// lower bound on per-job PS count
+    pub min_per_job: usize,
+    /// upper bound on per-job PS count; 0 = the job's worker count
+    pub max_per_job: usize,
+}
+
+impl Default for PsSpec {
+    fn default() -> Self {
+        PsSpec { on_gpu_prob: 0.5, min_per_job: 1, max_per_job: 0 }
+    }
+}
+
+impl PsSpec {
+    fn from_json(j: &Json) -> crate::Result<PsSpec> {
+        check_keys(j, "workload.ps", &["on_gpu_prob", "min_per_job", "max_per_job"])?;
+        let d = PsSpec::default();
+        Ok(PsSpec {
+            on_gpu_prob: get_f64(j, "workload.ps", "on_gpu_prob", d.on_gpu_prob)?,
+            min_per_job: get_usize(j, "workload.ps", "min_per_job", d.min_per_job)?,
+            max_per_job: get_usize(j, "workload.ps", "max_per_job", d.max_per_job)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("on_gpu_prob", jsonio::num(self.on_gpu_prob)),
+            ("min_per_job", jsonio::num(self.min_per_job as f64)),
+            ("max_per_job", jsonio::num(self.max_per_job as f64)),
+        ])
+    }
+}
+
+/// Scenario-driven front-end over the `faults` plan generators.
+#[derive(Clone, Debug)]
+pub enum FaultRegime {
+    /// fault-free (bit-identical to the pre-faults simulator)
+    Off,
+    /// default MTBFs scaled by `rate` — the `--fault-rate` recipe
+    /// ([`plan_at_rate`])
+    Rate { rate: f64, seed: u64 },
+    /// full [`FaultConfig`] override ([`generate_plan`])
+    Config(FaultConfig),
+    /// background `base_rate` plus storm windows at `storm_rate`: inside
+    /// each `[from_s, to_s)` window the storm stream replaces the base
+    /// stream — fault storms, deterministic per seed
+    Storm { seed: u64, base_rate: f64, storm_rate: f64, windows: Vec<(f64, f64)> },
+}
+
+impl FaultRegime {
+    /// Build the plan this regime injects into `trace` over `span_s`
+    /// seconds on a `servers`-server cluster. Pure and deterministic —
+    /// the same discipline as [`generate_plan`].
+    pub fn plan(&self, trace: &[JobSpec], span_s: f64, servers: usize) -> FaultPlan {
+        match self {
+            FaultRegime::Off => FaultPlan::default(),
+            FaultRegime::Rate { rate, seed } => plan_at_rate(*rate, *seed, trace, span_s, servers),
+            FaultRegime::Config(cfg) => generate_plan(cfg, trace, span_s, servers),
+            FaultRegime::Storm { seed, base_rate, storm_rate, windows } => {
+                let inside = |t: f64| windows.iter().any(|&(a, b)| t >= a && t < b);
+                let mut base = plan_at_rate(*base_rate, *seed, trace, span_s, servers);
+                base.faults.retain(|f| !inside(f.at));
+                // independent storm stream: changing the base rate never
+                // moves in-window fault times (and vice versa)
+                let mut storm =
+                    plan_at_rate(*storm_rate, seed ^ 0x5702, trace, span_s, servers);
+                storm.faults.retain(|f| inside(f.at));
+                base.merge(storm)
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> crate::Result<FaultRegime> {
+        let kind = j.get("kind").and_then(|v| v.str()).context("faults.kind")?;
+        match kind {
+            "off" => {
+                check_keys(j, "faults", &["kind"])?;
+                Ok(FaultRegime::Off)
+            }
+            "rate" => {
+                check_keys(j, "faults", &["kind", "rate", "seed"])?;
+                Ok(FaultRegime::Rate {
+                    rate: get_f64(j, "faults", "rate", 1.0)?,
+                    seed: get_u64(j, "faults", "seed", 0)?,
+                })
+            }
+            "config" => {
+                check_keys(
+                    j,
+                    "faults",
+                    &[
+                        "kind",
+                        "seed",
+                        "worker_mtbf_s",
+                        "ps_mtbf_s",
+                        "server_mtbf_s",
+                        "degradation_mtbf_s",
+                        "restart_s",
+                        "outage_s",
+                        "degradation_s",
+                        "degradation_mag",
+                        "checkpoint_every_updates",
+                    ],
+                )?;
+                let d = FaultConfig::default();
+                Ok(FaultRegime::Config(FaultConfig {
+                    seed: get_u64(j, "faults", "seed", d.seed)?,
+                    worker_mtbf_s: get_f64(j, "faults", "worker_mtbf_s", d.worker_mtbf_s)?,
+                    ps_mtbf_s: get_f64(j, "faults", "ps_mtbf_s", d.ps_mtbf_s)?,
+                    server_mtbf_s: get_f64(j, "faults", "server_mtbf_s", d.server_mtbf_s)?,
+                    degradation_mtbf_s: get_f64(
+                        j,
+                        "faults",
+                        "degradation_mtbf_s",
+                        d.degradation_mtbf_s,
+                    )?,
+                    restart_s: get_pair(j, "faults", "restart_s", d.restart_s)?,
+                    outage_s: get_pair(j, "faults", "outage_s", d.outage_s)?,
+                    degradation_s: get_pair(j, "faults", "degradation_s", d.degradation_s)?,
+                    degradation_mag: get_pair(j, "faults", "degradation_mag", d.degradation_mag)?,
+                    checkpoint_every_updates: get_u64(
+                        j,
+                        "faults",
+                        "checkpoint_every_updates",
+                        d.checkpoint_every_updates,
+                    )?,
+                }))
+            }
+            "storm" => {
+                check_keys(j, "faults", &["kind", "seed", "base_rate", "storm_rate", "windows"])?;
+                let mut windows = Vec::new();
+                if let Some(w) = j.opt("windows") {
+                    for (i, win) in w.arr().context("faults.windows")?.iter().enumerate() {
+                        windows.push(
+                            pair_of(win).with_context(|| format!("faults.windows[{i}]"))?,
+                        );
+                    }
+                }
+                Ok(FaultRegime::Storm {
+                    seed: get_u64(j, "faults", "seed", 0)?,
+                    base_rate: get_f64(j, "faults", "base_rate", 0.0)?,
+                    storm_rate: get_f64(j, "faults", "storm_rate", 8.0)?,
+                    windows,
+                })
+            }
+            other => bail!("faults.kind: unknown kind {other:?} (off, rate, config, storm)"),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            FaultRegime::Off => jsonio::obj(vec![("kind", jsonio::s("off"))]),
+            FaultRegime::Rate { rate, seed } => jsonio::obj(vec![
+                ("kind", jsonio::s("rate")),
+                ("rate", jsonio::num(*rate)),
+                ("seed", jsonio::num(*seed as f64)),
+            ]),
+            FaultRegime::Config(c) => jsonio::obj(vec![
+                ("kind", jsonio::s("config")),
+                ("seed", jsonio::num(c.seed as f64)),
+                ("worker_mtbf_s", jsonio::num(c.worker_mtbf_s)),
+                ("ps_mtbf_s", jsonio::num(c.ps_mtbf_s)),
+                ("server_mtbf_s", jsonio::num(c.server_mtbf_s)),
+                ("degradation_mtbf_s", jsonio::num(c.degradation_mtbf_s)),
+                ("restart_s", jsonio::nums(&[c.restart_s.0, c.restart_s.1])),
+                ("outage_s", jsonio::nums(&[c.outage_s.0, c.outage_s.1])),
+                ("degradation_s", jsonio::nums(&[c.degradation_s.0, c.degradation_s.1])),
+                (
+                    "degradation_mag",
+                    jsonio::nums(&[c.degradation_mag.0, c.degradation_mag.1]),
+                ),
+                (
+                    "checkpoint_every_updates",
+                    jsonio::num(c.checkpoint_every_updates as f64),
+                ),
+            ]),
+            FaultRegime::Storm { seed, base_rate, storm_rate, windows } => jsonio::obj(vec![
+                ("kind", jsonio::s("storm")),
+                ("seed", jsonio::num(*seed as f64)),
+                ("base_rate", jsonio::num(*base_rate)),
+                ("storm_rate", jsonio::num(*storm_rate)),
+                (
+                    "windows",
+                    Json::Arr(windows.iter().map(|&(a, b)| jsonio::nums(&[a, b])).collect()),
+                ),
+            ]),
+        }
+    }
+}
+
+/// Driver overrides; 0 = keep the [`crate::driver::DriverConfig`] default.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DriverKnobs {
+    pub seed: u64,
+    pub max_job_duration_s: f64,
+    pub max_updates_per_job: u64,
+    pub max_iters_per_job: u64,
+}
+
+impl DriverKnobs {
+    fn from_json(j: &Json) -> crate::Result<DriverKnobs> {
+        check_keys(
+            j,
+            "driver",
+            &["seed", "max_job_duration_s", "max_updates_per_job", "max_iters_per_job"],
+        )?;
+        Ok(DriverKnobs {
+            seed: get_u64(j, "driver", "seed", 0)?,
+            max_job_duration_s: get_f64(j, "driver", "max_job_duration_s", 0.0)?,
+            max_updates_per_job: get_u64(j, "driver", "max_updates_per_job", 0)?,
+            max_iters_per_job: get_u64(j, "driver", "max_iters_per_job", 0)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("seed", jsonio::num(self.seed as f64)),
+            ("max_job_duration_s", jsonio::num(self.max_job_duration_s)),
+            ("max_updates_per_job", jsonio::num(self.max_updates_per_job as f64)),
+            ("max_iters_per_job", jsonio::num(self.max_iters_per_job as f64)),
+        ])
+    }
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: String::new(),
+            description: String::new(),
+            experiments: Vec::new(),
+            cluster: ClusterShape::default(),
+            workload: WorkloadSpec::default(),
+            faults: FaultRegime::Off,
+            policies: Vec::new(),
+            archs: vec![Arch::Ps],
+            driver: DriverKnobs::default(),
+        }
+    }
+}
+
+impl Scenario {
+    pub fn from_file(path: &Path) -> crate::Result<Scenario> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j).with_context(|| format!("scenario {}", path.display()))
+    }
+
+    /// Parse and validate. Defaults are the paper testbed + classic
+    /// Philly workload, so a minimal spec is just a name and a policy
+    /// list (or an `experiments` delegation).
+    pub fn from_json(j: &Json) -> crate::Result<Scenario> {
+        check_keys(
+            j,
+            "scenario",
+            &[
+                "name",
+                "description",
+                "experiments",
+                "cluster",
+                "workload",
+                "faults",
+                "policies",
+                "archs",
+                "driver",
+            ],
+        )?;
+        let d = Scenario::default();
+        let sc = Scenario {
+            name: j.get("name").and_then(|v| v.str()).context("scenario.name")?.to_string(),
+            description: match j.opt("description") {
+                None => String::new(),
+                Some(v) => v.str().context("scenario.description")?.to_string(),
+            },
+            experiments: get_str_list(j, "experiments")?,
+            cluster: match j.opt("cluster") {
+                None => d.cluster,
+                Some(v) => ClusterShape::from_json(v)?,
+            },
+            workload: match j.opt("workload") {
+                None => d.workload,
+                Some(v) => WorkloadSpec::from_json(v)?,
+            },
+            faults: match j.opt("faults") {
+                None => d.faults,
+                Some(v) => FaultRegime::from_json(v)?,
+            },
+            policies: get_str_list(j, "policies")?,
+            archs: match j.opt("archs") {
+                None => d.archs,
+                Some(v) => {
+                    let mut archs = Vec::new();
+                    for (i, a) in v.arr().context("archs")?.iter().enumerate() {
+                        let tag = a.str().with_context(|| format!("archs[{i}]"))?;
+                        archs.push(parse_arch(tag).with_context(|| format!("archs[{i}]"))?);
+                    }
+                    archs
+                }
+            },
+            driver: match j.opt("driver") {
+                None => d.driver,
+                Some(v) => DriverKnobs::from_json(v)?,
+            },
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Canonical fully-expanded emission (every default made explicit),
+    /// so parse → emit → parse is the identity.
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("name", jsonio::s(&self.name)),
+            ("description", jsonio::s(&self.description)),
+            (
+                "experiments",
+                Json::Arr(self.experiments.iter().map(|e| jsonio::s(e)).collect()),
+            ),
+            ("cluster", self.cluster.to_json()),
+            ("workload", self.workload.to_json()),
+            ("faults", self.faults.to_json()),
+            ("policies", Json::Arr(self.policies.iter().map(|p| jsonio::s(p)).collect())),
+            (
+                "archs",
+                Json::Arr(self.archs.iter().map(|&a| jsonio::s(arch_tag(a))).collect()),
+            ),
+            ("driver", self.driver.to_json()),
+        ])
+    }
+
+    /// Every validation rule names the offending field, so a bad spec
+    /// tells its author what to fix instead of panicking mid-run.
+    pub fn validate(&self) -> crate::Result<()> {
+        // -- name ----------------------------------------------------------
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            bail!(
+                "scenario.name: must be non-empty and use only [A-Za-z0-9._-] \
+                 (it keys result artifacts), got {:?}",
+                self.name
+            );
+        }
+
+        // -- cluster -------------------------------------------------------
+        let c = &self.cluster;
+        if c.gpu_servers == 0 || c.gpus_per_server == 0 {
+            bail!("cluster.gpu_servers and cluster.gpus_per_server must be ≥ 1");
+        }
+        if !(c.cpu_factor > 0.0 && c.cpu_factor.is_finite()) {
+            bail!("cluster.cpu_factor must be a positive number, got {}", c.cpu_factor);
+        }
+        if !(c.bw_factor > 0.0 && c.bw_factor.is_finite()) {
+            bail!("cluster.bw_factor must be a positive number, got {}", c.bw_factor);
+        }
+
+        // -- workload ------------------------------------------------------
+        let w = &self.workload;
+        if w.jobs == 0 {
+            bail!("workload.jobs: must be ≥ 1");
+        }
+        if w.min_workers == 0 {
+            bail!("workload.min_workers: must be ≥ 1 (a job needs at least one worker)");
+        }
+        if w.min_workers > w.max_workers {
+            bail!(
+                "workload.min_workers ({}) must be ≤ workload.max_workers ({})",
+                w.min_workers,
+                w.max_workers
+            );
+        }
+        let total_gpus = c.gpu_servers * c.gpus_per_server;
+        if w.max_workers > total_gpus {
+            bail!(
+                "workload.max_workers ({}) exceeds the cluster's total GPU count ({}): \
+                 the largest job could never place",
+                w.max_workers,
+                total_gpus
+            );
+        }
+        self.validate_arrival()?;
+        self.validate_models()?;
+        let ps = &w.ps;
+        if !(0.0..=1.0).contains(&ps.on_gpu_prob) {
+            bail!("workload.ps.on_gpu_prob: must be in [0, 1], got {}", ps.on_gpu_prob);
+        }
+        if ps.min_per_job == 0 {
+            bail!("workload.ps.min_per_job: must be ≥ 1 (PS architecture needs a server)");
+        }
+        if ps.max_per_job != 0 && ps.max_per_job < ps.min_per_job {
+            bail!(
+                "workload.ps.max_per_job ({}) must be 0 (= worker count) or ≥ min_per_job ({})",
+                ps.max_per_job,
+                ps.min_per_job
+            );
+        }
+        if c.cpu_servers == 0 && ps.on_gpu_prob < 1.0 {
+            bail!(
+                "cluster.cpu_servers is 0 but workload.ps.on_gpu_prob ({}) < 1: \
+                 CPU-server PS placement would have no candidate servers",
+                ps.on_gpu_prob
+            );
+        }
+
+        // -- faults --------------------------------------------------------
+        self.validate_faults()?;
+
+        // -- driver --------------------------------------------------------
+        if self.driver.max_job_duration_s < 0.0 {
+            bail!("driver.max_job_duration_s: must be ≥ 0 (0 = driver default)");
+        }
+
+        // -- grid / delegation --------------------------------------------
+        if self.experiments.is_empty() {
+            if self.policies.is_empty() {
+                bail!(
+                    "policies: a generic scenario needs at least one policy \
+                     (or set \"experiments\" to delegate to the experiment harness)"
+                );
+            }
+            for (i, p) in self.policies.iter().enumerate() {
+                crate::baselines::make_policy(p).with_context(|| format!("policies[{i}]"))?;
+            }
+            if self.archs.is_empty() {
+                bail!("archs: must name at least one architecture (ps, ar)");
+            }
+        } else {
+            self.validate_delegation()?;
+        }
+        Ok(())
+    }
+
+    fn validate_arrival(&self) -> crate::Result<()> {
+        let span = |s: f64| -> crate::Result<()> {
+            if s < 0.0 || !s.is_finite() {
+                bail!("workload.arrival.span_s: must be ≥ 0 (0 = auto jobs·280 s), got {s}");
+            }
+            Ok(())
+        };
+        match self.workload.arrival {
+            Arrival::Philly { span_s } | Arrival::Poisson { span_s } => span(span_s)?,
+            Arrival::Bursty { span_s, burst_every_s, burst_len_s, mult } => {
+                span(span_s)?;
+                if burst_every_s <= 0.0 {
+                    bail!("workload.arrival.burst_every_s: must be > 0, got {burst_every_s}");
+                }
+                if burst_len_s <= 0.0 || burst_len_s > burst_every_s {
+                    bail!(
+                        "workload.arrival.burst_len_s: must be in (0, burst_every_s = \
+                         {burst_every_s}], got {burst_len_s}"
+                    );
+                }
+                if !(1.0..=1000.0).contains(&mult) {
+                    bail!(
+                        "workload.arrival.mult: must be in [1, 1000] (it bounds the \
+                         thinning sampler's rejection work), got {mult}"
+                    );
+                }
+            }
+            Arrival::Diurnal { span_s, period_s, peak_mult } => {
+                span(span_s)?;
+                if period_s <= 0.0 {
+                    bail!("workload.arrival.period_s: must be > 0, got {period_s}");
+                }
+                if !(1.0..=1000.0).contains(&peak_mult) {
+                    bail!(
+                        "workload.arrival.peak_mult: must be in [1, 1000] (it bounds the \
+                         thinning sampler's rejection work), got {peak_mult}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_models(&self) -> crate::Result<()> {
+        if let ModelMix::Weighted(ws) = &self.workload.models {
+            let mut total = 0.0;
+            for (name, weight) in ws {
+                if ModelSpec::by_name(name).is_none() {
+                    bail!(
+                        "workload.models.weights: unknown model {name:?} (known: {})",
+                        crate::models::ZOO
+                            .iter()
+                            .map(|m| m.name)
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                }
+                if *weight < 0.0 || !weight.is_finite() {
+                    bail!("workload.models.weights.{name}: must be ≥ 0, got {weight}");
+                }
+                total += weight;
+            }
+            if total <= 0.0 {
+                bail!("workload.models.weights: weights must sum to > 0");
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_faults(&self) -> crate::Result<()> {
+        match &self.faults {
+            FaultRegime::Off => {}
+            FaultRegime::Rate { rate, .. } => {
+                if *rate < 0.0 || !rate.is_finite() {
+                    bail!("faults.rate: must be ≥ 0 (0 = fault-free), got {rate}");
+                }
+            }
+            FaultRegime::Config(c) => {
+                for (field, v) in [
+                    ("worker_mtbf_s", c.worker_mtbf_s),
+                    ("ps_mtbf_s", c.ps_mtbf_s),
+                    ("server_mtbf_s", c.server_mtbf_s),
+                    ("degradation_mtbf_s", c.degradation_mtbf_s),
+                ] {
+                    if v < 0.0 || !v.is_finite() {
+                        bail!("faults.{field}: must be ≥ 0 (0 disables the class), got {v}");
+                    }
+                }
+                for (field, (lo, hi)) in [
+                    ("restart_s", c.restart_s),
+                    ("outage_s", c.outage_s),
+                    ("degradation_s", c.degradation_s),
+                    ("degradation_mag", c.degradation_mag),
+                ] {
+                    if !(lo >= 0.0 && hi >= lo && hi.is_finite()) {
+                        bail!("faults.{field}: must be a [lo, hi] pair with 0 ≤ lo ≤ hi");
+                    }
+                }
+                if c.degradation_mag.1 > 1.0 {
+                    bail!(
+                        "faults.degradation_mag: magnitudes are capacity fractions, hi must \
+                         be ≤ 1, got {}",
+                        c.degradation_mag.1
+                    );
+                }
+            }
+            FaultRegime::Storm { base_rate, storm_rate, windows, .. } => {
+                if *base_rate < 0.0 || !base_rate.is_finite() {
+                    bail!("faults.base_rate: must be ≥ 0, got {base_rate}");
+                }
+                if *storm_rate < 0.0 || !storm_rate.is_finite() {
+                    bail!("faults.storm_rate: must be ≥ 0, got {storm_rate}");
+                }
+                for (i, &(a, b)) in windows.iter().enumerate() {
+                    if !(a >= 0.0 && b > a && b.is_finite()) {
+                        bail!(
+                            "faults.windows[{i}]: must be [from_s, to_s] with 0 ≤ from < to, \
+                             got [{a}, {b}]"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Delegated scenarios run through `ExpCtx`, which owns the classic
+    /// Philly workload and the paper testbed — reject spec fields the
+    /// delegation would silently ignore.
+    fn validate_delegation(&self) -> crate::Result<()> {
+        for (i, id) in self.experiments.iter().enumerate() {
+            if !crate::exp::EXPERIMENT_IDS.contains(&id.as_str()) {
+                bail!(
+                    "experiments[{i}]: unknown experiment id {id:?} (valid: {})",
+                    crate::exp::EXPERIMENT_IDS.join(", ")
+                );
+            }
+        }
+        if !self.policies.is_empty() {
+            bail!(
+                "policies: delegated scenarios run each experiment's own policy grid — \
+                 leave policies empty (or drop \"experiments\" for a generic scenario)"
+            );
+        }
+        if self.cluster != ClusterShape::default() {
+            bail!(
+                "cluster: delegated experiments always run the paper testbed — leave \
+                 cluster at defaults (or drop \"experiments\" for a generic scenario)"
+            );
+        }
+        let classic = WorkloadSpec {
+            jobs: self.workload.jobs,
+            seed: self.workload.seed,
+            ..Default::default()
+        };
+        if self.workload != classic {
+            bail!(
+                "workload: delegated experiments always run the classic Philly workload — \
+                 only workload.jobs and workload.seed apply (or drop \"experiments\" for a \
+                 generic scenario)"
+            );
+        }
+        if !matches!(self.faults, FaultRegime::Off | FaultRegime::Rate { .. }) {
+            bail!(
+                "faults: delegated experiments support only the \"off\" and \"rate\" \
+                 regimes (the --fault-rate recipe); storm/config regimes need a generic \
+                 scenario"
+            );
+        }
+        if self.archs != vec![Arch::Ps] {
+            bail!(
+                "archs: delegated experiments run each experiment's own PS/AR grid — \
+                 leave archs unset (or drop \"experiments\" for a generic scenario)"
+            );
+        }
+        if self.driver != DriverKnobs::default() {
+            bail!(
+                "driver: delegated experiments use the harness driver defaults — leave \
+                 driver at defaults (or drop \"experiments\" for a generic scenario)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The canonical short tag for an architecture (spec emission, artifact
+/// names, CLI tables) — the single inverse of [`parse_arch`].
+pub fn arch_tag(a: Arch) -> &'static str {
+    match a {
+        Arch::Ps => "ps",
+        Arch::AllReduce => "ar",
+    }
+}
+
+/// Parse an architecture tag (`ps`, `ar`/`allreduce`) — shared by the
+/// scenario spec and the `star` CLI's `--arch` option.
+pub fn parse_arch(s: &str) -> crate::Result<Arch> {
+    match s {
+        "ps" => Ok(Arch::Ps),
+        "ar" | "allreduce" => Ok(Arch::AllReduce),
+        other => bail!("unknown arch {other:?} (ps, ar)"),
+    }
+}
+
+// -- field helpers (every error names `path.key`) ---------------------------
+
+fn check_keys(j: &Json, path: &str, allowed: &[&str]) -> crate::Result<()> {
+    for k in j.obj().with_context(|| format!("{path}: expected a JSON object"))?.keys() {
+        if !allowed.contains(&k.as_str()) {
+            bail!("{path}: unknown key {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(j: &Json, path: &str, key: &str, default: f64) -> crate::Result<f64> {
+    match j.opt(key) {
+        None => Ok(default),
+        Some(v) => v.num().with_context(|| format!("{path}.{key}")),
+    }
+}
+
+fn get_u64(j: &Json, path: &str, key: &str, default: u64) -> crate::Result<u64> {
+    match j.opt(key) {
+        None => Ok(default),
+        Some(v) => v.u64().with_context(|| format!("{path}.{key}")),
+    }
+}
+
+fn get_usize(j: &Json, path: &str, key: &str, default: usize) -> crate::Result<usize> {
+    Ok(get_u64(j, path, key, default as u64)? as usize)
+}
+
+fn get_pair(j: &Json, path: &str, key: &str, default: (f64, f64)) -> crate::Result<(f64, f64)> {
+    match j.opt(key) {
+        None => Ok(default),
+        Some(v) => pair_of(v).with_context(|| format!("{path}.{key}")),
+    }
+}
+
+fn pair_of(v: &Json) -> crate::Result<(f64, f64)> {
+    let a = v.arr()?;
+    if a.len() != 2 {
+        bail!("expected a [lo, hi] pair, got {} elements", a.len());
+    }
+    Ok((a[0].num()?, a[1].num()?))
+}
+
+fn get_str_list(j: &Json, key: &str) -> crate::Result<Vec<String>> {
+    match j.opt(key) {
+        None => Ok(Vec::new()),
+        Some(v) => {
+            let mut out = Vec::new();
+            for (i, item) in v.arr().with_context(|| key.to_string())?.iter().enumerate() {
+                out.push(item.str().with_context(|| format!("{key}[{i}]"))?.to_string());
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> crate::Result<Scenario> {
+        Scenario::from_json(&Json::parse(text).unwrap())
+    }
+
+    fn err_of(text: &str) -> String {
+        format!("{:#}", parse(text).err().expect("spec must be rejected"))
+    }
+
+    const FULL: &str = r#"{
+        "name": "kitchen-sink",
+        "description": "every knob",
+        "cluster": {"gpu_servers": 6, "cpu_servers": 2, "cpu_factor": 0.5, "bw_factor": 0.8},
+        "workload": {
+            "jobs": 30, "seed": 3,
+            "arrival": {"kind": "bursty", "span_s": 9000, "burst_every_s": 3000,
+                        "burst_len_s": 500, "mult": 5},
+            "min_workers": 4, "max_workers": 10,
+            "models": {"weights": {"DenseNet121": 3, "LSTM": 1}},
+            "ps": {"on_gpu_prob": 0.9, "min_per_job": 2, "max_per_job": 4}
+        },
+        "faults": {"kind": "storm", "seed": 7, "base_rate": 0.5, "storm_rate": 10,
+                   "windows": [[1000, 2000], [5000, 6500]]},
+        "policies": ["SSGD", "STAR-H"],
+        "archs": ["ps", "ar"],
+        "driver": {"seed": 1, "max_job_duration_s": 9000}
+    }"#;
+
+    #[test]
+    fn parse_emit_parse_is_identity() {
+        let s1 = parse(FULL).unwrap();
+        let j = s1.to_json();
+        let s2 = Scenario::from_json(&j).unwrap();
+        assert_eq!(j, s2.to_json());
+        // and the emitted text itself is stable
+        assert_eq!(j.to_string_pretty(), s2.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn minimal_spec_fills_defaults() {
+        let sc = parse(r#"{"name": "tiny", "policies": ["SSGD"]}"#).unwrap();
+        assert_eq!(sc.workload.jobs, 120);
+        assert!(sc.workload.is_classic_philly());
+        assert_eq!(sc.archs, vec![Arch::Ps]);
+        assert!(matches!(sc.faults, FaultRegime::Off));
+        // defaults round-trip too
+        let again = Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(sc.to_json(), again.to_json());
+    }
+
+    #[test]
+    fn validation_errors_name_their_field() {
+        let zero_workers = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "workload": {"min_workers": 0}}"#,
+        );
+        assert!(zero_workers.contains("workload.min_workers"), "{zero_workers}");
+
+        let zero_jobs = err_of(r#"{"name": "x", "policies": ["SSGD"], "workload": {"jobs": 0}}"#);
+        assert!(zero_jobs.contains("workload.jobs"), "{zero_jobs}");
+
+        let bad_seed =
+            err_of(r#"{"name": "x", "policies": ["SSGD"], "workload": {"seed": -1}}"#);
+        assert!(bad_seed.contains("workload.seed"), "{bad_seed}");
+
+        let bad_policy = err_of(r#"{"name": "x", "policies": ["SSGD", "NotASystem"]}"#);
+        assert!(bad_policy.contains("policies[1]"), "{bad_policy}");
+        assert!(bad_policy.contains("unknown system"), "{bad_policy}");
+
+        let bad_arch = err_of(r#"{"name": "x", "policies": ["SSGD"], "archs": ["mesh"]}"#);
+        assert!(bad_arch.contains("archs[0]"), "{bad_arch}");
+
+        let bad_model = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "workload": {"models": {"weights": {"NotAModel": 1}}}}"#,
+        );
+        assert!(bad_model.contains("workload.models.weights"), "{bad_model}");
+        assert!(bad_model.contains("NotAModel"), "{bad_model}");
+
+        let bad_window = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "faults": {"kind": "storm", "windows": [[200, 100]]}}"#,
+        );
+        assert!(bad_window.contains("faults.windows[0]"), "{bad_window}");
+
+        let bad_name = err_of(r#"{"name": "no spaces allowed", "policies": ["SSGD"]}"#);
+        assert!(bad_name.contains("scenario.name"), "{bad_name}");
+
+        let typo = err_of(r#"{"name": "x", "policies": ["SSGD"], "wrkload": {}}"#);
+        assert!(typo.contains("wrkload"), "{typo}");
+    }
+
+    #[test]
+    fn validation_rejects_oversized_jobs_and_empty_grids() {
+        let too_big = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "cluster": {"gpu_servers": 1},
+                "workload": {"max_workers": 12}}"#,
+        );
+        assert!(too_big.contains("workload.max_workers"), "{too_big}");
+
+        let no_policy = err_of(r#"{"name": "x"}"#);
+        assert!(no_policy.contains("policies"), "{no_policy}");
+    }
+
+    #[test]
+    fn delegation_is_validated() {
+        let ok = parse(
+            r#"{"name": "res", "experiments": ["resilience"],
+                "workload": {"jobs": 4, "seed": 2},
+                "faults": {"kind": "rate", "rate": 1, "seed": 7}}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.experiments, vec!["resilience".to_string()]);
+
+        let bad_id = err_of(r#"{"name": "x", "experiments": ["fig99"]}"#);
+        assert!(bad_id.contains("experiments[0]"), "{bad_id}");
+        assert!(bad_id.contains("resilience"), "error must list valid ids: {bad_id}");
+
+        let with_policies =
+            err_of(r#"{"name": "x", "experiments": ["fig8"], "policies": ["SSGD"]}"#);
+        assert!(with_policies.contains("policies"), "{with_policies}");
+
+        let with_storm = err_of(
+            r#"{"name": "x", "experiments": ["fig8"], "faults": {"kind": "storm"}}"#,
+        );
+        assert!(with_storm.contains("faults"), "{with_storm}");
+
+        // a non-default archs list would be silently ignored — reject it
+        let with_archs = err_of(r#"{"name": "x", "experiments": ["fig8"], "archs": ["ar"]}"#);
+        assert!(with_archs.contains("archs"), "{with_archs}");
+        // …but an explicit default is fine
+        assert!(parse(r#"{"name": "x", "experiments": ["fig8"], "archs": ["ps"]}"#).is_ok());
+    }
+
+    #[test]
+    fn storm_regime_confines_and_merges_streams() {
+        let trace = crate::trace::generate(&crate::trace::TraceConfig::paced(10, 0));
+        let windows = vec![(500.0, 900.0), (1500.0, 1800.0)];
+        let storm = FaultRegime::Storm {
+            seed: 3,
+            base_rate: 0.0,
+            storm_rate: 40.0,
+            windows: windows.clone(),
+        };
+        let plan = storm.plan(&trace, 2800.0, 8);
+        assert!(!plan.is_empty(), "a rate-40 storm must schedule faults");
+        for f in &plan.faults {
+            assert!(
+                windows.iter().any(|&(a, b)| f.at >= a && f.at < b),
+                "fault at {} outside every storm window",
+                f.at
+            );
+        }
+        assert_eq!(plan.checkpoint_every_updates, 200, "cadence adopted from storm stream");
+        // with a base rate, out-of-window faults appear and match the
+        // pure base stream's schedule (independent streams)
+        let with_base = FaultRegime::Storm {
+            seed: 3,
+            base_rate: 2.0,
+            storm_rate: 40.0,
+            windows: windows.clone(),
+        }
+        .plan(&trace, 2800.0, 8);
+        let base_only = FaultRegime::Rate { rate: 2.0, seed: 3 }.plan(&trace, 2800.0, 8);
+        let outside: Vec<_> = with_base
+            .faults
+            .iter()
+            .filter(|f| !windows.iter().any(|&(a, b)| f.at >= a && f.at < b))
+            .collect();
+        let expect: Vec<_> = base_only
+            .faults
+            .iter()
+            .filter(|f| !windows.iter().any(|&(a, b)| f.at >= a && f.at < b))
+            .collect();
+        assert_eq!(outside, expect);
+    }
+
+    #[test]
+    fn rate_regime_matches_plan_at_rate() {
+        let trace = crate::trace::generate(&crate::trace::TraceConfig::paced(8, 0));
+        let a = FaultRegime::Rate { rate: 2.0, seed: 5 }.plan(&trace, 10_000.0, 8);
+        let b = plan_at_rate(2.0, 5, &trace, 10_000.0, 8);
+        assert_eq!(a, b);
+        assert!(FaultRegime::Off.plan(&trace, 10_000.0, 8).is_empty());
+    }
+
+    #[test]
+    fn oversubscribed_cluster_scales_capacities() {
+        let shape = ClusterShape { cpu_factor: 0.5, bw_factor: 0.25, ..Default::default() };
+        let cfg = shape.to_config();
+        let d = ClusterConfig::default();
+        assert_eq!(cfg.gpu_server_cpus, d.gpu_server_cpus * 0.5);
+        assert_eq!(cfg.cpu_server_cpus, d.cpu_server_cpus * 0.5);
+        assert_eq!(cfg.gpu_server_bw, d.gpu_server_bw * 0.25);
+        assert_eq!(cfg.total_servers(), d.total_servers());
+    }
+}

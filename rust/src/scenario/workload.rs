@@ -1,0 +1,258 @@
+//! Workload builder: turn a [`WorkloadSpec`] into a job trace.
+//!
+//! Two backends share the entry point:
+//!
+//! * **classic** — a spec matching the Philly family defaults delegates
+//!   to [`crate::trace::generate`] unchanged, so `ExpCtx`, `star
+//!   simulate`, and a `philly_default` scenario all draw byte-identical
+//!   traces (the golden suites pin this transitively);
+//! * **scenario generator** — any customized arrival process, model
+//!   mix, or PS fleet runs the seeded streams below (forked like the
+//!   fault classes, DESIGN.md §6: the arrival stream never perturbs the
+//!   job-shape stream).
+
+use crate::models::{Kind, ZOO};
+use crate::simrng::Rng;
+use crate::trace::{generate, JobSpec, TraceConfig};
+
+use super::spec::{Arrival, ModelMix, WorkloadSpec};
+
+/// Build `jobs` arrivals for `spec` (the job count is explicit so quick
+/// modes and `--jobs` overrides can down-scale without editing the
+/// spec). Callers hold a validated spec; the only residual error is a
+/// weighted mix naming no usable model.
+pub fn build(spec: &WorkloadSpec, jobs: usize) -> crate::Result<Vec<JobSpec>> {
+    let span_s = spec.effective_span(jobs);
+    if spec.is_classic_philly() {
+        return Ok(generate(&TraceConfig {
+            jobs,
+            seed: spec.seed,
+            span_s,
+            min_workers: spec.min_workers,
+            max_workers: spec.max_workers,
+        }));
+    }
+    let weights = model_weights(&spec.models)?;
+    let mut root = Rng::new(spec.seed, 0x5CE0);
+    // forked streams: changing the arrival family never re-shapes jobs
+    let mut arrival_rng = root.fork(1);
+    let mut shape_rng = root.fork(2);
+    let base_rate = jobs as f64 / span_s; // arrivals per second
+    // Lewis–Shedler thinning for the time-varying processes: candidates
+    // arrive at the peak rate and are accepted with prob rate(t)/peak.
+    // Freezing the rate at the previous arrival instead (what the
+    // classic Philly generator does for its slow day/night cycle) would
+    // let long low-rate gaps jump clear over short high-rate bursts,
+    // systematically under-filling them.
+    let peak = peak_mult(&spec.arrival);
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(jobs);
+    for id in 0..jobs {
+        loop {
+            t += arrival_rng.exponential(peak * base_rate);
+            if rate_mult(&spec.arrival, t) >= peak
+                || arrival_rng.chance(rate_mult(&spec.arrival, t) / peak)
+            {
+                break;
+            }
+        }
+        let workers = shape_rng.usize(spec.min_workers, spec.max_workers);
+        let model = shape_rng.weighted_index(&weights);
+        let ps_hi = if spec.ps.max_per_job == 0 {
+            workers
+        } else {
+            spec.ps.max_per_job.min(workers)
+        };
+        let ps_lo = spec.ps.min_per_job.min(ps_hi);
+        out.push(JobSpec {
+            id,
+            arrival_s: t.min(span_s),
+            model,
+            workers,
+            ps_count: shape_rng.usize(ps_lo, ps_hi),
+            ps_on_gpu_servers: shape_rng.chance(spec.ps.on_gpu_prob),
+        });
+    }
+    Ok(out)
+}
+
+/// The arrival process's peak rate multiplier — the thinning envelope
+/// (bounded by validation: `mult`/`peak_mult` ≤ 1000 keeps the expected
+/// rejection work per accepted arrival bounded).
+fn peak_mult(arrival: &Arrival) -> f64 {
+    match *arrival {
+        Arrival::Philly { .. } => 1.6,
+        Arrival::Poisson { .. } => 1.0,
+        Arrival::Bursty { mult, .. } => mult,
+        Arrival::Diurnal { peak_mult, .. } => peak_mult,
+    }
+}
+
+/// Instantaneous arrival-rate multiplier at simulated time `t`.
+fn rate_mult(arrival: &Arrival, t: f64) -> f64 {
+    match *arrival {
+        // the paper's day/night mix (same constants as trace::generate)
+        Arrival::Philly { .. } => {
+            if (t / 86_400.0).fract() < 0.5 {
+                1.6
+            } else {
+                0.6
+            }
+        }
+        Arrival::Poisson { .. } => 1.0,
+        Arrival::Bursty { burst_every_s, burst_len_s, mult, .. } => {
+            if t.rem_euclid(burst_every_s) < burst_len_s {
+                mult
+            } else {
+                1.0
+            }
+        }
+        Arrival::Diurnal { period_s, peak_mult, .. } => {
+            let phase = (std::f64::consts::TAU * t / period_s).sin();
+            1.0 + (peak_mult - 1.0) * 0.5 * (1.0 + phase)
+        }
+    }
+}
+
+/// Per-zoo-index sampling weights for a mix.
+fn model_weights(mix: &ModelMix) -> crate::Result<Vec<f64>> {
+    let mut weights = vec![0.0; ZOO.len()];
+    match mix {
+        ModelMix::Uniform => weights.fill(1.0),
+        ModelMix::Vision => {
+            for (i, m) in ZOO.iter().enumerate() {
+                if matches!(m.kind, Kind::Image) {
+                    weights[i] = 1.0;
+                }
+            }
+        }
+        ModelMix::Nlp => {
+            for (i, m) in ZOO.iter().enumerate() {
+                if matches!(m.kind, Kind::Nlp) {
+                    weights[i] = 1.0;
+                }
+            }
+        }
+        ModelMix::Weighted(ws) => {
+            for (name, w) in ws {
+                let (i, _) = crate::models::ModelSpec::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "workload.models.weights: unknown model {name:?}"
+                    ))?;
+                weights[i] += w;
+            }
+        }
+    }
+    if weights.iter().sum::<f64>() <= 0.0 {
+        anyhow::bail!("workload.models: mix selects no model (weights sum to 0)");
+    }
+    Ok(weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::PsSpec;
+
+    #[test]
+    fn classic_family_is_byte_identical_to_trace_generate() {
+        let spec = WorkloadSpec::philly(15, 3);
+        let built = build(&spec, 15).unwrap();
+        let direct = generate(&TraceConfig::paced(15, 3));
+        assert_eq!(built.len(), direct.len());
+        for (a, b) in built.iter().zip(&direct) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.workers, b.workers);
+            assert_eq!(a.ps_count, b.ps_count);
+            assert_eq!(a.ps_on_gpu_servers, b.ps_on_gpu_servers);
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_well_formed() {
+        let spec = WorkloadSpec {
+            arrival: Arrival::Bursty {
+                span_s: 4000.0,
+                burst_every_s: 1000.0,
+                burst_len_s: 200.0,
+                mult: 8.0,
+            },
+            models: ModelMix::Vision,
+            ps: PsSpec { on_gpu_prob: 1.0, min_per_job: 2, max_per_job: 3 },
+            ..WorkloadSpec::philly(40, 9)
+        };
+        let a = build(&spec, 40).unwrap();
+        let b = build(&spec, 40).unwrap();
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.model, y.model);
+        }
+        for (i, j) in a.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.arrival_s >= 0.0 && j.arrival_s <= 4000.0);
+            assert!((4..=12).contains(&j.workers));
+            assert!(matches!(ZOO[j.model].kind, Kind::Image), "vision mix only");
+            assert!((2..=3).contains(&j.ps_count));
+            assert!(j.ps_on_gpu_servers, "on_gpu_prob 1.0");
+        }
+        // arrivals are non-decreasing (generated as a running sum)
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        // a different seed moves the schedule
+        let c = build(&WorkloadSpec { seed: 10, ..spec }, 40).unwrap();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn nlp_and_weighted_mixes_restrict_models() {
+        let nlp = WorkloadSpec {
+            models: ModelMix::Nlp,
+            ..WorkloadSpec::philly(30, 1)
+        };
+        for j in build(&nlp, 30).unwrap() {
+            assert!(matches!(ZOO[j.model].kind, Kind::Nlp));
+        }
+        let dense = ZOO.iter().position(|m| m.name == "DenseNet121").unwrap();
+        let weighted = WorkloadSpec {
+            models: ModelMix::Weighted(vec![("DenseNet121".into(), 1.0)]),
+            ..WorkloadSpec::philly(10, 1)
+        };
+        for j in build(&weighted, 10).unwrap() {
+            assert_eq!(j.model, dense, "weight mass on a single model");
+        }
+        let unknown = WorkloadSpec {
+            models: ModelMix::Weighted(vec![("NotAModel".into(), 1.0)]),
+            ..WorkloadSpec::philly(10, 1)
+        };
+        assert!(build(&unknown, 10).is_err());
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_inside_bursts() {
+        // with a huge burst multiplier nearly all arrivals should land in
+        // the burst windows (first 10% of every period)
+        let spec = WorkloadSpec {
+            arrival: Arrival::Bursty {
+                span_s: 100_000.0,
+                burst_every_s: 10_000.0,
+                burst_len_s: 1_000.0,
+                mult: 200.0,
+            },
+            models: ModelMix::Vision, // any non-classic field → generator path
+            ..WorkloadSpec::philly(200, 4)
+        };
+        let jobs = build(&spec, 200).unwrap();
+        let in_burst = jobs
+            .iter()
+            .filter(|j| j.arrival_s.rem_euclid(10_000.0) < 1_000.0)
+            .count();
+        assert!(
+            in_burst * 2 > jobs.len(),
+            "bursts at 200x must attract most arrivals: {in_burst}/{}",
+            jobs.len()
+        );
+    }
+}

@@ -62,8 +62,25 @@ impl Default for TraceConfig {
     }
 }
 
+impl TraceConfig {
+    /// The CLI/scenario pacing rule: `jobs` arrivals over `jobs · 280 s`,
+    /// keeping the cluster equally busy at any job count. Every entry
+    /// point that down-scales the 350-job trace (`star simulate`,
+    /// `ExpCtx`, the scenario layer's classic Philly family) builds its
+    /// config through this one constructor so the traces agree.
+    pub fn paced(jobs: usize, seed: u64) -> TraceConfig {
+        TraceConfig { jobs, seed, span_s: jobs as f64 * 280.0, ..Default::default() }
+    }
+}
+
 /// Generate a Philly-like trace: bursty day/night arrivals (two-level
 /// Poisson mix), worker/PS counts and model mix per §III.
+///
+/// This generator is also the *classic backend* of the scenario layer's
+/// workload builder ([`crate::scenario::workload`]): a scenario whose
+/// workload matches the Philly family defaults delegates here unchanged
+/// (byte-identical traces), while customized mixes/arrivals run the
+/// scenario generator's own seeded streams.
 pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
     let mut rng = Rng::new(cfg.seed, 0x7ace);
     let mut jobs = Vec::with_capacity(cfg.jobs);

@@ -1,0 +1,82 @@
+//! Every shipped example scenario must parse, validate, round-trip
+//! through the canonical JSON emission, and smoke-run end to end — the
+//! same contract the CI scenario step enforces in release mode.
+
+use std::path::PathBuf;
+
+use star::jsonio::Json;
+use star::scenario::{self, RunOpts, Scenario};
+
+fn examples_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+fn example_files() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(examples_dir())
+        .expect("examples/scenarios must exist")
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn ships_at_least_three_example_scenarios() {
+    let files = example_files();
+    assert!(files.len() >= 3, "expected >= 3 example scenarios, found {files:?}");
+    let names: Vec<String> = files
+        .iter()
+        .map(|p| p.file_stem().unwrap().to_string_lossy().into_owned())
+        .collect();
+    for expected in ["philly_default", "fault_storm", "oversubscribed_cpu"] {
+        assert!(names.contains(&expected.to_string()), "missing {expected}: {names:?}");
+    }
+}
+
+#[test]
+fn every_example_parses_and_round_trips() {
+    for path in example_files() {
+        let sc = Scenario::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        // the file name matches the spec's name (artifacts stay traceable)
+        assert_eq!(
+            sc.name,
+            path.file_stem().unwrap().to_string_lossy(),
+            "{}: file name and scenario.name must agree",
+            path.display()
+        );
+        // parse -> emit -> parse -> emit is the identity
+        let j = sc.to_json();
+        let again = Scenario::from_json(&Json::parse(&j.to_string_pretty()).unwrap())
+            .unwrap_or_else(|e| panic!("{}: re-parse of emission: {e:#}", path.display()));
+        assert_eq!(j, again.to_json(), "{}: emission is not canonical", path.display());
+    }
+}
+
+#[test]
+fn every_example_smoke_runs() {
+    for path in example_files() {
+        let sc = Scenario::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let opts = RunOpts {
+            quick: true,
+            jobs_override: Some(2),
+            threads: 1,
+            out_dir: std::env::temp_dir()
+                .join("star_scenario_examples")
+                .join(sc.name.clone()),
+        };
+        scenario::run(&sc, &opts)
+            .unwrap_or_else(|e| panic!("{}: smoke run failed: {e:#}", path.display()));
+        // generic scenarios leave a parseable artifact behind
+        if sc.experiments.is_empty() {
+            let artifact = opts.out_dir.join(format!("scenario_{}.json", sc.name));
+            let doc = Json::parse_file(&artifact)
+                .unwrap_or_else(|e| panic!("{}: artifact: {e:#}", path.display()));
+            assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+            let cells = doc.get("results").unwrap().arr().unwrap().len();
+            assert!(cells > 0, "{}: artifact has no result cells", path.display());
+        }
+    }
+}
