@@ -64,18 +64,19 @@ pub fn fig23_to_27(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
             t27.row(row);
         }
 
-        let print_one = |id: &str, t: &Table| {
+        let print_one = |id: &str, t: &Table| -> crate::Result<()> {
             if which == id || which == "all" || which == "fig23" {
                 t.print();
                 println!();
-                ctx.save(&format!("{id}_{tag}"), t);
+                ctx.save(&format!("{id}_{tag}"), t)?;
             }
+            Ok(())
         };
-        print_one("fig23", &t23);
-        print_one("fig24", &t24);
-        print_one("fig25", &t25);
-        print_one("fig26", &t26);
-        print_one("fig27", &t27);
+        print_one("fig23", &t23)?;
+        print_one("fig24", &t24)?;
+        print_one("fig25", &t25)?;
+        print_one("fig26", &t26)?;
+        print_one("fig27", &t27)?;
     }
     println!("(paper: every removed ingredient raises TTA/JCT and straggler counts, and lowers accuracy)\n");
     Ok(())

@@ -47,7 +47,7 @@ pub fn fig16(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper: 80.3/82.7/86.4/88.9% accuracy and 15680/4120/2480/1960 s TTA for 1/2/4/8-order)\n");
-    ctx.save("fig16", &t);
+    ctx.save("fig16", &t)?;
     Ok(())
 }
 
@@ -122,7 +122,7 @@ pub fn fig17(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper: STAR 3.5–10.4% FP, 3.8–4.2% FN — lowest; fixed-duration and ratio-LSTM are worse)\n");
-    ctx.save("fig17", &t);
+    ctx.save("fig17", &t)?;
     Ok(())
 }
 
@@ -183,18 +183,19 @@ pub fn fig18_to_22(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
             row.extend(band_str(stats::band(&s.stragglers)));
             t22.row(row);
         }
-        let print_one = |id: &str, t: &Table| {
+        let print_one = |id: &str, t: &Table| -> crate::Result<()> {
             if which == id || which == "all" || which == "fig18" {
                 t.print();
                 println!();
-                ctx.save(&format!("{id}_{tag}"), t);
+                ctx.save(&format!("{id}_{tag}"), t)?;
             }
+            Ok(())
         };
-        print_one("fig18", &t18);
-        print_one("fig19", &t19);
-        print_one("fig20", &t20);
-        print_one("fig21", &t21);
-        print_one("fig22", &t22);
+        print_one("fig18", &t18)?;
+        print_one("fig19", &t19)?;
+        print_one("fig20", &t20)?;
+        print_one("fig21", &t21)?;
+        print_one("fig22", &t22)?;
 
         // headline reductions
         if which == "fig18" || which == "all" {

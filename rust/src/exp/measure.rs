@@ -217,7 +217,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
             strag_frac_overall * 100.0,
             over50 * 100.0
         );
-        ctx.save("fig1", &t1);
+        ctx.save("fig1", &t1)?;
     }
 
     // ---- Fig 2: communication share ------------------------------------
@@ -238,7 +238,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
             "Fig 2 check: {:.0}% of comm shares in [50%, 93%] (paper: 75%)\n",
             in_range * 100.0
         );
-        ctx.save("fig2", &t2);
+        ctx.save("fig2", &t2)?;
     }
 
     // ---- Fig 3: iteration-time series (DenseNet121 job) ----------------
@@ -262,7 +262,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
             }
         }
         t3.print();
-        ctx.save("fig3", &t3);
+        ctx.save("fig3", &t3)?;
         println!();
     }
 
@@ -284,7 +284,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
         }
         t4.print();
         println!("(paper: 13.8% of CPU and 17.1% of bandwidth coefficients in [0.5,1]; GPU within [-0.3,0.3])\n");
-        ctx.save("fig4", &t4);
+        ctx.save("fig4", &t4)?;
     }
 
     // ---- Fig 5: consecutive iteration change ratio ----------------------
@@ -308,7 +308,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
             up * 100.0,
             down * 100.0
         );
-        ctx.save("fig5", &t5);
+        ctx.save("fig5", &t5)?;
     }
 
     // ---- Fig 6: occupied-bin PDF ----------------------------------------
@@ -324,7 +324,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
         }
         t6.print();
         println!("(paper: iterations span 4–8 bins with nontrivial mass)\n");
-        ctx.save("fig6", &t6);
+        ctx.save("fig6", &t6)?;
     }
 
     // ---- Fig 7: straggler persistence ------------------------------------
@@ -340,7 +340,7 @@ pub fn fig1_to_7(ctx: &ExpCtx, only: &str) -> crate::Result<()> {
         }
         t7.print();
         println!("(paper: durations 0.1–419 s; some stragglers persist >100 iterations)\n");
-        ctx.save("fig7", &t7);
+        ctx.save("fig7", &t7)?;
     }
     Ok(())
 }
@@ -387,7 +387,7 @@ pub fn fig8(ctx: &ExpCtx) -> crate::Result<()> {
         ZOO.iter().map(|m| m.asgd_bw_factor).fold(f64::INFINITY, f64::min),
         ZOO.iter().map(|m| m.asgd_bw_factor).fold(0.0, f64::max),
     );
-    ctx.save("fig8", &t);
+    ctx.save("fig8", &t)?;
     Ok(())
 }
 
@@ -428,7 +428,7 @@ pub fn fig9_10(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
         }
         t.print();
         println!("(paper: usage above 90%/98% rises steeply with hosted-PS count)\n");
-        ctx.save("fig9", &t);
+        ctx.save("fig9", &t)?;
     }
 
     if which == "fig10" || which == "all" {
@@ -477,7 +477,7 @@ pub fn fig9_10(ctx: &ExpCtx, which: &str) -> crate::Result<()> {
         }
         t.print();
         println!("(paper: more co-located PSs ⇒ higher deviation ratios)\n");
-        ctx.save("fig10", &t);
+        ctx.save("fig10", &t)?;
     }
     Ok(())
 }
@@ -546,7 +546,7 @@ pub fn fig11(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper O5: after the switch B/C iteration times rise and they become frequent stragglers)\n");
-    ctx.save("fig11", &t);
+    ctx.save("fig11", &t)?;
     Ok(())
 }
 
@@ -589,7 +589,7 @@ pub fn fig12_13(ctx: &ExpCtx, cpu: bool) -> crate::Result<()> {
     }
     t.print();
     println!("(paper O6: stragglers barely affect ASGD's TTA but inflate SSGD's; without stragglers SSGD wins)\n");
-    ctx.save(which, &t);
+    ctx.save(which, &t)?;
     Ok(())
 }
 
@@ -672,7 +672,7 @@ pub fn tab1(ctx: &ExpCtx) -> crate::Result<()> {
     t.rowf(&row);
     t.print();
     println!("(paper: switching helps most at the early stage; gains shrink as training progresses)\n");
-    ctx.save("tab1", &t);
+    ctx.save("tab1", &t)?;
     Ok(())
 }
 
@@ -735,6 +735,6 @@ pub fn fig14(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper O7: the SSGD-optimal LR is not optimal after switching to ASGD)\n");
-    ctx.save("fig14", &t);
+    ctx.save("fig14", &t)?;
     Ok(())
 }

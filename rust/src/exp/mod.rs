@@ -14,6 +14,8 @@ pub mod sweep;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use anyhow::Context;
+
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats, ServerRecord};
 use crate::faults::{span_for, FaultPlan};
@@ -84,12 +86,27 @@ impl ExpCtx {
             .plan(trace, span_for(trace, cfg.max_job_duration_s), cfg.cluster.total_servers())
     }
 
-    pub fn save(&self, name: &str, t: &Table) {
+    /// Save a table as `<out_dir>/<name>.csv`. A failed write fails the
+    /// run — a sweep whose results were silently dropped is worse than a
+    /// crashed one.
+    pub fn save(&self, name: &str, t: &Table) -> crate::Result<()> {
         let path = self.out_dir.join(format!("{name}.csv"));
-        if let Err(e) = t.save_csv(&path) {
-            eprintln!("warning: could not save {}: {e}", path.display());
-        }
+        t.save_csv(&path)
+            .with_context(|| format!("saving experiment table {}", path.display()))
     }
+}
+
+/// One sweep cell's portable, merge-ready output: the CSV row exactly
+/// as the serial table renders it, plus the `star-bench-v1` result
+/// object for the JSON artifact. Both are final *rendered* forms — a
+/// remote worker ships these over the cell protocol and the dispatcher
+/// reassembles artifacts byte-identical to a serial in-process run
+/// (strings round-trip trivially; `jsonio` numbers round-trip exactly,
+/// see `jsonio` emit/parse docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRows {
+    pub csv: Vec<String>,
+    pub json: crate::jsonio::Json,
 }
 
 /// Run one system over the context's trace. Unknown system names error
@@ -151,7 +168,7 @@ pub fn run_systems(
             eprintln!("[exp]   {sys}: {:.1}s wall", t0.elapsed().as_secs_f64());
             Ok(stats)
         },
-    );
+    )?;
     let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
     Ok(systems
         .iter()

@@ -41,7 +41,7 @@ pub fn fig28(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper: H ≫ ML; ML runs concurrently with training so it does not stall jobs)\n");
-    ctx.save("fig28a", &t);
+    ctx.save("fig28a", &t)?;
 
     // measured rust decision latency (the actual hot path of this repo)
     let mut t2 = Table::new(
@@ -85,7 +85,7 @@ pub fn fig28(ctx: &ExpCtx) -> crate::Result<()> {
         "(paper's python STAR-H heuristic: ~970 ms per decision; this rust path is ~10^4× faster, \
          so the decision pause the paper engineered around vanishes — see EXPERIMENTS.md §Perf)\n"
     );
-    ctx.save("fig28b", &t2);
+    ctx.save("fig28b", &t2)?;
     let _ = DeciderKind::Heuristic;
     Ok(())
 }
@@ -121,7 +121,7 @@ pub fn fig29(ctx: &ExpCtx) -> crate::Result<()> {
     }
     t.print();
     println!("(paper: TTA dips then rises with t_w; the optimum varies per model)\n");
-    ctx.save("fig29", &t);
+    ctx.save("fig29", &t)?;
     Ok(())
 }
 

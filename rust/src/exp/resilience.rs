@@ -14,7 +14,9 @@
 //! perf benches, and `results/BENCH_sweep.json` recording the sweep's
 //! wall time and realized concurrency (see [`super::sweep`]).
 
-use super::{summarize, sweep, ExpCtx};
+use anyhow::Context;
+
+use super::{summarize, sweep, CellRows, ExpCtx};
 use crate::baselines::make_policy;
 use crate::driver::{Driver, DriverConfig, JobStats};
 use crate::faults::{span_for, FaultPlan};
@@ -66,55 +68,86 @@ fn run_with_plan(
     Ok(driver.run().0)
 }
 
-pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
+/// The sweep grid, rate-major (the serial row order): every
+/// `(rate_index, system)` pair, exactly as [`resilience`] sweeps them.
+/// The fabric dispatcher scatters this same list, so cell index `i`
+/// means the same cell in-process, on a worker, and in a journal.
+pub fn cell_specs(quick: bool) -> Vec<(usize, &'static str)> {
+    let rate_indices: Vec<usize> = (0..RATES.len()).collect();
+    sweep::cross(&rate_indices, &systems(quick))
+}
+
+/// Human-readable cell name for dispatch logs and errors.
+pub fn cell_label(rate_index: usize, system: &str) -> String {
+    let rate = RATES.get(rate_index).copied().unwrap_or(f64::NAN);
+    format!("{system}@rate={rate}")
+}
+
+/// Render one cell's stats into its portable row pair — the *only*
+/// formatter for resilience rows, shared by the in-process sweep and
+/// remote workers, so both produce bit-identical strings and numbers.
+fn rows_for(system: &str, rate: f64, fault_count: usize, stats: &[JobStats]) -> CellRows {
+    let s = summarize(stats);
+    // -1 = "no job reached the target" (NaN is not valid JSON)
+    let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+    let jct_mean = stats::mean(&s.jct);
+    let downtime_mean = stats::mean(&s.downtime);
+    let rollbacks: f64 = s.rollbacks.iter().sum();
+    let csv = [
+        table::s(system),
+        table::f(rate, 1),
+        table::i(fault_count as i64),
+        table::f(tta_mean, 0),
+        table::f(jct_mean, 0),
+        table::f(downtime_mean, 1),
+        table::i(rollbacks as i64),
+        table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+    ]
+    .iter()
+    .map(|c| c.render())
+    .collect();
+    let json = jsonio::obj(vec![
+        ("name", jsonio::s(&format!("resilience/{system}/rate={rate}"))),
+        ("iters", jsonio::num(s.jobs as f64)),
+        // headline metric in the bench schema's slot: mean JCT
+        // (includes jobs that never reach TTA under failures)
+        ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+        ("fault_rate", jsonio::num(rate)),
+        ("tta_mean_s", jsonio::num(tta_mean)),
+        ("jct_mean_s", jsonio::num(jct_mean)),
+        ("downtime_mean_s", jsonio::num(downtime_mean)),
+        ("rollbacks", jsonio::num(rollbacks)),
+        ("tta_reached", jsonio::num(s.tta_reached as f64)),
+        ("fault_count", jsonio::num(fault_count as f64)),
+    ]);
+    CellRows { csv, json }
+}
+
+/// Compute one grid cell standalone — the fabric worker entry point.
+/// Rebuilds the trace and the cell's fault plan from the context alone
+/// (both are pure functions of their seeds), so a remote worker needs
+/// nothing but the `SweepSpec` to reproduce the in-process cell exactly.
+pub fn compute_cell(ctx: &ExpCtx, rate_index: usize, system: &str) -> crate::Result<CellRows> {
+    let rate = *RATES
+        .get(rate_index)
+        .with_context(|| format!("rate index {rate_index} out of range (grid has {})", RATES.len()))?;
     let trace = ctx.trace();
     let base_cfg = DriverConfig::default();
-    let servers = base_cfg.cluster.total_servers();
-    let span = span_for(&trace, base_cfg.max_job_duration_s);
-    let systems = systems(ctx.quick);
-    crate::baselines::validate_systems(&systems)?;
-
-    // the sweep grid, rate-major (the serial row order); plans come from
-    // the scenario layer's rate regime — the same `--fault-rate` recipe
-    // every other entry point injects (byte-identical to plan_at_rate)
-    let plans: Vec<(f64, FaultPlan)> = RATES
-        .iter()
-        .map(|&rate| {
-            let plan = crate::scenario::FaultRegime::Rate { rate, seed: ctx.fault_seed }
-                .plan(&trace, span, servers);
-            (rate, plan)
-        })
-        .collect();
-    let rate_indices: Vec<usize> = (0..plans.len()).collect();
-    let cells: Vec<(usize, &'static str)> = sweep::cross(&rate_indices, &systems);
-
-    eprintln!(
-        "[exp] resilience: {} cells ({} rates × {} systems, {} jobs) on {} thread(s)…",
-        cells.len(),
-        plans.len(),
-        systems.len(),
-        trace.len(),
-        ctx.threads
+    let plan = crate::scenario::FaultRegime::Rate { rate, seed: ctx.fault_seed }.plan(
+        &trace,
+        span_for(&trace, base_cfg.max_job_duration_s),
+        base_cfg.cluster.total_servers(),
     );
-    // cells return Result and errors propagate after the join (a worker-
-    // thread panic would abort the whole sweep without naming the cell)
-    let (results, cell_s, wall_s) = sweep::run_cells(
-        &cells,
-        ctx.threads,
-        |_, &(ri, sys)| -> crate::Result<Vec<JobStats>> {
-            let (rate, plan) = &plans[ri];
-            let t0 = std::time::Instant::now();
-            let stats = run_with_plan(ctx, sys, &trace, plan)?;
-            eprintln!(
-                "[exp]   {sys} @ rate {rate} ({} faults): {:.1}s wall",
-                plan.len(),
-                t0.elapsed().as_secs_f64()
-            );
-            Ok(stats)
-        },
-    );
-    let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+    let stats = run_with_plan(ctx, system, &trace, &plan)?;
+    Ok(rows_for(system, rate, plan.len(), &stats))
+}
 
+/// Assemble the final artifacts from index-ordered cell rows: the
+/// printed table + SSGD summary, `resilience.csv`, `resilience.json`.
+/// Both the serial sweep and the fabric dispatcher end here, which is
+/// what makes a dispatched run byte-identical to `--threads 1` — the
+/// artifacts are a pure function of the merged rows.
+pub fn assemble(ctx: &ExpCtx, rows: &[CellRows]) -> crate::Result<()> {
     let mut t = Table::new(
         "Resilience — TTA/JCT/downtime under injected failures (PS architecture)",
         &[
@@ -130,42 +163,14 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
     );
     let mut results_json: Vec<Json> = Vec::new();
     let mut ssgd_jct_by_rate: Vec<(f64, f64)> = Vec::new();
-
-    for (&(ri, sys), stats) in cells.iter().zip(&results) {
-        let (rate, plan) = &plans[ri];
-        let rate = *rate;
-        let s = summarize(stats);
-        // -1 = "no job reached the target" (NaN is not valid JSON)
-        let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
-        let jct_mean = stats::mean(&s.jct);
-        let downtime_mean = stats::mean(&s.downtime);
-        let rollbacks: f64 = s.rollbacks.iter().sum();
-        if sys == "SSGD" {
-            ssgd_jct_by_rate.push((rate, jct_mean));
+    for r in rows {
+        t.row(r.csv.clone());
+        if r.csv.first().map(String::as_str) == Some("SSGD") {
+            let rate = r.json.get("fault_rate").and_then(|v| v.num()).unwrap_or(f64::NAN);
+            let jct = r.json.get("jct_mean_s").and_then(|v| v.num()).unwrap_or(f64::NAN);
+            ssgd_jct_by_rate.push((rate, jct));
         }
-        t.rowf(&[
-            table::s(sys),
-            table::f(rate, 1),
-            table::i(plan.len() as i64),
-            table::f(tta_mean, 0),
-            table::f(jct_mean, 0),
-            table::f(downtime_mean, 1),
-            table::i(rollbacks as i64),
-            table::s(format!("{}/{}", s.tta_reached, s.jobs)),
-        ]);
-        results_json.push(jsonio::obj(vec![
-            ("name", jsonio::s(&format!("resilience/{sys}/rate={rate}"))),
-            ("iters", jsonio::num(s.jobs as f64)),
-            // headline metric in the bench schema's slot: mean JCT
-            // (includes jobs that never reach TTA under failures)
-            ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
-            ("tta_mean_s", jsonio::num(tta_mean)),
-            ("jct_mean_s", jsonio::num(jct_mean)),
-            ("downtime_mean_s", jsonio::num(downtime_mean)),
-            ("rollbacks", jsonio::num(rollbacks)),
-            ("tta_reached", jsonio::num(s.tta_reached as f64)),
-            ("fault_count", jsonio::num(plan.len() as f64)),
-        ]));
+        results_json.push(r.json.clone());
     }
 
     t.print();
@@ -177,10 +182,9 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
         );
     }
     println!("(failures must cost the barrier-bound SSGD most; STAR's x-order modes absorb them)\n");
-    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
-        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
-    }
-    ctx.save("resilience", &t);
+    std::fs::create_dir_all(&ctx.out_dir)
+        .with_context(|| format!("creating {}", ctx.out_dir.display()))?;
+    ctx.save("resilience", &t)?;
 
     let doc = jsonio::obj(vec![
         ("schema", jsonio::s("star-bench-v1")),
@@ -188,10 +192,63 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
         ("results", Json::Arr(results_json)),
     ]);
     let path = ctx.out_dir.join("resilience.json");
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("resilience results written to {}", path.display()),
-        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
-    }
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("resilience results written to {}", path.display());
+    Ok(())
+}
+
+pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
+    let trace = ctx.trace();
+    let base_cfg = DriverConfig::default();
+    let servers = base_cfg.cluster.total_servers();
+    let span = span_for(&trace, base_cfg.max_job_duration_s);
+    crate::baselines::validate_systems(&systems(ctx.quick))?;
+
+    // plans are precomputed once per rate (cells at the same rate share
+    // one); they come from the scenario layer's rate regime — the same
+    // `--fault-rate` recipe every other entry point injects
+    // (byte-identical to plan_at_rate, and to what a fabric worker
+    // rebuilds cell-locally in compute_cell)
+    let plans: Vec<(f64, FaultPlan)> = RATES
+        .iter()
+        .map(|&rate| {
+            let plan = crate::scenario::FaultRegime::Rate { rate, seed: ctx.fault_seed }
+                .plan(&trace, span, servers);
+            (rate, plan)
+        })
+        .collect();
+    let cells = cell_specs(ctx.quick);
+
+    eprintln!(
+        "[exp] resilience: {} cells ({} rates × {} systems, {} jobs) on {} thread(s)…",
+        cells.len(),
+        plans.len(),
+        cells.len() / plans.len().max(1),
+        trace.len(),
+        ctx.threads
+    );
+    // cells return Result and errors propagate after the join; a
+    // panicking cell fails the sweep with its index and inputs named
+    // (sweep::run_cells catches per cell) instead of aborting everything
+    let (results, cell_s, wall_s) = sweep::run_cells(
+        &cells,
+        ctx.threads,
+        |_, &(ri, sys)| -> crate::Result<CellRows> {
+            let (rate, plan) = &plans[ri];
+            let t0 = std::time::Instant::now();
+            let stats = run_with_plan(ctx, sys, &trace, plan)?;
+            eprintln!(
+                "[exp]   {sys} @ rate {rate} ({} faults): {:.1}s wall",
+                plan.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(rows_for(sys, *rate, plan.len(), &stats))
+        },
+    )?;
+    let rows = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+
+    assemble(ctx, &rows)?;
 
     // the parallelism win, tracked across PRs (deliberately a separate
     // artifact: wall times vary run to run, resilience.json must not)
@@ -201,8 +258,7 @@ pub fn resilience(ctx: &ExpCtx) -> crate::Result<()> {
         ctx.threads,
         &cell_s,
         wall_s,
-    );
-    Ok(())
+    )
 }
 
 #[cfg(test)]
@@ -265,6 +321,23 @@ mod tests {
         let a = std::fs::read(serial.out_dir.join("resilience.csv")).unwrap();
         let b = std::fs::read(parallel.out_dir.join("resilience.csv")).unwrap();
         assert_eq!(a, b, "parallel resilience.csv differs from serial");
+    }
+
+    #[test]
+    fn cell_specs_are_rate_major_and_labelled() {
+        let cells = cell_specs(true);
+        assert_eq!(cells.len(), RATES.len() * systems(true).len());
+        assert_eq!(cells[0], (0, "SSGD"));
+        assert_eq!(cells[systems(true).len()], (1, "SSGD"), "rate-major order");
+        assert_eq!(cell_label(0, "SSGD"), "SSGD@rate=0");
+        assert_eq!(cell_label(2, "LGC"), "LGC@rate=4");
+    }
+
+    #[test]
+    fn compute_cell_rejects_out_of_range_rate_index() {
+        let ctx = ExpCtx { jobs: 1, quick: true, ..Default::default() };
+        let err = compute_cell(&ctx, RATES.len(), "SSGD").unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"));
     }
 
     #[test]

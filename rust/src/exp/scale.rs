@@ -19,6 +19,8 @@
 
 use std::path::Path;
 
+use anyhow::Context;
+
 use super::{sweep, ExpCtx};
 use crate::baselines::make_policy;
 use crate::cluster::ClusterConfig;
@@ -162,7 +164,7 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             out.metrics.events_per_sec()
         );
         out
-    });
+    })?;
 
     let baseline = load_baseline();
     let mut t = Table::new(
@@ -248,10 +250,9 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
         );
     }
 
-    if let Err(e) = std::fs::create_dir_all(&ctx.out_dir) {
-        eprintln!("warning: could not create {}: {e}", ctx.out_dir.display());
-    }
-    ctx.save("scale", &t);
+    std::fs::create_dir_all(&ctx.out_dir)
+        .with_context(|| format!("creating {}", ctx.out_dir.display()))?;
+    ctx.save("scale", &t)?;
     let doc = jsonio::obj(vec![
         ("schema", jsonio::s("star-bench-v1")),
         ("generated_by", jsonio::s("star::exp::scale")),
@@ -259,10 +260,9 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
         ("results", Json::Arr(results_json)),
     ]);
     let path = ctx.out_dir.join("BENCH_driver.json");
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("driver bench written to {}", path.display()),
-        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
-    }
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("driver bench written to {}", path.display());
     Ok(())
 }
 

@@ -19,9 +19,12 @@
 //! a `--threads 1` and a `--threads N` artifact of the same grid (CI
 //! computes it from its serial + parallel resilience runs).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+use anyhow::Context;
 
 use crate::jsonio::{self, Json};
 
@@ -54,35 +57,57 @@ pub fn cross<A: Clone, B: Clone>(outer: &[A], inner: &[B]) -> Vec<(A, B)> {
     out
 }
 
+/// Render a `catch_unwind` payload as the message the panicking cell
+/// raised (panics carry `&str` or `String` in practice).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run `f(index, &item)` over every item on up to `threads` workers and
 /// return the results **in item order**. `threads <= 1` runs inline
 /// (bit-and-byte identical output either way — the contract callers rely
 /// on for deterministic sweep artifacts).
-pub fn run_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+///
+/// A panicking cell no longer aborts the whole sweep: each cell runs
+/// under `catch_unwind`, the remaining cells still execute, and the
+/// sweep then fails with the poisoned cells' indices, inputs, and panic
+/// messages named.
+pub fn run_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> crate::Result<Vec<R>>
 where
-    T: Sync,
+    T: Sync + std::fmt::Debug,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    run_cells(items, threads, f).0
+    Ok(run_cells(items, threads, f)?.0)
 }
 
 /// Like [`run_indexed`], additionally returning per-cell wall seconds
 /// (item order) and the sweep's total wall seconds.
-pub fn run_cells<T, R, F>(items: &[T], threads: usize, f: F) -> (Vec<R>, Vec<f64>, f64)
+pub fn run_cells<T, R, F>(items: &[T], threads: usize, f: F) -> crate::Result<(Vec<R>, Vec<f64>, f64)>
 where
-    T: Sync,
+    T: Sync + std::fmt::Debug,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
     let t0 = Instant::now();
     let threads = threads.clamp(1, items.len().max(1));
     let mut tagged: Vec<(usize, R, f64)> = Vec::with_capacity(items.len());
+    // (index, panic message) per poisoned cell; collected, not fatal
+    // mid-sweep, so every healthy cell still completes
+    let mut poisoned: Vec<(usize, String)> = Vec::new();
     if threads <= 1 {
         for (i, item) in items.iter().enumerate() {
             let c0 = Instant::now();
-            let r = f(i, item);
-            tagged.push((i, r, c0.elapsed().as_secs_f64()));
+            match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
+                Ok(r) => tagged.push((i, r, c0.elapsed().as_secs_f64())),
+                Err(p) => poisoned.push((i, panic_message(p))),
+            }
         }
     } else {
         let next = AtomicUsize::new(0);
@@ -93,24 +118,51 @@ where
                 .map(|_| {
                     s.spawn(move || {
                         let mut out: Vec<(usize, R, f64)> = Vec::new();
+                        let mut bad: Vec<(usize, String)> = Vec::new();
                         loop {
                             let i = next_ref.fetch_add(1, Ordering::Relaxed);
                             if i >= items.len() {
                                 break;
                             }
                             let c0 = Instant::now();
-                            let r = f_ref(i, &items[i]);
-                            out.push((i, r, c0.elapsed().as_secs_f64()));
+                            match catch_unwind(AssertUnwindSafe(|| f_ref(i, &items[i]))) {
+                                Ok(r) => out.push((i, r, c0.elapsed().as_secs_f64())),
+                                Err(p) => bad.push((i, panic_message(p))),
+                            }
                         }
-                        out
+                        (out, bad)
                     })
                 })
                 .collect();
             for h in handles {
-                tagged.extend(h.join().expect("sweep worker panicked"));
+                // cells are caught individually, so a worker thread can
+                // only die outside any cell — treat that as fatal too
+                match h.join() {
+                    Ok((out, bad)) => {
+                        tagged.extend(out);
+                        poisoned.extend(bad);
+                    }
+                    Err(p) => poisoned.push((usize::MAX, panic_message(p))),
+                }
             }
         });
         tagged.sort_by_key(|&(i, _, _)| i);
+        poisoned.sort_by_key(|&(i, _)| i);
+    }
+    if !poisoned.is_empty() {
+        let detail: Vec<String> = poisoned
+            .iter()
+            .map(|(i, msg)| match items.get(*i) {
+                Some(item) => format!("cell {i} (input {item:?}): {msg}"),
+                None => format!("sweep worker: {msg}"),
+            })
+            .collect();
+        anyhow::bail!(
+            "sweep failed: {} of {} cell(s) panicked — {}",
+            poisoned.len(),
+            items.len(),
+            detail.join("; ")
+        );
     }
     let wall = t0.elapsed().as_secs_f64();
     let mut results = Vec::with_capacity(tagged.len());
@@ -119,7 +171,7 @@ where
         results.push(r);
         cell_s.push(dt);
     }
-    (results, cell_s, wall)
+    Ok((results, cell_s, wall))
 }
 
 /// Write a `star-bench-v1` artifact recording a sweep's wall time, the
@@ -132,7 +184,13 @@ where
 /// artifacts of the same sweep at `--threads 1` and `--threads N` —
 /// which is exactly what CI computes from its serial and parallel
 /// resilience runs.
-pub fn write_sweep_bench(path: &Path, name: &str, threads: usize, cell_s: &[f64], wall_s: f64) {
+pub fn write_sweep_bench(
+    path: &Path,
+    name: &str,
+    threads: usize,
+    cell_s: &[f64],
+    wall_s: f64,
+) -> crate::Result<()> {
     let cells = cell_s.len();
     let cells_s_sum: f64 = cell_s.iter().sum();
     let concurrency = if wall_s > 0.0 { cells_s_sum / wall_s } else { 1.0 };
@@ -154,11 +212,10 @@ pub fn write_sweep_bench(path: &Path, name: &str, threads: usize, cell_s: &[f64]
             ])]),
         ),
     ]);
-    if let Err(e) = std::fs::write(path, doc.to_string_pretty()) {
-        eprintln!("warning: could not write {}: {e}", path.display());
-    } else {
-        println!("sweep bench written to {}", path.display());
-    }
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing sweep bench {}", path.display()))?;
+    println!("sweep bench written to {}", path.display());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -182,7 +239,8 @@ mod tests {
             let out = run_indexed(&items, threads, |i, &x| {
                 assert_eq!(i, x);
                 x * 3
-            });
+            })
+            .unwrap();
             assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>(), "{threads}");
         }
     }
@@ -196,22 +254,22 @@ mod tests {
             let mut rng = crate::simrng::Rng::seeded(seed);
             (0..100).map(|_| rng.range(0.0, 1.0)).collect()
         };
-        let serial = run_indexed(&items, 1, cell);
-        let parallel = run_indexed(&items, available_threads().max(2), cell);
+        let serial = run_indexed(&items, 1, cell).unwrap();
+        let parallel = run_indexed(&items, available_threads().max(2), cell).unwrap();
         assert_eq!(serial, parallel);
     }
 
     #[test]
     fn empty_and_single_item_sweeps() {
         let empty: Vec<u32> = Vec::new();
-        assert!(run_indexed(&empty, 8, |_, &x| x).is_empty());
-        assert_eq!(run_indexed(&[7u32], 8, |_, &x| x + 1), vec![8]);
+        assert!(run_indexed(&empty, 8, |_, &x| x).unwrap().is_empty());
+        assert_eq!(run_indexed(&[7u32], 8, |_, &x| x + 1).unwrap(), vec![8]);
     }
 
     #[test]
     fn cells_are_timed_and_wall_reported() {
         let items = [1u32, 2, 3];
-        let (out, cell_s, wall_s) = run_cells(&items, 2, |_, &x| x);
+        let (out, cell_s, wall_s) = run_cells(&items, 2, |_, &x| x).unwrap();
         assert_eq!(out, vec![1, 2, 3]);
         assert_eq!(cell_s.len(), 3);
         assert!(cell_s.iter().all(|&t| t >= 0.0));
@@ -219,9 +277,48 @@ mod tests {
     }
 
     #[test]
+    fn poisoned_cell_fails_the_sweep_naming_index_and_input() {
+        // one panicking cell must not abort the process or hide which
+        // cell died; healthy cells still run (observed via the counter)
+        use std::sync::atomic::AtomicUsize;
+        for threads in [1, 4] {
+            let ran = AtomicUsize::new(0);
+            let items: Vec<u32> = (0..8).collect();
+            let err = run_indexed(&items, threads, |_, &x| {
+                if x == 5 {
+                    panic!("cell exploded on purpose");
+                }
+                ran.fetch_add(1, Ordering::Relaxed);
+                x
+            })
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("cell 5"), "{msg}");
+            assert!(msg.contains("input 5"), "{msg}");
+            assert!(msg.contains("cell exploded on purpose"), "{msg}");
+            assert_eq!(ran.load(Ordering::Relaxed), 7, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn multiple_poisoned_cells_are_all_reported() {
+        let items: Vec<u32> = (0..6).collect();
+        let err = run_indexed(&items, 1, |_, &x| {
+            if x % 2 == 1 {
+                panic!("odd cell {x}");
+            }
+            x
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("3 of 6"), "{msg}");
+        assert!(msg.contains("cell 1") && msg.contains("cell 3") && msg.contains("cell 5"), "{msg}");
+    }
+
+    #[test]
     fn bench_artifact_roundtrips() {
         let path = std::env::temp_dir().join("star_sweep_bench_test.json");
-        write_sweep_bench(&path, "sweep/test", 4, &[0.5, 0.5, 1.0], 0.5);
+        write_sweep_bench(&path, "sweep/test", 4, &[0.5, 0.5, 1.0], 0.5).unwrap();
         let doc = Json::parse_file(&path).unwrap();
         assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
         let r = &doc.get("results").unwrap().arr().unwrap()[0];

@@ -1,0 +1,92 @@
+//! Seeded fault injection for the fabric itself.
+//!
+//! Chaos is decided by the **dispatcher** (so a run's fault pattern is a
+//! pure function of the chaos seed, independent of scheduling order) and
+//! executed by the **worker** (so the real recovery machinery — crash
+//! detection, re-queue, retry — is what gets exercised, not a mock).
+//! Each cell draws from its own RNG stream keyed by cell index, and only
+//! the *first* attempt of a cell can be sabotaged: every retry is clean,
+//! so a chaos run always converges, and with `kill_prob 1.0` every cell
+//! is guaranteed to lose exactly one worker before completing — the CI
+//! smoke test's contract.
+
+use crate::simrng::Rng;
+
+use super::protocol::Chaos;
+
+/// Knobs behind `star dispatch --chaos`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    /// probability a cell's first attempt kills its worker
+    pub kill_prob: f64,
+    /// probability a cell's first attempt stalls before computing
+    pub stall_prob: f64,
+    /// stall duration
+    pub stall_ms: u64,
+    /// how long a doomed worker lingers before exiting
+    pub die_after_ms: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { seed: 0, kill_prob: 0.2, stall_prob: 0.1, stall_ms: 750, die_after_ms: 25 }
+    }
+}
+
+/// What (if anything) happens to `cell`'s attempt number `attempt`.
+/// Deterministic in `(cfg.seed, index)`; `None` for every retry.
+pub fn decide(cfg: &ChaosConfig, index: usize, attempt: usize) -> Option<Chaos> {
+    if attempt != 0 {
+        return None;
+    }
+    let mut rng = Rng::new(cfg.seed, 0x51A8_0000 ^ index as u64);
+    let roll = rng.f64();
+    if roll < cfg.kill_prob {
+        Some(Chaos::Die { after_ms: cfg.die_after_ms })
+    } else if roll < cfg.kill_prob + cfg.stall_prob {
+        Some(Chaos::Stall { ms: cfg.stall_ms })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_per_cell() {
+        let cfg = ChaosConfig { kill_prob: 0.5, stall_prob: 0.3, ..Default::default() };
+        for index in 0..32 {
+            assert_eq!(decide(&cfg, index, 0), decide(&cfg, index, 0));
+        }
+        let other = ChaosConfig { seed: 1, ..cfg };
+        assert!(
+            (0..64).any(|i| decide(&cfg, i, 0) != decide(&other, i, 0)),
+            "different seeds should produce different fault patterns"
+        );
+    }
+
+    #[test]
+    fn retries_are_always_clean() {
+        let cfg = ChaosConfig { kill_prob: 1.0, ..Default::default() };
+        for index in 0..16 {
+            assert!(decide(&cfg, index, 0).is_some());
+            assert_eq!(decide(&cfg, index, 1), None);
+            assert_eq!(decide(&cfg, index, 5), None);
+        }
+    }
+
+    #[test]
+    fn kill_prob_one_dooms_every_first_attempt() {
+        let cfg = ChaosConfig { kill_prob: 1.0, stall_prob: 0.0, ..Default::default() };
+        for index in 0..16 {
+            assert!(matches!(decide(&cfg, index, 0), Some(Chaos::Die { .. })));
+        }
+        let cfg = ChaosConfig { kill_prob: 0.0, stall_prob: 1.0, ..Default::default() };
+        for index in 0..16 {
+            assert!(matches!(decide(&cfg, index, 0), Some(Chaos::Stall { .. })));
+        }
+    }
+}

@@ -1,0 +1,628 @@
+//! `star dispatch` — the failure-tolerant driver of the sweep fabric.
+//!
+//! Scatters a sweep's cells across a fleet of workers (subprocesses it
+//! spawns, or remote `star worker --listen` peers via `--connect`),
+//! tolerating every failure mode a fleet exhibits:
+//!
+//! * **crash** — a worker dying (EOF on its link) re-queues the cell it
+//!   held, with exponential backoff and a bounded retry budget;
+//! * **hang** — a cell exceeding `deadline_s` retires its worker and
+//!   re-queues the cell;
+//! * **straggle** — once the queue drains, a cell running far past the
+//!   p99 of completed cells is *duplicated* onto an idle worker; first
+//!   result wins, the loser is discarded on arrival;
+//! * **interruption** — every completed cell is fsync'd into the
+//!   checkpoint journal before it counts, so a killed dispatch resumes
+//!   re-running only the missing cells.
+//!
+//! None of this can perturb results: cells are pure, rows come back
+//! pre-rendered, and the merge is index-ordered — so the artifacts are
+//! byte-identical to a serial in-process `--threads 1` run no matter
+//! how chaotic the execution was (pinned by `tests/fabric_dispatch.rs`
+//! and the CI chaos-smoke step).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::jsonio::Json;
+
+use super::chaos::{self, ChaosConfig};
+use super::journal::Journal;
+use super::protocol::{cell_request_json, CellDone, Chaos, Request, Response, SweepSpec};
+
+pub struct DispatchOpts {
+    /// fleet size in subprocess mode (ignored when `connect` is set)
+    pub workers: usize,
+    /// remote worker addresses — non-empty switches to fleet mode
+    pub connect: Vec<String>,
+    pub out_dir: PathBuf,
+    /// journal path override; default `out_dir/<sweep>.journal.jsonl`
+    pub journal: Option<PathBuf>,
+    /// discard any existing journal instead of resuming from it
+    pub fresh: bool,
+    /// per-cell wall deadline before its worker is presumed hung
+    pub deadline_s: f64,
+    /// re-issues allowed per cell after its first attempt
+    pub retries: usize,
+    /// base re-queue delay, doubled per attempt (capped at 10 s)
+    pub backoff_ms: u64,
+    /// straggler threshold: this × p99 of completed cell durations
+    pub straggler_factor: f64,
+    pub chaos: Option<ChaosConfig>,
+    /// worker executable; default: this binary (`current_exe`)
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl Default for DispatchOpts {
+    fn default() -> Self {
+        DispatchOpts {
+            workers: 4,
+            connect: Vec::new(),
+            out_dir: PathBuf::from("results"),
+            journal: None,
+            fresh: false,
+            deadline_s: 600.0,
+            retries: 5,
+            backoff_ms: 100,
+            straggler_factor: 3.0,
+            chaos: None,
+            worker_bin: None,
+        }
+    }
+}
+
+/// What a dispatch did — the fabric's observability surface (tests
+/// assert on it; the summary line prints it).
+#[derive(Clone, Debug, Default)]
+pub struct DispatchReport {
+    pub cells: usize,
+    /// recovered from the journal, not re-run
+    pub resumed: usize,
+    /// computed this run
+    pub executed: usize,
+    /// re-queues after a failure/crash/deadline
+    pub retries: usize,
+    pub straggler_reissues: usize,
+    pub worker_deaths: usize,
+    pub chaos_kills: usize,
+    pub chaos_stalls: usize,
+    pub wall_s: f64,
+}
+
+enum Link {
+    Child { child: Child, stdin: ChildStdin },
+    Tcp { stream: TcpStream },
+}
+
+struct Flight {
+    cell: usize,
+    issued: Instant,
+    duplicate: bool,
+}
+
+struct Slot {
+    link: Option<Link>,
+    busy: Option<Flight>,
+    /// bumped on every (re)spawn so stale reader-thread events are
+    /// recognizable — except `done` results, which are salvaged
+    /// regardless of which incarnation produced them
+    gen: u64,
+}
+
+enum Event {
+    Msg(Response),
+    Gone,
+}
+
+/// Run the sweep across the fleet; returns the report after the merged
+/// artifacts are written.
+pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<DispatchReport> {
+    let t0 = Instant::now();
+    let labels = sweep.cell_labels()?;
+    let cells = labels.len();
+    if cells == 0 {
+        anyhow::bail!("sweep {} has no cells", sweep.name());
+    }
+
+    let journal_path = opts
+        .journal
+        .clone()
+        .unwrap_or_else(|| opts.out_dir.join(format!("{}.journal.jsonl", sweep.name())));
+    let (journal, recovered) =
+        Journal::open(&journal_path, &sweep.fingerprint(), cells, opts.fresh)?;
+
+    let mut done: BTreeMap<usize, CellDone> = BTreeMap::new();
+    let mut durations: Vec<f64> = Vec::new();
+    for rec in recovered {
+        durations.push(rec.elapsed_s);
+        done.insert(rec.index, rec);
+    }
+    let resumed = done.len();
+    let pending: VecDeque<usize> = (0..cells).filter(|i| !done.contains_key(i)).collect();
+    if resumed > 0 {
+        eprintln!(
+            "star dispatch: resuming {} — {} of {} cell(s) already journaled",
+            journal_path.display(),
+            resumed,
+            cells
+        );
+    }
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut d = Dispatcher {
+        sweep_json: sweep.to_json(),
+        opts,
+        labels,
+        slots: Vec::new(),
+        tx,
+        rx,
+        pending,
+        delayed: Vec::new(),
+        attempts: vec![0; cells],
+        flights: vec![Vec::new(); cells],
+        done,
+        journal,
+        durations,
+        cell_error: vec![None; cells],
+        report: DispatchReport { cells, resumed, ..Default::default() },
+        next_id: 1,
+        fatal: None,
+        // covers the initial fleet plus one chaos kill per cell with
+        // generous slack; only exhausted by a genuinely broken setup
+        respawn_budget: opts.workers * 4 + 2 * cells + 8,
+        tcp_mode: !opts.connect.is_empty(),
+    };
+
+    let result = d.run();
+    d.shutdown_fleet();
+    result?;
+    if let Some(msg) = d.fatal.take() {
+        anyhow::bail!("dispatch of {} failed: {}", sweep.name(), msg);
+    }
+
+    // deterministic merge: strictly index-ordered, identical to the
+    // serial sweep's row order
+    let rows: Vec<_> = (0..cells)
+        .map(|i| d.done.remove(&i).expect("loop exits only when every cell is done").rows)
+        .collect();
+    sweep.assemble(&rows, &opts.out_dir)?;
+
+    d.report.wall_s = t0.elapsed().as_secs_f64();
+    let r = &d.report;
+    eprintln!(
+        "star dispatch: {} cell(s) ({} resumed, {} executed) — {} retr{}, \
+         {} straggler re-issue(s), {} worker death(s), chaos {}k/{}s — {:.1}s",
+        r.cells,
+        r.resumed,
+        r.executed,
+        r.retries,
+        if r.retries == 1 { "y" } else { "ies" },
+        r.straggler_reissues,
+        r.worker_deaths,
+        r.chaos_kills,
+        r.chaos_stalls,
+        r.wall_s
+    );
+    Ok(d.report)
+}
+
+struct Dispatcher<'a> {
+    sweep_json: Json,
+    opts: &'a DispatchOpts,
+    labels: Vec<String>,
+    slots: Vec<Slot>,
+    tx: Sender<(usize, u64, Event)>,
+    rx: Receiver<(usize, u64, Event)>,
+    pending: VecDeque<usize>,
+    /// (due, cell) — backoff re-queues waiting to re-enter `pending`
+    delayed: Vec<(Instant, usize)>,
+    /// non-duplicate issues per cell (the retry budget's currency)
+    attempts: Vec<usize>,
+    /// cell -> slot ids with an attempt in flight
+    flights: Vec<Vec<usize>>,
+    done: BTreeMap<usize, CellDone>,
+    journal: Journal,
+    /// completed-cell compute seconds (feeds the straggler p99)
+    durations: Vec<f64>,
+    cell_error: Vec<Option<String>>,
+    report: DispatchReport,
+    next_id: u64,
+    fatal: Option<String>,
+    respawn_budget: usize,
+    tcp_mode: bool,
+}
+
+impl Dispatcher<'_> {
+    fn run(&mut self) -> crate::Result<()> {
+        if self.tcp_mode {
+            self.connect_fleet()?;
+        }
+        while self.done.len() < self.report.cells && self.fatal.is_none() {
+            self.ensure_fleet();
+            if self.fatal.is_some() {
+                break;
+            }
+            self.promote_delayed();
+            self.issue_pending();
+            self.maybe_duplicate();
+            match self.rx.recv_timeout(Duration::from_millis(20)) {
+                Ok((slot, gen, ev)) => {
+                    self.handle_event(slot, gen, ev)?;
+                    while let Ok((slot, gen, ev)) = self.rx.try_recv() {
+                        self.handle_event(slot, gen, ev)?;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => unreachable!("we hold a sender"),
+            }
+            self.check_deadlines();
+        }
+        Ok(())
+    }
+
+    fn outstanding(&self) -> usize {
+        self.report.cells - self.done.len()
+    }
+
+    // -- fleet ------------------------------------------------------------
+
+    fn connect_fleet(&mut self) -> crate::Result<()> {
+        for addr in &self.opts.connect {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to worker {addr}"))?;
+            let reader = BufReader::new(
+                stream.try_clone().context("cloning worker stream for reads")?,
+            );
+            let slot = self.slots.len();
+            self.slots.push(Slot { link: Some(Link::Tcp { stream }), busy: None, gen: 0 });
+            spawn_reader(reader, slot, 0, self.tx.clone());
+        }
+        Ok(())
+    }
+
+    /// Keep the fleet at strength: respawn dead subprocess workers (with
+    /// a budget so a broken worker binary can't respawn forever); in TCP
+    /// mode remote workers cannot be revived, so a fully dead fleet with
+    /// work left is fatal.
+    fn ensure_fleet(&mut self) {
+        let outstanding = self.outstanding();
+        if self.tcp_mode {
+            if outstanding > 0 && self.slots.iter().all(|s| s.link.is_none()) {
+                self.fatal = Some("every remote worker is gone (they cannot be respawned — \
+                                   restart them and re-dispatch to resume)".into());
+            }
+            return;
+        }
+        let want = self.opts.workers.max(1).min(outstanding.max(1));
+        loop {
+            let live = self.slots.iter().filter(|s| s.link.is_some()).count();
+            if live >= want {
+                return;
+            }
+            if self.respawn_budget == 0 {
+                if live == 0 && outstanding > 0 {
+                    let detail = self
+                        .cell_error
+                        .iter()
+                        .flatten()
+                        .next_back()
+                        .cloned()
+                        .unwrap_or_else(|| "workers kept dying".into());
+                    self.fatal = Some(format!(
+                        "worker respawn budget exhausted with {outstanding} cell(s) \
+                         outstanding ({detail})"
+                    ));
+                }
+                return;
+            }
+            self.respawn_budget -= 1;
+            let slot = match self.slots.iter().position(|s| s.link.is_none()) {
+                Some(i) => i,
+                None => {
+                    self.slots.push(Slot { link: None, busy: None, gen: 0 });
+                    self.slots.len() - 1
+                }
+            };
+            if let Err(e) = self.spawn_child(slot) {
+                eprintln!("star dispatch: spawning worker failed: {e:#}");
+            }
+        }
+    }
+
+    fn spawn_child(&mut self, slot: usize) -> crate::Result<()> {
+        let bin = match &self.opts.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().context("locating the worker binary")?,
+        };
+        let mut child = Command::new(&bin)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning worker {}", bin.display()))?;
+        let stdin = child.stdin.take().expect("stdin was piped");
+        let stdout = child.stdout.take().expect("stdout was piped");
+        self.slots[slot].gen += 1;
+        let gen = self.slots[slot].gen;
+        self.slots[slot].link = Some(Link::Child { child, stdin });
+        spawn_reader(BufReader::new(stdout), slot, gen, self.tx.clone());
+        Ok(())
+    }
+
+    /// Tear down a worker (idempotent). Its in-flight cell is re-queued
+    /// unless another attempt is still running elsewhere.
+    fn retire(&mut self, slot: usize, reason: &str) {
+        let Some(link) = self.slots[slot].link.take() else { return };
+        match link {
+            Link::Child { mut child, stdin } => {
+                drop(stdin);
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Link::Tcp { stream } => {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        self.slots[slot].gen += 1;
+        self.report.worker_deaths += 1;
+        if let Some(flight) = self.slots[slot].busy.take() {
+            eprintln!(
+                "star dispatch: worker {slot} lost ({reason}) holding cell {} [{}]",
+                flight.cell, self.labels[flight.cell]
+            );
+            self.flights[flight.cell].retain(|&s| s != slot);
+            if !self.done.contains_key(&flight.cell) && self.flights[flight.cell].is_empty() {
+                self.requeue(flight.cell, reason);
+            }
+        } else {
+            eprintln!("star dispatch: worker {slot} lost ({reason}) while idle");
+        }
+    }
+
+    fn shutdown_fleet(&mut self) {
+        let line = Request::shutdown_json().to_string_compact();
+        for slot in &mut self.slots {
+            let Some(link) = slot.link.take() else { continue };
+            match link {
+                Link::Child { mut child, mut stdin } => {
+                    let _ = writeln!(stdin, "{line}");
+                    let _ = stdin.flush();
+                    drop(stdin);
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                Link::Tcp { stream } => {
+                    // a polite shutdown only: the remote worker returns
+                    // to its accept loop and outlives this dispatch
+                    let mut s = &stream;
+                    let _ = writeln!(s, "{line}");
+                    let _ = s.flush();
+                }
+            }
+        }
+    }
+
+    // -- scheduling -------------------------------------------------------
+
+    fn promote_delayed(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, cell) = self.delayed.swap_remove(i);
+                self.pending.push_back(cell);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn idle_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.link.is_some() && s.busy.is_none())
+    }
+
+    fn issue_pending(&mut self) {
+        while !self.pending.is_empty() {
+            let Some(slot) = self.idle_slot() else { return };
+            let Some(cell) = self.pending.pop_front() else { return };
+            if self.done.contains_key(&cell) {
+                continue;
+            }
+            self.issue(slot, cell, false);
+        }
+    }
+
+    fn issue(&mut self, slot: usize, cell: usize, duplicate: bool) {
+        let chaos: Option<Chaos> = if duplicate {
+            None
+        } else {
+            self.opts.chaos.as_ref().and_then(|cfg| chaos::decide(cfg, cell, self.attempts[cell]))
+        };
+        match chaos {
+            Some(Chaos::Die { .. }) => self.report.chaos_kills += 1,
+            Some(Chaos::Stall { .. }) => self.report.chaos_stalls += 1,
+            None => {}
+        }
+        if duplicate {
+            self.report.straggler_reissues += 1;
+            eprintln!(
+                "star dispatch: re-issuing straggler cell {cell} [{}] to worker {slot}",
+                self.labels[cell]
+            );
+        } else {
+            self.attempts[cell] += 1;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let line = cell_request_json(id, cell, &self.sweep_json, chaos).to_string_compact();
+        self.slots[slot].busy = Some(Flight { cell, issued: Instant::now(), duplicate });
+        self.flights[cell].push(slot);
+        let sent = match self.slots[slot].link.as_mut() {
+            Some(Link::Child { stdin, .. }) => {
+                writeln!(stdin, "{line}").and_then(|()| stdin.flush())
+            }
+            Some(Link::Tcp { stream }) => {
+                writeln!(stream, "{line}").and_then(|()| stream.flush())
+            }
+            None => return,
+        };
+        if let Err(e) = sent {
+            self.retire(slot, &format!("send failed: {e}"));
+        }
+    }
+
+    fn requeue(&mut self, cell: usize, reason: &str) {
+        if self.attempts[cell] > self.opts.retries {
+            let last = self.cell_error[cell].clone().unwrap_or_else(|| reason.to_string());
+            self.fatal = Some(format!(
+                "cell {cell} [{}] failed after {} attempt(s): {last}",
+                self.labels[cell], self.attempts[cell]
+            ));
+            return;
+        }
+        let shift = (self.attempts[cell].max(1) - 1).min(16) as u32;
+        let delay = (self.opts.backoff_ms << shift).min(10_000);
+        self.report.retries += 1;
+        self.delayed.push((Instant::now() + Duration::from_millis(delay), cell));
+    }
+
+    /// Straggler re-issue (the fabric's speculative execution): once
+    /// nothing is queued, duplicate any first-attempt cell running far
+    /// past the p99 of completed cells onto an idle worker. First result
+    /// wins; at most two attempts of a cell fly at once.
+    fn maybe_duplicate(&mut self) {
+        if !self.pending.is_empty() || !self.delayed.is_empty() || self.durations.len() < 3 {
+            return;
+        }
+        let p99 = crate::stats::percentile(&self.durations, 99.0);
+        let threshold = (self.opts.straggler_factor * p99).max(0.25);
+        let now = Instant::now();
+        let candidates: Vec<usize> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.busy.as_ref())
+            .filter(|f| {
+                !f.duplicate && now.duration_since(f.issued).as_secs_f64() > threshold
+            })
+            .map(|f| f.cell)
+            .filter(|&c| !self.done.contains_key(&c) && self.flights[c].len() < 2)
+            .collect();
+        for cell in candidates {
+            let Some(slot) = self.idle_slot() else { return };
+            self.issue(slot, cell, true);
+        }
+    }
+
+    // -- events -----------------------------------------------------------
+
+    fn handle_event(&mut self, slot: usize, gen: u64, ev: Event) -> crate::Result<()> {
+        let current = self.slots.get(slot).is_some_and(|s| s.gen == gen);
+        match ev {
+            Event::Gone => {
+                if current {
+                    self.retire(slot, "worker exited");
+                }
+            }
+            Event::Msg(Response::Ready { .. }) => {}
+            Event::Msg(Response::Done { done, .. }) => {
+                if current {
+                    if let Some(flight) = self.slots[slot].busy.take() {
+                        self.flights[flight.cell].retain(|&s| s != slot);
+                    }
+                }
+                // salvage the result even from a retired worker — it is
+                // just as valid, and discarding it would waste the work
+                self.record_done(done)?;
+            }
+            Event::Msg(Response::Failed { index, error, .. }) => {
+                eprintln!(
+                    "star dispatch: cell {index} failed on worker {slot}: {error}"
+                );
+                if !current {
+                    return Ok(()); // its re-queue already happened at retire()
+                }
+                if let Some(flight) = self.slots[slot].busy.take() {
+                    self.flights[flight.cell].retain(|&s| s != slot);
+                }
+                if index < self.cell_error.len() {
+                    self.cell_error[index] = Some(error);
+                    if !self.done.contains_key(&index) && self.flights[index].is_empty() {
+                        self.requeue(index, "cell failed");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn record_done(&mut self, done: CellDone) -> crate::Result<()> {
+        if done.index >= self.report.cells {
+            eprintln!("star dispatch: discarding result for unknown cell {}", done.index);
+            return Ok(());
+        }
+        if self.done.contains_key(&done.index) {
+            // the losing half of a straggler race (or a duplicate retry)
+            return Ok(());
+        }
+        self.journal.append(&done)?;
+        self.durations.push(done.elapsed_s);
+        self.report.executed += 1;
+        self.done.insert(done.index, done);
+        Ok(())
+    }
+
+    fn check_deadlines(&mut self) {
+        let now = Instant::now();
+        let overdue: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.busy.as_ref().is_some_and(|f| {
+                    now.duration_since(f.issued).as_secs_f64() > self.opts.deadline_s
+                })
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for slot in overdue {
+            self.retire(slot, "cell deadline exceeded");
+        }
+    }
+}
+
+/// Pump a worker's response lines into the event channel. Unparseable
+/// lines are warned about and skipped (a stray print must not look like
+/// a dead worker); EOF or a read error reports the link gone.
+fn spawn_reader(
+    reader: impl BufRead + Send + 'static,
+    slot: usize,
+    gen: u64,
+    tx: Sender<(usize, u64, Event)>,
+) {
+    std::thread::spawn(move || {
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Response::from_line(&line) {
+                Ok(resp) => {
+                    if tx.send((slot, gen, Event::Msg(resp))).is_err() {
+                        return; // dispatch is over
+                    }
+                }
+                Err(e) => {
+                    eprintln!("star dispatch: ignoring non-protocol line from worker {slot}: {e:#}");
+                }
+            }
+        }
+        let _ = tx.send((slot, gen, Event::Gone));
+    });
+}

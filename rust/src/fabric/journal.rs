@@ -1,0 +1,270 @@
+//! Append-only checkpoint journal: `results/<sweep>.journal.jsonl`.
+//!
+//! Line 1 is a header binding the journal to a sweep fingerprint and
+//! cell count; every later line is one [`CellDone`] record, fsync'd as
+//! it is appended — a cell is either durably journaled or it will be
+//! re-run, never half-written. On open, an existing journal is replayed
+//! to recover completed cells, so an interrupted dispatch resumes
+//! re-running only the missing ones. A torn final line (the process
+//! died mid-append, pre-fsync) is detected by its missing newline and
+//! dropped; any *complete* line that fails to parse means real
+//! corruption and is refused rather than guessed at.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::jsonio::{self, Json};
+
+use super::protocol::CellDone;
+
+/// Journal header schema tag (the cell records carry none — their shape
+/// is bound by the header).
+pub const JOURNAL_SCHEMA: &str = "star-journal-v1";
+
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open (or create) the journal for a sweep with `cells` cells and
+    /// identity `fingerprint`. Returns the journal plus every cell
+    /// recovered from a previous run, in journal order. `fresh`
+    /// discards any existing journal first.
+    pub fn open(
+        path: &Path,
+        fingerprint: &str,
+        cells: usize,
+        fresh: bool,
+    ) -> crate::Result<(Journal, Vec<CellDone>)> {
+        if fresh && path.exists() {
+            std::fs::remove_file(path)
+                .with_context(|| format!("removing stale journal {}", path.display()))?;
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating journal dir {}", dir.display()))?;
+            }
+        }
+
+        if !path.exists() {
+            let mut file = File::create(path)
+                .with_context(|| format!("creating journal {}", path.display()))?;
+            let header = jsonio::obj(vec![
+                ("schema", jsonio::s(JOURNAL_SCHEMA)),
+                ("cells", jsonio::num(cells as f64)),
+                ("fingerprint", jsonio::s(fingerprint)),
+            ]);
+            writeln!(file, "{}", header.to_string_compact())?;
+            file.sync_data()?;
+            return Ok((Journal { file, path: path.to_path_buf() }, Vec::new()));
+        }
+
+        let mut text = String::new();
+        File::open(path)
+            .and_then(|mut f| f.read_to_string(&mut text))
+            .with_context(|| format!("reading journal {}", path.display()))?;
+
+        let mut recovered: Vec<CellDone> = Vec::new();
+        let mut seen = vec![false; cells];
+        let mut good_end = 0usize;
+        let mut saw_header = false;
+        for seg in text.split_inclusive('\n') {
+            if !seg.ends_with('\n') {
+                // torn tail: the append that died mid-write
+                eprintln!(
+                    "journal {}: dropping torn trailing record ({} bytes)",
+                    path.display(),
+                    seg.len()
+                );
+                break;
+            }
+            let line = seg.trim_end();
+            if line.is_empty() {
+                good_end += seg.len();
+                continue;
+            }
+            let j = Json::parse(line).with_context(|| {
+                format!("journal {}: corrupt record (try --fresh)", path.display())
+            })?;
+            if !saw_header {
+                Self::check_header(&j, path, fingerprint, cells)?;
+                saw_header = true;
+            } else {
+                let done = CellDone::from_json(&j).with_context(|| {
+                    format!("journal {}: corrupt cell record (try --fresh)", path.display())
+                })?;
+                let slot = seen.get_mut(done.index).with_context(|| {
+                    format!(
+                        "journal {}: cell index {} out of range for a {}-cell sweep \
+                         (try --fresh)",
+                        path.display(),
+                        done.index,
+                        cells
+                    )
+                })?;
+                if *slot {
+                    anyhow::bail!(
+                        "journal {}: duplicate record for cell {} (try --fresh)",
+                        path.display(),
+                        done.index
+                    );
+                }
+                *slot = true;
+                recovered.push(done);
+            }
+            good_end += seg.len();
+        }
+        if !saw_header {
+            anyhow::bail!("journal {}: missing header (try --fresh)", path.display());
+        }
+
+        let mut file = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening journal {}", path.display()))?;
+        file.set_len(good_end as u64)?; // drop the torn tail for good
+        file.seek(SeekFrom::End(0))?;
+        Ok((Journal { file, path: path.to_path_buf() }, recovered))
+    }
+
+    fn check_header(j: &Json, path: &Path, fingerprint: &str, cells: usize) -> crate::Result<()> {
+        let schema = j.get("schema").and_then(|v| Ok(v.str()?.to_string())).unwrap_or_default();
+        if schema != JOURNAL_SCHEMA {
+            anyhow::bail!(
+                "journal {}: schema {:?} (want {:?}) — not a sweep journal (try --fresh)",
+                path.display(),
+                schema,
+                JOURNAL_SCHEMA
+            );
+        }
+        let jcells = j.get("cells")?.u64()? as usize;
+        let jfp = j.get("fingerprint")?.str()?;
+        if jcells != cells || jfp != fingerprint {
+            anyhow::bail!(
+                "journal {} was written by a different sweep (its grid or invocation \
+                 knobs changed: {} cells vs {} expected) — pass --fresh to discard it",
+                path.display(),
+                jcells,
+                cells
+            );
+        }
+        Ok(())
+    }
+
+    /// Durably record one completed cell: append + fsync.
+    pub fn append(&mut self, done: &CellDone) -> crate::Result<()> {
+        writeln!(self.file, "{}", done.to_json().to_string_compact())
+            .and_then(|()| self.file.sync_data())
+            .with_context(|| format!("appending to journal {}", self.path.display()))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::CellRows;
+
+    fn done(index: usize) -> CellDone {
+        CellDone {
+            index,
+            elapsed_s: 0.25 + index as f64,
+            rows: CellRows {
+                csv: vec![format!("row{index}"), "1.5".into()],
+                json: jsonio::obj(vec![("name", jsonio::s(&format!("cell{index}")))]),
+            },
+        }
+    }
+
+    #[test]
+    fn append_then_reopen_recovers_cells() {
+        let dir = tempdir("journal_resume");
+        let path = dir.join("sweep.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, rec) = Journal::open(&path, "fp1", 4, false).unwrap();
+        assert!(rec.is_empty());
+        j.append(&done(2)).unwrap();
+        j.append(&done(0)).unwrap();
+        drop(j);
+
+        let (_j, rec) = Journal::open(&path, "fp1", 4, false).unwrap();
+        assert_eq!(rec, vec![done(2), done(0)]);
+
+        // --fresh discards everything
+        let (_j, rec) = Journal::open(&path, "fp1", 4, true).unwrap();
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_truncated() {
+        let dir = tempdir("journal_torn");
+        let path = dir.join("sweep.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, "fp", 3, false).unwrap();
+        j.append(&done(0)).unwrap();
+        j.append(&done(1)).unwrap();
+        drop(j);
+
+        // simulate dying mid-append: chop the file inside the last record
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 7]).unwrap();
+
+        let (mut j, rec) = Journal::open(&path, "fp", 3, false).unwrap();
+        assert_eq!(rec, vec![done(0)], "the torn record must be dropped");
+        // and the file must be usable again: append lands on a clean line
+        j.append(&done(2)).unwrap();
+        drop(j);
+        let (_j, rec) = Journal::open(&path, "fp", 3, false).unwrap();
+        assert_eq!(rec, vec![done(0), done(2)]);
+    }
+
+    #[test]
+    fn foreign_fingerprint_is_refused() {
+        let dir = tempdir("journal_fp");
+        let path = dir.join("sweep.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, "fp-a", 2, false).unwrap();
+        j.append(&done(0)).unwrap();
+        drop(j);
+        let err = Journal::open(&path, "fp-b", 2, false).unwrap_err();
+        assert!(format!("{err:#}").contains("--fresh"), "{err:#}");
+        let err = Journal::open(&path, "fp-a", 3, false).unwrap_err();
+        assert!(format!("{err:#}").contains("--fresh"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_and_out_of_range_records_are_refused() {
+        let dir = tempdir("journal_dup");
+        let path = dir.join("sweep.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, "fp", 2, false).unwrap();
+        j.append(&done(1)).unwrap();
+        j.append(&done(1)).unwrap();
+        drop(j);
+        let err = Journal::open(&path, "fp", 2, false).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+
+        let path = dir.join("range.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, "fp", 2, false).unwrap();
+        j.append(&done(5)).unwrap();
+        drop(j);
+        let err = Journal::open(&path, "fp", 2, false).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("star_fabric_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+}

@@ -1,0 +1,32 @@
+//! The failure-tolerant sweep fabric (DESIGN.md §10): distribute a
+//! sweep's cells across worker processes — local subprocesses or remote
+//! TCP peers — and survive crashes, hangs, stragglers, and interrupted
+//! runs, while producing artifacts **byte-identical** to a serial
+//! in-process `--threads 1` run.
+//!
+//! Layering (wire up):
+//!
+//! * [`protocol`] — `star-cell-v1`: the line protocol and [`SweepSpec`],
+//!   the self-contained description of a sweep any worker can compute
+//!   cells of;
+//! * [`journal`] — the fsync'd append-only checkpoint
+//!   (`results/<sweep>.journal.jsonl`) behind resume;
+//! * [`worker`] — `star worker`: the stateless cell server;
+//! * [`dispatch`] — `star dispatch`: scatter, deadline, retry,
+//!   straggler re-issue, re-queue, deterministic merge;
+//! * [`chaos`] — seeded fault injection (`--chaos`) so tests and CI can
+//!   *prove* the recovery paths preserve byte-identity.
+//!
+//! Determinism rests on three facts: cells are pure functions of
+//! `(SweepSpec, index)`; workers return *pre-rendered* rows
+//! ([`crate::exp::CellRows`]) that `jsonio` round-trips exactly; and the
+//! dispatcher merges strictly in index order. Scheduling, retries, and
+//! races therefore cannot leak into artifacts.
+
+pub mod chaos;
+pub mod dispatch;
+pub mod journal;
+pub mod protocol;
+pub mod worker;
+
+pub use protocol::SweepSpec;

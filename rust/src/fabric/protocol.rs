@@ -1,0 +1,511 @@
+//! `star-cell-v1` — the cell protocol: newline-delimited compact JSON,
+//! one message per line, identical over stdin/stdout (subprocess mode)
+//! and TCP (fleet mode).
+//!
+//! A worker announces itself with a `ready` line, then answers each
+//! `cell` request with exactly one `done` or `failed` line; a `shutdown`
+//! request ends the session. Requests are **stateless** — every one
+//! carries the full [`SweepSpec`], so a respawned worker needs no
+//! re-configuration and any worker can serve any cell.
+//!
+//! Determinism is the load-bearing property: a cell is a pure function
+//! of `(SweepSpec, index)`, a worker ships back *rendered* rows
+//! ([`CellRows`]: final CSV strings plus the `star-bench-v1` result
+//! object), and `jsonio` round-trips both exactly (sorted keys, bit-
+//! exact `f64` emit/parse). So the dispatcher's index-ordered merge
+//! reproduces a serial `--threads 1` run's artifacts byte for byte — no
+//! matter which worker computed which cell, how often a cell was
+//! retried, or whether a straggler re-issue made two workers race on it.
+
+use anyhow::Context;
+
+use crate::exp::{resilience, CellRows, ExpCtx};
+use crate::jsonio::{self, Json};
+use crate::scenario::spec::FaultRegime;
+use crate::scenario::{arch_tag, runner, Scenario};
+
+/// Protocol / schema tag carried by every message.
+pub const PROTOCOL: &str = "star-cell-v1";
+
+/// The sweep a dispatch scatters: which grid, and the invocation knobs
+/// that shape it. Everything a worker needs to recompute any cell.
+#[derive(Clone, Debug)]
+pub enum SweepSpec {
+    /// The resilience experiment's rate × system grid, exactly as
+    /// `experiments resilience` sweeps it (same `ExpCtx` derivation).
+    Resilience { jobs: usize, seed: u64, quick: bool, fault_seed: u64 },
+    /// A generic scenario's arch × policy grid, exactly as
+    /// `star scenario run` sweeps it.
+    Generic { spec: Scenario, jobs_override: Option<usize>, quick: bool },
+}
+
+/// Equality is canonical-JSON identity — exactly what the journal's
+/// fingerprint check enforces across processes.
+impl PartialEq for SweepSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.fingerprint() == other.fingerprint()
+    }
+}
+
+impl SweepSpec {
+    /// Derive the sweep for a loaded scenario — the `star dispatch`
+    /// front door. Generic scenarios shard their arch × policy grid;
+    /// the delegated `resilience` builtin (or any spec delegating to
+    /// exactly that experiment) shards the resilience grid with the
+    /// same context mapping `scenario::run` uses, so the dispatched
+    /// artifacts are byte-identical to both serial entry points. Other
+    /// delegated experiments are not cell-sharded (their harnesses own
+    /// their own loops) and are rejected.
+    pub fn from_scenario(
+        sc: &Scenario,
+        jobs_override: Option<usize>,
+        quick: bool,
+    ) -> crate::Result<SweepSpec> {
+        sc.validate().with_context(|| format!("scenario {:?}", sc.name))?;
+        if jobs_override == Some(0) {
+            anyhow::bail!("--jobs: a dispatch needs at least one job");
+        }
+        if sc.experiments.is_empty() {
+            return Ok(SweepSpec::Generic { spec: sc.clone(), jobs_override, quick });
+        }
+        if sc.experiments == ["resilience"] {
+            // the run_delegated mapping: spec workload -> ExpCtx knobs
+            let fault_seed = match sc.faults {
+                FaultRegime::Rate { seed, .. } => seed,
+                _ => 0,
+            };
+            return Ok(SweepSpec::Resilience {
+                jobs: jobs_override.unwrap_or(sc.workload.jobs),
+                seed: sc.workload.seed,
+                quick,
+                fault_seed,
+            });
+        }
+        anyhow::bail!(
+            "dispatch shards the resilience experiment and generic scenarios; \
+             scenario {:?} delegates to {:?} (run it via `star scenario run`)",
+            sc.name,
+            sc.experiments
+        )
+    }
+
+    /// Sweep name — keys the default journal path
+    /// (`results/<name>.journal.jsonl`) and log lines.
+    pub fn name(&self) -> String {
+        match self {
+            SweepSpec::Resilience { .. } => "resilience".to_string(),
+            SweepSpec::Generic { spec, .. } => format!("scenario_{}", spec.name),
+        }
+    }
+
+    /// The resilience flavor's experiment context. `threads: 1` because
+    /// fabric workers compute one cell at a time; the artifact is
+    /// identical at any width anyway (the byte-identity contract).
+    fn resilience_ctx(&self, out_dir: &std::path::Path) -> Option<ExpCtx> {
+        match *self {
+            SweepSpec::Resilience { jobs, seed, quick, fault_seed } => Some(ExpCtx {
+                jobs,
+                seed,
+                out_dir: out_dir.to_path_buf(),
+                quick,
+                fault_rate: 0.0,
+                fault_seed,
+                threads: 1,
+            }),
+            SweepSpec::Generic { .. } => None,
+        }
+    }
+
+    /// Human-readable labels, one per cell, in grid (= index) order.
+    /// `labels.len()` is the cell count.
+    pub fn cell_labels(&self) -> crate::Result<Vec<String>> {
+        match self {
+            SweepSpec::Resilience { quick, .. } => Ok(resilience::cell_specs(*quick)
+                .into_iter()
+                .map(|(ri, sys)| resilience::cell_label(ri, sys))
+                .collect()),
+            SweepSpec::Generic { spec, .. } => Ok(runner::grid(spec)
+                .into_iter()
+                .map(|(arch, sys)| format!("{sys}/{}", arch_tag(arch)))
+                .collect()),
+        }
+    }
+
+    /// Compute one cell — the worker side. Pure in `(self, index)`.
+    pub fn compute(&self, index: usize) -> crate::Result<CellRows> {
+        match self {
+            SweepSpec::Resilience { quick, .. } => {
+                let cells = resilience::cell_specs(*quick);
+                let &(ri, sys) = cells.get(index).with_context(|| {
+                    format!("cell index {index} out of range (grid has {})", cells.len())
+                })?;
+                let ctx = self.resilience_ctx(std::path::Path::new("results")).expect("variant");
+                resilience::compute_cell(&ctx, ri, sys)
+            }
+            SweepSpec::Generic { spec, jobs_override, quick } => {
+                runner::compute_cell(spec, *jobs_override, *quick, index)
+            }
+        }
+    }
+
+    /// Merge index-ordered rows into the final artifacts — the
+    /// dispatcher side, shared with the serial in-process paths.
+    pub fn assemble(&self, rows: &[CellRows], out_dir: &std::path::Path) -> crate::Result<()> {
+        match self {
+            SweepSpec::Resilience { .. } => {
+                let ctx = self.resilience_ctx(out_dir).expect("variant");
+                resilience::assemble(&ctx, rows)
+            }
+            SweepSpec::Generic { spec, jobs_override, quick } => runner::assemble_generic(
+                spec,
+                out_dir,
+                *quick,
+                runner::effective_jobs(spec, *jobs_override, *quick),
+                rows,
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            SweepSpec::Resilience { jobs, seed, quick, fault_seed } => jsonio::obj(vec![
+                ("kind", jsonio::s("resilience")),
+                ("jobs", jsonio::num(*jobs as f64)),
+                ("seed", jsonio::num(*seed as f64)),
+                ("quick", jsonio::b(*quick)),
+                ("fault_seed", jsonio::num(*fault_seed as f64)),
+            ]),
+            SweepSpec::Generic { spec, jobs_override, quick } => {
+                let mut pairs = vec![
+                    ("kind", jsonio::s("generic")),
+                    ("quick", jsonio::b(*quick)),
+                    ("spec", spec.to_json()),
+                ];
+                if let Some(j) = jobs_override {
+                    pairs.push(("jobs_override", jsonio::num(*j as f64)));
+                }
+                jsonio::obj(pairs)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<SweepSpec> {
+        match j.get("kind")?.str()? {
+            "resilience" => Ok(SweepSpec::Resilience {
+                jobs: j.get("jobs")?.u64()? as usize,
+                seed: j.get("seed")?.u64()?,
+                quick: j.get("quick")?.boolean()?,
+                fault_seed: j.get("fault_seed")?.u64()?,
+            }),
+            "generic" => Ok(SweepSpec::Generic {
+                spec: Scenario::from_json(j.get("spec")?)?,
+                jobs_override: match j.opt("jobs_override") {
+                    Some(v) => Some(v.u64()? as usize),
+                    None => None,
+                },
+                quick: j.get("quick")?.boolean()?,
+            }),
+            other => anyhow::bail!("unknown sweep kind {other:?}"),
+        }
+    }
+
+    /// Canonical identity string: the compact JSON form (sorted keys,
+    /// exact numbers — stable across processes). The journal stores it
+    /// so a resume against a *different* sweep is refused instead of
+    /// silently merging foreign cells.
+    pub fn fingerprint(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+/// One completed cell: what the journal records and the dispatcher
+/// merges. `elapsed_s` is the worker-side compute seconds (feeds the
+/// dispatcher's straggler threshold; excluded from artifacts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellDone {
+    pub index: usize,
+    pub elapsed_s: f64,
+    pub rows: CellRows,
+}
+
+impl CellDone {
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("index", jsonio::num(self.index as f64)),
+            ("elapsed_s", jsonio::num(self.elapsed_s)),
+            ("csv", Json::Arr(self.rows.csv.iter().map(|c| jsonio::s(c)).collect())),
+            ("row", self.rows.json.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<CellDone> {
+        let csv = j
+            .get("csv")?
+            .arr()?
+            .iter()
+            .map(|c| Ok(c.str()?.to_string()))
+            .collect::<crate::Result<Vec<String>>>()?;
+        Ok(CellDone {
+            index: j.get("index")?.u64()? as usize,
+            elapsed_s: j.get("elapsed_s")?.num()?,
+            rows: CellRows { csv, json: j.get("row")?.clone() },
+        })
+    }
+}
+
+/// Chaos instruction piggybacked on a request (see [`super::chaos`]):
+/// executed by the worker so the *fabric's* recovery paths get
+/// exercised, decided by the dispatcher so the outcome is seeded and
+/// deterministic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Chaos {
+    /// sleep `after_ms`, then exit without responding (a crash)
+    Die { after_ms: u64 },
+    /// sleep `ms`, then compute normally (a straggler)
+    Stall { ms: u64 },
+}
+
+impl Chaos {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Chaos::Die { after_ms } => {
+                jsonio::obj(vec![("die_after_ms", jsonio::num(*after_ms as f64))])
+            }
+            Chaos::Stall { ms } => jsonio::obj(vec![("stall_ms", jsonio::num(*ms as f64))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Chaos> {
+        if let Some(v) = j.opt("die_after_ms") {
+            return Ok(Chaos::Die { after_ms: v.u64()? });
+        }
+        if let Some(v) = j.opt("stall_ms") {
+            return Ok(Chaos::Stall { ms: v.u64()? });
+        }
+        anyhow::bail!("chaos object needs die_after_ms or stall_ms")
+    }
+}
+
+/// A parsed dispatcher → worker message.
+#[derive(Debug)]
+pub enum Request {
+    Cell { id: u64, index: usize, sweep: SweepSpec, chaos: Option<Chaos> },
+    Shutdown,
+}
+
+impl Request {
+    pub fn from_line(line: &str) -> crate::Result<Request> {
+        let j = Json::parse(line)?;
+        let schema = j.get("schema")?.str()?;
+        if schema != PROTOCOL {
+            anyhow::bail!("unexpected schema {schema:?} (want {PROTOCOL:?})");
+        }
+        match j.get("type")?.str()? {
+            "cell" => Ok(Request::Cell {
+                id: j.get("id")?.u64()?,
+                index: j.get("index")?.u64()? as usize,
+                sweep: SweepSpec::from_json(j.get("sweep")?)?,
+                chaos: match j.opt("chaos") {
+                    Some(c) => Some(Chaos::from_json(c)?),
+                    None => None,
+                },
+            }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => anyhow::bail!("unknown request type {other:?}"),
+        }
+    }
+
+    pub fn shutdown_json() -> Json {
+        jsonio::obj(vec![("schema", jsonio::s(PROTOCOL)), ("type", jsonio::s("shutdown"))])
+    }
+}
+
+/// Build a `cell` request line without re-serializing the sweep each
+/// time — the dispatcher caches `sweep_json` once per run.
+pub fn cell_request_json(id: u64, index: usize, sweep_json: &Json, chaos: Option<Chaos>) -> Json {
+    let mut pairs = vec![
+        ("schema", jsonio::s(PROTOCOL)),
+        ("type", jsonio::s("cell")),
+        ("id", jsonio::num(id as f64)),
+        ("index", jsonio::num(index as f64)),
+        ("sweep", sweep_json.clone()),
+    ];
+    if let Some(c) = chaos {
+        pairs.push(("chaos", c.to_json()));
+    }
+    jsonio::obj(pairs)
+}
+
+/// A parsed worker → dispatcher message.
+#[derive(Debug)]
+pub enum Response {
+    Ready { pid: u64 },
+    Done { id: u64, done: CellDone },
+    Failed { id: u64, index: usize, error: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Ready { pid } => jsonio::obj(vec![
+                ("schema", jsonio::s(PROTOCOL)),
+                ("type", jsonio::s("ready")),
+                ("pid", jsonio::num(*pid as f64)),
+            ]),
+            Response::Done { id, done } => jsonio::obj(vec![
+                ("schema", jsonio::s(PROTOCOL)),
+                ("type", jsonio::s("done")),
+                ("id", jsonio::num(*id as f64)),
+                ("cell", done.to_json()),
+            ]),
+            Response::Failed { id, index, error } => jsonio::obj(vec![
+                ("schema", jsonio::s(PROTOCOL)),
+                ("type", jsonio::s("failed")),
+                ("id", jsonio::num(*id as f64)),
+                ("index", jsonio::num(*index as f64)),
+                ("error", jsonio::s(error)),
+            ]),
+        }
+    }
+
+    pub fn from_line(line: &str) -> crate::Result<Response> {
+        let j = Json::parse(line)?;
+        let schema = j.get("schema")?.str()?;
+        if schema != PROTOCOL {
+            anyhow::bail!("unexpected schema {schema:?} (want {PROTOCOL:?})");
+        }
+        match j.get("type")?.str()? {
+            "ready" => Ok(Response::Ready { pid: j.get("pid")?.u64()? }),
+            "done" => Ok(Response::Done {
+                id: j.get("id")?.u64()?,
+                done: CellDone::from_json(j.get("cell")?)?,
+            }),
+            "failed" => Ok(Response::Failed {
+                id: j.get("id")?.u64()?,
+                index: j.get("index")?.u64()? as usize,
+                error: j.get("error")?.str()?.to_string(),
+            }),
+            other => anyhow::bail!("unknown response type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> CellRows {
+        CellRows {
+            csv: vec!["SSGD".into(), "0.0".into(), "3/4".into()],
+            json: jsonio::obj(vec![
+                ("name", jsonio::s("resilience/SSGD/rate=0")),
+                ("jct_mean_s", jsonio::num(1234.5678901234567)),
+            ]),
+        }
+    }
+
+    #[test]
+    fn sweep_spec_round_trips() {
+        let specs = [
+            SweepSpec::Resilience { jobs: 4, seed: 0, quick: true, fault_seed: 7 },
+            SweepSpec::Generic {
+                spec: Scenario {
+                    name: "g".into(),
+                    policies: vec!["SSGD".into()],
+                    ..Default::default()
+                },
+                jobs_override: Some(3),
+                quick: false,
+            },
+            SweepSpec::Generic {
+                spec: Scenario {
+                    name: "g2".into(),
+                    policies: vec!["SSGD".into()],
+                    ..Default::default()
+                },
+                jobs_override: None,
+                quick: true,
+            },
+        ];
+        for spec in specs {
+            let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+            assert_eq!(back.fingerprint(), spec.fingerprint());
+        }
+    }
+
+    #[test]
+    fn fingerprints_distinguish_sweeps() {
+        let a = SweepSpec::Resilience { jobs: 4, seed: 0, quick: true, fault_seed: 0 };
+        let b = SweepSpec::Resilience { jobs: 5, seed: 0, quick: true, fault_seed: 0 };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn cell_done_round_trips_exactly() {
+        let done = CellDone { index: 7, elapsed_s: 0.12345678901234567, rows: sample_rows() };
+        let line = done.to_json().to_string_compact();
+        let back = CellDone::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, done, "journal/wire round-trip must be exact");
+    }
+
+    #[test]
+    fn request_and_response_round_trip() {
+        let sweep = SweepSpec::Resilience { jobs: 2, seed: 0, quick: true, fault_seed: 0 };
+        let line = cell_request_json(9, 3, &sweep.to_json(), Some(Chaos::Die { after_ms: 10 }))
+            .to_string_compact();
+        match Request::from_line(&line).unwrap() {
+            Request::Cell { id, index, sweep: s, chaos } => {
+                assert_eq!((id, index), (9, 3));
+                assert_eq!(s, sweep);
+                assert_eq!(chaos, Some(Chaos::Die { after_ms: 10 }));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        let line = Request::shutdown_json().to_string_compact();
+        assert!(matches!(Request::from_line(&line).unwrap(), Request::Shutdown));
+
+        let done = CellDone { index: 1, elapsed_s: 2.5, rows: sample_rows() };
+        let line = Response::Done { id: 4, done: done.clone() }.to_json().to_string_compact();
+        match Response::from_line(&line).unwrap() {
+            Response::Done { id, done: d } => {
+                assert_eq!(id, 4);
+                assert_eq!(d, done);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        let line = Response::Failed { id: 1, index: 2, error: "boom\nline2".into() }
+            .to_json()
+            .to_string_compact();
+        assert!(!line.contains('\n'), "errors must stay one line on the wire");
+        assert!(matches!(Response::from_line(&line).unwrap(), Response::Failed { index: 2, .. }));
+    }
+
+    #[test]
+    fn from_scenario_maps_builtin_resilience_to_experiment_defaults() {
+        let sc = crate::scenario::find_builtin("resilience").unwrap();
+        let sweep = SweepSpec::from_scenario(&sc, Some(4), true).unwrap();
+        assert_eq!(
+            sweep,
+            SweepSpec::Resilience { jobs: 4, seed: 0, quick: true, fault_seed: 0 }
+        );
+        assert_eq!(sweep.cell_labels().unwrap().len(), 9, "3 rates x 3 quick systems");
+    }
+
+    #[test]
+    fn from_scenario_rejects_other_delegated_experiments() {
+        let sc = Scenario {
+            name: "delegated".into(),
+            experiments: vec!["fig16".into()],
+            ..Default::default()
+        };
+        let err = SweepSpec::from_scenario(&sc, None, true).unwrap_err();
+        assert!(format!("{err:#}").contains("scenario run"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_foreign_schema_lines() {
+        assert!(Request::from_line(r#"{"schema":"other-v1","type":"cell"}"#).is_err());
+        assert!(Response::from_line(r#"{"no":"schema"}"#).is_err());
+    }
+}

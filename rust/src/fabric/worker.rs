@@ -1,0 +1,180 @@
+//! `star worker` — a cell server. Reads `star-cell-v1` request lines,
+//! answers each with one `done`/`failed` line, over stdin/stdout
+//! (subprocess mode, `star dispatch` spawns these) or a TCP listener
+//! (fleet mode, `--listen host:port`).
+//!
+//! The worker is deliberately dumb: no queue, no state between
+//! requests, one cell at a time. All the cleverness — retries,
+//! deadlines, straggler re-issue, re-queue — lives in the dispatcher,
+//! which only works because a worker is safe to kill at any instant:
+//! cells are pure and journaling happens dispatcher-side after the
+//! response, so a dead worker costs only the cell it was holding.
+//!
+//! Diagnostics go to stderr; stdout carries protocol lines only (the
+//! compute path never prints — pinned by the dispatch byte-identity
+//! tests, which would fail on any stray stdout).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::exp::sweep::panic_message;
+
+use super::protocol::{Chaos, Request, Response};
+
+/// Serve cells over stdin/stdout until EOF or a `shutdown` request.
+pub fn serve_stdio() -> crate::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    announce(&mut out)?;
+    serve_lines(stdin.lock(), &mut out)
+}
+
+/// Serve cells over TCP, one connection at a time, forever. Connection
+/// errors are logged and the listener keeps accepting — a fleet worker
+/// survives its dispatcher dying and serves the next dispatch.
+pub fn serve_tcp(addr: &str) -> crate::Result<()> {
+    let addr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving listen address {addr:?}"))?
+        .next()
+        .with_context(|| format!("listen address {addr:?} resolved to nothing"))?;
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding worker listener on {addr}"))?;
+    // tests and fleet scripts parse this line (port 0 binds ephemerally)
+    println!("star worker listening on {}", listener.local_addr()?);
+    std::io::stdout().flush()?;
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) => {
+                eprintln!("star worker: accept failed: {e}");
+                continue;
+            }
+        };
+        eprintln!("star worker: serving {peer}");
+        let serve = || -> crate::Result<()> {
+            let reader = BufReader::new(stream.try_clone()?);
+            let mut out = stream.try_clone()?;
+            announce(&mut out)?;
+            serve_lines(reader, &mut out)
+        };
+        if let Err(e) = serve() {
+            eprintln!("star worker: connection to {peer} failed: {e:#}");
+        }
+    }
+}
+
+fn announce(out: &mut impl Write) -> crate::Result<()> {
+    let ready = Response::Ready { pid: std::process::id() as u64 };
+    writeln!(out, "{}", ready.to_json().to_string_compact())?;
+    out.flush()?;
+    Ok(())
+}
+
+/// The request loop shared by both transports. Unparseable lines are
+/// warned about and skipped (they can only come from a broken peer;
+/// dying on them would turn one bad line into a lost worker).
+fn serve_lines(reader: impl BufRead, out: &mut impl Write) -> crate::Result<()> {
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::from_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("star worker: skipping bad request line: {e:#}");
+                continue;
+            }
+        };
+        match req {
+            Request::Shutdown => return Ok(()),
+            Request::Cell { id, index, sweep, chaos } => {
+                let resp = serve_cell(id, index, &sweep, chaos);
+                writeln!(out, "{}", resp.to_json().to_string_compact())?;
+                out.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compute one cell (honoring any chaos instruction first) and build
+/// the response. A `Die` never returns; a panic inside the cell becomes
+/// a `failed` response rather than a dead worker.
+fn serve_cell(id: u64, index: usize, sweep: &super::SweepSpec, chaos: Option<Chaos>) -> Response {
+    match chaos {
+        Some(Chaos::Die { after_ms }) => {
+            eprintln!("star worker: chaos kill on cell {index} (after {after_ms} ms)");
+            std::thread::sleep(std::time::Duration::from_millis(after_ms));
+            // crash without a response: the dispatcher must detect the
+            // death and re-queue the cell
+            std::process::exit(3);
+        }
+        Some(Chaos::Stall { ms }) => {
+            eprintln!("star worker: chaos stall on cell {index} ({ms} ms)");
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        None => {}
+    }
+    let t0 = Instant::now();
+    match catch_unwind(AssertUnwindSafe(|| sweep.compute(index))) {
+        Ok(Ok(rows)) => Response::Done {
+            id,
+            done: super::protocol::CellDone {
+                index,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+                rows,
+            },
+        },
+        Ok(Err(e)) => Response::Failed { id, index, error: format!("{e:#}") },
+        Err(p) => Response::Failed {
+            id,
+            index,
+            error: format!("cell panicked: {}", panic_message(p)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::protocol::{cell_request_json, SweepSpec};
+
+    #[test]
+    fn serve_lines_answers_cells_and_honors_shutdown() {
+        let sweep = SweepSpec::Resilience { jobs: 2, seed: 0, quick: true, fault_seed: 0 };
+        let sweep_json = sweep.to_json();
+        let input = format!(
+            "{}\nnot json\n\n{}\n{}\nafter shutdown is never read\n",
+            cell_request_json(1, 0, &sweep_json, None).to_string_compact(),
+            cell_request_json(2, 999, &sweep_json, None).to_string_compact(),
+            Request::shutdown_json().to_string_compact(),
+        );
+        let mut out: Vec<u8> = Vec::new();
+        serve_lines(BufReader::new(input.as_bytes()), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one response per cell request: {text}");
+        match Response::from_line(lines[0]).unwrap() {
+            Response::Done { id, done } => {
+                assert_eq!(id, 1);
+                assert_eq!(done.index, 0);
+                assert!(!done.rows.csv.is_empty());
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        match Response::from_line(lines[1]).unwrap() {
+            Response::Failed { id, index, error } => {
+                assert_eq!((id, index), (2, 999));
+                assert!(error.contains("out of range"), "{error}");
+            }
+            other => panic!("expected failed, got {other:?}"),
+        }
+    }
+}

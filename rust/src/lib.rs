@@ -32,6 +32,7 @@ pub mod cluster;
 pub mod decide;
 pub mod driver;
 pub mod exp;
+pub mod fabric;
 pub mod faults;
 pub mod jsonio;
 pub mod metrics;

@@ -31,15 +31,22 @@ fn main() {
         Some("simulate") => cmd(simulate(&args)),
         Some("replay") => cmd(replay(&args)),
         Some("scenario") => cmd(scenario(&args)),
+        Some("worker") => cmd(worker(&args)),
+        Some("dispatch") => cmd(dispatch_cmd(&args)),
         Some("artifacts") => cmd(artifacts(&args)),
         _ => {
             eprintln!(
-                "usage: star <train|simulate|replay|scenario|artifacts> [options]\n\
+                "usage: star <train|simulate|replay|scenario|worker|dispatch|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
                  simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  scenario   list | run <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--threads N]\n\
+                 worker     [--listen HOST:PORT]   (serve sweep cells over stdio, or TCP with --listen)\n\
+                 dispatch   <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--workers N] [--connect H:P,…]\n\
+                 \x20          [--deadline-s X] [--retries N] [--backoff-ms B] [--straggler-factor F]\n\
+                 \x20          [--journal PATH] [--fresh] [--chaos] [--chaos-seed S] [--chaos-kill-prob P]\n\
+                 \x20          [--chaos-stall-prob P] [--chaos-stall-ms M] [--worker-bin PATH]\n\
                  artifacts  [--dir artifacts]"
             );
             2
@@ -136,7 +143,7 @@ fn simulate(args: &Args) -> star::Result<()> {
     let trace = generate(&TraceConfig::paced(jobs, seed));
     let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
         run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile)
-    });
+    })?;
     for (sys, (stats, metrics)) in systems.iter().zip(&all) {
         report(sys, arch, stats);
         if profile {
@@ -192,6 +199,69 @@ fn scenario(args: &Args) -> star::Result<()> {
             other.unwrap_or("<missing>")
         ),
     }
+}
+
+/// `star worker` — serve sweep cells over the `star-cell-v1` line
+/// protocol: stdio by default (the dispatcher's subprocess mode), or a
+/// TCP accept loop with `--listen HOST:PORT` (fleet mode; port 0 picks a
+/// free port and prints the bound address).
+fn worker(args: &Args) -> star::Result<()> {
+    args.check_known(&["listen"])?;
+    match args.get("listen") {
+        Some(addr) => star::fabric::worker::serve_tcp(addr),
+        None => star::fabric::worker::serve_stdio(),
+    }
+}
+
+/// `star dispatch` — scatter a scenario's sweep grid across workers with
+/// deadlines, retry, straggler re-issue, and a resumable checkpoint
+/// journal; merge results index-ordered into artifacts byte-identical to
+/// a serial `--threads 1` run.
+fn dispatch_cmd(args: &Args) -> star::Result<()> {
+    args.check_known(&[
+        "quick", "jobs", "out", "workers", "connect", "deadline-s", "retries", "backoff-ms",
+        "straggler-factor", "journal", "fresh", "chaos", "chaos-seed", "chaos-kill-prob",
+        "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
+    ])?;
+    let target = args.pos(1).ok_or_else(|| {
+        anyhow::anyhow!("usage: star dispatch <file.json|builtin> [options] (see `star` usage)")
+    })?;
+    let sc = star::scenario::load(target)?;
+    let jobs_override = match args.get("jobs") {
+        None => None,
+        Some(_) => Some(args.usize_or("jobs", 0)?),
+    };
+    let sweep = star::fabric::SweepSpec::from_scenario(&sc, jobs_override, args.flag("quick"))?;
+    let out_dir: std::path::PathBuf = args.str_or("out", "results").into();
+    let chaos = if args.flag("chaos") {
+        let defaults = star::fabric::chaos::ChaosConfig::default();
+        Some(star::fabric::chaos::ChaosConfig {
+            seed: args.u64_or("chaos-seed", defaults.seed)?,
+            kill_prob: args.f64_or("chaos-kill-prob", defaults.kill_prob)?,
+            stall_prob: args.f64_or("chaos-stall-prob", defaults.stall_prob)?,
+            stall_ms: args.u64_or("chaos-stall-ms", defaults.stall_ms)?,
+            die_after_ms: defaults.die_after_ms,
+        })
+    } else {
+        None
+    };
+    let opts = star::fabric::dispatch::DispatchOpts {
+        workers: args.usize_or("workers", 4)?,
+        connect: match args.get("connect") {
+            Some(list) => list.split(',').map(|a| a.trim().to_string()).collect(),
+            None => Vec::new(),
+        },
+        out_dir,
+        journal: args.get("journal").map(std::path::PathBuf::from),
+        fresh: args.flag("fresh"),
+        deadline_s: args.f64_or("deadline-s", 600.0)?,
+        retries: args.usize_or("retries", 5)?,
+        backoff_ms: args.u64_or("backoff-ms", 100)?,
+        straggler_factor: args.f64_or("straggler-factor", 3.0)?,
+        chaos,
+        worker_bin: args.get("worker-bin").map(std::path::PathBuf::from),
+    };
+    star::fabric::dispatch::dispatch(&sweep, &opts).map(|_| ())
 }
 
 fn replay(args: &Args) -> star::Result<()> {

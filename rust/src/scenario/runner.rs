@@ -11,12 +11,14 @@ use std::path::PathBuf;
 use anyhow::Context;
 
 use crate::baselines::make_policy;
-use crate::driver::{Driver, DriverConfig, JobStats};
-use crate::exp::{summarize, sweep, ExpCtx};
-use crate::faults::span_for;
+use crate::cluster::ClusterConfig;
+use crate::driver::{Driver, DriverConfig};
+use crate::exp::{summarize, sweep, CellRows, ExpCtx};
+use crate::faults::{span_for, FaultPlan};
 use crate::jsonio::{self, Json};
 use crate::stats;
 use crate::table::{self, Table};
+use crate::trace::{Arch, JobSpec};
 
 use super::spec::{arch_tag, Scenario};
 use super::workload;
@@ -86,21 +88,41 @@ fn run_delegated(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
     Ok(())
 }
 
-fn run_generic(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
-    let jobs = {
-        let j = opts.jobs_override.unwrap_or(sc.workload.jobs);
-        if opts.quick {
-            j.min(12)
-        } else {
-            j
-        }
-    };
-    let trace = workload::build(&sc.workload, jobs)?;
-    let cluster = sc.cluster.to_config();
+/// The job count a generic run actually simulates: the `--jobs` override
+/// (or the spec's), clamped to 12 under quick mode.
+pub fn effective_jobs(sc: &Scenario, jobs_override: Option<usize>, quick: bool) -> usize {
+    let j = jobs_override.unwrap_or(sc.workload.jobs);
+    if quick {
+        j.min(12)
+    } else {
+        j
+    }
+}
 
-    // driver caps: spec overrides (0 = default), then quick-mode bounds
-    // (heavily faulted jobs may never converge — same clamps as the
-    // resilience experiment's quick mode)
+/// The generic sweep grid, arch-major — the serial row order. The fabric
+/// dispatcher scatters this list, so cell index `i` means the same
+/// `(arch, policy)` pair in-process, on a worker, and in a journal.
+pub fn grid(sc: &Scenario) -> Vec<(Arch, String)> {
+    sweep::cross(&sc.archs, &sc.policies)
+}
+
+/// Everything a generic cell needs beyond its `(arch, policy)`
+/// coordinates — all of it a pure function of (spec, jobs, quick), so a
+/// remote worker rebuilding it from the `SweepSpec` gets bit-identical
+/// inputs.
+struct Prep {
+    trace: Vec<JobSpec>,
+    cluster: ClusterConfig,
+    plan: FaultPlan,
+    max_job_duration_s: f64,
+    max_updates_per_job: u64,
+    max_iters_per_job: u64,
+}
+
+/// Driver caps: spec overrides (0 = default), then quick-mode bounds
+/// (heavily faulted jobs may never converge — same clamps as the
+/// resilience experiment's quick mode).
+fn caps(sc: &Scenario, quick: bool) -> (f64, u64, u64) {
     let defaults = DriverConfig::default();
     let mut max_job_duration_s = if sc.driver.max_job_duration_s > 0.0 {
         sc.driver.max_job_duration_s
@@ -117,63 +139,119 @@ fn run_generic(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
     } else {
         defaults.max_iters_per_job
     };
-    if opts.quick {
+    if quick {
         max_job_duration_s = max_job_duration_s.min(12_000.0);
         max_updates_per_job = max_updates_per_job.min(25_000);
         max_iters_per_job = max_iters_per_job.min(40_000);
     }
+    (max_job_duration_s, max_updates_per_job, max_iters_per_job)
+}
 
+fn prepare(sc: &Scenario, jobs: usize, quick: bool) -> crate::Result<Prep> {
+    let trace = workload::build(&sc.workload, jobs)?;
+    let cluster = sc.cluster.to_config();
+    let (max_job_duration_s, max_updates_per_job, max_iters_per_job) = caps(sc, quick);
     let span = span_for(&trace, max_job_duration_s);
     let plan = sc.faults.plan(&trace, span, cluster.total_servers());
+    Ok(Prep { trace, cluster, plan, max_job_duration_s, max_updates_per_job, max_iters_per_job })
+}
 
-    // policy names were checked by run()'s validate() — the per-cell
-    // factories below run mid-simulation, where failing is no longer an
-    // option (the same contract exp::run_system documents)
-    let policy_refs: Vec<&str> = sc.policies.iter().map(|s| s.as_str()).collect();
-    let cells = sweep::cross(&sc.archs, &policy_refs);
-    eprintln!(
-        "[scenario] {}: {} cells ({} archs x {} policies, {} jobs, {} faults) on {} thread(s)…",
-        sc.name,
-        cells.len(),
-        sc.archs.len(),
-        sc.policies.len(),
-        trace.len(),
-        plan.len(),
-        opts.threads
+/// Run one grid cell's driver and render its row pair — the *only*
+/// formatter for generic scenario rows, shared by the in-process sweep
+/// and remote workers.
+fn cell_rows(sc: &Scenario, prep: &Prep, arch: Arch, sys: &str) -> CellRows {
+    let cfg = DriverConfig {
+        arch,
+        cluster: prep.cluster.clone(),
+        seed: sc.driver.seed,
+        record_series: false,
+        max_job_duration_s: prep.max_job_duration_s,
+        max_updates_per_job: prep.max_updates_per_job,
+        max_iters_per_job: prep.max_iters_per_job,
+        faults: prep.plan.clone(),
+        ..Default::default()
+    };
+    let name = sys.to_string();
+    let driver = Driver::new(
+        cfg,
+        prep.trace.clone(),
+        Box::new(move |_| make_policy(&name).expect("validated above")),
     );
-    let results = sweep::run_indexed(
-        &cells,
-        opts.threads,
-        |_, &(arch, sys)| -> crate::Result<Vec<JobStats>> {
-            let cfg = DriverConfig {
-                arch,
-                cluster: cluster.clone(),
-                seed: sc.driver.seed,
-                record_series: false,
-                max_job_duration_s,
-                max_updates_per_job,
-                max_iters_per_job,
-                faults: plan.clone(),
-                ..Default::default()
-            };
-            let t0 = std::time::Instant::now();
-            let name = sys.to_string();
-            let driver = Driver::new(
-                cfg,
-                trace.clone(),
-                Box::new(move |_| make_policy(&name).expect("validated above")),
-            );
-            let stats = driver.run().0;
-            eprintln!(
-                "[scenario]   {sys}/{}: {:.1}s wall",
-                arch_tag(arch),
-                t0.elapsed().as_secs_f64()
-            );
-            Ok(stats)
-        },
-    );
-    let results = results.into_iter().collect::<crate::Result<Vec<_>>>()?;
+    let stats = driver.run().0;
+    let s = summarize(&stats);
+    // -1 = "no job reached the target" (NaN is not valid JSON)
+    let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+    let jct_mean = stats::mean(&s.jct);
+    let downtime_mean = stats::mean(&s.downtime);
+    let rollbacks: f64 = s.rollbacks.iter().sum();
+    let straggler_mean = stats::mean(&s.stragglers);
+    let csv = [
+        table::s(sys),
+        table::s(arch_tag(arch)),
+        table::i(s.jobs as i64),
+        table::i(prep.plan.len() as i64),
+        table::f(tta_mean, 0),
+        table::f(jct_mean, 0),
+        table::f(downtime_mean, 1),
+        table::i(rollbacks as i64),
+        table::f(straggler_mean, 1),
+        table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+    ]
+    .iter()
+    .map(|c| c.render())
+    .collect();
+    let json = jsonio::obj(vec![
+        ("name", jsonio::s(&format!("scenario/{}/{sys}/{}", sc.name, arch_tag(arch)))),
+        ("iters", jsonio::num(s.jobs as f64)),
+        // headline metric in the bench schema's slot: mean JCT
+        ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+        ("tta_mean_s", jsonio::num(tta_mean)),
+        ("jct_mean_s", jsonio::num(jct_mean)),
+        ("downtime_mean_s", jsonio::num(downtime_mean)),
+        ("rollbacks", jsonio::num(rollbacks)),
+        ("straggler_episodes_mean", jsonio::num(straggler_mean)),
+        ("tta_reached", jsonio::num(s.tta_reached as f64)),
+        ("jobs", jsonio::num(s.jobs as f64)),
+        ("fault_count", jsonio::num(prep.plan.len() as f64)),
+    ]);
+    CellRows { csv, json }
+}
 
+/// Compute one generic grid cell standalone — the fabric worker entry
+/// point. Validates and rebuilds the full preparation from the spec
+/// (pure functions of it), so index `i` here equals index `i` of the
+/// in-process sweep bit for bit.
+pub fn compute_cell(
+    sc: &Scenario,
+    jobs_override: Option<usize>,
+    quick: bool,
+    index: usize,
+) -> crate::Result<CellRows> {
+    sc.validate().with_context(|| format!("scenario {:?}", sc.name))?;
+    if !sc.experiments.is_empty() {
+        anyhow::bail!("scenario {:?} delegates to experiments; not a generic grid", sc.name);
+    }
+    let cells = grid(sc);
+    let (arch, sys) = cells
+        .get(index)
+        .with_context(|| format!("cell index {index} out of range (grid has {})", cells.len()))?
+        .clone();
+    let prep = prepare(sc, effective_jobs(sc, jobs_override, quick), quick)?;
+    Ok(cell_rows(sc, &prep, arch, &sys))
+}
+
+/// Assemble the final artifacts from index-ordered cell rows: printed
+/// table, `scenario_<name>.csv`, `scenario_<name>.json`. Both the serial
+/// sweep and the fabric dispatcher end here — the artifacts are a pure
+/// function of the merged rows plus the effective invocation, which is
+/// why a dispatched run is byte-identical to a serial one.
+pub fn assemble_generic(
+    sc: &Scenario,
+    out_dir: &std::path::Path,
+    quick: bool,
+    jobs: usize,
+    rows: &[CellRows],
+) -> crate::Result<()> {
     let mut t = Table::new(
         &format!("Scenario {} — {}", sc.name, sc.description),
         &[
@@ -190,74 +268,72 @@ fn run_generic(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
         ],
     );
     let mut results_json: Vec<Json> = Vec::new();
-    for (&(arch, sys), stats) in cells.iter().zip(&results) {
-        let s = summarize(stats);
-        // -1 = "no job reached the target" (NaN is not valid JSON)
-        let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
-        let jct_mean = stats::mean(&s.jct);
-        let downtime_mean = stats::mean(&s.downtime);
-        let rollbacks: f64 = s.rollbacks.iter().sum();
-        let straggler_mean = stats::mean(&s.stragglers);
-        t.rowf(&[
-            table::s(sys),
-            table::s(arch_tag(arch)),
-            table::i(s.jobs as i64),
-            table::i(plan.len() as i64),
-            table::f(tta_mean, 0),
-            table::f(jct_mean, 0),
-            table::f(downtime_mean, 1),
-            table::i(rollbacks as i64),
-            table::f(straggler_mean, 1),
-            table::s(format!("{}/{}", s.tta_reached, s.jobs)),
-        ]);
-        results_json.push(jsonio::obj(vec![
-            ("name", jsonio::s(&format!("scenario/{}/{sys}/{}", sc.name, arch_tag(arch)))),
-            ("iters", jsonio::num(s.jobs as f64)),
-            // headline metric in the bench schema's slot: mean JCT
-            ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
-            ("tta_mean_s", jsonio::num(tta_mean)),
-            ("jct_mean_s", jsonio::num(jct_mean)),
-            ("downtime_mean_s", jsonio::num(downtime_mean)),
-            ("rollbacks", jsonio::num(rollbacks)),
-            ("straggler_episodes_mean", jsonio::num(straggler_mean)),
-            ("tta_reached", jsonio::num(s.tta_reached as f64)),
-            ("jobs", jsonio::num(s.jobs as f64)),
-            ("fault_count", jsonio::num(plan.len() as f64)),
-        ]));
+    for r in rows {
+        t.row(r.csv.clone());
+        results_json.push(r.json.clone());
     }
     t.print();
 
-    if let Err(e) = std::fs::create_dir_all(&opts.out_dir) {
-        eprintln!("warning: could not create {}: {e}", opts.out_dir.display());
-    }
-    let csv = opts.out_dir.join(format!("scenario_{}.csv", sc.name));
-    if let Err(e) = t.save_csv(&csv) {
-        eprintln!("warning: could not save {}: {e}", csv.display());
-    }
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let csv = out_dir.join(format!("scenario_{}.csv", sc.name));
+    t.save_csv(&csv).with_context(|| format!("saving {}", csv.display()))?;
+    let (max_job_duration_s, _, _) = caps(sc, quick);
     let doc = jsonio::obj(vec![
         ("schema", jsonio::s("star-bench-v1")),
         ("generated_by", jsonio::s("star::scenario")),
         ("scenario", sc.to_json()),
         // what actually ran: --quick/--jobs change the workload without
         // touching the spec, so the artifact records the effective
-        // invocation next to the (unmodified) spec it came from
+        // invocation next to the (unmodified) spec it came from.
+        // Run-variant knobs (thread count, dispatch fleet shape) are
+        // deliberately absent: the artifact is run-invariant — identical
+        // bytes at any --threads and under fabric dispatch
         (
             "invocation",
             jsonio::obj(vec![
-                ("quick", jsonio::b(opts.quick)),
+                ("quick", jsonio::b(quick)),
                 ("jobs", jsonio::num(jobs as f64)),
-                ("threads", jsonio::num(opts.threads as f64)),
                 ("max_job_duration_s", jsonio::num(max_job_duration_s)),
             ]),
         ),
         ("results", Json::Arr(results_json)),
     ]);
-    let path = opts.out_dir.join(format!("scenario_{}.json", sc.name));
-    match std::fs::write(&path, doc.to_string_pretty()) {
-        Ok(()) => println!("scenario results written to {}", path.display()),
-        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
-    }
+    let path = out_dir.join(format!("scenario_{}.json", sc.name));
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("scenario results written to {}", path.display());
     Ok(())
+}
+
+fn run_generic(sc: &Scenario, opts: &RunOpts) -> crate::Result<()> {
+    let jobs = effective_jobs(sc, opts.jobs_override, opts.quick);
+    let prep = prepare(sc, jobs, opts.quick)?;
+    // policy names were checked by run()'s validate() — the per-cell
+    // factories below run mid-simulation, where failing is no longer an
+    // option (the same contract exp::run_system documents)
+    let cells = grid(sc);
+    eprintln!(
+        "[scenario] {}: {} cells ({} archs x {} policies, {} jobs, {} faults) on {} thread(s)…",
+        sc.name,
+        cells.len(),
+        sc.archs.len(),
+        sc.policies.len(),
+        prep.trace.len(),
+        prep.plan.len(),
+        opts.threads
+    );
+    let results = sweep::run_indexed(&cells, opts.threads, |_, (arch, sys)| {
+        let t0 = std::time::Instant::now();
+        let rows = cell_rows(sc, &prep, *arch, sys);
+        eprintln!(
+            "[scenario]   {sys}/{}: {:.1}s wall",
+            arch_tag(*arch),
+            t0.elapsed().as_secs_f64()
+        );
+        rows
+    })?;
+    assemble_generic(sc, &opts.out_dir, opts.quick, jobs, &results)
 }
 
 #[cfg(test)]

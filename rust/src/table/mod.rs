@@ -101,7 +101,10 @@ pub enum Cell {
 }
 
 impl Cell {
-    fn render(&self) -> String {
+    /// The exact string the cell prints/saves as — public so sweep cells
+    /// can ship pre-rendered rows through the fabric cell protocol and
+    /// the dispatcher can rebuild byte-identical tables via [`Table::row`].
+    pub fn render(&self) -> String {
         match self {
             Cell::S(s) => s.clone(),
             Cell::I(v) => format!("{v}"),

@@ -1,0 +1,230 @@
+//! End-to-end contracts of the sweep fabric (`star dispatch` + `star
+//! worker`): dispatched artifacts are byte-identical to a serial
+//! in-process run, an interrupted dispatch resumes from its journal
+//! re-running only the missing cells, and seeded chaos (worker kills,
+//! stalls) changes nothing but the wall clock.
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+
+use star::exp::{resilience, ExpCtx};
+use star::fabric::chaos::ChaosConfig;
+use star::fabric::dispatch::{dispatch, DispatchOpts, DispatchReport};
+use star::fabric::journal::Journal;
+use star::fabric::SweepSpec;
+use star::scenario::{self, RunOpts, Scenario};
+use star::trace::Arch;
+
+const JOBS: usize = 2;
+/// quick resilience grid: 3 rates x 3 systems
+const CELLS: usize = 9;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("star_fabric_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_star"))
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// The serial ground truth: the resilience experiment run in-process at
+/// `--threads 1`, exactly as `experiments resilience --quick` would.
+fn serial_resilience(out_dir: &Path) {
+    let ctx = ExpCtx {
+        jobs: JOBS,
+        seed: 0,
+        out_dir: out_dir.to_path_buf(),
+        quick: true,
+        fault_rate: 0.0,
+        fault_seed: 0,
+        threads: 1,
+    };
+    resilience::resilience(&ctx).unwrap();
+}
+
+fn resilience_sweep() -> SweepSpec {
+    SweepSpec::Resilience { jobs: JOBS, seed: 0, quick: true, fault_seed: 0 }
+}
+
+fn base_opts(out_dir: &Path) -> DispatchOpts {
+    DispatchOpts {
+        workers: 3,
+        out_dir: out_dir.to_path_buf(),
+        worker_bin: Some(worker_bin()),
+        fresh: true,
+        ..Default::default()
+    }
+}
+
+fn assert_same_artifacts(serial: &Path, fabric: &Path, name: &str) {
+    for ext in ["json", "csv"] {
+        let a = serial.join(format!("{name}.{ext}"));
+        let b = fabric.join(format!("{name}.{ext}"));
+        assert_eq!(read(&a), read(&b), "{name}.{ext} must be byte-identical to the serial run");
+    }
+}
+
+#[test]
+fn dispatch_matches_serial_and_resumes_from_a_truncated_journal() {
+    let serial = tmp("serial");
+    let fabric = tmp("fabric");
+    serial_resilience(&serial);
+
+    let sweep = resilience_sweep();
+    let report = dispatch(&sweep, &base_opts(&fabric)).unwrap();
+    assert_eq!((report.cells, report.resumed, report.executed), (CELLS, 0, CELLS));
+    assert_same_artifacts(&serial, &fabric, "resilience");
+
+    // interrupt: keep the header + the first 4 journaled cells, as if
+    // the dispatch died mid-run, then resume without --fresh
+    let journal = fabric.join("resilience.journal.jsonl");
+    let kept: Vec<String> =
+        read(&journal).lines().take(1 + 4).map(str::to_string).collect();
+    assert_eq!(kept.len(), 1 + 4, "the first dispatch must have journaled every cell");
+    std::fs::write(&journal, format!("{}\n", kept.join("\n"))).unwrap();
+
+    let opts = DispatchOpts { fresh: false, ..base_opts(&fabric) };
+    let report = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(
+        (report.resumed, report.executed),
+        (4, CELLS - 4),
+        "resume must re-run exactly the un-journaled cells: {report:?}"
+    );
+    assert_same_artifacts(&serial, &fabric, "resilience");
+}
+
+#[test]
+fn chaos_kills_and_stalls_change_nothing_but_the_clock() {
+    let serial = tmp("chaos_serial");
+    serial_resilience(&serial);
+    let sweep = resilience_sweep();
+
+    // every cell's first attempt kills its worker: all nine cells must
+    // complete via crash detection + re-queue on respawned workers
+    let fabric = tmp("chaos_kill");
+    let opts = DispatchOpts {
+        chaos: Some(ChaosConfig { kill_prob: 1.0, stall_prob: 0.0, ..Default::default() }),
+        ..base_opts(&fabric)
+    };
+    let report: DispatchReport = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(report.chaos_kills, CELLS, "{report:?}");
+    assert!(report.worker_deaths >= 2, "the run must survive multiple worker deaths: {report:?}");
+    assert!(report.retries >= CELLS, "every killed cell must be re-queued: {report:?}");
+    assert_eq!(report.executed, CELLS, "{report:?}");
+    assert_same_artifacts(&serial, &fabric, "resilience");
+
+    // every cell's first attempt stalls: completion may race a
+    // straggler re-issue, and whoever wins must not change the bytes
+    let fabric = tmp("chaos_stall");
+    let opts = DispatchOpts {
+        chaos: Some(ChaosConfig {
+            kill_prob: 0.0,
+            stall_prob: 1.0,
+            stall_ms: 300,
+            ..Default::default()
+        }),
+        ..base_opts(&fabric)
+    };
+    let report = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(report.chaos_stalls, CELLS, "{report:?}");
+    assert_eq!(report.executed, CELLS, "{report:?}");
+    assert_same_artifacts(&serial, &fabric, "resilience");
+}
+
+#[test]
+fn generic_scenario_dispatch_matches_serial() {
+    let sc = Scenario {
+        name: "fabric_gen".into(),
+        policies: vec!["SSGD".into(), "STAR-H".into()],
+        archs: vec![Arch::Ps],
+        ..Default::default()
+    };
+    let serial = tmp("gen_serial");
+    scenario::run(
+        &sc,
+        &RunOpts { quick: true, jobs_override: Some(JOBS), threads: 1, out_dir: serial.clone() },
+    )
+    .unwrap();
+
+    let fabric = tmp("gen_fabric");
+    let sweep = SweepSpec::from_scenario(&sc, Some(JOBS), true).unwrap();
+    let report = dispatch(&sweep, &base_opts(&fabric)).unwrap();
+    assert_eq!(report.executed, 2, "{report:?}");
+    assert_same_artifacts(&serial, &fabric, "scenario_fabric_gen");
+}
+
+#[test]
+fn foreign_journal_is_refused_without_fresh() {
+    let fabric = tmp("foreign");
+    let path = fabric.join("resilience.journal.jsonl");
+    // a journal from some other sweep (different fingerprint)
+    drop(Journal::open(&path, "some-other-sweep", CELLS, false).unwrap());
+
+    let opts = DispatchOpts { fresh: false, ..base_opts(&fabric) };
+    let err = dispatch(&resilience_sweep(), &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("--fresh"), "{err:#}");
+}
+
+#[test]
+fn broken_worker_binary_fails_instead_of_hanging() {
+    let fabric = tmp("broken_bin");
+    let opts = DispatchOpts {
+        workers: 2,
+        worker_bin: Some(PathBuf::from("/bin/false")),
+        ..base_opts(&fabric)
+    };
+    let err = dispatch(&resilience_sweep(), &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("respawn budget"), "{err:#}");
+}
+
+#[test]
+fn tcp_worker_serves_dispatches_and_survives_them() {
+    // a 1-cell generic sweep keeps this smoke test fast
+    let sc = Scenario {
+        name: "fabric_tcp".into(),
+        policies: vec!["SSGD".into()],
+        archs: vec![Arch::Ps],
+        ..Default::default()
+    };
+    let sweep = SweepSpec::from_scenario(&sc, Some(JOBS), true).unwrap();
+
+    let mut worker = std::process::Command::new(worker_bin())
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(worker.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("star worker listening on ")
+        .unwrap_or_else(|| panic!("unexpected announce line {line:?}"))
+        .to_string();
+
+    let run = |tag: &str| -> DispatchReport {
+        let out = tmp(tag);
+        let opts = DispatchOpts {
+            connect: vec![addr.clone()],
+            out_dir: out.clone(),
+            fresh: true,
+            ..Default::default()
+        };
+        let report = dispatch(&sweep, &opts).unwrap();
+        assert!(out.join("scenario_fabric_tcp.json").is_file());
+        report
+    };
+    // two dispatches against the same worker: it must outlive the first
+    let r1 = run("tcp_a");
+    let r2 = run("tcp_b");
+    assert_eq!((r1.executed, r2.executed), (1, 1));
+
+    let _ = worker.kill();
+    let _ = worker.wait();
+}
