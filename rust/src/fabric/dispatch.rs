@@ -487,8 +487,7 @@ impl Dispatcher<'_> {
             ));
             return;
         }
-        let shift = (self.attempts[cell].max(1) - 1).min(16) as u32;
-        let delay = (self.opts.backoff_ms << shift).min(10_000);
+        let delay = backoff_delay_ms(self.opts.backoff_ms, self.attempts[cell]);
         self.report.retries += 1;
         self.delayed.push((Instant::now() + Duration::from_millis(delay), cell));
     }
@@ -625,4 +624,41 @@ fn spawn_reader(
         }
         let _ = tx.send((slot, gen, Event::Gone));
     });
+}
+
+/// Exponential-backoff re-queue delay: `backoff_ms · 2^(attempt-1)`,
+/// capped at 10 s. Saturating — a huge `--backoff-ms` (or a deep retry)
+/// must clamp to the cap, not wrap around u64 into a near-zero delay
+/// (`backoff_ms << shift` overflows silently in release builds).
+fn backoff_delay_ms(backoff_ms: u64, attempts: usize) -> u64 {
+    let shift = (attempts.max(1) - 1).min(16) as u32;
+    backoff_ms.saturating_mul(1u64 << shift).min(10_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_saturates_instead_of_wrapping() {
+        // the overflow case: u64::MAX / 2 << 1 wraps to u64::MAX - 1,
+        // and << 2 wraps to a tiny number — saturation must cap instead
+        let huge = u64::MAX / 2;
+        for attempts in 1..=20 {
+            assert_eq!(backoff_delay_ms(huge, attempts), 10_000, "attempts={attempts}");
+        }
+        assert_eq!(backoff_delay_ms(huge, 0), 10_000, "attempt 0 is treated as the first");
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt_up_to_the_cap() {
+        assert_eq!(backoff_delay_ms(100, 0), 100);
+        assert_eq!(backoff_delay_ms(100, 1), 100);
+        assert_eq!(backoff_delay_ms(100, 2), 200);
+        assert_eq!(backoff_delay_ms(100, 3), 400);
+        assert_eq!(backoff_delay_ms(100, 8), 10_000, "cap engages");
+        // the shift itself is clamped at 16, so even tiny bases stay sane
+        assert_eq!(backoff_delay_ms(1, 64), 10_000.min(1u64 << 16).min(10_000));
+        assert_eq!(backoff_delay_ms(0, 5), 0, "zero base means no delay at any depth");
+    }
 }

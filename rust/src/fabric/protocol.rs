@@ -22,7 +22,7 @@ use anyhow::Context;
 use crate::exp::{resilience, CellRows, ExpCtx};
 use crate::jsonio::{self, Json};
 use crate::scenario::spec::FaultRegime;
-use crate::scenario::{arch_tag, runner, Scenario};
+use crate::scenario::{arch_tag, runner, search, Scenario, ScenarioSpace};
 
 /// Protocol / schema tag carried by every message.
 pub const PROTOCOL: &str = "star-cell-v1";
@@ -37,6 +37,17 @@ pub enum SweepSpec {
     /// A generic scenario's arch × policy grid, exactly as
     /// `star scenario run` sweeps it.
     Generic { spec: Scenario, jobs_override: Option<usize>, quick: bool },
+    /// A scenario-space search's probe + sample plan, exactly as
+    /// `star scenario search` sweeps it (DESIGN.md §11). Cells are pure
+    /// in `(space, count, points, index)` because the sampler forks a
+    /// fresh RNG per index, so the plan rebuilds identically anywhere.
+    Space {
+        space: ScenarioSpace,
+        count: usize,
+        points: usize,
+        jobs_override: Option<usize>,
+        quick: bool,
+    },
 }
 
 /// Equality is canonical-JSON identity — exactly what the journal's
@@ -89,12 +100,29 @@ impl SweepSpec {
         )
     }
 
+    /// Derive the sweep for a scenario-space search — the dispatched
+    /// flavor of `star scenario search`.
+    pub fn from_space(
+        space: &ScenarioSpace,
+        count: usize,
+        points: usize,
+        jobs_override: Option<usize>,
+        quick: bool,
+    ) -> crate::Result<SweepSpec> {
+        space.validate().with_context(|| format!("space {:?}", space.name))?;
+        if jobs_override == Some(0) {
+            anyhow::bail!("--jobs: a dispatch needs at least one job");
+        }
+        Ok(SweepSpec::Space { space: space.clone(), count, points, jobs_override, quick })
+    }
+
     /// Sweep name — keys the default journal path
     /// (`results/<name>.journal.jsonl`) and log lines.
     pub fn name(&self) -> String {
         match self {
             SweepSpec::Resilience { .. } => "resilience".to_string(),
             SweepSpec::Generic { spec, .. } => format!("scenario_{}", spec.name),
+            SweepSpec::Space { space, .. } => format!("search_{}", space.name),
         }
     }
 
@@ -112,7 +140,7 @@ impl SweepSpec {
                 fault_seed,
                 threads: 1,
             }),
-            SweepSpec::Generic { .. } => None,
+            SweepSpec::Generic { .. } | SweepSpec::Space { .. } => None,
         }
     }
 
@@ -128,6 +156,12 @@ impl SweepSpec {
                 .into_iter()
                 .map(|(arch, sys)| format!("{sys}/{}", arch_tag(arch)))
                 .collect()),
+            SweepSpec::Space { space, count, points, .. } => {
+                Ok(search::plan(space, *count, *points)
+                    .into_iter()
+                    .map(|c| format!("{}/{}/{}", c.scenario.name, c.policy, arch_tag(c.arch)))
+                    .collect())
+            }
         }
     }
 
@@ -144,6 +178,9 @@ impl SweepSpec {
             }
             SweepSpec::Generic { spec, jobs_override, quick } => {
                 runner::compute_cell(spec, *jobs_override, *quick, index)
+            }
+            SweepSpec::Space { space, count, points, jobs_override, quick } => {
+                search::compute_cell(space, *count, *points, *jobs_override, *quick, index)
             }
         }
     }
@@ -163,6 +200,9 @@ impl SweepSpec {
                 runner::effective_jobs(spec, *jobs_override, *quick),
                 rows,
             ),
+            SweepSpec::Space { space, count, points, jobs_override, quick } => {
+                search::assemble(space, out_dir, *count, *points, *quick, *jobs_override, rows)
+            }
         }
     }
 
@@ -186,6 +226,19 @@ impl SweepSpec {
                 }
                 jsonio::obj(pairs)
             }
+            SweepSpec::Space { space, count, points, jobs_override, quick } => {
+                let mut pairs = vec![
+                    ("kind", jsonio::s("space")),
+                    ("count", jsonio::num(*count as f64)),
+                    ("points", jsonio::num(*points as f64)),
+                    ("quick", jsonio::b(*quick)),
+                    ("space", space.to_json()),
+                ];
+                if let Some(j) = jobs_override {
+                    pairs.push(("jobs_override", jsonio::num(*j as f64)));
+                }
+                jsonio::obj(pairs)
+            }
         }
     }
 
@@ -199,6 +252,16 @@ impl SweepSpec {
             }),
             "generic" => Ok(SweepSpec::Generic {
                 spec: Scenario::from_json(j.get("spec")?)?,
+                jobs_override: match j.opt("jobs_override") {
+                    Some(v) => Some(v.u64()? as usize),
+                    None => None,
+                },
+                quick: j.get("quick")?.boolean()?,
+            }),
+            "space" => Ok(SweepSpec::Space {
+                space: ScenarioSpace::from_json(j.get("space")?)?,
+                count: j.get("count")?.u64()? as usize,
+                points: j.get("points")?.u64()? as usize,
                 jobs_override: match j.opt("jobs_override") {
                     Some(v) => Some(v.u64()? as usize),
                     None => None,
@@ -426,12 +489,41 @@ mod tests {
                 jobs_override: None,
                 quick: true,
             },
+            SweepSpec::Space {
+                space: crate::scenario::find_space("mode_choice").unwrap(),
+                count: 3,
+                points: 2,
+                jobs_override: Some(2),
+                quick: true,
+            },
+            SweepSpec::Space {
+                space: crate::scenario::find_space("frontier").unwrap(),
+                count: 1,
+                points: 3,
+                jobs_override: None,
+                quick: false,
+            },
         ];
         for spec in specs {
             let back = SweepSpec::from_json(&spec.to_json()).unwrap();
             assert_eq!(back, spec);
             assert_eq!(back.fingerprint(), spec.fingerprint());
         }
+    }
+
+    #[test]
+    fn from_space_names_and_labels_the_search_plan() {
+        let space = crate::scenario::find_space("mode_choice").unwrap();
+        let sweep = SweepSpec::from_space(&space, 2, 2, Some(2), true).unwrap();
+        assert_eq!(sweep.name(), "search_mode_choice");
+        let labels = sweep.cell_labels().unwrap();
+        // 2 free dims x 2 points x grid + 2 samples x grid
+        let grid = space.policies.len() * space.archs.len();
+        assert_eq!(labels.len(), (2 * 2 + 2) * grid);
+        assert!(labels[0].starts_with("mode_choice-c-"), "{}", labels[0]);
+        assert!(labels.last().unwrap().starts_with("mode_choice-s001/"), "{:?}", labels.last());
+        // zero jobs is as meaningless dispatched as it is in-process
+        assert!(SweepSpec::from_space(&space, 1, 2, Some(0), true).is_err());
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //! binary (DESIGN.md §4); each family is also runnable as a delegated
 //! built-in scenario.
 
+use anyhow::Context;
+
 use star::baselines::make_policy;
 use star::cli::Args;
 use star::driver::{Driver, DriverConfig};
@@ -42,8 +44,12 @@ fn main() {
                  simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  scenario   list | run <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--threads N]\n\
+                 \x20          | sample <space.json|builtin> [--count N] [--out-dir DIR] [--index K]\n\
+                 \x20          | search <space.json|builtin> [--count N] [--points P] [--quick] [--jobs N]\n\
+                 \x20            [--out DIR] [--threads N | --dispatch + dispatch options]\n\
                  worker     [--listen HOST:PORT]   (serve sweep cells over stdio, or TCP with --listen)\n\
-                 dispatch   <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--workers N] [--connect H:P,…]\n\
+                 dispatch   <file.json|builtin|space> [--quick] [--jobs N] [--count N] [--points P]\n\
+                 \x20          [--out DIR] [--workers N] [--connect H:P,…]\n\
                  \x20          [--deadline-s X] [--retries N] [--backoff-ms B] [--straggler-factor F]\n\
                  \x20          [--journal PATH] [--fresh] [--chaos] [--chaos-seed S] [--chaos-kill-prob P]\n\
                  \x20          [--chaos-stall-prob P] [--chaos-stall-ms M] [--worker-bin PATH]\n\
@@ -153,13 +159,15 @@ fn simulate(args: &Args) -> star::Result<()> {
     Ok(())
 }
 
-/// `star scenario list | run <file.json|builtin>` — the declarative
-/// what-if layer. `list` (or `--list`) prints the built-in table;
-/// `run` resolves a spec file or built-in name and executes it.
+/// `star scenario list | run | sample | search` — the declarative
+/// what-if layer. `list` (or `--list`) prints the built-in scenarios
+/// and spaces; `run` executes one spec, `sample` expands a space into
+/// concrete specs (DESIGN.md §11), `search` runs the counterfactual
+/// sensitivity + regret sweep over a space.
 fn scenario(args: &Args) -> star::Result<()> {
-    args.check_known(&["quick", "jobs", "out", "threads", "list"])?;
     let action = args.pos(1);
     if args.flag("list") || action == Some("list") {
+        args.check_known(&["list"])?;
         let mut t = Table::new(
             "Built-in scenarios (star scenario run <name>; spec files: examples/scenarios/)",
             &["name", "flavor", "description"],
@@ -172,10 +180,23 @@ fn scenario(args: &Args) -> star::Result<()> {
             ]);
         }
         t.print();
+        let mut t = Table::new(
+            "Built-in scenario spaces (star scenario sample|search <name>)",
+            &["name", "free dims", "description"],
+        );
+        for sp in star::scenario::builtin_spaces() {
+            t.rowf(&[
+                table::s(sp.name.as_str()),
+                table::s(sp.free_dims().join(",")),
+                table::s(sp.description.as_str()),
+            ]);
+        }
+        t.print();
         return Ok(());
     }
     match action {
         Some("run") => {
+            args.check_known(&["quick", "jobs", "out", "threads"])?;
             let target = args.pos(2).ok_or_else(|| {
                 anyhow::anyhow!(
                     "usage: star scenario run <file.json|builtin> \
@@ -187,18 +208,101 @@ fn scenario(args: &Args) -> star::Result<()> {
                 quick: args.flag("quick"),
                 out_dir: args.str_or("out", "results").into(),
                 threads: star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?),
-                jobs_override: match args.get("jobs") {
-                    None => None,
-                    Some(_) => Some(args.usize_or("jobs", 0)?),
-                },
+                jobs_override: jobs_override(args)?,
             };
             star::scenario::run(&sc, &opts)
         }
+        Some("sample") => scenario_sample(args),
+        Some("search") => scenario_search(args),
         other => anyhow::bail!(
-            "unknown scenario action {:?} (expected: list | run <file.json|builtin>)",
+            "unknown scenario action {:?} (expected: list | run <file.json|builtin> | \
+             sample <space.json|builtin> | search <space.json|builtin>)",
             other.unwrap_or("<missing>")
         ),
     }
+}
+
+/// `star scenario sample <space.json|builtin> --count N [--out-dir D]
+/// [--index K]` — expand a space into concrete validated scenario
+/// specs. `--index K` prints sample K's canonical JSON to stdout
+/// instead; sampling is pure per index (same space+seed+index ⇒
+/// byte-identical spec), so a sampled set is reproducible piecewise.
+fn scenario_sample(args: &Args) -> star::Result<()> {
+    args.check_known(&["count", "out-dir", "index"])?;
+    let target = args.pos(2).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: star scenario sample <space.json|builtin> [--count N] [--out-dir DIR] \
+             [--index K]"
+        )
+    })?;
+    let space = star::scenario::space::load(target)?;
+    space.validate().with_context(|| format!("space {:?}", space.name))?;
+    if args.get("index").is_some() {
+        let k = args.usize_or("index", 0)?;
+        println!("{}", space.sample_at(k).to_json().to_string_pretty());
+        return Ok(());
+    }
+    let count = args.usize_or("count", 16)?;
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "results/samples"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    for k in 0..count {
+        let sc = space.sample_at(k);
+        let path = out_dir.join(format!("{}.json", sc.name));
+        // trailing newline so the file matches `--index K` stdout exactly
+        std::fs::write(&path, format!("{}\n", sc.to_json().to_string_pretty()))
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    println!(
+        "sampled {count} scenarios from space {:?} into {}",
+        space.name,
+        out_dir.display()
+    );
+    Ok(())
+}
+
+/// `star scenario search <space.json|builtin>` — the counterfactual
+/// driver: center-sweep sensitivity probes + sampled regret cells,
+/// in-process via the sweep harness, or scattered over the fabric with
+/// `--dispatch` (byte-identical artifacts either way).
+fn scenario_search(args: &Args) -> star::Result<()> {
+    args.check_known(&[
+        "count", "points", "quick", "jobs", "threads", "out", "dispatch", "workers", "connect",
+        "deadline-s", "retries", "backoff-ms", "straggler-factor", "journal", "fresh", "chaos",
+        "chaos-seed", "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
+    ])?;
+    let target = args.pos(2).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: star scenario search <space.json|builtin> [--count N] [--points P] \
+             [--quick] [--jobs N] [--out DIR] [--threads N | --dispatch + dispatch options]"
+        )
+    })?;
+    let space = star::scenario::space::load(target)?;
+    let count = args.usize_or("count", 16)?;
+    let points = args.usize_or("points", 5)?;
+    let jobs = jobs_override(args)?;
+    let quick = args.flag("quick");
+    if args.flag("dispatch") {
+        let sweep = star::fabric::SweepSpec::from_space(&space, count, points, jobs, quick)?;
+        return star::fabric::dispatch::dispatch(&sweep, &dispatch_opts(args)?).map(|_| ());
+    }
+    let opts = star::scenario::search::SearchOpts {
+        count,
+        points,
+        quick,
+        jobs_override: jobs,
+        threads: star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?),
+        out_dir: args.str_or("out", "results").into(),
+    };
+    star::scenario::search::run(&space, &opts)
+}
+
+/// `--jobs N` is an override: absent means "the spec's own job count".
+fn jobs_override(args: &Args) -> star::Result<Option<usize>> {
+    Ok(match args.get("jobs") {
+        None => None,
+        Some(_) => Some(args.usize_or("jobs", 0)?),
+    })
 }
 
 /// `star worker` — serve sweep cells over the `star-cell-v1` line
@@ -219,20 +323,36 @@ fn worker(args: &Args) -> star::Result<()> {
 /// a serial `--threads 1` run.
 fn dispatch_cmd(args: &Args) -> star::Result<()> {
     args.check_known(&[
-        "quick", "jobs", "out", "workers", "connect", "deadline-s", "retries", "backoff-ms",
-        "straggler-factor", "journal", "fresh", "chaos", "chaos-seed", "chaos-kill-prob",
-        "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
+        "quick", "jobs", "count", "points", "out", "workers", "connect", "deadline-s",
+        "retries", "backoff-ms", "straggler-factor", "journal", "fresh", "chaos", "chaos-seed",
+        "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
     ])?;
     let target = args.pos(1).ok_or_else(|| {
         anyhow::anyhow!("usage: star dispatch <file.json|builtin> [options] (see `star` usage)")
     })?;
-    let sc = star::scenario::load(target)?;
-    let jobs_override = match args.get("jobs") {
-        None => None,
-        Some(_) => Some(args.usize_or("jobs", 0)?),
+    let jobs = jobs_override(args)?;
+    let quick = args.flag("quick");
+    // a dispatch target is a scenario or a scenario space; scenarios win
+    // ties (address a space explicitly via `scenario search --dispatch`)
+    let sweep = match star::scenario::load(target) {
+        Ok(sc) => star::fabric::SweepSpec::from_scenario(&sc, jobs, quick)?,
+        Err(scenario_err) => match star::scenario::space::load(target) {
+            Ok(space) => star::fabric::SweepSpec::from_space(
+                &space,
+                args.usize_or("count", 16)?,
+                args.usize_or("points", 5)?,
+                jobs,
+                quick,
+            )?,
+            Err(_) => return Err(scenario_err),
+        },
     };
-    let sweep = star::fabric::SweepSpec::from_scenario(&sc, jobs_override, args.flag("quick"))?;
-    let out_dir: std::path::PathBuf = args.str_or("out", "results").into();
+    star::fabric::dispatch::dispatch(&sweep, &dispatch_opts(args)?).map(|_| ())
+}
+
+/// The fabric flags shared by `star dispatch` and
+/// `star scenario search --dispatch`.
+fn dispatch_opts(args: &Args) -> star::Result<star::fabric::dispatch::DispatchOpts> {
     let chaos = if args.flag("chaos") {
         let defaults = star::fabric::chaos::ChaosConfig::default();
         Some(star::fabric::chaos::ChaosConfig {
@@ -245,13 +365,13 @@ fn dispatch_cmd(args: &Args) -> star::Result<()> {
     } else {
         None
     };
-    let opts = star::fabric::dispatch::DispatchOpts {
+    Ok(star::fabric::dispatch::DispatchOpts {
         workers: args.usize_or("workers", 4)?,
         connect: match args.get("connect") {
             Some(list) => list.split(',').map(|a| a.trim().to_string()).collect(),
             None => Vec::new(),
         },
-        out_dir,
+        out_dir: args.str_or("out", "results").into(),
         journal: args.get("journal").map(std::path::PathBuf::from),
         fresh: args.flag("fresh"),
         deadline_s: args.f64_or("deadline-s", 600.0)?,
@@ -260,8 +380,7 @@ fn dispatch_cmd(args: &Args) -> star::Result<()> {
         straggler_factor: args.f64_or("straggler-factor", 3.0)?,
         chaos,
         worker_bin: args.get("worker-bin").map(std::path::PathBuf::from),
-    };
-    star::fabric::dispatch::dispatch(&sweep, &opts).map(|_| ())
+    })
 }
 
 fn replay(args: &Args) -> star::Result<()> {

@@ -15,18 +15,27 @@
 //!   full-config, and storm front-ends over the `faults` generators);
 //! * [`runner`] — spec → results (sweep-parallel, artifact-emitting);
 //! * [`builtin`] — the named scenarios behind `star scenario run <name>`
-//!   (every experiment family as data, plus generator-family what-ifs).
+//!   (every experiment family as data, plus generator-family what-ifs);
+//! * [`space`] — a *distribution* over scenarios ([`ScenarioSpace`],
+//!   DESIGN.md §11): per-dimension ranges/choices plus a seeded,
+//!   per-index-pure sampler behind `star scenario sample`;
+//! * [`search`] — the counterfactual driver behind `star scenario
+//!   search`: center-sweep sensitivity + per-sample regret reports over
+//!   a space, in-process or dispatched over the fabric (§10).
 //!
 //! Example spec files live under `examples/scenarios/` and are parsed +
 //! smoke-run by `tests/scenario_examples.rs` and the CI scenario step.
 
 pub mod builtin;
 pub mod runner;
+pub mod search;
+pub mod space;
 pub mod spec;
 pub mod workload;
 
 pub use builtin::{builtin_names, builtins, find_builtin};
 pub use runner::{run, RunOpts};
+pub use space::{builtin_spaces, find_space, space_names, ScenarioSpace};
 pub use spec::{
     arch_tag, parse_arch, Arrival, ClusterShape, DriverKnobs, FaultRegime, ModelMix, PsSpec,
     Scenario, WorkloadSpec,

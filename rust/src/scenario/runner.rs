@@ -109,20 +109,21 @@ pub fn grid(sc: &Scenario) -> Vec<(Arch, String)> {
 /// Everything a generic cell needs beyond its `(arch, policy)`
 /// coordinates — all of it a pure function of (spec, jobs, quick), so a
 /// remote worker rebuilding it from the `SweepSpec` gets bit-identical
-/// inputs.
-struct Prep {
-    trace: Vec<JobSpec>,
-    cluster: ClusterConfig,
-    plan: FaultPlan,
-    max_job_duration_s: f64,
-    max_updates_per_job: u64,
-    max_iters_per_job: u64,
+/// inputs. `pub(super)` so the space-search driver can run its own cells
+/// through the exact same preparation.
+pub(super) struct Prep {
+    pub(super) trace: Vec<JobSpec>,
+    pub(super) cluster: ClusterConfig,
+    pub(super) plan: FaultPlan,
+    pub(super) max_job_duration_s: f64,
+    pub(super) max_updates_per_job: u64,
+    pub(super) max_iters_per_job: u64,
 }
 
 /// Driver caps: spec overrides (0 = default), then quick-mode bounds
 /// (heavily faulted jobs may never converge — same clamps as the
 /// resilience experiment's quick mode).
-fn caps(sc: &Scenario, quick: bool) -> (f64, u64, u64) {
+pub(super) fn caps(sc: &Scenario, quick: bool) -> (f64, u64, u64) {
     let defaults = DriverConfig::default();
     let mut max_job_duration_s = if sc.driver.max_job_duration_s > 0.0 {
         sc.driver.max_job_duration_s
@@ -147,7 +148,7 @@ fn caps(sc: &Scenario, quick: bool) -> (f64, u64, u64) {
     (max_job_duration_s, max_updates_per_job, max_iters_per_job)
 }
 
-fn prepare(sc: &Scenario, jobs: usize, quick: bool) -> crate::Result<Prep> {
+pub(super) fn prepare(sc: &Scenario, jobs: usize, quick: bool) -> crate::Result<Prep> {
     let trace = workload::build(&sc.workload, jobs)?;
     let cluster = sc.cluster.to_config();
     let (max_job_duration_s, max_updates_per_job, max_iters_per_job) = caps(sc, quick);
@@ -156,10 +157,15 @@ fn prepare(sc: &Scenario, jobs: usize, quick: bool) -> crate::Result<Prep> {
     Ok(Prep { trace, cluster, plan, max_job_duration_s, max_updates_per_job, max_iters_per_job })
 }
 
-/// Run one grid cell's driver and render its row pair — the *only*
-/// formatter for generic scenario rows, shared by the in-process sweep
-/// and remote workers.
-fn cell_rows(sc: &Scenario, prep: &Prep, arch: Arch, sys: &str) -> CellRows {
+/// Run one prepared cell's driver and summarize it — the single driver
+/// invocation shared by generic scenario rows and the space-search
+/// driver (so both report the same simulation bit for bit).
+pub(super) fn cell_summary(
+    sc: &Scenario,
+    prep: &Prep,
+    arch: Arch,
+    sys: &str,
+) -> crate::exp::Summary {
     let cfg = DriverConfig {
         arch,
         cluster: prep.cluster.clone(),
@@ -177,8 +183,14 @@ fn cell_rows(sc: &Scenario, prep: &Prep, arch: Arch, sys: &str) -> CellRows {
         prep.trace.clone(),
         Box::new(move |_| make_policy(&name).expect("validated above")),
     );
-    let stats = driver.run().0;
-    let s = summarize(&stats);
+    summarize(&driver.run().0)
+}
+
+/// Run one grid cell's driver and render its row pair — the *only*
+/// formatter for generic scenario rows, shared by the in-process sweep
+/// and remote workers.
+fn cell_rows(sc: &Scenario, prep: &Prep, arch: Arch, sys: &str) -> CellRows {
+    let s = cell_summary(sc, prep, arch, sys);
     // -1 = "no job reached the target" (NaN is not valid JSON)
     let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
     let jct_mean = stats::mean(&s.jct);

@@ -1,0 +1,714 @@
+//! Counterfactual search over a [`ScenarioSpace`] (DESIGN.md §11): run
+//! one-factor sensitivity probes (all dims at center, one swept across
+//! its range) plus `count` random samples of the space, each × the
+//! space's policy × arch grid, and assemble three reports:
+//!
+//! * `search_<name>.csv` / `.json` — every cell (probe + sample rows);
+//! * `search_<name>_sensitivity.csv` — per free dimension, the spread
+//!   of mean TTA and p99 JCT across its probe points, ranked by p99
+//!   spread ("which knob most moves the tail?");
+//! * `search_<name>_regret.csv` — per policy × arch, wins / mean / max
+//!   regret in mean JCT vs the per-sample best ("at what fault rate
+//!   does STAR's advantage collapse?" — scan the JSON `regret.samples`,
+//!   sorted by fault rate, for the winner flip).
+//!
+//! Cells are pure functions of `(space, count, points, index)` — the
+//! same contract generic scenarios have — so the search runs in-process
+//! via [`crate::exp::sweep`] or scattered over the fabric via
+//! `SweepSpec::Space`, byte-identically.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::exp::{sweep, CellRows};
+use crate::jsonio::{self, Json};
+use crate::stats;
+use crate::table::{self, Table};
+use crate::trace::Arch;
+
+use super::runner;
+use super::space::{DimValues, ScenarioSpace};
+use super::spec::{arch_tag, Scenario};
+
+/// Invocation knobs of a search run (CLI-derived).
+#[derive(Clone, Debug)]
+pub struct SearchOpts {
+    /// random samples of the space (on top of the sensitivity probes)
+    pub count: usize,
+    /// probe points per free dimension of the sensitivity sweep
+    pub points: usize,
+    pub quick: bool,
+    pub jobs_override: Option<usize>,
+    pub threads: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for SearchOpts {
+    fn default() -> Self {
+        SearchOpts {
+            count: 16,
+            points: 5,
+            quick: false,
+            jobs_override: None,
+            threads: sweep::available_threads(),
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+/// What a cell probes: a sensitivity point or a random sample.
+#[derive(Clone, Debug)]
+pub enum CellKind {
+    /// all dims at center, `dim` at probe point `point` (= `label`)
+    Center { dim: &'static str, point: usize, label: String },
+    /// random sample `index` of the space
+    Sample { index: usize },
+}
+
+/// One planned search cell: a concrete scenario × one grid coordinate.
+#[derive(Clone, Debug)]
+pub struct SearchCell {
+    pub scenario: Scenario,
+    /// the dim assignment the scenario was materialized from
+    pub values: DimValues,
+    pub arch: Arch,
+    pub policy: String,
+    pub kind: CellKind,
+}
+
+/// The full deterministic cell list: sensitivity probes (free dims in
+/// roster order × probe points), then samples `0..count` — each × the
+/// policy × arch grid in [`sweep::cross`] order. Cell index `i` means
+/// the same work in-process, on a fabric worker, and in a journal.
+pub fn plan(space: &ScenarioSpace, count: usize, points: usize) -> Vec<SearchCell> {
+    let grid = sweep::cross(&space.archs, &space.policies);
+    let mut cells = Vec::new();
+    for dim in space.free_dims() {
+        for (pi, (label, values)) in space.dim_points(dim, points).into_iter().enumerate() {
+            let sc =
+                space.center_scenario(&format!("{}-c-{dim}-p{pi}", space.name), &values);
+            for (arch, policy) in &grid {
+                cells.push(SearchCell {
+                    scenario: sc.clone(),
+                    values: values.clone(),
+                    arch: *arch,
+                    policy: policy.clone(),
+                    kind: CellKind::Center { dim, point: pi, label: label.clone() },
+                });
+            }
+        }
+    }
+    for index in 0..count {
+        let sc = space.sample_at(index);
+        let values = space.sample_values_at(index).0;
+        for (arch, policy) in &grid {
+            cells.push(SearchCell {
+                scenario: sc.clone(),
+                values: values.clone(),
+                arch: *arch,
+                policy: policy.clone(),
+                kind: CellKind::Sample { index },
+            });
+        }
+    }
+    cells
+}
+
+/// Compute one search cell standalone — the fabric worker entry point.
+/// Rebuilds the plan from `(space, count, points)` so index `i` here
+/// equals index `i` of the in-process sweep bit for bit.
+pub fn compute_cell(
+    space: &ScenarioSpace,
+    count: usize,
+    points: usize,
+    jobs_override: Option<usize>,
+    quick: bool,
+    index: usize,
+) -> crate::Result<CellRows> {
+    space.validate().with_context(|| format!("space {:?}", space.name))?;
+    let cells = plan(space, count, points);
+    let cell = cells.get(index).with_context(|| {
+        format!("cell index {index} out of range (search has {} cells)", cells.len())
+    })?;
+    run_cell(space, cell, jobs_override, quick)
+}
+
+/// Run one cell's driver and render its row pair — the only formatter
+/// for search rows, shared by the in-process sweep and remote workers.
+fn run_cell(
+    space: &ScenarioSpace,
+    cell: &SearchCell,
+    jobs_override: Option<usize>,
+    quick: bool,
+) -> crate::Result<CellRows> {
+    let sc = &cell.scenario;
+    let jobs = runner::effective_jobs(sc, jobs_override, quick);
+    let prep = runner::prepare(sc, jobs, quick)?;
+    let s = runner::cell_summary(sc, &prep, cell.arch, &cell.policy);
+    // -1 = "no job reached the target" (NaN is not valid JSON)
+    let tta_mean = if s.tta.is_empty() { -1.0 } else { stats::mean(&s.tta) };
+    let jct_mean = stats::mean(&s.jct);
+    let jct_p99 = if s.jct.is_empty() { -1.0 } else { stats::percentile(&s.jct, 99.0) };
+    let (kind, probe) = match &cell.kind {
+        CellKind::Center { dim, label, .. } => ("center", format!("{dim}={label}")),
+        CellKind::Sample { index } => ("sample", format!("s{index:03}")),
+    };
+    let csv = [
+        table::s(kind),
+        table::s(sc.name.as_str()),
+        table::s(probe.as_str()),
+        table::s(cell.policy.as_str()),
+        table::s(arch_tag(cell.arch)),
+        table::i(s.jobs as i64),
+        table::i(prep.plan.len() as i64),
+        table::f(tta_mean, 0),
+        table::f(jct_mean, 0),
+        table::f(jct_p99, 0),
+        table::s(format!("{}/{}", s.tta_reached, s.jobs)),
+    ]
+    .iter()
+    .map(|c| c.render())
+    .collect();
+    let json = jsonio::obj(vec![
+        (
+            "name",
+            jsonio::s(&format!(
+                "search/{}/{}/{}/{}",
+                space.name,
+                sc.name,
+                cell.policy,
+                arch_tag(cell.arch)
+            )),
+        ),
+        ("kind", jsonio::s(kind)),
+        ("probe", jsonio::s(&probe)),
+        ("scenario", jsonio::s(&sc.name)),
+        ("policy", jsonio::s(&cell.policy)),
+        ("arch", jsonio::s(arch_tag(cell.arch))),
+        ("iters", jsonio::num(s.jobs as f64)),
+        // headline metric in the bench schema's slot: mean JCT
+        ("ns_per_iter", jsonio::num(jct_mean * 1e9)),
+        ("tta_mean_s", jsonio::num(tta_mean)),
+        ("jct_mean_s", jsonio::num(jct_mean)),
+        ("jct_p99_s", jsonio::num(jct_p99)),
+        ("tta_reached", jsonio::num(s.tta_reached as f64)),
+        ("jobs", jsonio::num(s.jobs as f64)),
+        ("fault_count", jsonio::num(prep.plan.len() as f64)),
+        // the full dim assignment, so every row is a labeled
+        // counterfactual data point (ROADMAP item 4's corpus)
+        ("knobs", space.knobs_json(&cell.values)),
+    ]);
+    Ok(CellRows { csv, json })
+}
+
+/// Run the whole search in-process and assemble the reports.
+pub fn run(space: &ScenarioSpace, opts: &SearchOpts) -> crate::Result<()> {
+    space.validate().with_context(|| format!("space {:?}", space.name))?;
+    if opts.jobs_override == Some(0) {
+        anyhow::bail!("--jobs: a search needs at least one job per scenario");
+    }
+    let cells = plan(space, opts.count, opts.points);
+    let free = space.free_dims();
+    eprintln!(
+        "[search] {}: {} cells ({} free dims x ≤{} points + {} samples, {} policies x {} \
+         archs) on {} thread(s)…",
+        space.name,
+        cells.len(),
+        free.len(),
+        opts.points,
+        opts.count,
+        space.policies.len(),
+        space.archs.len(),
+        opts.threads
+    );
+    let rows = sweep::run_indexed(&cells, opts.threads, |i, cell| {
+        let t0 = std::time::Instant::now();
+        let rows = run_cell(space, cell, opts.jobs_override, opts.quick)
+            .unwrap_or_else(|e| panic!("search cell {i} failed: {e:#}"));
+        eprintln!(
+            "[search]   {}/{}/{}: {:.1}s wall",
+            cell.scenario.name,
+            cell.policy,
+            arch_tag(cell.arch),
+            t0.elapsed().as_secs_f64()
+        );
+        rows
+    })?;
+    assemble(space, &opts.out_dir, opts.count, opts.points, opts.quick, opts.jobs_override, &rows)
+}
+
+/// Assemble the reports from index-ordered cell rows. Both the
+/// in-process sweep and the fabric dispatcher end here, and everything
+/// is a pure function of `(space, invocation, rows)` — which is why a
+/// dispatched search is byte-identical to `--threads 1`.
+pub fn assemble(
+    space: &ScenarioSpace,
+    out_dir: &Path,
+    count: usize,
+    points: usize,
+    quick: bool,
+    jobs_override: Option<usize>,
+    rows: &[CellRows],
+) -> crate::Result<()> {
+    let cells = plan(space, count, points);
+    anyhow::ensure!(
+        cells.len() == rows.len(),
+        "search rows/plan mismatch: {} rows for {} planned cells",
+        rows.len(),
+        cells.len()
+    );
+    let mut t = Table::new(
+        &format!("Search {} — {}", space.name, space.description),
+        &[
+            "kind",
+            "scenario",
+            "probe",
+            "policy",
+            "arch",
+            "jobs",
+            "faults",
+            "tta_mean_s",
+            "jct_mean_s",
+            "jct_p99_s",
+            "reached",
+        ],
+    );
+    for r in rows {
+        t.row(r.csv.clone());
+    }
+    t.print();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let csv = out_dir.join(format!("search_{}.csv", space.name));
+    t.save_csv(&csv).with_context(|| format!("saving {}", csv.display()))?;
+
+    let sensitivity = sensitivity_report(space, points, &cells, rows);
+    let regret = regret_report(space, &cells, rows);
+    sensitivity_table(&sensitivity).save_csv(
+        &out_dir.join(format!("search_{}_sensitivity.csv", space.name)),
+    )?;
+    regret_table(&regret).save_csv(&out_dir.join(format!("search_{}_regret.csv", space.name)))?;
+    sensitivity_table(&sensitivity).print();
+    regret_table(&regret).print();
+
+    let mut invocation = vec![
+        ("count", jsonio::num(count as f64)),
+        ("points", jsonio::num(points as f64)),
+        ("quick", jsonio::b(quick)),
+    ];
+    if let Some(jobs) = jobs_override {
+        invocation.push(("jobs", jsonio::num(jobs as f64)));
+    }
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::scenario::search")),
+        ("space", space.to_json()),
+        // run-variant knobs (threads, fleet shape) are deliberately
+        // absent — the artifact is run-invariant (DESIGN.md §10)
+        ("invocation", jsonio::obj(invocation)),
+        ("results", Json::Arr(rows.iter().map(|r| r.json.clone()).collect())),
+        ("sensitivity", sensitivity_json(&sensitivity)),
+        ("regret", regret_json(&regret)),
+    ]);
+    let path = out_dir.join(format!("search_{}.json", space.name));
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("search results written to {}", path.display());
+    Ok(())
+}
+
+// -- sensitivity -------------------------------------------------------------
+
+struct DimSensitivity {
+    dim: &'static str,
+    /// (label, mean tta over the point's grid cells or -1, mean p99 jct)
+    points: Vec<(String, f64, f64)>,
+    tta_spread: f64,
+    p99_spread: f64,
+}
+
+fn row_num(r: &CellRows, key: &str) -> f64 {
+    r.json.get(key).and_then(|v| v.num()).unwrap_or(-1.0)
+}
+
+/// Per free dimension: aggregate each probe point's grid cells, then
+/// measure how far the point means move across the dimension's range.
+/// Ranked by p99-JCT spread (descending) — the "which knob most moves
+/// the tail" ordering.
+fn sensitivity_report(
+    space: &ScenarioSpace,
+    points: usize,
+    cells: &[SearchCell],
+    rows: &[CellRows],
+) -> Vec<DimSensitivity> {
+    let mut report = Vec::new();
+    for dim in space.free_dims() {
+        let labels: Vec<String> =
+            space.dim_points(dim, points).into_iter().map(|(l, _)| l).collect();
+        let mut pts = Vec::with_capacity(labels.len());
+        for (pi, label) in labels.iter().enumerate() {
+            let matching: Vec<&CellRows> = cells
+                .iter()
+                .zip(rows)
+                .filter(|(c, _)| {
+                    matches!(&c.kind, CellKind::Center { dim: d, point, .. }
+                        if *d == dim && *point == pi)
+                })
+                .map(|(_, r)| r)
+                .collect();
+            let ttas: Vec<f64> = matching
+                .iter()
+                .map(|r| row_num(r, "tta_mean_s"))
+                .filter(|&v| v >= 0.0)
+                .collect();
+            let p99s: Vec<f64> = matching.iter().map(|r| row_num(r, "jct_p99_s")).collect();
+            let tta = if ttas.is_empty() { -1.0 } else { stats::mean(&ttas) };
+            let p99 = if p99s.is_empty() { -1.0 } else { stats::mean(&p99s) };
+            pts.push((label.clone(), tta, p99));
+        }
+        report.push(DimSensitivity {
+            dim,
+            tta_spread: spread(pts.iter().map(|p| p.1).filter(|&v| v >= 0.0)),
+            p99_spread: spread(pts.iter().map(|p| p.2)),
+            points: pts,
+        });
+    }
+    report.sort_by(|a, b| b.p99_spread.total_cmp(&a.p99_spread).then(a.dim.cmp(b.dim)));
+    report
+}
+
+/// max − min over an iterator; -1 when fewer than two values (a spread
+/// needs two points to mean anything).
+fn spread(values: impl Iterator<Item = f64>) -> f64 {
+    let vals: Vec<f64> = values.collect();
+    if vals.len() < 2 {
+        return -1.0;
+    }
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    hi - lo
+}
+
+fn sensitivity_table(report: &[DimSensitivity]) -> Table {
+    let mut t = Table::new(
+        "One-factor sensitivity (center sweep, ranked by p99-JCT spread)",
+        &["dim", "points", "tta_spread_s", "jct_p99_spread_s"],
+    );
+    for d in report {
+        t.row(
+            [
+                table::s(d.dim),
+                table::i(d.points.len() as i64),
+                table::f(d.tta_spread, 0),
+                table::f(d.p99_spread, 0),
+            ]
+            .iter()
+            .map(|c| c.render())
+            .collect(),
+        );
+    }
+    t
+}
+
+fn sensitivity_json(report: &[DimSensitivity]) -> Json {
+    Json::Arr(
+        report
+            .iter()
+            .map(|d| {
+                jsonio::obj(vec![
+                    ("dim", jsonio::s(d.dim)),
+                    (
+                        "points",
+                        Json::Arr(
+                            d.points
+                                .iter()
+                                .map(|(label, tta, p99)| {
+                                    jsonio::obj(vec![
+                                        ("label", jsonio::s(label)),
+                                        ("tta_mean_s", jsonio::num(*tta)),
+                                        ("jct_p99_mean_s", jsonio::num(*p99)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("tta_spread_s", jsonio::num(d.tta_spread)),
+                    ("jct_p99_spread_s", jsonio::num(d.p99_spread)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+// -- regret ------------------------------------------------------------------
+
+struct SampleRegret {
+    index: usize,
+    fault_rate: f64,
+    /// grid-ordered (policy, arch, jct_mean_s, regret_s)
+    cells: Vec<(String, Arch, f64, f64)>,
+    winner: usize,
+}
+
+struct PolicyRegret {
+    policy: String,
+    arch: Arch,
+    wins: usize,
+    mean_regret: f64,
+    max_regret: f64,
+}
+
+/// Per sample, score every grid cell by mean JCT against the
+/// per-sample best; then aggregate wins and regret per policy × arch.
+/// Samples come back sorted by fault rate, so the regret JSON reads as
+/// "the winner as faults intensify".
+fn regret_report(
+    space: &ScenarioSpace,
+    cells: &[SearchCell],
+    rows: &[CellRows],
+) -> (Vec<SampleRegret>, Vec<PolicyRegret>) {
+    let grid = sweep::cross(&space.archs, &space.policies);
+    let mut samples: Vec<SampleRegret> = Vec::new();
+    let mut by_index: std::collections::BTreeMap<usize, Vec<f64>> =
+        std::collections::BTreeMap::new();
+    for (c, r) in cells.iter().zip(rows) {
+        if let CellKind::Sample { index } = c.kind {
+            by_index.entry(index).or_default().push(row_num(r, "jct_mean_s"));
+        }
+    }
+    for (index, scores) in by_index {
+        if scores.len() != grid.len() {
+            continue; // incomplete sample group — impossible post-ensure
+        }
+        let mut winner = 0;
+        for (k, &s) in scores.iter().enumerate() {
+            if s < scores[winner] {
+                winner = k;
+            }
+        }
+        let best = scores[winner];
+        let fault_rate = space.sample_values_at(index).0.fault_rate;
+        let cells = grid
+            .iter()
+            .zip(&scores)
+            .map(|((arch, policy), &jct)| (policy.clone(), *arch, jct, jct - best))
+            .collect();
+        samples.push(SampleRegret { index, fault_rate, cells, winner });
+    }
+    samples.sort_by(|a, b| a.fault_rate.total_cmp(&b.fault_rate).then(a.index.cmp(&b.index)));
+
+    let by_policy = grid
+        .iter()
+        .enumerate()
+        .map(|(k, (arch, policy))| {
+            let regrets: Vec<f64> = samples.iter().map(|s| s.cells[k].3).collect();
+            PolicyRegret {
+                policy: policy.clone(),
+                arch: *arch,
+                wins: samples.iter().filter(|s| s.winner == k).count(),
+                mean_regret: if regrets.is_empty() { -1.0 } else { stats::mean(&regrets) },
+                max_regret: if regrets.is_empty() {
+                    -1.0
+                } else {
+                    regrets.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                },
+            }
+        })
+        .collect();
+    (samples, by_policy)
+}
+
+fn regret_table((_, by_policy): &(Vec<SampleRegret>, Vec<PolicyRegret>)) -> Table {
+    let mut t = Table::new(
+        "Regret vs per-sample best (mean JCT)",
+        &["policy", "arch", "wins", "mean_regret_s", "max_regret_s"],
+    );
+    for p in by_policy {
+        t.row(
+            [
+                table::s(p.policy.as_str()),
+                table::s(arch_tag(p.arch)),
+                table::i(p.wins as i64),
+                table::f(p.mean_regret, 1),
+                table::f(p.max_regret, 1),
+            ]
+            .iter()
+            .map(|c| c.render())
+            .collect(),
+        );
+    }
+    t
+}
+
+fn regret_json((samples, by_policy): &(Vec<SampleRegret>, Vec<PolicyRegret>)) -> Json {
+    jsonio::obj(vec![
+        (
+            "samples",
+            Json::Arr(
+                samples
+                    .iter()
+                    .map(|s| {
+                        jsonio::obj(vec![
+                            ("index", jsonio::num(s.index as f64)),
+                            ("fault_rate", jsonio::num(s.fault_rate)),
+                            ("winner_policy", jsonio::s(&s.cells[s.winner].0)),
+                            ("winner_arch", jsonio::s(arch_tag(s.cells[s.winner].1))),
+                            ("best_jct_mean_s", jsonio::num(s.cells[s.winner].2)),
+                            (
+                                "cells",
+                                Json::Arr(
+                                    s.cells
+                                        .iter()
+                                        .map(|(policy, arch, jct, regret)| {
+                                            jsonio::obj(vec![
+                                                ("policy", jsonio::s(policy)),
+                                                ("arch", jsonio::s(arch_tag(*arch))),
+                                                ("jct_mean_s", jsonio::num(*jct)),
+                                                ("regret_s", jsonio::num(*regret)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "by_policy",
+            Json::Arr(
+                by_policy
+                    .iter()
+                    .map(|p| {
+                        jsonio::obj(vec![
+                            ("policy", jsonio::s(&p.policy)),
+                            ("arch", jsonio::s(arch_tag(p.arch))),
+                            ("wins", jsonio::num(p.wins as f64)),
+                            ("mean_regret_s", jsonio::num(p.mean_regret)),
+                            ("max_regret_s", jsonio::num(p.max_regret)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::space::find_space;
+
+    fn tiny_space() -> ScenarioSpace {
+        use crate::scenario::space::{IntDim, NumDim};
+        ScenarioSpace {
+            name: "tiny_search".into(),
+            policies: vec!["SSGD".into(), "STAR-H".into()],
+            jobs: IntDim::Fixed(2),
+            fault_rate: NumDim::Choice(vec![0.0, 4.0]),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_probes_then_samples_in_grid_order() {
+        let sp = tiny_space();
+        let cells = plan(&sp, 2, 2);
+        // 1 free dim (fault_rate choice of 2) x 2 points x 2 grid cells
+        // + 2 samples x 2 grid cells
+        assert_eq!(cells.len(), 2 * 2 + 2 * 2);
+        assert!(matches!(cells[0].kind, CellKind::Center { dim: "fault_rate", point: 0, .. }));
+        assert_eq!(cells[0].policy, "SSGD");
+        assert_eq!(cells[1].policy, "STAR-H");
+        assert!(matches!(cells[4].kind, CellKind::Sample { index: 0 }));
+        assert!(matches!(cells[7].kind, CellKind::Sample { index: 1 }));
+        // probe scenarios share the space seeds: only the dim varies
+        assert_eq!(cells[0].scenario.workload.seed, cells[2].scenario.workload.seed);
+    }
+
+    #[test]
+    fn compute_cell_matches_the_planned_cell() {
+        let sp = tiny_space();
+        let cells = plan(&sp, 1, 2);
+        let direct = run_cell(&sp, &cells[1], Some(2), true).unwrap();
+        let via_index = compute_cell(&sp, 1, 2, Some(2), true, 1).unwrap();
+        assert_eq!(direct.csv, via_index.csv);
+        assert_eq!(direct.json, via_index.json);
+        let err = format!("{:#}", compute_cell(&sp, 1, 2, Some(2), true, 99).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn search_runs_and_reports_are_complete() {
+        let sp = tiny_space();
+        let out = std::env::temp_dir().join("star_search_unit");
+        let _ = std::fs::remove_dir_all(&out);
+        let opts = SearchOpts {
+            count: 2,
+            points: 2,
+            quick: true,
+            jobs_override: Some(2),
+            threads: 1,
+            out_dir: out.clone(),
+        };
+        run(&sp, &opts).unwrap();
+        let doc = Json::parse_file(&out.join("search_tiny_search.json")).unwrap();
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
+        let results = doc.get("results").unwrap().arr().unwrap();
+        assert_eq!(results.len(), 8);
+        // sensitivity: the single free dim is present with both points
+        let sens = doc.get("sensitivity").unwrap().arr().unwrap();
+        assert_eq!(sens.len(), 1);
+        assert_eq!(sens[0].get("dim").unwrap().str().unwrap(), "fault_rate");
+        assert_eq!(sens[0].get("points").unwrap().arr().unwrap().len(), 2);
+        // regret: every sample scored, winner named, zero-regret winner
+        let regret = doc.get("regret").unwrap();
+        let samples = regret.get("samples").unwrap().arr().unwrap();
+        assert_eq!(samples.len(), 2);
+        for s in samples {
+            let cells = s.get("cells").unwrap().arr().unwrap();
+            assert_eq!(cells.len(), 2);
+            let min_regret = cells
+                .iter()
+                .map(|c| c.get("regret_s").unwrap().num().unwrap())
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(min_regret, 0.0, "the winner has zero regret");
+        }
+        let by_policy = regret.get("by_policy").unwrap().arr().unwrap();
+        assert_eq!(by_policy.len(), 2);
+        let wins: f64 =
+            by_policy.iter().map(|p| p.get("wins").unwrap().num().unwrap()).sum();
+        assert_eq!(wins as usize, 2, "every sample has exactly one winner");
+        for f in ["search_tiny_search.csv", "search_tiny_search_sensitivity.csv",
+                  "search_tiny_search_regret.csv"] {
+            assert!(out.join(f).is_file(), "{f} must be written");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_the_bytes() {
+        let sp = find_space("mode_choice").unwrap();
+        let run_at = |threads: usize, tag: &str| -> (String, String) {
+            let out = std::env::temp_dir().join(format!("star_search_threads_{tag}"));
+            let _ = std::fs::remove_dir_all(&out);
+            let opts = SearchOpts {
+                count: 1,
+                points: 2,
+                quick: true,
+                jobs_override: Some(2),
+                threads,
+                out_dir: out.clone(),
+            };
+            run(&sp, &opts).unwrap();
+            (
+                std::fs::read_to_string(out.join("search_mode_choice.json")).unwrap(),
+                std::fs::read_to_string(out.join("search_mode_choice_regret.csv")).unwrap(),
+            )
+        };
+        let serial = run_at(1, "serial");
+        let parallel = run_at(4, "parallel");
+        assert_eq!(serial, parallel, "search artifacts must be byte-identical at any --threads");
+    }
+}

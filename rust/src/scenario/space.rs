@@ -1,0 +1,1173 @@
+//! [`ScenarioSpace`]: a declarative *space* of scenarios (DESIGN.md
+//! §11) — ranges/choices over cluster shape, oversubscription factors,
+//! arrival process & load, job mix, PS placement, worker bounds, and
+//! fault rate, plus a fixed policy × arch grid shared by every point.
+//!
+//! The sampler is a pure function of `(space, index)`: a fresh PCG fork
+//! per index means the same space + seed + index always yields a
+//! byte-identical [`Scenario`], so sampled sets are resumable and
+//! dispatchable as `(spec, index)` cells over the sweep fabric without
+//! shipping the expanded scenarios anywhere. [`super::search`] runs the
+//! sampled set and one-factor center sweeps built from
+//! [`ScenarioSpace::dim_points`].
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::jsonio::{self, Json};
+use crate::simrng::Rng;
+use crate::trace::Arch;
+
+use super::spec::{
+    arch_tag, check_keys, get_str_list, get_u64, parse_arch, Arrival, ClusterShape, DriverKnobs,
+    FaultRegime, ModelMix, PsSpec, Scenario, WorkloadSpec,
+};
+
+/// Stream tag for the space sampler's root generator: forks of this
+/// root never collide with the workload builder (`0x5CE0`) or fault
+/// plan streams.
+const SPACE_STREAM: u64 = 0x5ACE;
+
+/// A continuous dimension: fixed, uniform over `[lo, hi]`, log-uniform
+/// over `[lo, hi]` (for scale-free knobs like oversubscription
+/// factors), or a finite choice set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NumDim {
+    Fixed(f64),
+    Range { lo: f64, hi: f64 },
+    LogRange { lo: f64, hi: f64 },
+    Choice(Vec<f64>),
+}
+
+impl NumDim {
+    fn from_json(j: &Json, path: &str) -> crate::Result<NumDim> {
+        if let Json::Num(v) = j {
+            return Ok(NumDim::Fixed(*v));
+        }
+        check_keys(j, path, &["fixed", "range", "logrange", "choice"])?;
+        let keys = j.obj().with_context(|| format!("{path}: expected a number or an object"))?;
+        if keys.len() != 1 {
+            bail!("{path}: give exactly one of fixed, range, logrange, choice");
+        }
+        if let Some(v) = j.opt("fixed") {
+            return Ok(NumDim::Fixed(v.num().with_context(|| format!("{path}.fixed"))?));
+        }
+        if let Some(v) = j.opt("range") {
+            let (lo, hi) = pair(v, &format!("{path}.range"))?;
+            return Ok(NumDim::Range { lo, hi });
+        }
+        if let Some(v) = j.opt("logrange") {
+            let (lo, hi) = pair(v, &format!("{path}.logrange"))?;
+            return Ok(NumDim::LogRange { lo, hi });
+        }
+        let v = j.opt("choice").expect("len-1 object with allowed keys");
+        let mut vals = Vec::new();
+        for (i, item) in v.arr().with_context(|| format!("{path}.choice"))?.iter().enumerate() {
+            vals.push(item.num().with_context(|| format!("{path}.choice[{i}]"))?);
+        }
+        Ok(NumDim::Choice(vals))
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            NumDim::Fixed(v) => jsonio::obj(vec![("fixed", jsonio::num(*v))]),
+            NumDim::Range { lo, hi } => jsonio::obj(vec![("range", jsonio::nums(&[*lo, *hi]))]),
+            NumDim::LogRange { lo, hi } => {
+                jsonio::obj(vec![("logrange", jsonio::nums(&[*lo, *hi]))])
+            }
+            NumDim::Choice(vs) => jsonio::obj(vec![(
+                "choice",
+                Json::Arr(vs.iter().map(|&v| jsonio::num(v)).collect()),
+            )]),
+        }
+    }
+
+    /// True when this dimension actually varies (a sensitivity axis).
+    pub fn is_free(&self) -> bool {
+        match self {
+            NumDim::Fixed(_) => false,
+            NumDim::Range { lo, hi } | NumDim::LogRange { lo, hi } => lo < hi,
+            NumDim::Choice(vs) => vs.len() > 1,
+        }
+    }
+
+    /// The center of the dimension: midpoint, geometric mean, or the
+    /// first choice — the "all else held here" anchor of one-factor
+    /// sensitivity sweeps.
+    pub fn center(&self) -> f64 {
+        match self {
+            NumDim::Fixed(v) => *v,
+            NumDim::Range { lo, hi } => (lo + hi) / 2.0,
+            NumDim::LogRange { lo, hi } => ((lo.ln() + hi.ln()) / 2.0).exp(),
+            NumDim::Choice(vs) => vs[0],
+        }
+    }
+
+    /// `k` evenly spaced probe values across the dimension (log-spaced
+    /// for [`NumDim::LogRange`]; every value for a choice set).
+    pub fn points(&self, k: usize) -> Vec<f64> {
+        match self {
+            NumDim::Fixed(v) => vec![*v],
+            NumDim::Range { lo, hi } => {
+                if k < 2 || lo >= hi {
+                    return vec![self.center()];
+                }
+                (0..k).map(|i| lo + (hi - lo) * i as f64 / (k - 1) as f64).collect()
+            }
+            NumDim::LogRange { lo, hi } => {
+                if k < 2 || lo >= hi {
+                    return vec![self.center()];
+                }
+                let (a, b) = (lo.ln(), hi.ln());
+                (0..k).map(|i| (a + (b - a) * i as f64 / (k - 1) as f64).exp()).collect()
+            }
+            NumDim::Choice(vs) => vs.clone(),
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            NumDim::Fixed(v) => *v,
+            NumDim::Range { lo, hi } => rng.range(*lo, *hi),
+            NumDim::LogRange { lo, hi } => rng.range(lo.ln(), hi.ln()).exp(),
+            NumDim::Choice(vs) => *rng.choose(vs),
+        }
+    }
+
+    fn validate_in(&self, path: &str, min: f64, max: f64) -> crate::Result<()> {
+        let check = |v: f64| -> crate::Result<()> {
+            if !v.is_finite() || v < min || v > max {
+                bail!("{path}: values must be finite in [{min}, {max}], got {v}");
+            }
+            Ok(())
+        };
+        match self {
+            NumDim::Fixed(v) => check(*v),
+            NumDim::Range { lo, hi } | NumDim::LogRange { lo, hi } => {
+                check(*lo)?;
+                check(*hi)?;
+                if lo > hi {
+                    bail!("{path}: lo ({lo}) must be ≤ hi ({hi})");
+                }
+                if matches!(self, NumDim::LogRange { .. }) && *lo <= 0.0 {
+                    bail!("{path}: logrange needs lo > 0, got {lo}");
+                }
+                Ok(())
+            }
+            NumDim::Choice(vs) => {
+                if vs.is_empty() {
+                    bail!("{path}: choice set must be non-empty");
+                }
+                vs.iter().try_for_each(|&v| check(v))
+            }
+        }
+    }
+}
+
+/// An integer dimension: fixed, inclusive range, or a choice set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IntDim {
+    Fixed(u64),
+    Range { lo: u64, hi: u64 },
+    Choice(Vec<u64>),
+}
+
+impl IntDim {
+    fn from_json(j: &Json, path: &str) -> crate::Result<IntDim> {
+        if matches!(j, Json::Num(_)) {
+            return Ok(IntDim::Fixed(j.u64().with_context(|| path.to_string())?));
+        }
+        check_keys(j, path, &["fixed", "range", "choice"])?;
+        let keys = j.obj().with_context(|| format!("{path}: expected an integer or an object"))?;
+        if keys.len() != 1 {
+            bail!("{path}: give exactly one of fixed, range, choice");
+        }
+        if let Some(v) = j.opt("fixed") {
+            return Ok(IntDim::Fixed(v.u64().with_context(|| format!("{path}.fixed"))?));
+        }
+        if let Some(v) = j.opt("range") {
+            let a = v.arr().with_context(|| format!("{path}.range"))?;
+            if a.len() != 2 {
+                bail!("{path}.range: expected [lo, hi]");
+            }
+            return Ok(IntDim::Range {
+                lo: a[0].u64().with_context(|| format!("{path}.range"))?,
+                hi: a[1].u64().with_context(|| format!("{path}.range"))?,
+            });
+        }
+        let v = j.opt("choice").expect("len-1 object with allowed keys");
+        let mut vals = Vec::new();
+        for (i, item) in v.arr().with_context(|| format!("{path}.choice"))?.iter().enumerate() {
+            vals.push(item.u64().with_context(|| format!("{path}.choice[{i}]"))?);
+        }
+        Ok(IntDim::Choice(vals))
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            IntDim::Fixed(v) => jsonio::obj(vec![("fixed", jsonio::num(*v as f64))]),
+            IntDim::Range { lo, hi } => {
+                jsonio::obj(vec![("range", jsonio::nums(&[*lo as f64, *hi as f64]))])
+            }
+            IntDim::Choice(vs) => jsonio::obj(vec![(
+                "choice",
+                Json::Arr(vs.iter().map(|&v| jsonio::num(v as f64)).collect()),
+            )]),
+        }
+    }
+
+    pub fn is_free(&self) -> bool {
+        match self {
+            IntDim::Fixed(_) => false,
+            IntDim::Range { lo, hi } => lo < hi,
+            IntDim::Choice(vs) => vs.len() > 1,
+        }
+    }
+
+    pub fn center(&self) -> u64 {
+        match self {
+            IntDim::Fixed(v) => *v,
+            IntDim::Range { lo, hi } => (lo + hi) / 2,
+            IntDim::Choice(vs) => vs[0],
+        }
+    }
+
+    /// Up to `k` evenly spaced integers (deduplicated after rounding).
+    pub fn points(&self, k: usize) -> Vec<u64> {
+        match self {
+            IntDim::Fixed(v) => vec![*v],
+            IntDim::Range { lo, hi } => {
+                if k < 2 || lo >= hi {
+                    return vec![self.center()];
+                }
+                let mut out: Vec<u64> = Vec::new();
+                for i in 0..k {
+                    let v = (*lo as f64 + (hi - lo) as f64 * i as f64 / (k - 1) as f64).round()
+                        as u64;
+                    if out.last() != Some(&v) {
+                        out.push(v);
+                    }
+                }
+                out
+            }
+            IntDim::Choice(vs) => vs.clone(),
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            IntDim::Fixed(v) => *v,
+            IntDim::Range { lo, hi } => rng.int(*lo as i64, *hi as i64) as u64,
+            IntDim::Choice(vs) => *rng.choose(vs),
+        }
+    }
+
+    fn validate_in(&self, path: &str, min: u64, max: u64) -> crate::Result<()> {
+        let check = |v: u64| -> crate::Result<()> {
+            if v < min || v > max {
+                bail!("{path}: values must be in [{min}, {max}], got {v}");
+            }
+            Ok(())
+        };
+        match self {
+            IntDim::Fixed(v) => check(*v),
+            IntDim::Range { lo, hi } => {
+                check(*lo)?;
+                check(*hi)?;
+                if lo > hi {
+                    bail!("{path}: lo ({lo}) must be ≤ hi ({hi})");
+                }
+                Ok(())
+            }
+            IntDim::Choice(vs) => {
+                if vs.is_empty() {
+                    bail!("{path}: choice set must be non-empty");
+                }
+                vs.iter().try_for_each(|&v| check(v))
+            }
+        }
+    }
+}
+
+/// The fixed dimension roster, in the documented draw order of the
+/// sampler and the report order of the sensitivity sweep. `arrival` and
+/// `models` are choice dimensions over the space's `arrival`/`models`
+/// lists; everything else is a [`NumDim`]/[`IntDim`].
+pub const DIM_NAMES: [&str; 13] = [
+    "jobs",
+    "gpu_servers",
+    "cpu_servers",
+    "gpus_per_server",
+    "cpu_factor",
+    "bw_factor",
+    "arrival",
+    "arrival_load",
+    "models",
+    "ps_on_gpu_prob",
+    "min_workers",
+    "max_workers",
+    "fault_rate",
+];
+
+/// One concrete assignment of every dimension — the sampler's output
+/// and the unit the materializer turns into a validated [`Scenario`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DimValues {
+    pub jobs: u64,
+    pub gpu_servers: u64,
+    pub cpu_servers: u64,
+    pub gpus_per_server: u64,
+    pub cpu_factor: f64,
+    pub bw_factor: f64,
+    /// index into [`ScenarioSpace::arrival`]
+    pub arrival: usize,
+    pub arrival_load: f64,
+    /// index into [`ScenarioSpace::models`]
+    pub models: usize,
+    pub ps_on_gpu_prob: f64,
+    pub min_workers: u64,
+    pub max_workers: u64,
+    pub fault_rate: f64,
+}
+
+/// A parameter space over [`Scenario`]. Every point shares the policy ×
+/// arch grid, driver knobs, and the arrival/mix *shapes*; the dims vary
+/// cluster size, oversubscription, load, placement, worker bounds, and
+/// fault rate.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpace {
+    pub name: String,
+    pub description: String,
+    /// sampler seed: `(seed, index)` fully determines sample `index`
+    pub seed: u64,
+    /// fault-plan seed of center/sensitivity scenarios (samples draw
+    /// their own per-index fault seeds)
+    pub fault_seed: u64,
+    pub policies: Vec<String>,
+    pub archs: Vec<Arch>,
+    /// arrival-process choice set (the `arrival` dimension)
+    pub arrival: Vec<Arrival>,
+    /// model-mix choice set (the `models` dimension)
+    pub models: Vec<ModelMix>,
+    pub jobs: IntDim,
+    pub gpu_servers: IntDim,
+    pub cpu_servers: IntDim,
+    pub gpus_per_server: IntDim,
+    pub cpu_factor: NumDim,
+    pub bw_factor: NumDim,
+    /// load multiplier: the arrival span is divided by this, so 2.0
+    /// packs the same jobs into half the time (twice the pressure)
+    pub arrival_load: NumDim,
+    pub ps_on_gpu_prob: NumDim,
+    pub min_workers: IntDim,
+    pub max_workers: IntDim,
+    /// fault-regime dimension: `FaultRegime::Rate` at this rate
+    pub fault_rate: NumDim,
+    pub driver: DriverKnobs,
+}
+
+impl Default for ScenarioSpace {
+    fn default() -> Self {
+        let w = WorkloadSpec::default();
+        ScenarioSpace {
+            name: String::new(),
+            description: String::new(),
+            seed: 0,
+            fault_seed: 0,
+            policies: Vec::new(),
+            archs: vec![Arch::Ps],
+            arrival: vec![w.arrival.clone()],
+            models: vec![w.models.clone()],
+            jobs: IntDim::Fixed(w.jobs as u64),
+            gpu_servers: IntDim::Fixed(ClusterShape::default().gpu_servers as u64),
+            cpu_servers: IntDim::Fixed(ClusterShape::default().cpu_servers as u64),
+            gpus_per_server: IntDim::Fixed(ClusterShape::default().gpus_per_server as u64),
+            cpu_factor: NumDim::Fixed(1.0),
+            bw_factor: NumDim::Fixed(1.0),
+            arrival_load: NumDim::Fixed(1.0),
+            ps_on_gpu_prob: NumDim::Fixed(w.ps.on_gpu_prob),
+            min_workers: IntDim::Fixed(w.min_workers as u64),
+            max_workers: IntDim::Fixed(w.max_workers as u64),
+            fault_rate: NumDim::Fixed(0.0),
+            driver: DriverKnobs::default(),
+        }
+    }
+}
+
+impl ScenarioSpace {
+    pub fn from_file(path: &Path) -> crate::Result<ScenarioSpace> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j).with_context(|| format!("space {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ScenarioSpace> {
+        check_keys(
+            j,
+            "space",
+            &[
+                "name",
+                "description",
+                "seed",
+                "fault_seed",
+                "policies",
+                "archs",
+                "arrival",
+                "models",
+                "dims",
+                "driver",
+            ],
+        )?;
+        let d = ScenarioSpace::default();
+        let dims = j.opt("dims");
+        if let Some(v) = dims {
+            check_keys(
+                v,
+                "space.dims",
+                &[
+                    "jobs",
+                    "gpu_servers",
+                    "cpu_servers",
+                    "gpus_per_server",
+                    "cpu_factor",
+                    "bw_factor",
+                    "arrival_load",
+                    "ps_on_gpu_prob",
+                    "min_workers",
+                    "max_workers",
+                    "fault_rate",
+                ],
+            )?;
+        }
+        let num = |key: &str, default: &NumDim| -> crate::Result<NumDim> {
+            match dims.and_then(|v| v.opt(key)) {
+                None => Ok(default.clone()),
+                Some(v) => NumDim::from_json(v, &format!("space.dims.{key}")),
+            }
+        };
+        let int = |key: &str, default: &IntDim| -> crate::Result<IntDim> {
+            match dims.and_then(|v| v.opt(key)) {
+                None => Ok(default.clone()),
+                Some(v) => IntDim::from_json(v, &format!("space.dims.{key}")),
+            }
+        };
+        let sp = ScenarioSpace {
+            name: j.get("name").and_then(|v| v.str()).context("space.name")?.to_string(),
+            description: match j.opt("description") {
+                None => String::new(),
+                Some(v) => v.str().context("space.description")?.to_string(),
+            },
+            seed: get_u64(j, "space", "seed", d.seed)?,
+            fault_seed: get_u64(j, "space", "fault_seed", d.fault_seed)?,
+            policies: get_str_list(j, "policies")?,
+            archs: match j.opt("archs") {
+                None => d.archs,
+                Some(v) => {
+                    let mut archs = Vec::new();
+                    for (i, a) in v.arr().context("space.archs")?.iter().enumerate() {
+                        let tag = a.str().with_context(|| format!("space.archs[{i}]"))?;
+                        archs.push(
+                            parse_arch(tag).with_context(|| format!("space.archs[{i}]"))?,
+                        );
+                    }
+                    archs
+                }
+            },
+            arrival: match j.opt("arrival") {
+                None => d.arrival,
+                Some(v) => {
+                    let mut out = Vec::new();
+                    for (i, a) in v.arr().context("space.arrival")?.iter().enumerate() {
+                        out.push(
+                            Arrival::from_json(a)
+                                .with_context(|| format!("space.arrival[{i}]"))?,
+                        );
+                    }
+                    out
+                }
+            },
+            models: match j.opt("models") {
+                None => d.models,
+                Some(v) => {
+                    let mut out = Vec::new();
+                    for (i, m) in v.arr().context("space.models")?.iter().enumerate() {
+                        out.push(
+                            ModelMix::from_json(m)
+                                .with_context(|| format!("space.models[{i}]"))?,
+                        );
+                    }
+                    out
+                }
+            },
+            jobs: int("jobs", &d.jobs)?,
+            gpu_servers: int("gpu_servers", &d.gpu_servers)?,
+            cpu_servers: int("cpu_servers", &d.cpu_servers)?,
+            gpus_per_server: int("gpus_per_server", &d.gpus_per_server)?,
+            cpu_factor: num("cpu_factor", &d.cpu_factor)?,
+            bw_factor: num("bw_factor", &d.bw_factor)?,
+            arrival_load: num("arrival_load", &d.arrival_load)?,
+            ps_on_gpu_prob: num("ps_on_gpu_prob", &d.ps_on_gpu_prob)?,
+            min_workers: int("min_workers", &d.min_workers)?,
+            max_workers: int("max_workers", &d.max_workers)?,
+            fault_rate: num("fault_rate", &d.fault_rate)?,
+            driver: match j.opt("driver") {
+                None => d.driver,
+                Some(v) => DriverKnobs::from_json(v)?,
+            },
+        };
+        sp.validate()?;
+        Ok(sp)
+    }
+
+    /// Canonical fully-expanded emission: parse → emit → parse is the
+    /// identity (pinned by the round-trip tests).
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("name", jsonio::s(&self.name)),
+            ("description", jsonio::s(&self.description)),
+            ("seed", jsonio::num(self.seed as f64)),
+            ("fault_seed", jsonio::num(self.fault_seed as f64)),
+            ("policies", Json::Arr(self.policies.iter().map(|p| jsonio::s(p)).collect())),
+            (
+                "archs",
+                Json::Arr(self.archs.iter().map(|&a| jsonio::s(arch_tag(a))).collect()),
+            ),
+            ("arrival", Json::Arr(self.arrival.iter().map(|a| a.to_json()).collect())),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+            (
+                "dims",
+                jsonio::obj(vec![
+                    ("jobs", self.jobs.to_json()),
+                    ("gpu_servers", self.gpu_servers.to_json()),
+                    ("cpu_servers", self.cpu_servers.to_json()),
+                    ("gpus_per_server", self.gpus_per_server.to_json()),
+                    ("cpu_factor", self.cpu_factor.to_json()),
+                    ("bw_factor", self.bw_factor.to_json()),
+                    ("arrival_load", self.arrival_load.to_json()),
+                    ("ps_on_gpu_prob", self.ps_on_gpu_prob.to_json()),
+                    ("min_workers", self.min_workers.to_json()),
+                    ("max_workers", self.max_workers.to_json()),
+                    ("fault_rate", self.fault_rate.to_json()),
+                ]),
+            ),
+            ("driver", self.driver.to_json()),
+        ])
+    }
+
+    /// Every rule names the offending field. Beyond per-dim bounds, the
+    /// clincher is materializing the center of every arrival × models
+    /// choice pair and running full [`Scenario::validate`] on it: with
+    /// the clamped materializer this proves *every* sampled scenario is
+    /// valid, not just the ones a test happened to draw.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            bail!(
+                "space.name: must be non-empty and use only [A-Za-z0-9._-] \
+                 (it keys result artifacts), got {:?}",
+                self.name
+            );
+        }
+        if self.policies.is_empty() {
+            bail!("space.policies: need at least one policy");
+        }
+        for (i, p) in self.policies.iter().enumerate() {
+            crate::baselines::make_policy(p).with_context(|| format!("space.policies[{i}]"))?;
+        }
+        if self.archs.is_empty() {
+            bail!("space.archs: must name at least one architecture (ps, ar)");
+        }
+        if self.arrival.is_empty() {
+            bail!("space.arrival: need at least one arrival-process choice");
+        }
+        if self.models.is_empty() {
+            bail!("space.models: need at least one model-mix choice");
+        }
+        self.jobs.validate_in("space.dims.jobs", 1, 1_000_000)?;
+        self.gpu_servers.validate_in("space.dims.gpu_servers", 1, 10_000)?;
+        self.cpu_servers.validate_in("space.dims.cpu_servers", 0, 10_000)?;
+        self.gpus_per_server.validate_in("space.dims.gpus_per_server", 1, 1024)?;
+        self.cpu_factor.validate_in("space.dims.cpu_factor", 1e-3, 1e3)?;
+        self.bw_factor.validate_in("space.dims.bw_factor", 1e-3, 1e3)?;
+        self.arrival_load.validate_in("space.dims.arrival_load", 1e-3, 1e3)?;
+        self.ps_on_gpu_prob.validate_in("space.dims.ps_on_gpu_prob", 0.0, 1.0)?;
+        self.min_workers.validate_in("space.dims.min_workers", 1, 10_000)?;
+        self.max_workers.validate_in("space.dims.max_workers", 1, 10_000)?;
+        self.fault_rate.validate_in("space.dims.fault_rate", 0.0, 1e3)?;
+        let center = self.center();
+        for ai in 0..self.arrival.len() {
+            for mi in 0..self.models.len() {
+                let v = DimValues { arrival: ai, models: mi, ..center.clone() };
+                self.center_scenario("validate-probe", &v).validate().with_context(|| {
+                    format!(
+                        "space: center scenario with arrival[{ai}] × models[{mi}] is invalid"
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The all-dims-at-center assignment (choice dims at index 0).
+    pub fn center(&self) -> DimValues {
+        DimValues {
+            jobs: self.jobs.center(),
+            gpu_servers: self.gpu_servers.center(),
+            cpu_servers: self.cpu_servers.center(),
+            gpus_per_server: self.gpus_per_server.center(),
+            cpu_factor: self.cpu_factor.center(),
+            bw_factor: self.bw_factor.center(),
+            arrival: 0,
+            arrival_load: self.arrival_load.center(),
+            models: 0,
+            ps_on_gpu_prob: self.ps_on_gpu_prob.center(),
+            min_workers: self.min_workers.center(),
+            max_workers: self.max_workers.center(),
+            fault_rate: self.fault_rate.center(),
+        }
+    }
+
+    /// Names of the dimensions that actually vary, in [`DIM_NAMES`]
+    /// order — the sensitivity sweep's axes.
+    pub fn free_dims(&self) -> Vec<&'static str> {
+        DIM_NAMES.iter().copied().filter(|d| self.dim_is_free(d)).collect()
+    }
+
+    fn dim_is_free(&self, dim: &str) -> bool {
+        match dim {
+            "jobs" => self.jobs.is_free(),
+            "gpu_servers" => self.gpu_servers.is_free(),
+            "cpu_servers" => self.cpu_servers.is_free(),
+            "gpus_per_server" => self.gpus_per_server.is_free(),
+            "cpu_factor" => self.cpu_factor.is_free(),
+            "bw_factor" => self.bw_factor.is_free(),
+            "arrival" => self.arrival.len() > 1,
+            "arrival_load" => self.arrival_load.is_free(),
+            "models" => self.models.len() > 1,
+            "ps_on_gpu_prob" => self.ps_on_gpu_prob.is_free(),
+            "min_workers" => self.min_workers.is_free(),
+            "max_workers" => self.max_workers.is_free(),
+            "fault_rate" => self.fault_rate.is_free(),
+            _ => false,
+        }
+    }
+
+    /// One-factor probes: all dims at center, `dim` swept across up to
+    /// `k` points. Returns `(value label, assignment)` per point.
+    pub fn dim_points(&self, dim: &str, k: usize) -> Vec<(String, DimValues)> {
+        let center = self.center();
+        let num = |vals: Vec<f64>, set: fn(&mut DimValues, f64)| -> Vec<(String, DimValues)> {
+            vals.into_iter()
+                .map(|v| {
+                    let mut dv = center.clone();
+                    set(&mut dv, v);
+                    (fmt_f64(v), dv)
+                })
+                .collect()
+        };
+        let int = |vals: Vec<u64>, set: fn(&mut DimValues, u64)| -> Vec<(String, DimValues)> {
+            vals.into_iter()
+                .map(|v| {
+                    let mut dv = center.clone();
+                    set(&mut dv, v);
+                    (v.to_string(), dv)
+                })
+                .collect()
+        };
+        match dim {
+            "jobs" => int(self.jobs.points(k), |d, v| d.jobs = v),
+            "gpu_servers" => int(self.gpu_servers.points(k), |d, v| d.gpu_servers = v),
+            "cpu_servers" => int(self.cpu_servers.points(k), |d, v| d.cpu_servers = v),
+            "gpus_per_server" => {
+                int(self.gpus_per_server.points(k), |d, v| d.gpus_per_server = v)
+            }
+            "cpu_factor" => num(self.cpu_factor.points(k), |d, v| d.cpu_factor = v),
+            "bw_factor" => num(self.bw_factor.points(k), |d, v| d.bw_factor = v),
+            "arrival" => (0..self.arrival.len())
+                .map(|i| {
+                    let mut dv = center.clone();
+                    dv.arrival = i;
+                    (arrival_tag(&self.arrival[i]).to_string(), dv)
+                })
+                .collect(),
+            "arrival_load" => num(self.arrival_load.points(k), |d, v| d.arrival_load = v),
+            "models" => (0..self.models.len())
+                .map(|i| {
+                    let mut dv = center.clone();
+                    dv.models = i;
+                    (mix_tag(&self.models[i]).to_string(), dv)
+                })
+                .collect(),
+            "ps_on_gpu_prob" => num(self.ps_on_gpu_prob.points(k), |d, v| d.ps_on_gpu_prob = v),
+            "min_workers" => int(self.min_workers.points(k), |d, v| d.min_workers = v),
+            "max_workers" => int(self.max_workers.points(k), |d, v| d.max_workers = v),
+            "fault_rate" => num(self.fault_rate.points(k), |d, v| d.fault_rate = v),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Draw sample `index`'s assignment + per-sample workload/fault
+    /// seeds. Pure in `(self.seed, index)`: a fresh root is forked per
+    /// index, so any cell can be recomputed alone, in any order, on any
+    /// machine — the fabric's byte-identity contract.
+    pub fn sample_values_at(&self, index: usize) -> (DimValues, u64, u64) {
+        let mut root = Rng::new(self.seed, SPACE_STREAM);
+        let mut rng = root.fork(index as u64);
+        // draw order is DIM_NAMES order, then the two seeds — documented
+        // in DESIGN.md §11; changing it re-keys every sampled set
+        let v = DimValues {
+            jobs: self.jobs.sample(&mut rng),
+            gpu_servers: self.gpu_servers.sample(&mut rng),
+            cpu_servers: self.cpu_servers.sample(&mut rng),
+            gpus_per_server: self.gpus_per_server.sample(&mut rng),
+            cpu_factor: self.cpu_factor.sample(&mut rng),
+            bw_factor: self.bw_factor.sample(&mut rng),
+            arrival: rng.usize(0, self.arrival.len() - 1),
+            arrival_load: self.arrival_load.sample(&mut rng),
+            models: rng.usize(0, self.models.len() - 1),
+            ps_on_gpu_prob: self.ps_on_gpu_prob.sample(&mut rng),
+            min_workers: self.min_workers.sample(&mut rng),
+            max_workers: self.max_workers.sample(&mut rng),
+            fault_rate: self.fault_rate.sample(&mut rng),
+        };
+        // 52-bit seeds survive the f64 JSON round-trip bit-exactly and
+        // stay inside jsonio's 9e15 integer bound
+        let workload_seed = rng.next_u64() >> 12;
+        let fault_seed = rng.next_u64() >> 12;
+        (v, workload_seed, fault_seed)
+    }
+
+    /// Sample `index` as a validated scenario named `{space}-s{index}`.
+    pub fn sample_at(&self, index: usize) -> Scenario {
+        let (v, workload_seed, fault_seed) = self.sample_values_at(index);
+        self.materialize(format!("{}-s{index:03}", self.name), &v, workload_seed, fault_seed)
+    }
+
+    /// A center-anchored scenario (sensitivity probes): seeds are the
+    /// space's own, so the swept dimension is the *only* thing varying.
+    pub fn center_scenario(&self, name: &str, v: &DimValues) -> Scenario {
+        self.materialize(name.to_string(), v, self.seed, self.fault_seed)
+    }
+
+    /// Turn an assignment into a scenario. Cross-dim constraints are
+    /// resolved by clamping (worker bounds to the cluster's GPU count,
+    /// PS placement to GPU servers when there are no CPU servers), so
+    /// every in-bounds assignment materializes to a valid scenario.
+    fn materialize(
+        &self,
+        name: String,
+        v: &DimValues,
+        workload_seed: u64,
+        fault_seed: u64,
+    ) -> Scenario {
+        let gpu_servers = v.gpu_servers.max(1) as usize;
+        let gpus_per_server = v.gpus_per_server.max(1) as usize;
+        let total_gpus = gpu_servers * gpus_per_server;
+        let jobs = v.jobs.max(1) as usize;
+        let min_workers = (v.min_workers.max(1) as usize).min(total_gpus);
+        let max_workers = (v.max_workers as usize).clamp(min_workers, total_gpus);
+        let cpu_servers = v.cpu_servers as usize;
+        let on_gpu_prob =
+            if cpu_servers == 0 { 1.0 } else { v.ps_on_gpu_prob.clamp(0.0, 1.0) };
+        let arrival = &self.arrival[v.arrival];
+        let base_span = match explicit_span(arrival) {
+            s if s > 0.0 => s,
+            _ => jobs as f64 * 280.0,
+        };
+        let span_s = base_span / v.arrival_load;
+        Scenario {
+            name,
+            description: String::new(),
+            experiments: Vec::new(),
+            cluster: ClusterShape {
+                gpu_servers,
+                cpu_servers,
+                gpus_per_server,
+                cpu_factor: v.cpu_factor,
+                bw_factor: v.bw_factor,
+            },
+            workload: WorkloadSpec {
+                jobs,
+                seed: workload_seed,
+                arrival: with_span(arrival, span_s),
+                min_workers,
+                max_workers,
+                models: self.models[v.models].clone(),
+                ps: PsSpec { on_gpu_prob, ..PsSpec::default() },
+            },
+            faults: FaultRegime::Rate { rate: v.fault_rate.max(0.0), seed: fault_seed },
+            policies: self.policies.clone(),
+            archs: self.archs.clone(),
+            driver: self.driver.clone(),
+        }
+    }
+
+    /// The assignment as a flat JSON object (choice dims as their kind
+    /// tags) — the `knobs` block of every search result row.
+    pub fn knobs_json(&self, v: &DimValues) -> Json {
+        jsonio::obj(vec![
+            ("jobs", jsonio::num(v.jobs as f64)),
+            ("gpu_servers", jsonio::num(v.gpu_servers as f64)),
+            ("cpu_servers", jsonio::num(v.cpu_servers as f64)),
+            ("gpus_per_server", jsonio::num(v.gpus_per_server as f64)),
+            ("cpu_factor", jsonio::num(v.cpu_factor)),
+            ("bw_factor", jsonio::num(v.bw_factor)),
+            ("arrival", jsonio::s(arrival_tag(&self.arrival[v.arrival]))),
+            ("arrival_load", jsonio::num(v.arrival_load)),
+            ("models", jsonio::s(mix_tag(&self.models[v.models]))),
+            ("ps_on_gpu_prob", jsonio::num(v.ps_on_gpu_prob)),
+            ("min_workers", jsonio::num(v.min_workers as f64)),
+            ("max_workers", jsonio::num(v.max_workers as f64)),
+            ("fault_rate", jsonio::num(v.fault_rate)),
+        ])
+    }
+}
+
+/// The short kind tag of an arrival process (labels, knob reports).
+pub fn arrival_tag(a: &Arrival) -> &'static str {
+    match a {
+        Arrival::Philly { .. } => "philly",
+        Arrival::Poisson { .. } => "poisson",
+        Arrival::Bursty { .. } => "bursty",
+        Arrival::Diurnal { .. } => "diurnal",
+    }
+}
+
+/// The short kind tag of a model mix (labels, knob reports).
+pub fn mix_tag(m: &ModelMix) -> &'static str {
+    match m {
+        ModelMix::Uniform => "uniform",
+        ModelMix::Vision => "vision",
+        ModelMix::Nlp => "nlp",
+        ModelMix::Weighted(_) => "weighted",
+    }
+}
+
+fn explicit_span(a: &Arrival) -> f64 {
+    match a {
+        Arrival::Philly { span_s }
+        | Arrival::Poisson { span_s }
+        | Arrival::Bursty { span_s, .. }
+        | Arrival::Diurnal { span_s, .. } => *span_s,
+    }
+}
+
+fn with_span(a: &Arrival, span_s: f64) -> Arrival {
+    let mut out = a.clone();
+    match &mut out {
+        Arrival::Philly { span_s: s }
+        | Arrival::Poisson { span_s: s }
+        | Arrival::Bursty { span_s: s, .. }
+        | Arrival::Diurnal { span_s: s, .. } => *s = span_s,
+    }
+    out
+}
+
+/// Minimal-digits value label, charset-safe for scenario names and
+/// report columns (`0.5000` → `0.5`, `1000.0000` → `1000`).
+fn fmt_f64(v: f64) -> String {
+    let s = format!("{v:.4}");
+    s.trim_end_matches('0').trim_end_matches('.').to_string()
+}
+
+fn pair(v: &Json, path: &str) -> crate::Result<(f64, f64)> {
+    let a = v.arr().with_context(|| path.to_string())?;
+    if a.len() != 2 {
+        bail!("{path}: expected [lo, hi], got {} elements", a.len());
+    }
+    Ok((
+        a[0].num().with_context(|| path.to_string())?,
+        a[1].num().with_context(|| path.to_string())?,
+    ))
+}
+
+// -- builtin spaces ----------------------------------------------------------
+
+/// The named spaces behind `star scenario sample|search <name>`.
+///
+/// * `frontier` — the broad counterfactual frontier: cluster size, CPU
+///   and network oversubscription, arrival family and load, and fault
+///   rate all free; the headline "which knob most moves TTA/p99 JCT?"
+///   space.
+/// * `mode_choice` — the paper's §5 sensitivity question distilled:
+///   only fault rate and CPU oversubscription vary, policies span
+///   sync/semi-sync/STAR, answering "at what fault rate does STAR's
+///   advantage collapse?".
+pub fn builtin_spaces() -> Vec<ScenarioSpace> {
+    vec![
+        ScenarioSpace {
+            name: "frontier".into(),
+            description: "broad counterfactual frontier: cluster shape, oversubscription, \
+                          arrival family and load, and fault rate all free"
+                .into(),
+            seed: 7,
+            fault_seed: 7,
+            policies: vec!["SSGD".into(), "LGC".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            arrival: vec![
+                Arrival::Philly { span_s: 0.0 },
+                Arrival::Poisson { span_s: 0.0 },
+                Arrival::Bursty {
+                    span_s: 0.0,
+                    burst_every_s: 3600.0,
+                    burst_len_s: 600.0,
+                    mult: 6.0,
+                },
+            ],
+            models: vec![ModelMix::Uniform],
+            jobs: IntDim::Range { lo: 20, hi: 60 },
+            gpu_servers: IntDim::Range { lo: 4, hi: 8 },
+            cpu_factor: NumDim::LogRange { lo: 0.35, hi: 1.0 },
+            bw_factor: NumDim::LogRange { lo: 0.5, hi: 1.0 },
+            arrival_load: NumDim::Range { lo: 0.5, hi: 2.0 },
+            fault_rate: NumDim::Range { lo: 0.0, hi: 4.0 },
+            ..Default::default()
+        },
+        ScenarioSpace {
+            name: "mode_choice".into(),
+            description: "the §5 mode-choice sensitivity: fault rate × CPU oversubscription \
+                          against sync, semi-sync, and STAR policies"
+                .into(),
+            seed: 11,
+            fault_seed: 11,
+            policies: vec!["SSGD".into(), "LB-BSP".into(), "STAR-H".into()],
+            archs: vec![Arch::Ps],
+            jobs: IntDim::Fixed(24),
+            cpu_factor: NumDim::Range { lo: 0.35, hi: 1.0 },
+            fault_rate: NumDim::Range { lo: 0.0, hi: 8.0 },
+            ..Default::default()
+        },
+    ]
+}
+
+pub fn space_names() -> Vec<String> {
+    builtin_spaces().iter().map(|s| s.name.clone()).collect()
+}
+
+pub fn find_space(name: &str) -> Option<ScenarioSpace> {
+    builtin_spaces().into_iter().find(|s| s.name == name)
+}
+
+/// Resolve a `star scenario sample|search` target: bare names hit the
+/// builtin-space table, anything path-like reads a space spec file —
+/// the same discipline as [`super::load`].
+pub fn load(target: &str) -> crate::Result<ScenarioSpace> {
+    let looks_like_path = target.ends_with(".json") || target.contains('/');
+    if !looks_like_path {
+        return find_space(target).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario space {target:?} (built-ins: {}; or pass a .json space file)",
+                space_names().join(", ")
+            )
+        });
+    }
+    let path = Path::new(target);
+    if path.is_file() {
+        return ScenarioSpace::from_file(path);
+    }
+    Err(anyhow::anyhow!("scenario space file {target:?} not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> crate::Result<ScenarioSpace> {
+        ScenarioSpace::from_json(&Json::parse(text).unwrap())
+    }
+
+    fn err_of(text: &str) -> String {
+        format!("{:#}", parse(text).err().expect("space must be rejected"))
+    }
+
+    const FULL: &str = r#"{
+        "name": "kitchen-sink",
+        "description": "every dim form",
+        "seed": 9, "fault_seed": 3,
+        "policies": ["SSGD", "STAR-H"],
+        "archs": ["ps", "ar"],
+        "arrival": [
+            {"kind": "philly", "span_s": 0},
+            {"kind": "diurnal", "span_s": 0, "period_s": 3600, "peak_mult": 3}
+        ],
+        "models": ["uniform", "vision"],
+        "dims": {
+            "jobs": {"range": [10, 40]},
+            "gpu_servers": {"choice": [4, 6, 8]},
+            "cpu_factor": {"logrange": [0.25, 1.0]},
+            "bw_factor": 0.8,
+            "arrival_load": {"range": [0.5, 2.0]},
+            "ps_on_gpu_prob": {"fixed": 0.5},
+            "fault_rate": {"choice": [0, 1, 4]}
+        }
+    }"#;
+
+    #[test]
+    fn parse_emit_parse_is_identity() {
+        let s1 = parse(FULL).unwrap();
+        let j = s1.to_json();
+        let s2 = ScenarioSpace::from_json(&j).unwrap();
+        assert_eq!(j, s2.to_json());
+        assert_eq!(j.to_string_pretty(), s2.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn builtin_spaces_are_unique_valid_and_round_trip() {
+        let spaces = builtin_spaces();
+        let mut names: Vec<_> = spaces.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), spaces.len(), "builtin space names must be unique");
+        for sp in &spaces {
+            sp.validate().unwrap_or_else(|e| panic!("{}: {e:#}", sp.name));
+            assert!(!sp.free_dims().is_empty(), "{}: a space must vary something", sp.name);
+            let again = ScenarioSpace::from_json(&sp.to_json())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", sp.name));
+            assert_eq!(sp.to_json(), again.to_json(), "{}", sp.name);
+        }
+    }
+
+    #[test]
+    fn sampling_is_a_pure_function_of_seed_and_index() {
+        let sp = find_space("frontier").unwrap();
+        for index in [0usize, 1, 7, 63] {
+            let a = sp.sample_at(index).to_json().to_string_pretty();
+            let b = sp.sample_at(index).to_json().to_string_pretty();
+            assert_eq!(a, b, "index {index} must be deterministic");
+        }
+        // indexes are independent draws, not a shared stream: sampling
+        // index 7 alone equals sampling it after 0..6
+        let seq: Vec<_> = (0..8).map(|i| sp.sample_at(i).to_json().to_string_pretty()).collect();
+        assert_eq!(seq[7], sp.sample_at(7).to_json().to_string_pretty());
+        // and different indexes differ
+        assert_ne!(seq[0], seq[1]);
+    }
+
+    #[test]
+    fn samples_validate_and_round_trip() {
+        for sp in builtin_spaces() {
+            for index in 0..16 {
+                let sc = sp.sample_at(index);
+                sc.validate().unwrap_or_else(|e| panic!("{} sample {index}: {e:#}", sp.name));
+                let again = Scenario::from_json(&sc.to_json())
+                    .unwrap_or_else(|e| panic!("{} sample {index}: {e:#}", sp.name));
+                assert_eq!(sc.to_json(), again.to_json(), "{} sample {index}", sp.name);
+            }
+        }
+    }
+
+    #[test]
+    fn materializer_clamps_cross_dim_conflicts() {
+        // a 1-server cluster with default worker bounds [4, 12] and no
+        // CPU servers: workers clamp to the 4 GPUs, PSs go on-GPU
+        let sp = ScenarioSpace {
+            name: "clamp".into(),
+            policies: vec!["SSGD".into()],
+            gpu_servers: IntDim::Fixed(1),
+            gpus_per_server: IntDim::Fixed(4),
+            cpu_servers: IntDim::Fixed(0),
+            min_workers: IntDim::Fixed(6),
+            max_workers: IntDim::Fixed(12),
+            ..Default::default()
+        };
+        sp.validate().unwrap();
+        let sc = sp.sample_at(0);
+        assert_eq!((sc.workload.min_workers, sc.workload.max_workers), (4, 4));
+        assert_eq!(sc.workload.ps.on_gpu_prob, 1.0);
+        sc.validate().unwrap();
+    }
+
+    #[test]
+    fn arrival_load_compresses_the_span() {
+        let sp = ScenarioSpace {
+            name: "load".into(),
+            policies: vec!["SSGD".into()],
+            jobs: IntDim::Fixed(10),
+            arrival_load: NumDim::Fixed(2.0),
+            ..Default::default()
+        };
+        sp.validate().unwrap();
+        let sc = sp.sample_at(0);
+        // auto span 10·280 s halved by load 2
+        match sc.workload.arrival {
+            Arrival::Philly { span_s } => assert_eq!(span_s, 1400.0),
+            ref other => panic!("unexpected arrival {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dim_points_and_centers() {
+        let d = NumDim::Range { lo: 0.0, hi: 4.0 };
+        assert_eq!(d.center(), 2.0);
+        assert_eq!(d.points(5), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        let lg = NumDim::LogRange { lo: 0.25, hi: 1.0 };
+        assert!((lg.center() - 0.5).abs() < 1e-12);
+        let pts = lg.points(3);
+        assert_eq!(pts.len(), 3);
+        assert!((pts[0] - 0.25).abs() < 1e-12 && (pts[2] - 1.0).abs() < 1e-12);
+        let i = IntDim::Range { lo: 10, hi: 12 };
+        assert_eq!(i.points(5), vec![10, 11, 12], "rounded duplicates collapse");
+        assert_eq!(IntDim::Choice(vec![3, 9]).points(2), vec![3, 9]);
+        assert_eq!(fmt_f64(0.5), "0.5");
+        assert_eq!(fmt_f64(1000.0), "1000");
+    }
+
+    #[test]
+    fn free_dims_follow_dim_name_order() {
+        let sp = find_space("mode_choice").unwrap();
+        assert_eq!(sp.free_dims(), vec!["cpu_factor", "fault_rate"]);
+        let sp = find_space("frontier").unwrap();
+        let free = sp.free_dims();
+        let order: Vec<_> =
+            DIM_NAMES.iter().copied().filter(|d| free.contains(d)).collect();
+        assert_eq!(free, order);
+    }
+
+    #[test]
+    fn validation_errors_name_their_field() {
+        let no_policy = err_of(r#"{"name": "x"}"#);
+        assert!(no_policy.contains("space.policies"), "{no_policy}");
+
+        let bad_range =
+            err_of(r#"{"name": "x", "policies": ["SSGD"], "dims": {"jobs": {"range": [9, 2]}}}"#);
+        assert!(bad_range.contains("space.dims.jobs"), "{bad_range}");
+
+        let bad_log = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "dims": {"cpu_factor": {"logrange": [0, 1]}}}"#,
+        );
+        assert!(bad_log.contains("space.dims.cpu_factor"), "{bad_log}");
+
+        let two_forms = err_of(
+            r#"{"name": "x", "policies": ["SSGD"],
+                "dims": {"fault_rate": {"fixed": 1, "range": [0, 2]}}}"#,
+        );
+        assert!(two_forms.contains("space.dims.fault_rate"), "{two_forms}");
+
+        let typo = err_of(r#"{"name": "x", "policies": ["SSGD"], "dims": {"jbos": 3}}"#);
+        assert!(typo.contains("jbos"), "{typo}");
+
+        let bad_arrival = err_of(
+            r#"{"name": "x", "policies": ["SSGD"], "arrival": [{"kind": "warp"}]}"#,
+        );
+        assert!(bad_arrival.contains("space.arrival[0]"), "{bad_arrival}");
+
+        let empty_choice = err_of(
+            r#"{"name": "x", "policies": ["SSGD"], "dims": {"fault_rate": {"choice": []}}}"#,
+        );
+        assert!(empty_choice.contains("space.dims.fault_rate"), "{empty_choice}");
+    }
+
+    #[test]
+    fn load_resolves_builtin_spaces_and_files() {
+        assert_eq!(load("frontier").unwrap().name, "frontier");
+        let err = format!("{:#}", load("not_a_space").err().unwrap());
+        assert!(err.contains("mode_choice"), "must list built-ins: {err}");
+        let err = format!("{:#}", load("no/such/space.json").err().unwrap());
+        assert!(err.contains("not found"), "{err}");
+    }
+}

@@ -223,7 +223,7 @@ pub enum Arrival {
 }
 
 impl Arrival {
-    fn from_json(j: &Json) -> crate::Result<Arrival> {
+    pub(crate) fn from_json(j: &Json) -> crate::Result<Arrival> {
         let kind = j
             .get("kind")
             .and_then(|v| v.str())
@@ -264,7 +264,7 @@ impl Arrival {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match *self {
             Arrival::Philly { span_s } => jsonio::obj(vec![
                 ("kind", jsonio::s("philly")),
@@ -303,7 +303,7 @@ pub enum ModelMix {
 }
 
 impl ModelMix {
-    fn from_json(j: &Json) -> crate::Result<ModelMix> {
+    pub(crate) fn from_json(j: &Json) -> crate::Result<ModelMix> {
         match j {
             Json::Str(s) => match s.as_str() {
                 "uniform" => Ok(ModelMix::Uniform),
@@ -331,7 +331,7 @@ impl ModelMix {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match self {
             ModelMix::Uniform => jsonio::s("uniform"),
             ModelMix::Vision => jsonio::s("vision"),
@@ -551,7 +551,7 @@ pub struct DriverKnobs {
 }
 
 impl DriverKnobs {
-    fn from_json(j: &Json) -> crate::Result<DriverKnobs> {
+    pub(crate) fn from_json(j: &Json) -> crate::Result<DriverKnobs> {
         check_keys(
             j,
             "driver",
@@ -565,7 +565,7 @@ impl DriverKnobs {
         })
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         jsonio::obj(vec![
             ("seed", jsonio::num(self.seed as f64)),
             ("max_job_duration_s", jsonio::num(self.max_job_duration_s)),
@@ -990,7 +990,7 @@ pub fn parse_arch(s: &str) -> crate::Result<Arch> {
 
 // -- field helpers (every error names `path.key`) ---------------------------
 
-fn check_keys(j: &Json, path: &str, allowed: &[&str]) -> crate::Result<()> {
+pub(crate) fn check_keys(j: &Json, path: &str, allowed: &[&str]) -> crate::Result<()> {
     for k in j.obj().with_context(|| format!("{path}: expected a JSON object"))?.keys() {
         if !allowed.contains(&k.as_str()) {
             bail!("{path}: unknown key {k:?} (allowed: {})", allowed.join(", "));
@@ -999,21 +999,21 @@ fn check_keys(j: &Json, path: &str, allowed: &[&str]) -> crate::Result<()> {
     Ok(())
 }
 
-fn get_f64(j: &Json, path: &str, key: &str, default: f64) -> crate::Result<f64> {
+pub(crate) fn get_f64(j: &Json, path: &str, key: &str, default: f64) -> crate::Result<f64> {
     match j.opt(key) {
         None => Ok(default),
         Some(v) => v.num().with_context(|| format!("{path}.{key}")),
     }
 }
 
-fn get_u64(j: &Json, path: &str, key: &str, default: u64) -> crate::Result<u64> {
+pub(crate) fn get_u64(j: &Json, path: &str, key: &str, default: u64) -> crate::Result<u64> {
     match j.opt(key) {
         None => Ok(default),
         Some(v) => v.u64().with_context(|| format!("{path}.{key}")),
     }
 }
 
-fn get_usize(j: &Json, path: &str, key: &str, default: usize) -> crate::Result<usize> {
+pub(crate) fn get_usize(j: &Json, path: &str, key: &str, default: usize) -> crate::Result<usize> {
     Ok(get_u64(j, path, key, default as u64)? as usize)
 }
 
@@ -1032,7 +1032,7 @@ fn pair_of(v: &Json) -> crate::Result<(f64, f64)> {
     Ok((a[0].num()?, a[1].num()?))
 }
 
-fn get_str_list(j: &Json, key: &str) -> crate::Result<Vec<String>> {
+pub(crate) fn get_str_list(j: &Json, key: &str) -> crate::Result<Vec<String>> {
     match j.opt(key) {
         None => Ok(Vec::new()),
         Some(v) => {

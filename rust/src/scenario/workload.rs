@@ -19,10 +19,23 @@ use super::spec::{Arrival, ModelMix, WorkloadSpec};
 
 /// Build `jobs` arrivals for `spec` (the job count is explicit so quick
 /// modes and `--jobs` overrides can down-scale without editing the
-/// spec). Callers hold a validated spec; the only residual error is a
-/// weighted mix naming no usable model.
+/// spec). `Scenario::validate` bounds the spec fields, but the *derived*
+/// quantities are re-checked here because `build` is also reachable with
+/// a hand-built spec or a caller-chosen job count: a zero/non-finite
+/// arrival rate (`jobs / span_s`) turns the Lewis–Shedler loop below
+/// into `chance(NaN)`, which never accepts — an infinite loop, not an
+/// error — so these reject up front with field-naming messages.
 pub fn build(spec: &WorkloadSpec, jobs: usize) -> crate::Result<Vec<JobSpec>> {
+    if jobs == 0 {
+        anyhow::bail!("workload.jobs: a trace needs at least one job");
+    }
     let span_s = spec.effective_span(jobs);
+    if !span_s.is_finite() || span_s <= 0.0 {
+        anyhow::bail!(
+            "workload.arrival.span_s: effective span must be finite and > 0, got {span_s} \
+             (span_s 0 means auto = jobs·280 s)"
+        );
+    }
     if spec.is_classic_philly() {
         return Ok(generate(&TraceConfig {
             jobs,
@@ -45,6 +58,12 @@ pub fn build(spec: &WorkloadSpec, jobs: usize) -> crate::Result<Vec<JobSpec>> {
     // let long low-rate gaps jump clear over short high-rate bursts,
     // systematically under-filling them.
     let peak = peak_mult(&spec.arrival);
+    if !peak.is_finite() || peak <= 0.0 {
+        anyhow::bail!(
+            "workload.arrival.mult/peak_mult: the peak rate multiplier must be finite and \
+             > 0 (it is the thinning envelope), got {peak}"
+        );
+    }
     let mut t = 0.0_f64;
     let mut out = Vec::with_capacity(jobs);
     for id in 0..jobs {
@@ -228,6 +247,46 @@ mod tests {
             ..WorkloadSpec::philly(10, 1)
         };
         assert!(build(&unknown, 10).is_err());
+    }
+
+    #[test]
+    fn degenerate_rates_are_rejected_not_looped_on() {
+        // regression: jobs 0 + auto span used to make base_rate 0/0 =
+        // NaN, and the thinning loop's chance(NaN) never accepts — the
+        // build hung forever instead of erroring
+        let generator = WorkloadSpec {
+            models: ModelMix::Vision, // any non-classic field → generator path
+            ..WorkloadSpec::philly(40, 9)
+        };
+        let err = format!("{:#}", build(&generator, 0).unwrap_err());
+        assert!(err.contains("workload.jobs"), "{err}");
+        let err = format!("{:#}", build(&WorkloadSpec::philly(40, 9), 0).unwrap_err());
+        assert!(err.contains("workload.jobs"), "classic path too: {err}");
+        // a hand-built spec can smuggle in a span validate() would
+        // reject; build must name the field, not divide by it
+        for bad_span in [-100.0, f64::NAN, f64::INFINITY] {
+            let spec = WorkloadSpec {
+                arrival: Arrival::Poisson { span_s: bad_span },
+                ..generator.clone()
+            };
+            let err = format!("{:#}", build(&spec, 10).unwrap_err());
+            assert!(err.contains("workload.arrival.span_s"), "span {bad_span}: {err}");
+        }
+        // ...and a zero/NaN burst multiplier would zero the thinning
+        // envelope: every candidate is rejected, another infinite loop
+        for bad_mult in [0.0, -1.0, f64::NAN] {
+            let spec = WorkloadSpec {
+                arrival: Arrival::Bursty {
+                    span_s: 4000.0,
+                    burst_every_s: 1000.0,
+                    burst_len_s: 200.0,
+                    mult: bad_mult,
+                },
+                ..generator.clone()
+            };
+            let err = format!("{:#}", build(&spec, 10).unwrap_err());
+            assert!(err.contains("peak rate multiplier"), "mult {bad_mult}: {err}");
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@ use star::fabric::chaos::ChaosConfig;
 use star::fabric::dispatch::{dispatch, DispatchOpts, DispatchReport};
 use star::fabric::journal::Journal;
 use star::fabric::SweepSpec;
-use star::scenario::{self, RunOpts, Scenario};
+use star::jsonio::Json;
+use star::scenario::search::{self, SearchOpts};
+use star::scenario::{self, find_space, RunOpts, Scenario};
 use star::trace::Arch;
 
 const JOBS: usize = 2;
@@ -158,6 +160,90 @@ fn generic_scenario_dispatch_matches_serial() {
     let report = dispatch(&sweep, &base_opts(&fabric)).unwrap();
     assert_eq!(report.executed, 2, "{report:?}");
     assert_same_artifacts(&serial, &fabric, "scenario_fabric_gen");
+}
+
+/// Pin the artifact schema the fabric merge reproduces (DESIGN.md §10):
+/// PR 6 intentionally dropped `threads` from the generic invocation
+/// block (artifacts are run-invariant) and added `fault_rate` to every
+/// resilience result row. Both were silent drifts at the time; this
+/// test makes the next writer change loud instead.
+#[test]
+fn artifact_schema_pins_the_run_invariant_contract() {
+    // resilience rows carry their grid coordinate as fault_rate
+    let serial = tmp("schema_res");
+    serial_resilience(&serial);
+    let doc = Json::parse_file(&serial.join("resilience.json")).unwrap();
+    let results = doc.get("results").unwrap().arr().unwrap();
+    assert_eq!(results.len(), CELLS);
+    for r in results {
+        let rate = r.get("fault_rate").expect("every resilience row names its fault_rate");
+        assert!(rate.num().unwrap() >= 0.0);
+    }
+
+    // generic invocation block: exactly {jobs, max_job_duration_s,
+    // quick} — threads (and any fleet shape) deliberately absent, even
+    // when the run was thread-parallel
+    let sc = Scenario {
+        name: "schema_gen".into(),
+        policies: vec!["SSGD".into()],
+        archs: vec![Arch::Ps],
+        ..Default::default()
+    };
+    let out = tmp("schema_gen");
+    scenario::run(
+        &sc,
+        &RunOpts { quick: true, jobs_override: Some(JOBS), threads: 2, out_dir: out.clone() },
+    )
+    .unwrap();
+    let doc = Json::parse_file(&out.join("scenario_schema_gen.json")).unwrap();
+    let inv = doc.get("invocation").unwrap().obj().unwrap();
+    let keys: Vec<&str> = inv.keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        ["jobs", "max_job_duration_s", "quick"],
+        "the invocation block is run-invariant: threads must never be recorded"
+    );
+}
+
+/// The tentpole's acceptance contract: a scenario-space search
+/// dispatched over the fabric under full chaos produces byte-identical
+/// sensitivity/regret artifacts to the serial in-process run.
+#[test]
+fn space_search_dispatch_under_chaos_matches_serial() {
+    let space = find_space("mode_choice").unwrap();
+    let (count, points) = (2, 2);
+
+    let serial = tmp("space_serial");
+    let opts = SearchOpts {
+        count,
+        points,
+        quick: true,
+        jobs_override: Some(JOBS),
+        threads: 1,
+        out_dir: serial.clone(),
+    };
+    search::run(&space, &opts).unwrap();
+
+    let fabric = tmp("space_fabric");
+    let sweep = SweepSpec::from_space(&space, count, points, Some(JOBS), true).unwrap();
+    let cells = sweep.cell_labels().unwrap().len();
+    let opts = DispatchOpts {
+        chaos: Some(ChaosConfig { kill_prob: 1.0, stall_prob: 0.0, ..Default::default() }),
+        ..base_opts(&fabric)
+    };
+    let report = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(report.executed, cells, "{report:?}");
+    assert_eq!(report.chaos_kills, cells, "every first attempt dies: {report:?}");
+    for name in
+        ["search_mode_choice", "search_mode_choice_sensitivity", "search_mode_choice_regret"]
+    {
+        let ext = if name == "search_mode_choice" { vec!["json", "csv"] } else { vec!["csv"] };
+        for e in ext {
+            let a = serial.join(format!("{name}.{e}"));
+            let b = fabric.join(format!("{name}.{e}"));
+            assert_eq!(read(&a), read(&b), "{name}.{e} must survive chaos byte-identically");
+        }
+    }
 }
 
 #[test]

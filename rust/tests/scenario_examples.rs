@@ -1,17 +1,24 @@
 //! Every shipped example scenario must parse, validate, round-trip
 //! through the canonical JSON emission, and smoke-run end to end — the
 //! same contract the CI scenario step enforces in release mode.
+//! Files whose stem starts with `space_` are scenario *spaces*
+//! (DESIGN.md §11) and get the space contract instead: parse,
+//! round-trip, and sample into valid scenarios.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use star::jsonio::Json;
-use star::scenario::{self, RunOpts, Scenario};
+use star::scenario::{self, RunOpts, Scenario, ScenarioSpace};
 
 fn examples_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
 }
 
-fn example_files() -> Vec<PathBuf> {
+fn is_space(path: &Path) -> bool {
+    path.file_stem().map(|s| s.to_string_lossy().starts_with("space_")).unwrap_or(false)
+}
+
+fn all_json_files() -> Vec<PathBuf> {
     let mut out: Vec<PathBuf> = std::fs::read_dir(examples_dir())
         .expect("examples/scenarios must exist")
         .map(|e| e.expect("readable dir entry").path())
@@ -19,6 +26,14 @@ fn example_files() -> Vec<PathBuf> {
         .collect();
     out.sort();
     out
+}
+
+fn example_files() -> Vec<PathBuf> {
+    all_json_files().into_iter().filter(|p| !is_space(p)).collect()
+}
+
+fn space_files() -> Vec<PathBuf> {
+    all_json_files().into_iter().filter(|p| is_space(p)).collect()
 }
 
 #[test]
@@ -77,6 +92,39 @@ fn every_example_smoke_runs() {
             assert_eq!(doc.get("schema").unwrap().str().unwrap(), "star-bench-v1");
             let cells = doc.get("results").unwrap().arr().unwrap().len();
             assert!(cells > 0, "{}: artifact has no result cells", path.display());
+        }
+    }
+}
+
+#[test]
+fn example_spaces_parse_round_trip_and_sample_valid_scenarios() {
+    let files = space_files();
+    assert!(!files.is_empty(), "expected at least one space_*.json example");
+    for path in files {
+        let sp = ScenarioSpace::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        assert_eq!(
+            sp.name,
+            path.file_stem().unwrap().to_string_lossy(),
+            "{}: file name and space.name must agree",
+            path.display()
+        );
+        // parse -> emit -> parse -> emit is the identity
+        let j = sp.to_json();
+        let again = ScenarioSpace::from_json(&Json::parse(&j.to_string_pretty()).unwrap())
+            .unwrap_or_else(|e| panic!("{}: re-parse of emission: {e:#}", path.display()));
+        assert_eq!(j, again.to_json(), "{}: emission is not canonical", path.display());
+        // the file must describe a real search: at least one free dim
+        assert!(
+            !sp.free_dims().is_empty(),
+            "{}: a space example should vary something",
+            path.display()
+        );
+        // sampled scenarios validate and are deterministic per index
+        for k in [0, 1, 7] {
+            let sc = sp.sample_at(k);
+            sc.validate().unwrap_or_else(|e| panic!("{}: sample {k}: {e:#}", path.display()));
+            assert_eq!(sc.to_json(), sp.sample_at(k).to_json(), "sample {k} must be pure");
         }
     }
 }

@@ -1,0 +1,98 @@
+//! Contracts of the scenario-space sampler (DESIGN.md §11):
+//!
+//! * every scenario sampled from every builtin space validates and
+//!   round-trips parse→emit→parse byte-identically (the property the
+//!   fabric's pure `(space, index)` cells lean on);
+//! * sampling is a pure function of `(space, seed, index)` — repeating
+//!   a batch, or drawing index k alone, reproduces the same bytes;
+//! * the space specs themselves round-trip canonically.
+
+use star::jsonio::Json;
+use star::scenario::{builtin_spaces, ScenarioSpace};
+use star::testutil::forall;
+
+/// Canonical bytes of a sampled scenario — what `scenario sample`
+/// writes and what the determinism contract is stated over.
+fn sample_bytes(space: &ScenarioSpace, index: usize) -> String {
+    space.sample_at(index).to_json().to_string_pretty()
+}
+
+#[test]
+fn every_builtin_sample_validates_and_round_trips() {
+    for space in builtin_spaces() {
+        forall(
+            &format!("space-{}-samples", space.name),
+            40,
+            // exercise a wide index range, not just the first few
+            |rng| rng.usize(0, 5000),
+            |&index| {
+                let sc = space.sample_at(index);
+                sc.validate().map_err(|e| {
+                    format!("sample {index} of {:?} fails validate: {e:#}", space.name)
+                })?;
+                let emitted = sc.to_json().to_string_pretty();
+                let back = star::scenario::Scenario::from_json(&Json::parse(&emitted).unwrap())
+                    .map_err(|e| format!("sample {index} does not re-parse: {e:#}"))?;
+                let again = back.to_json().to_string_pretty();
+                if emitted != again {
+                    return Err(format!(
+                        "sample {index} of {:?} is not canonical under parse→emit→parse",
+                        space.name
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn sampling_twice_and_sampling_alone_are_byte_identical() {
+    for space in builtin_spaces() {
+        // a batch drawn twice
+        let first: Vec<String> = (0..12).map(|k| sample_bytes(&space, k)).collect();
+        let second: Vec<String> = (0..12).map(|k| sample_bytes(&space, k)).collect();
+        assert_eq!(first, second, "space {:?} must sample deterministically", space.name);
+        // index k drawn alone (reverse order, so no sequential state
+        // could fake it) equals its batch position
+        for k in (0..12).rev() {
+            assert_eq!(
+                sample_bytes(&space, k),
+                first[k],
+                "space {:?} sample {k} must be pure in (seed, index)",
+                space.name
+            );
+        }
+    }
+}
+
+#[test]
+fn builtin_space_specs_round_trip_canonically() {
+    for space in builtin_spaces() {
+        space.validate().unwrap_or_else(|e| panic!("builtin space {:?}: {e:#}", space.name));
+        let emitted = space.to_json().to_string_pretty();
+        let back = ScenarioSpace::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            emitted,
+            "space {:?} must be canonical under parse→emit→parse",
+            space.name
+        );
+        assert_eq!(back.sample_at(3).to_json(), space.sample_at(3).to_json());
+    }
+}
+
+#[test]
+fn distinct_indexes_explore_the_space() {
+    // not a tautology test: with free dims present, consecutive samples
+    // must not collapse onto one point (the RNG fork actually varies)
+    for space in builtin_spaces() {
+        let distinct: std::collections::BTreeSet<String> =
+            (0..8).map(|k| sample_bytes(&space, k)).collect();
+        assert!(
+            distinct.len() > 1,
+            "space {:?} has free dims but 8 samples were all identical",
+            space.name
+        );
+    }
+}
