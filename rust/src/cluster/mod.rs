@@ -24,9 +24,13 @@
 //! PS's bandwidth share, and SSGD fires a whole round of iteration starts
 //! at the *same* simulated instant. Shares are therefore computed **once
 //! per (server, resource, time) epoch** into a reusable buffer (in-place
-//! water-fill, no per-query allocation) and invalidated by a monotonically
-//! increasing *generation* that bumps whenever anything share-relevant
-//! changes: task registration/deactivation, caps, throttles, or demands.
+//! water-fill, no per-query allocation) and invalidated by *partitioned*
+//! generation counters: each server carries its own monotonically
+//! increasing generation that bumps whenever anything share-relevant
+//! changes **on that server** (task registration/deactivation, caps,
+//! throttles, demands), so a mutation on one server leaves every other
+//! server's cached epochs valid (DESIGN.md §12). A global generation still
+//! advances in lock-step for observability ([`Cluster::generation`]).
 //! All mutation goes through [`Cluster::set_caps`]/[`Cluster::set_demands`]/
 //! [`Cluster::set_throttles`] so invalidation cannot be missed; the cache
 //! can be disabled ([`Cluster::set_share_cache_enabled`]) to force direct
@@ -236,8 +240,18 @@ pub struct Cluster {
     /// imbalance, GC pauses — the paper's 0.1–500 s events, Fig 7)
     task_events: Vec<SpikeStream>,
     noise_seed: u64,
-    /// bumped on any share-relevant mutation; epoch keys compare to it
+    /// bumped on any share-relevant mutation — the cluster-wide change
+    /// counter exposed through [`Cluster::generation`]
     generation: u64,
+    /// per-server generation (DESIGN.md §12): bumped alongside
+    /// `generation` but only for the mutated task's server, and it —
+    /// not the global counter — keys the share-epoch cache. A task
+    /// event on one server therefore invalidates only that server's
+    /// two epochs; every other partition's cached shares stay hot.
+    /// Bit-identical to global keying: the generation is purely an
+    /// invalidation key, and a fill at (server, res, t) is a
+    /// deterministic function of that server's state
+    server_gen: Vec<u64>,
     /// server ids by kind, precomputed at construction (the server set is
     /// immutable after `new`, so these never invalidate); placement asks
     /// for them on every job admission
@@ -246,6 +260,9 @@ pub struct Cluster {
     /// `servers.len() * 2` epochs, indexed `server * 2 + res_idx(res)`
     cache: Vec<ShareEpoch>,
     cache_enabled: bool,
+    /// number of epoch recomputations (cache misses); the partition
+    /// tests assert that cross-server mutations leave this untouched
+    epoch_fills: u64,
     /// water-fill scratch (demand + sort-order buffers)
     scratch_demands: Vec<f64>,
     scratch_order: Vec<usize>,
@@ -367,10 +384,12 @@ impl Cluster {
             task_events: Vec::new(),
             noise_seed,
             generation: 0,
+            server_gen: vec![0; n_servers],
             gpu_ids,
             cpu_ids,
             cache,
             cache_enabled: true,
+            epoch_fills: 0,
             scratch_demands: Vec::new(),
             scratch_order: Vec::new(),
         }
@@ -389,6 +408,14 @@ impl Cluster {
     }
 
     // -- task registry -------------------------------------------------------
+
+    /// Record a share-relevant mutation on `server`: the global change
+    /// counter and the server's partition generation move together, so
+    /// only that server's cached epochs go stale (DESIGN.md §12).
+    fn bump(&mut self, server: usize) {
+        self.generation += 1;
+        self.server_gen[server] += 1;
+    }
 
     /// Register a task; workers consume a GPU slot on their server.
     pub fn add_task(&mut self, task: Task) -> TaskId {
@@ -409,7 +436,7 @@ impl Cluster {
             self.noise_seed ^ (id as u64).wrapping_mul(0xA24B_AED4_963E_E407),
             0x7a51,
         )));
-        self.generation += 1;
+        self.bump(server);
         id
     }
 
@@ -424,7 +451,7 @@ impl Cluster {
             if matches!(self.tasks[id].role, Role::Worker { .. }) {
                 self.servers[server].gpus_used -= 1;
             }
-            self.generation += 1;
+            self.bump(server);
         }
     }
 
@@ -437,7 +464,7 @@ impl Cluster {
             self.suspended[id] = true;
             let server = self.tasks[id].server;
             self.by_server[server].retain(|&x| x != id);
-            self.generation += 1;
+            self.bump(server);
         }
     }
 
@@ -445,8 +472,9 @@ impl Cluster {
     pub fn resume_task(&mut self, id: TaskId) {
         if self.tasks[id].active && self.suspended[id] {
             self.suspended[id] = false;
-            self.by_server[self.tasks[id].server].push(id);
-            self.generation += 1;
+            let server = self.tasks[id].server;
+            self.by_server[server].push(id);
+            self.bump(server);
         }
     }
 
@@ -475,7 +503,7 @@ impl Cluster {
         });
         self.degradations[server]
             .sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
-        self.generation += 1;
+        self.bump(server);
     }
 
     /// Degraded capacity fraction on `server` at `t` (0 when no window
@@ -505,7 +533,8 @@ impl Cluster {
         if t.cpu_cap != cpu_cap || t.bw_cap != bw_cap {
             t.cpu_cap = cpu_cap;
             t.bw_cap = bw_cap;
-            self.generation += 1;
+            let server = t.server;
+            self.bump(server);
         }
     }
 
@@ -515,7 +544,8 @@ impl Cluster {
         if t.cpu_throttle != cpu_throttle || t.bw_throttle != bw_throttle {
             t.cpu_throttle = cpu_throttle;
             t.bw_throttle = bw_throttle;
-            self.generation += 1;
+            let server = t.server;
+            self.bump(server);
         }
     }
 
@@ -525,7 +555,8 @@ impl Cluster {
         if t.cpu_demand != cpu_demand || t.bw_demand != bw_demand {
             t.cpu_demand = cpu_demand;
             t.bw_demand = bw_demand;
-            self.generation += 1;
+            let server = t.server;
+            self.bump(server);
         }
     }
 
@@ -556,6 +587,13 @@ impl Cluster {
     /// Current invalidation generation (bumps on any share-relevant change).
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Number of share-epoch recomputations so far (cache misses). The
+    /// partitioned-invalidation tests assert that mutations on one
+    /// server leave other servers' epochs hot (no new fills).
+    pub fn epoch_fills(&self) -> u64 {
+        self.epoch_fills
     }
 
     /// Disable (or re-enable) the share cache. With the cache off every
@@ -654,10 +692,11 @@ impl Cluster {
         let slot = server * 2 + res_idx(res);
         if self.cache_enabled {
             let e = &self.cache[slot];
-            if e.valid && e.generation == self.generation && e.time == t {
+            if e.valid && e.generation == self.server_gen[server] && e.time == t {
                 return;
             }
         }
+        self.epoch_fills += 1;
         let avail = self.available(server, res, t);
         // move the buffers out so the borrow checker lets us call &mut
         // self methods while filling them
@@ -690,7 +729,7 @@ impl Cluster {
         e.ids = ids;
         e.shares = shares;
         e.time = t;
-        e.generation = self.generation;
+        e.generation = self.server_gen[server];
         e.valid = true;
     }
 
@@ -1087,6 +1126,27 @@ mod tests {
         assert_eq!(g, c.generation());
         c.set_throttles(first, 0.5, 1.0);
         assert!(c.generation() > g);
+    }
+
+    #[test]
+    fn mutations_invalidate_only_their_servers_partition() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let a = c.add_task(worker(0, 0, 8.0, 1.0));
+        let b = c.add_task(worker(1, 1, 8.0, 1.0));
+        let t = 5.0;
+        let share_a = c.share_of(a, Res::Cpu, t);
+        let fills = c.epoch_fills();
+        // a repeat query is a pure hit
+        assert_eq!(share_a, c.share_of(a, Res::Cpu, t));
+        assert_eq!(fills, c.epoch_fills());
+        // mutating server 1 must leave server 0's epoch hot...
+        c.set_caps(b, 0.5, 0.5);
+        assert_eq!(share_a, c.share_of(a, Res::Cpu, t));
+        assert_eq!(fills, c.epoch_fills(), "cross-server mutation refilled a hot epoch");
+        // ...while mutating server 0 forces a refill there
+        c.set_demands(a, 6.0, 1.0);
+        let _ = c.share_of(a, Res::Cpu, t);
+        assert_eq!(fills + 1, c.epoch_fills());
     }
 
     #[test]

@@ -61,26 +61,26 @@ impl Driver {
             if run.finished || worker >= run.job.workers {
                 return;
             }
-            if !run.alive[worker] {
+            if !run.wb.is_alive(worker) {
                 // already down: only push the restart deadline out
-                if run.restart_at[worker].is_nan() || run.restart_at[worker] < due {
-                    run.restart_at[worker] = due;
+                if run.wb.restart_at[worker].is_nan() || run.wb.restart_at[worker] < due {
+                    run.wb.restart_at[worker] = due;
                     self.engine.schedule_at(due, Event::WorkerRestart { job, worker });
                 }
                 return;
             }
-            run.alive[worker] = false;
-            run.busy[worker] = false;
+            run.wb.set_alive(worker, false);
+            run.wb.busy[worker] = false;
             // invalidate the in-flight WorkerDone (its iter no longer
             // matches). The skipped index can never complete its
             // straggler-accounting row — mark it dead so the round slab
             // reclaims it (the old BTreeMap leaked one row per crash)
-            run.round_times.mark_dead(run.iter_idx[worker]);
-            run.iter_idx[worker] += 1;
+            run.round_times.mark_dead(run.wb.iter_idx[worker]);
+            run.wb.iter_idx[worker] += 1;
             run.pending.retain(|&(w, _, _)| w != worker);
-            run.down_since[worker] = t;
-            run.restart_at[worker] = due;
-            run.straggling[worker] = false;
+            run.wb.down_since[worker] = t;
+            run.wb.restart_at[worker] = due;
+            run.wb.straggling[worker] = false;
             run.placement.worker_tasks[worker]
         };
         self.cluster.suspend_task(task);
@@ -93,18 +93,18 @@ impl Driver {
     pub(super) fn worker_restart(&mut self, job: usize, worker: usize, t: f64) {
         let task = {
             let Some(run) = self.jobs.get_mut(job).and_then(|j| j.as_mut()) else { return };
-            if run.finished || worker >= run.job.workers || run.alive[worker] {
+            if run.finished || worker >= run.job.workers || run.wb.is_alive(worker) {
                 return;
             }
-            if t < run.restart_at[worker] {
+            if t < run.wb.restart_at[worker] {
                 return; // stale: a later fault extended the restart
             }
-            run.alive[worker] = true;
-            if run.down_since[worker].is_finite() {
-                run.stats.downtime_s += t - run.down_since[worker];
+            run.wb.set_alive(worker, true);
+            if run.wb.down_since[worker].is_finite() {
+                run.stats.downtime_s += t - run.wb.down_since[worker];
             }
-            run.down_since[worker] = f64::NAN;
-            run.restart_at[worker] = f64::NAN;
+            run.wb.down_since[worker] = f64::NAN;
+            run.wb.restart_at[worker] = f64::NAN;
             run.placement.worker_tasks[worker]
         };
         self.cluster.resume_task(task);
@@ -232,7 +232,9 @@ impl Driver {
     pub(super) fn kick_idle_workers(&mut self, job: usize, t: f64) {
         let idle: Vec<usize> = match self.jobs.get(job).and_then(|j| j.as_ref()) {
             Some(run) if !run.finished => (0..run.job.workers)
-                .filter(|&w| run.alive[w] && !run.busy[w] && !waiting_in_pending(run, w))
+                .filter(|&w| {
+                    run.wb.is_alive(w) && !run.wb.busy[w] && !waiting_in_pending(run, w)
+                })
                 .collect(),
             _ => return,
         };

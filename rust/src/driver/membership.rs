@@ -72,6 +72,81 @@ pub fn live_ids(mask: &[bool]) -> Vec<usize> {
     mask.iter().enumerate().filter(|&(_, &a)| a).map(|(w, _)| w).collect()
 }
 
+/// Struct-of-arrays block of a job's hottest per-worker state
+/// (DESIGN.md §12). The driver used to scatter these twelve vectors
+/// across `JobRun`, so one `worker_done` touched twelve far-apart heap
+/// allocations; grouping them in one block keeps the whole per-worker
+/// working set of an event in a handful of cache lines, and owning the
+/// liveness mask here lets the block maintain `live_count` as an O(1)
+/// counter instead of the O(n) mask scan the hot paths did per event.
+///
+/// Invariant: `alive_count == alive.iter().filter(|a| **a).count()` at
+/// all times — `alive` is private and only mutable through
+/// [`WorkerBlock::set_alive`].
+pub struct WorkerBlock {
+    pub iter_idx: Vec<u64>,
+    pub iter_start: Vec<f64>,
+    pub param_version_at_start: Vec<u64>,
+    pub last_times: Vec<f64>,
+    pub busy: Vec<bool>,
+    pub predicted_times: Vec<f64>,
+    pub predicted_flags: Vec<bool>,
+    pub straggling: Vec<bool>,
+    /// crash time per down worker (NaN while alive) — downtime accounting
+    pub down_since: Vec<f64>,
+    /// per-worker restart deadline (NaN while alive); a later fault
+    /// extends it and earlier pending restart events become stale
+    pub restart_at: Vec<f64>,
+    alive: Vec<bool>,
+    alive_count: usize,
+}
+
+impl WorkerBlock {
+    /// A block for `n` workers, all alive and idle, clocks at `t`.
+    pub fn new(n: usize, t: f64) -> Self {
+        WorkerBlock {
+            iter_idx: vec![0; n],
+            iter_start: vec![t; n],
+            param_version_at_start: vec![0; n],
+            last_times: vec![f64::NAN; n],
+            busy: vec![false; n],
+            predicted_times: vec![f64::NAN; n],
+            predicted_flags: vec![false; n],
+            straggling: vec![false; n],
+            down_since: vec![f64::NAN; n],
+            restart_at: vec![f64::NAN; n],
+            alive: vec![true; n],
+            alive_count: n,
+        }
+    }
+
+    /// The per-worker liveness mask (read-only — see [`WorkerBlock::set_alive`]).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.alive[worker]
+    }
+
+    /// Flip a worker's liveness, maintaining the O(1) live counter.
+    pub fn set_alive(&mut self, worker: usize, value: bool) {
+        if self.alive[worker] != value {
+            self.alive[worker] = value;
+            if value {
+                self.alive_count += 1;
+            } else {
+                self.alive_count -= 1;
+            }
+        }
+    }
+
+    /// Number of live workers — O(1), equal to [`live_count`] over the mask.
+    pub fn live_count(&self) -> usize {
+        self.alive_count
+    }
+}
+
 /// Replace dead workers' predicted times with the live minimum, so they
 /// neither read as stragglers nor distort x-order grouping (a dead worker
 /// is outside the round entirely until it restarts). No-op when no live
@@ -434,6 +509,24 @@ mod tests {
             assert_eq!(wm, members);
             assert_eq!(wd, dropped);
         }
+    }
+
+    #[test]
+    fn worker_block_maintains_live_count() {
+        let mut wb = WorkerBlock::new(5, 2.0);
+        assert_eq!(wb.live_count(), 5);
+        assert_eq!(wb.live_count(), live_count(wb.alive()));
+        assert_eq!(wb.iter_start, vec![2.0; 5]);
+        wb.set_alive(2, false);
+        wb.set_alive(4, false);
+        wb.set_alive(4, false); // idempotent: no double-decrement
+        assert_eq!(wb.live_count(), 3);
+        assert_eq!(wb.live_count(), live_count(wb.alive()));
+        assert!(!wb.is_alive(2) && wb.is_alive(0));
+        wb.set_alive(2, true);
+        wb.set_alive(2, true); // idempotent: no double-increment
+        assert_eq!(wb.live_count(), 4);
+        assert_eq!(wb.live_count(), live_count(wb.alive()));
     }
 
     #[test]

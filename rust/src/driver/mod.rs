@@ -52,7 +52,10 @@ pub mod stats;
 
 pub use self::events::{Event, EventQueue};
 pub use self::membership::{first_k_split, LiveSet};
-pub use self::stats::{IterBreakdown, JobStats, ServerRecord, SERIES_CAP};
+pub use self::stats::{
+    peak_rss_bytes, reset_peak_rss, IterBreakdown, JobStats, ServerRecord, StatStream, StreamAgg,
+    SERIES_CAP,
+};
 
 /// Extended mode set used at driver level: LGC's first-K is a distinct
 /// grouping rule (uses only the K fastest reports per round). `Copy` —
@@ -205,6 +208,12 @@ pub struct DriverConfig {
     /// injected failure schedule (empty = fault-free, bit-identical to
     /// the pre-faults simulator)
     pub faults: FaultPlan,
+    /// stream finished-job stats into a bounded running aggregate
+    /// ([`stats::StreamAgg`]) instead of accumulating `Vec<JobStats>` —
+    /// the memory bound that makes 10⁶-job traces tractable. Collect the
+    /// aggregate via [`Driver::run_streaming`]; the plain accessors then
+    /// return an empty stats vec.
+    pub streaming_stats: bool,
     /// collect per-phase wall-clock counters ([`PhaseProfile`], the
     /// `star simulate --profile` table). Off by default: the timers cost
     /// two `Instant::now` calls per event when enabled, zero when not.
@@ -225,6 +234,7 @@ impl Default for DriverConfig {
             tree_branching: 3,
             throttles: Vec::new(),
             faults: FaultPlan::default(),
+            streaming_stats: false,
             profile: false,
         }
     }
@@ -261,6 +271,14 @@ pub struct RunMetrics {
     pub peak_queue_depth: usize,
     /// wall-clock seconds of the event loop
     pub wall_s: f64,
+    /// jobs that terminated during the run — the figure that stays
+    /// meaningful under `streaming_stats`, where no `Vec<JobStats>`
+    /// accumulates
+    pub jobs_finished: u64,
+    /// process peak resident set (`VmHWM` from `/proc/self/status`) read
+    /// at the end of the run; `None` off Linux. Monotonic per process —
+    /// callers comparing cells should [`stats::reset_peak_rss`] first.
+    pub peak_rss_bytes: Option<u64>,
     /// per-phase timing counters (all zero unless `cfg.profile`)
     pub profile: PhaseProfile,
 }
@@ -294,16 +312,13 @@ struct JobRun {
     // prediction pipeline
     histories: Vec<History>,
     iter_model: IterTimeModel,
-    predicted_times: Vec<f64>,
-    predicted_flags: Vec<bool>,
 
     // event-machine state
     started_at: f64,
-    iter_idx: Vec<u64>,
-    iter_start: Vec<f64>,
-    param_version_at_start: Vec<u64>,
-    last_times: Vec<f64>,
-    busy: Vec<bool>,
+    /// the hot per-worker state (iteration clocks, liveness, prediction
+    /// outputs) as one struct-of-arrays block — every event touches
+    /// several of these arrays, so they live together (DESIGN.md §12)
+    wb: membership::WorkerBlock,
     /// reports waiting to be grouped: (worker, ready_at, version_at_start)
     pending: Vec<(usize, f64, u64)>,
     /// dynamic-x cluster assignment (worker -> group) when in DynamicX
@@ -318,16 +333,8 @@ struct JobRun {
     /// no iteration may start before this time (decision pause, §V)
     pause_until: f64,
 
-    // fault state
-    /// per-worker liveness; dead workers are excluded from barriers,
-    /// groups and rings until their restart event fires
-    alive: Vec<bool>,
-    /// crash time per down worker (NaN while alive) — downtime accounting
-    down_since: Vec<f64>,
-    /// per-worker restart deadline: a later fault (e.g. a server outage
-    /// hitting an already-crashed worker) pushes it out, and earlier
-    /// pending restart events become stale
-    restart_at: Vec<f64>,
+    // fault state (the per-worker half — alive/down_since/restart_at —
+    // lives in `wb` with the rest of the hot per-worker arrays)
     /// per-PS restart deadline (same extension rule)
     ps_restart_at: Vec<f64>,
     /// PSs of this job currently down; updates stall while > 0
@@ -341,7 +348,6 @@ struct JobRun {
 
     // per-iteration-index straggler accounting (ring slab, DESIGN.md §3)
     round_times: stats::RoundSlab,
-    straggling: Vec<bool>,
 
     /// deprivations this job imposed on co-located tasks (§IV-D1), undone
     /// at its next decision: (task, old_cpu_cap, old_bw_cap)
@@ -357,12 +363,19 @@ pub struct Driver {
     pub cluster: Cluster,
     engine: EventQueue,
     rng: Rng,
-    jobs: Vec<Option<JobRun>>,
+    /// boxed so a 10⁶-slot trace costs 8 B per empty slot, not
+    /// `size_of::<JobRun>()` (hundreds of bytes) — only admitted jobs
+    /// pay for their state
+    jobs: Vec<Option<Box<JobRun>>>,
     specs: Vec<JobSpec>,
     wait_queue: Vec<usize>,
     make_policy: PolicyFactory,
     pub finished: Vec<JobStats>,
     pub server_records: Vec<ServerRecord>,
+    /// running aggregate replacing `finished` when
+    /// [`DriverConfig::streaming_stats`] is set
+    stream: Option<stats::StreamAgg>,
+    jobs_done: u64,
 
     // hot-loop scratch, reused across events (DESIGN.md §3). Buffers are
     // `mem::take`n around re-entrant calls, so the loop allocates nothing
@@ -387,7 +400,7 @@ impl Driver {
         let mut cluster_cfg = cfg.cluster.clone();
         cluster_cfg.seed ^= cfg.seed;
         let mut cluster = Cluster::new(cluster_cfg);
-        let mut engine = EventQueue::new();
+        let mut engine = EventQueue::for_cluster(cluster.server_count());
         for j in &specs {
             engine.schedule_at(j.arrival_s, Event::Arrive(j.id));
         }
@@ -399,6 +412,7 @@ impl Driver {
         Driver {
             rng: Rng::new(cfg.seed, 0xd21fe4),
             profile_on: cfg.profile,
+            stream: cfg.streaming_stats.then(stats::StreamAgg::default),
             cfg,
             cluster,
             engine,
@@ -408,6 +422,7 @@ impl Driver {
             make_policy,
             finished: Vec::new(),
             server_records: Vec::new(),
+            jobs_done: 0,
             pt_scratch: Vec::new(),
             order_scratch: Vec::new(),
             group_scratch: Vec::new(),
@@ -436,6 +451,25 @@ impl Driver {
     /// [`DriverConfig::profile`] is set — the per-phase timing counters.
     /// Instrumentation reads clocks only; it cannot perturb the trace.
     pub fn run_instrumented(mut self) -> (Vec<JobStats>, Vec<ServerRecord>, RunMetrics) {
+        let metrics = self.drive();
+        (self.finished, self.server_records, metrics)
+    }
+
+    /// Run to completion in streaming-stats mode: per-job stats are
+    /// folded into a bounded [`stats::StreamAgg`] at termination instead
+    /// of accumulating — the only run entry point whose memory does not
+    /// grow with the trace length. The aggregate matches folding a
+    /// non-streaming run's `finished` vec exactly (same fold order:
+    /// termination order), pinned by `tests/partitioned_equivalence.rs`.
+    pub fn run_streaming(mut self) -> (stats::StreamAgg, Vec<ServerRecord>, RunMetrics) {
+        if self.stream.is_none() {
+            self.stream = Some(stats::StreamAgg::default());
+        }
+        let metrics = self.drive();
+        (self.stream.unwrap(), self.server_records, metrics)
+    }
+
+    fn drive(&mut self) -> RunMetrics {
         let run_t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.engine.next() {
             let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
@@ -458,13 +492,14 @@ impl Driver {
                 self.profile.dispatch_s += t0.elapsed().as_secs_f64();
             }
         }
-        let metrics = RunMetrics {
+        RunMetrics {
             events: self.engine.events_processed(),
             peak_queue_depth: self.engine.peak_pending(),
             wall_s: run_t0.elapsed().as_secs_f64(),
+            jobs_finished: self.jobs_done,
+            peak_rss_bytes: stats::peak_rss_bytes(),
             profile: self.profile,
-        };
-        (self.finished, self.server_records, metrics)
+        }
     }
 
     fn sample_servers(&mut self, t: f64) {
@@ -498,9 +533,7 @@ impl Driver {
                 let run = JobRun {
                     progress,
                     checkpoint,
-                    alive: vec![true; n],
-                    down_since: vec![f64::NAN; n],
-                    restart_at: vec![f64::NAN; n],
+                    wb: membership::WorkerBlock::new(n, t),
                     ps_restart_at: vec![f64::NAN; placement.ps_tasks.len()],
                     ps_down: 0,
                     ps_down_since: f64::NAN,
@@ -512,14 +545,7 @@ impl Driver {
                     batch_frac: vec![1.0; n],
                     histories: (0..n).map(|_| History::new()).collect(),
                     iter_model: IterTimeModel::new(),
-                    predicted_times: vec![f64::NAN; n],
-                    predicted_flags: vec![false; n],
                     started_at: t,
-                    iter_idx: vec![0; n],
-                    iter_start: vec![t; n],
-                    param_version_at_start: vec![0; n],
-                    last_times: vec![f64::NAN; n],
-                    busy: vec![false; n],
                     pending: Vec::new(),
                     dyn_groups: vec![0; n],
                     reports_since_decision: usize::MAX / 2, // force first decision
@@ -528,7 +554,6 @@ impl Driver {
                     mode_just_switched: false,
                     pause_until: 0.0,
                     round_times: stats::RoundSlab::default(),
-                    straggling: vec![false; n],
                     imposed: Vec::new(),
                     stats: JobStats {
                         job: spec.id,
@@ -573,7 +598,7 @@ impl Driver {
                         );
                     }
                 }
-                self.jobs[job] = Some(run);
+                self.jobs[job] = Some(Box::new(run));
                 self.decide(job, t);
                 for w in 0..n {
                     self.start_iteration(job, w, t);
@@ -608,7 +633,7 @@ impl Driver {
     fn start_iteration(&mut self, job: usize, worker: usize, t: f64) {
         let t = {
             let run = self.jobs[job].as_mut().expect("job running");
-            if run.finished || run.busy[worker] || !run.alive[worker] {
+            if run.finished || run.wb.busy[worker] || !run.wb.is_alive(worker) {
                 return;
             }
             t.max(run.pause_until)
@@ -616,10 +641,10 @@ impl Driver {
         let bd = self.iteration_breakdown(job, worker, t);
         let run = self.jobs[job].as_mut().expect("job running");
         let spec = run.job.spec();
-        run.busy[worker] = true;
-        run.iter_start[worker] = t;
-        run.param_version_at_start[worker] = run.progress.step;
-        let iter = run.iter_idx[worker];
+        run.wb.busy[worker] = true;
+        run.wb.iter_start[worker] = t;
+        run.wb.param_version_at_start[worker] = run.progress.step;
+        let iter = run.wb.iter_idx[worker];
 
         // predicted time for this iteration: predicted resources (AR over
         // the history; the LSTM artifact path is exercised by e2e_train)
@@ -632,10 +657,10 @@ impl Driver {
             (pc * spec.worker_cpu).max(1e-3),
             (pb * spec.worker_bw * 4.0).max(1e-3),
         );
-        run.predicted_times[worker] = if run.iter_model.trained() {
+        run.wb.predicted_times[worker] = if run.iter_model.trained() {
             run.iter_model.predict(&feats)
-        } else if run.last_times[worker].is_finite() {
-            run.last_times[worker]
+        } else if run.wb.last_times[worker].is_finite() {
+            run.wb.last_times[worker]
         } else {
             bd.total_s // bootstrap
         };
@@ -662,21 +687,21 @@ impl Driver {
             run.stats.series[worker].push(bd);
         }
 
-        run.last_times[worker] = bd.total_s;
+        run.wb.last_times[worker] = bd.total_s;
         self.engine.schedule_at(t + bd.total_s, Event::WorkerDone { job, worker, iter });
     }
 
     fn worker_done(&mut self, job: usize, worker: usize, iter: u64, t: f64) {
         {
             let Some(run) = self.jobs[job].as_mut() else { return };
-            if run.finished || run.iter_idx[worker] != iter {
+            if run.finished || run.wb.iter_idx[worker] != iter {
                 return; // stale event
             }
-            run.busy[worker] = false;
-            run.iter_idx[worker] += 1;
+            run.wb.busy[worker] = false;
+            run.wb.iter_idx[worker] += 1;
             run.stats.iters_total += 1;
-            let dur = t - run.iter_start[worker];
-            let version = run.param_version_at_start[worker];
+            let dur = t - run.wb.iter_start[worker];
+            let version = run.wb.param_version_at_start[worker];
             // AR ring: a removed worker's gradient that missed its round's
             // aggregation window is discarded (the ring has moved on).
             // The ring is chained over *live* workers only — dead members
@@ -684,14 +709,14 @@ impl Driver {
             // machinery, so removal counts apply to the survivors.
             let mut dropped = false;
             if let DriverMode::Sync(SyncMode::ArRing { removed, .. }) = run.mode {
-                if removed > 0 && run.iter_start[worker] < run.last_ar_flush_t {
+                if removed > 0 && run.wb.iter_start[worker] < run.last_ar_flush_t {
                     fill_predicted_safe(
-                        &run.predicted_times,
-                        &run.last_times,
+                        &run.wb.predicted_times,
+                        &run.wb.last_times,
                         &mut self.pt_scratch,
                     );
                     membership::ring_order_into(
-                        &run.alive,
+                        run.wb.alive(),
                         &self.pt_scratch,
                         &mut self.order_scratch,
                     );
@@ -708,13 +733,13 @@ impl Driver {
 
             // straggler accounting for this iteration index; the minimum
             // per-worker index is the slab's reclamation watermark
-            let flag_pred = run.predicted_flags[worker];
-            let min_iter = run.iter_idx.iter().copied().min().unwrap_or(0);
+            let flag_pred = run.wb.predicted_flags[worker];
+            let min_iter = run.wb.iter_idx.iter().copied().min().unwrap_or(0);
             let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
             stats::record_report(
                 &mut run.stats,
                 &mut run.round_times,
-                &mut run.straggling,
+                &mut run.wb.straggling,
                 iter,
                 min_iter,
                 (worker, dur, flag_pred),
@@ -732,7 +757,7 @@ impl Driver {
         // shrunken rounds still get their per-round decision cadence)
         let redecide = {
             let Some(run) = self.jobs[job].as_ref() else { return };
-            let live = membership::live_count(&run.alive).max(1);
+            let live = run.wb.live_count().max(1);
             !run.finished && run.reports_since_decision >= live
         };
         if redecide {
@@ -750,7 +775,7 @@ impl Driver {
         let restart = {
             match self.jobs[job].as_ref() {
                 Some(run) => {
-                    !run.finished && !run.busy[worker] && !waiting_in_pending(run, worker)
+                    !run.finished && !run.wb.busy[worker] && !waiting_in_pending(run, worker)
                 }
                 None => false,
             }
@@ -779,7 +804,7 @@ impl Driver {
                 membership::next_update_group_into(
                     &run.mode,
                     &run.pending,
-                    &run.alive,
+                    run.wb.alive(),
                     &run.dyn_groups,
                     &mut self.group_scratch,
                 )
@@ -804,8 +829,16 @@ impl Driver {
                 let Some(run) = self.jobs[job].as_mut() else { return };
                 // the ring chains over live workers; dead members are
                 // bypassed like removed stragglers (§IV-B)
-                fill_predicted_safe(&run.predicted_times, &run.last_times, &mut self.pt_scratch);
-                membership::ring_order_into(&run.alive, &self.pt_scratch, &mut self.order_scratch);
+                fill_predicted_safe(
+                    &run.wb.predicted_times,
+                    &run.wb.last_times,
+                    &mut self.pt_scratch,
+                );
+                membership::ring_order_into(
+                    run.wb.alive(),
+                    &self.pt_scratch,
+                    &mut self.order_scratch,
+                );
                 if self.order_scratch.is_empty() {
                     return;
                 }
@@ -820,7 +853,7 @@ impl Driver {
             DriverMode::FirstK(k) => {
                 let fire = {
                     let Some(run) = self.jobs[job].as_mut() else { return };
-                    let live = membership::live_count(&run.alive);
+                    let live = run.wb.live_count();
                     self.arrival_scratch.clear();
                     self.arrival_scratch.extend(run.pending.iter().map(|&(w, _, _)| w));
                     let fired = membership::first_k_split_into(
@@ -920,6 +953,7 @@ impl Driver {
             // ML feedback: realized seconds per unit of value improvement
             let dv = (value_after - value_before).abs().max(1e-12);
             let span = run
+                .wb
                 .last_times
                 .iter()
                 .filter(|x| x.is_finite())
@@ -959,13 +993,13 @@ impl Driver {
             let run = self.jobs[job].as_mut().unwrap();
             run.reports_since_decision = 0;
             let spec = run.job.spec();
-            fill_predicted_safe(&run.predicted_times, &run.last_times, &mut self.pt_scratch);
-            run.predicted_flags = crate::predict::straggler_flags(&self.pt_scratch);
+            fill_predicted_safe(&run.wb.predicted_times, &run.wb.last_times, &mut self.pt_scratch);
+            run.wb.predicted_flags = crate::predict::straggler_flags(&self.pt_scratch);
             // a dead worker is not a straggler — it is outside the round
             // entirely until it restarts
             for w in 0..run.job.workers {
-                if !run.alive[w] {
-                    run.predicted_flags[w] = false;
+                if !run.wb.is_alive(w) {
+                    run.wb.predicted_flags[w] = false;
                 }
             }
             let obs = RoundObs {
@@ -977,10 +1011,10 @@ impl Driver {
                 progress: run.progress.progress,
                 now: t,
                 predicted_times: &self.pt_scratch,
-                last_times: &run.last_times,
+                last_times: &run.wb.last_times,
                 value: run.progress.value(),
-                predicted_stragglers: &run.predicted_flags,
-                live: &run.alive,
+                predicted_stragglers: &run.wb.predicted_flags,
+                live: run.wb.alive(),
             };
             let t0 = if self.profile_on { Some(std::time::Instant::now()) } else { None };
             let d = run.policy.decide(&obs);
@@ -1089,9 +1123,9 @@ impl Driver {
                 run.stats.converged_value = run.progress.value();
                 // close out downtime for workers/PSs still dead at the end
                 for w in 0..run.job.workers {
-                    if !run.alive[w] && run.down_since[w].is_finite() {
-                        run.stats.downtime_s += t - run.down_since[w];
-                        run.down_since[w] = f64::NAN;
+                    if !run.wb.is_alive(w) && run.wb.down_since[w].is_finite() {
+                        run.stats.downtime_s += t - run.wb.down_since[w];
+                        run.wb.down_since[w] = f64::NAN;
                     }
                 }
                 if run.ps_down > 0 && run.ps_down_since.is_finite() {
@@ -1104,14 +1138,21 @@ impl Driver {
         if !done {
             return;
         }
-        let run = self.jobs[job].take().unwrap();
+        let run = *self.jobs[job].take().unwrap();
         for &tid in run.placement.worker_tasks.iter().chain(&run.placement.ps_tasks) {
             self.cluster.remove_task(tid);
         }
         for (task, c, b) in run.imposed {
             self.cluster.set_caps(task, c, b);
         }
-        self.finished.push(run.stats);
+        self.jobs_done += 1;
+        // streaming mode folds into the bounded aggregate instead of
+        // growing `finished` with the trace (DESIGN.md §12)
+        if let Some(agg) = self.stream.as_mut() {
+            agg.fold(&run.stats);
+        } else {
+            self.finished.push(run.stats);
+        }
         // admit queued jobs
         let queue = std::mem::take(&mut self.wait_queue);
         for j in queue {

@@ -238,6 +238,185 @@ pub(crate) fn record_report(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming aggregation (DESIGN.md §12): bounded memory at 10⁶ jobs
+// ---------------------------------------------------------------------------
+
+/// Exact-value buffer size per [`StatStream`] before it collapses into
+/// the log₂ histogram. 4096 f64s = 32 KiB per metric; below this cap
+/// quantiles are exact (identical to sorting the accumulate-then-
+/// summarize vector), beyond it they are bucket-geometric approximations
+/// within a √2 factor.
+pub const STREAM_EXACT_CAP: usize = 4096;
+
+/// One metric's running aggregate: exact count/sum/min/max always, plus
+/// quantiles — exact below [`STREAM_EXACT_CAP`] samples, log₂-histogram
+/// approximate beyond. Memory is bounded at `STREAM_EXACT_CAP` f64s +
+/// 128 buckets no matter how many values stream through.
+#[derive(Clone, Debug)]
+pub struct StatStream {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// exact samples until the cap; drained into `hist` on spill
+    buf: Vec<f64>,
+    /// log₂ buckets (index = ⌊log₂ v⌋ + 64, clamped) once spilled
+    hist: Vec<u64>,
+}
+
+impl Default for StatStream {
+    fn default() -> Self {
+        StatStream {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buf: Vec::new(),
+            hist: Vec::new(),
+        }
+    }
+}
+
+impl StatStream {
+    fn bucket(v: f64) -> usize {
+        // v ≤ 0 (or subnormal-small) pins to bucket 0
+        ((v.max(1e-18).log2().floor() as i64) + 64).clamp(0, 127) as usize
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.hist.is_empty() && self.buf.len() < STREAM_EXACT_CAP {
+            self.buf.push(v);
+        } else {
+            if self.hist.is_empty() {
+                // spill: fold the exact buffer into buckets once
+                self.hist = vec![0u64; 128];
+                for &b in &self.buf {
+                    self.hist[Self::bucket(b)] += 1;
+                }
+                self.buf = Vec::new();
+            }
+            self.hist[Self::bucket(v)] += 1;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile `q` in [0, 1]. Exact (nearest-rank over the sorted
+    /// samples) while un-spilled; once spilled, the geometric midpoint of
+    /// the bucket holding rank ⌈q·count⌉, clamped into [min, max].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if self.hist.is_empty() {
+            let mut v = self.buf.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            v[(rank - 1) as usize]
+        } else {
+            let mut seen = 0u64;
+            for (i, &c) in self.hist.iter().enumerate() {
+                seen += c;
+                if seen >= rank {
+                    let mid = 2f64.powi(i as i32 - 64) * std::f64::consts::SQRT_2;
+                    return mid.clamp(self.min, self.max);
+                }
+            }
+            self.max
+        }
+    }
+}
+
+/// Bounded running aggregate over finished jobs — what
+/// `--streaming-stats` accumulates instead of `Vec<JobStats>`
+/// (DESIGN.md §12). Folding is order-sensitive only through float
+/// summation, and the driver folds in termination order — exactly the
+/// order `finished` is pushed in — so a streamed run's aggregate equals
+/// folding a non-streaming run's `finished` vec bit for bit (pinned by
+/// `tests/partitioned_equivalence.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct StreamAgg {
+    pub jobs: u64,
+    pub jct_s: StatStream,
+    /// only jobs that reached their target accuracy
+    pub tta_s: StatStream,
+    /// admission queueing delay (start - arrival)
+    pub queue_s: StatStream,
+    pub updates: StatStream,
+    pub iters: StatStream,
+    pub downtime_s: StatStream,
+    pub straggler_iters: u64,
+    pub straggler_episodes: u64,
+    pub mode_switches: u64,
+    pub rollbacks: u64,
+}
+
+impl StreamAgg {
+    /// Fold one finished job in.
+    pub fn fold(&mut self, s: &JobStats) {
+        self.jobs += 1;
+        self.jct_s.push(s.jct_s);
+        if let Some(t) = s.tta_s {
+            self.tta_s.push(t);
+        }
+        self.queue_s.push(s.start_s - s.arrival_s);
+        self.updates.push(s.updates as f64);
+        self.iters.push(s.iters_total as f64);
+        self.downtime_s.push(s.downtime_s);
+        self.straggler_iters += s.straggler_iters;
+        self.straggler_episodes += s.straggler_episodes;
+        self.mode_switches += s.mode_switches;
+        self.rollbacks += s.rollbacks;
+    }
+
+    /// The accumulate-then-summarize reference path: fold a finished
+    /// vec in order. Equals the streamed aggregate for the same run.
+    pub fn from_stats(stats: &[JobStats]) -> Self {
+        let mut agg = StreamAgg::default();
+        for s in stats {
+            agg.fold(s);
+        }
+        agg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Peak-RSS probe (BENCH_driver.json memory column)
+// ---------------------------------------------------------------------------
+
+/// Process peak resident set in bytes: `VmHWM` from `/proc/self/status`
+/// on Linux, `None` elsewhere or on any read/parse failure (the bench
+/// emits JSON `null` then — a missing probe must never fail a run).
+pub fn peak_rss_bytes() -> Option<u64> {
+    if !cfg!(target_os = "linux") {
+        return None;
+    }
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Best-effort reset of the `VmHWM` high-water mark (write `"5"` to
+/// `/proc/self/clear_refs`), so serially-run bench cells each report
+/// their own peak instead of the process-lifetime maximum. Returns
+/// whether the reset took; callers must tolerate `false` (older kernels,
+/// non-Linux) — the probe then reports a process-wide upper bound.
+pub fn reset_peak_rss() -> bool {
+    cfg!(target_os = "linux") && std::fs::write("/proc/self/clear_refs", "5").is_ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,5 +530,81 @@ mod tests {
             record_report(&mut s, &mut slab, &mut straggling, iter, 0, (1, 1.0, false));
         }
         assert_eq!(slab.occupied(), 0);
+    }
+
+    #[test]
+    fn stat_stream_exact_below_cap() {
+        let mut st = StatStream::default();
+        for v in [3.0, 1.0, 2.0, 4.0] {
+            st.push(v);
+        }
+        assert_eq!(st.count, 4);
+        assert_eq!(st.sum, 10.0);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 4.0);
+        assert_eq!(st.mean(), 2.5);
+        // nearest-rank: q=0.5 over 4 samples -> rank 2 -> 2.0
+        assert_eq!(st.quantile(0.5), 2.0);
+        assert_eq!(st.quantile(0.0), 1.0);
+        assert_eq!(st.quantile(1.0), 4.0);
+    }
+
+    #[test]
+    fn stat_stream_spills_to_bounded_histogram() {
+        let mut st = StatStream::default();
+        let n = STREAM_EXACT_CAP * 3;
+        for i in 0..n {
+            st.push(1.0 + (i % 100) as f64);
+        }
+        assert_eq!(st.count, n as u64);
+        assert!(st.buf.is_empty(), "spilled stream must drop the exact buffer");
+        assert_eq!(st.hist.len(), 128, "histogram memory is fixed");
+        // exact moments survive the spill
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 100.0);
+        assert!((st.mean() - 50.5).abs() < 1e-9);
+        // quantiles stay within the log2-bucket factor-of-2 guarantee
+        let p50 = st.quantile(0.5);
+        assert!((25.0..=100.0).contains(&p50), "p50 {p50} off by more than a bucket");
+        // degenerate inputs bucket safely
+        st.push(0.0);
+        st.push(-5.0);
+        assert_eq!(st.min, -5.0);
+    }
+
+    #[test]
+    fn stream_agg_folds_and_matches_reference() {
+        let mut a = stats();
+        a.jct_s = 100.0;
+        a.tta_s = Some(60.0);
+        a.updates = 10;
+        a.straggler_iters = 3;
+        let mut b = stats();
+        b.jct_s = 50.0;
+        b.tta_s = None;
+        b.rollbacks = 2;
+        let both = vec![a.clone(), b.clone()];
+        let reference = StreamAgg::from_stats(&both);
+        let mut streamed = StreamAgg::default();
+        streamed.fold(&a);
+        streamed.fold(&b);
+        assert_eq!(streamed.jobs, 2);
+        assert_eq!(streamed.jct_s.sum, reference.jct_s.sum);
+        assert_eq!(streamed.jct_s.quantile(0.5), reference.jct_s.quantile(0.5));
+        assert_eq!(streamed.tta_s.count, 1, "only reached-target jobs count toward TTA");
+        assert_eq!(streamed.straggler_iters, 3);
+        assert_eq!(streamed.rollbacks, 2);
+    }
+
+    #[test]
+    fn peak_rss_probe_is_sane_or_absent() {
+        match peak_rss_bytes() {
+            // a test process has certainly touched > 1 MB and < 1 TB
+            Some(b) => assert!((1 << 20..1u64 << 40).contains(&b), "VmHWM {b} implausible"),
+            None => assert!(!cfg!(target_os = "linux"), "probe must parse on Linux"),
+        }
+        // reset is best-effort by contract: either outcome is legal, it
+        // just must not panic
+        let _ = reset_peak_rss();
     }
 }

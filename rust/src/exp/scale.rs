@@ -1,11 +1,18 @@
 //! `scale` — the cluster-scale single-run throughput benchmark: drives
-//! synthetic clusters at 1×/10×/50× the paper's testbed (hundreds of
-//! servers, thousands of workers, PS and AR, faults on) through one
-//! `Driver::run` each and reports **events/sec**, wall seconds, and the
-//! peak event-queue depth per cell (`BENCH_driver.json`,
-//! `star-bench-v1`). This is the datapoint the sweep-level benches
-//! cannot give: how fast one *inner* event loop runs, which is what the
-//! Parsimon-style what-if ambitions of the ROADMAP are bounded by.
+//! synthetic clusters at 1×/10×/50×/500×/1000× the paper's testbed
+//! (up to 8000 servers and a 10⁶-job trace, PS and AR, faults on)
+//! through one `Driver::run` each and reports **events/sec**, wall
+//! seconds, **peak RSS**, and the peak event-queue depth per cell
+//! (`BENCH_driver.json`, `star-bench-v1`). This is the datapoint the
+//! sweep-level benches cannot give: how fast one *inner* event loop
+//! runs, which is what the Parsimon-style what-if ambitions of the
+//! ROADMAP are bounded by.
+//!
+//! Giant cells (≥100k jobs) run with `streaming_stats` on — finished
+//! jobs fold into running aggregates instead of a `Vec<JobStats>` — and
+//! with the smoke-style convergence caps, so memory and wall time stay
+//! bounded by the live-job working set, not the trace length
+//! (DESIGN.md §12).
 //!
 //! Cells are independent (one cluster+driver each) but run **serially**
 //! — unlike every other sweep — because the per-cell wall-clock IS the
@@ -35,15 +42,26 @@ use crate::trace::{generate, Arch, TraceConfig};
 /// runs 5·k GPU + 3·k CPU servers (so 50× = 250 + 150 = 400 servers).
 pub type ScaleSpec = (&'static str, usize, usize);
 
-/// The benchmark grid. Smoke keeps CI wall time bounded; the full grid's
-/// 50× cell is 400 servers / ~16k workers.
+/// The benchmark grid. Smoke keeps CI wall time bounded; the full grid
+/// climbs to the datacenter cells — 500× is 4000 servers / 100k jobs,
+/// 1000× is 8000 servers with a 10⁶-job synthetic trace.
 pub fn default_grid(smoke: bool) -> Vec<ScaleSpec> {
     if smoke {
         vec![("paper", 1, 8), ("10x", 10, 40)]
     } else {
-        vec![("paper", 1, 40), ("10x", 10, 400), ("50x", 50, 2000)]
+        vec![
+            ("paper", 1, 40),
+            ("10x", 10, 400),
+            ("50x", 50, 2000),
+            ("500x", 500, 100_000),
+            ("1000x", 1000, 1_000_000),
+        ]
     }
 }
+
+/// Cells at or past this job count stream their stats and run under the
+/// smoke convergence caps even on the full grid (see module doc).
+const GIANT_CELL_JOBS: usize = 100_000;
 
 /// The injected failure-rate multiplier: the throughput figure must be
 /// measured with the resilience machinery live, not on the easy path.
@@ -64,6 +82,9 @@ struct CellOut {
 
 fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool) -> CellOut {
     let (label, factor, jobs) = spec;
+    // each cell measures its own high-water mark (best-effort: on
+    // kernels without clear_refs the probe reports the process peak)
+    crate::driver::reset_peak_rss();
     let cluster = ClusterConfig {
         gpu_servers: 5 * factor,
         cpu_servers: 3 * factor,
@@ -72,22 +93,21 @@ fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool
     let servers = cluster.total_servers();
     // arrival rate scales with the cluster so concurrency stays high at
     // every factor (the paper cell reduces to the usual 280 s/job pacing)
-    let trace = generate(&TraceConfig {
-        jobs,
-        seed: ctx.seed,
-        span_s: jobs as f64 * 280.0 / factor as f64,
-        ..Default::default()
-    });
+    let trace = generate(&TraceConfig::paced_scaled(jobs, ctx.seed, factor));
     let workers: usize = trace.iter().map(|j| j.workers).sum();
+    let giant = jobs >= GIANT_CELL_JOBS;
     let mut cfg = DriverConfig {
         arch,
         cluster,
         seed: ctx.seed,
         record_series: false,
+        streaming_stats: giant,
         ..Default::default()
     };
-    if smoke {
-        // bounded smoke cells (heavily faulted jobs may never converge)
+    if smoke || giant {
+        // bounded cells (heavily faulted jobs may never converge);
+        // giant cells take the caps on the full grid too — the figure
+        // of merit is event throughput, not converged-loss fidelity
         cfg.max_job_duration_s = 6000.0;
         cfg.max_updates_per_job = 10_000;
         cfg.max_iters_per_job = 20_000;
@@ -102,8 +122,15 @@ fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool
         trace,
         Box::new(move |_| make_policy(&name).expect("validated by caller")),
     );
-    let (stats, _, metrics) = driver.run_instrumented();
-    CellOut { label, arch, servers, workers, jobs, finished: stats.len(), metrics }
+    let metrics = if giant {
+        let (_agg, _, metrics) = driver.run_streaming();
+        metrics
+    } else {
+        let (_stats, _, metrics) = driver.run_instrumented();
+        metrics
+    };
+    let finished = metrics.jobs_finished as usize;
+    CellOut { label, arch, servers, workers, jobs, finished, metrics }
 }
 
 /// Baseline events/sec per cell name, read from a previously committed
@@ -179,6 +206,7 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             "events_per_sec",
             "wall_s",
             "peak_queue",
+            "peak_rss_mb",
         ],
     );
     let mut results_json: Vec<Json> = Vec::new();
@@ -195,6 +223,10 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             table::f(eps, 0),
             table::f(m.wall_s, 2),
             table::i(m.peak_queue_depth as i64),
+            match m.peak_rss_bytes {
+                Some(b) => table::f(b as f64 / (1024.0 * 1024.0), 1),
+                None => table::s("-"),
+            },
         ]);
         // the name keys the baseline diff, so it must pin the workload
         // from pure grid parameters (requested jobs, smoke caps): the
@@ -217,6 +249,15 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             ("events_per_sec", jsonio::num(eps)),
             ("wall_s", jsonio::num(m.wall_s)),
             ("peak_queue_depth", jsonio::num(m.peak_queue_depth as f64)),
+            // null (never 0) when /proc/self/status is unreadable, so
+            // the CI RSS diff can tell "no probe" from "tiny footprint"
+            (
+                "peak_rss_bytes",
+                match m.peak_rss_bytes {
+                    Some(b) => jsonio::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
             ("servers", jsonio::num(out.servers as f64)),
             ("workers", jsonio::num(out.workers as f64)),
             ("jobs", jsonio::num(out.jobs as f64)),
@@ -290,6 +331,11 @@ mod tests {
             assert!(r.get("events_per_sec").unwrap().num().unwrap() > 0.0);
             assert!(r.get("peak_queue_depth").unwrap().num().unwrap() > 0.0);
             assert!(r.get("wall_s").unwrap().num().unwrap() > 0.0);
+            // present in every row; null only where /proc is unreadable
+            let rss = r.get("peak_rss_bytes").expect("peak_rss_bytes key");
+            if let Ok(b) = rss.num() {
+                assert!(b > 0.0, "probe must never report zero RSS");
+            }
         }
         let names: Vec<&str> =
             results.iter().map(|r| r.get("name").unwrap().str().unwrap()).collect();
@@ -318,6 +364,10 @@ mod tests {
             assert!(g.iter().any(|&(l, f, _)| l == "paper" && f == 1));
             assert!(g.iter().any(|&(l, f, _)| l == "10x" && f == 10));
         }
-        assert!(default_grid(false).iter().any(|&(l, f, _)| l == "50x" && f == 50));
+        let full = default_grid(false);
+        assert!(full.iter().any(|&(l, f, _)| l == "50x" && f == 50));
+        assert!(full.iter().any(|&(l, f, _)| l == "500x" && f == 500));
+        // the datacenter cell: 1000x cluster, 10^6-job trace, streamed
+        assert!(full.iter().any(|&(l, f, j)| l == "1000x" && f == 1000 && j == 1_000_000));
     }
 }

@@ -41,7 +41,7 @@ fn main() {
                 "usage: star <train|simulate|replay|scenario|worker|dispatch|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
-                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile]\n\
+                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile] [--streaming-stats]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  scenario   list | run <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--threads N]\n\
                  \x20          | sample <space.json|builtin> [--count N] [--out-dir DIR] [--index K]\n\
@@ -120,7 +120,15 @@ fn train(args: &Args) -> star::Result<()> {
 
 fn simulate(args: &Args) -> star::Result<()> {
     args.check_known(&[
-        "system", "jobs", "arch", "seed", "fault-rate", "fault-seed", "threads", "profile",
+        "system",
+        "jobs",
+        "arch",
+        "seed",
+        "fault-rate",
+        "fault-seed",
+        "threads",
+        "profile",
+        "streaming-stats",
     ])?;
     // `--system` accepts a comma-separated list; each system is an
     // independent run cell over the same trace, swept `--threads`-wide
@@ -144,14 +152,21 @@ fn simulate(args: &Args) -> star::Result<()> {
     // / policy decide / stats) from the instrumented run, printed as a
     // table per system — where the wall time goes, without a profiler
     let profile = args.flag("profile");
+    // --streaming-stats: fold finished jobs into running aggregates
+    // (quantile sketch + sums) instead of a Vec<JobStats> — bounded
+    // memory on very long traces; the report comes from the aggregates
+    let streaming = args.flag("streaming-stats");
     // validate every name before spawning sweep workers
     star::baselines::validate_systems(&systems)?;
     let trace = generate(&TraceConfig::paced(jobs, seed));
     let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
-        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile)
+        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile, streaming)
     })?;
-    for (sys, (stats, metrics)) in systems.iter().zip(&all) {
-        report(sys, arch, stats);
+    for (sys, (stats, metrics, agg)) in systems.iter().zip(&all) {
+        match agg {
+            Some(agg) => report_streaming(sys, arch, agg),
+            None => report(sys, arch, stats),
+        }
         if profile {
             print_profile(sys, metrics);
         }
@@ -406,14 +421,17 @@ fn run_and_report(
 ) -> star::Result<()> {
     // validate the system name before the simulation starts
     make_policy(system)?;
-    let (stats_v, _) = run_stats(system, arch, seed, trace, fault_rate, fault_seed, false);
+    let (stats_v, _, _) = run_stats(system, arch, seed, trace, fault_rate, fault_seed, false, false);
     report(system, arch, &stats_v);
     Ok(())
 }
 
 /// One run cell: a fresh driver over `trace` under `system`. Callers
 /// must have validated the system name (the per-job factory runs
-/// mid-simulation, where failing is no longer an option).
+/// mid-simulation, where failing is no longer an option). With
+/// `streaming` on, per-job stats fold into the returned `StreamAgg`
+/// and the stats vec comes back empty.
+#[allow(clippy::too_many_arguments)]
 fn run_stats(
     system: &str,
     arch: Arch,
@@ -422,7 +440,8 @@ fn run_stats(
     fault_rate: f64,
     fault_seed: u64,
     profile: bool,
-) -> (Vec<star::driver::JobStats>, star::driver::RunMetrics) {
+    streaming: bool,
+) -> (Vec<star::driver::JobStats>, star::driver::RunMetrics, Option<star::driver::StreamAgg>) {
     let base_cfg = DriverConfig::default();
     // the scenario layer's rate regime — the shared --fault-rate recipe
     let faults = star::scenario::FaultRegime::Rate { rate: fault_rate, seed: fault_seed }.plan(
@@ -436,6 +455,7 @@ fn run_stats(
         record_series: false,
         faults,
         profile,
+        streaming_stats: streaming,
         ..Default::default()
     };
     let name = system.to_string();
@@ -444,8 +464,39 @@ fn run_stats(
         trace,
         Box::new(move |_| make_policy(&name).expect("validated by caller")),
     );
-    let (stats, _, metrics) = driver.run_instrumented();
-    (stats, metrics)
+    if streaming {
+        let (agg, _, metrics) = driver.run_streaming();
+        (Vec::new(), metrics, Some(agg))
+    } else {
+        let (stats, _, metrics) = driver.run_instrumented();
+        (stats, metrics, None)
+    }
+}
+
+/// The `--streaming-stats` report: same metric rows as [`report`], read
+/// off the running aggregates instead of a retained per-job vec.
+fn report_streaming(system: &str, arch: Arch, agg: &star::driver::StreamAgg) {
+    let mut t = Table::new(
+        &format!("{system} over {} jobs ({arch:?}, streamed aggregates)", agg.jobs),
+        &["metric", "mean", "p1", "p99"],
+    );
+    let rows: [(&str, &star::driver::StatStream); 6] = [
+        ("jct_s", &agg.jct_s),
+        ("tta_s", &agg.tta_s),
+        ("queue_s", &agg.queue_s),
+        ("updates", &agg.updates),
+        ("iters", &agg.iters),
+        ("downtime_s", &agg.downtime_s),
+    ];
+    for (name, s) in rows {
+        t.rowf(&[
+            table::s(name),
+            table::f(s.mean(), 2),
+            table::f(s.quantile(0.01), 2),
+            table::f(s.quantile(0.99), 2),
+        ]);
+    }
+    t.print();
 }
 
 /// The `--profile` table: per-phase wall seconds from the driver's

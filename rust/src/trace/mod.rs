@@ -71,6 +71,22 @@ impl TraceConfig {
     pub fn paced(jobs: usize, seed: u64) -> TraceConfig {
         TraceConfig { jobs, seed, span_s: jobs as f64 * 280.0, ..Default::default() }
     }
+
+    /// [`TraceConfig::paced`] for a cluster `factor`× the paper testbed:
+    /// the span shrinks by the factor so arrivals keep the scaled
+    /// cluster as busy as `paced` keeps the 8-server one. Factor 1 is
+    /// byte-identical to `paced`. This is the scale benchmark's 10⁶-job
+    /// synthetic-trace path — generation is O(jobs) with no per-job
+    /// state besides the output vec, so a 1000× / 1M-job trace builds
+    /// in one pass.
+    pub fn paced_scaled(jobs: usize, seed: u64, factor: usize) -> TraceConfig {
+        TraceConfig {
+            jobs,
+            seed,
+            span_s: jobs as f64 * 280.0 / factor.max(1) as f64,
+            ..Default::default()
+        }
+    }
 }
 
 /// Generate a Philly-like trace: bursty day/night arrivals (two-level
@@ -268,6 +284,22 @@ mod tests {
             seen[j.model] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn paced_scaled_matches_paced_at_factor_one() {
+        let a = TraceConfig::paced(40, 7);
+        let b = TraceConfig::paced_scaled(40, 7, 1);
+        assert_eq!(a.span_s, b.span_s);
+        let (ta, tb) = (generate(&a), generate(&b));
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.workers, y.workers);
+        }
+        // a 10x cluster compresses the span 10x (and factor 0 is clamped)
+        assert_eq!(TraceConfig::paced_scaled(40, 7, 10).span_s * 10.0, a.span_s);
+        assert_eq!(TraceConfig::paced_scaled(40, 7, 0).span_s, a.span_s);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! The datacenter-scale partitioning contracts (DESIGN.md §12): the
+//! sharded event queue, the per-server share-epoch partitions, and the
+//! streaming stats path are pure performance changes — each must be
+//! **equivalent** to its serial/accumulating reference:
+//!
+//! - the job-partitioned `EventQueue` pops in byte-identical order at
+//!   any shard count (the `(at, seq)` total order is shard-independent);
+//! - a scaled multi-shard, multi-partition replay with the share cache
+//!   on is bit-identical to the same replay with every share recomputed
+//!   from scratch (the partitioned generations never serve a stale
+//!   epoch);
+//! - streaming stats (fold-on-finish) match accumulate-then-summarize.
+
+use star::baselines::make_policy;
+use star::driver::{Driver, DriverConfig, Event, EventQueue, JobStats, StatStream, StreamAgg};
+use star::simrng::Rng;
+use star::trace::{generate, Arch, TraceConfig};
+
+/// Comparable key for a popped event (Event carries no derives — the
+/// driver never compares events, only this test does).
+fn key(e: &Event) -> (u8, usize, usize, u64) {
+    match *e {
+        Event::Arrive(job) => (0, job, 0, 0),
+        Event::WorkerDone { job, worker, iter } => (1, job, worker, iter),
+        Event::ArFlush { job } => (2, job, 0, 0),
+        Event::ServerSample => (3, 0, 0, 0),
+        Event::Fault(i) => (4, i, 0, 0),
+        Event::WorkerRestart { job, worker } => (5, job, worker, 0),
+        Event::PsRestart { job, ps_idx } => (6, job, ps_idx, 0),
+    }
+}
+
+/// Rebuild an event from its key (events are plain data — one draw is
+/// replayed identically into every queue under comparison).
+fn event_from(k: (u8, usize, usize, u64)) -> Event {
+    match k.0 {
+        0 => Event::Arrive(k.1),
+        1 => Event::WorkerDone { job: k.1, worker: k.2, iter: k.3 },
+        2 => Event::ArFlush { job: k.1 },
+        3 => Event::ServerSample,
+        4 => Event::Fault(k.1),
+        5 => Event::WorkerRestart { job: k.1, worker: k.2 },
+        _ => Event::PsRestart { job: k.1, ps_idx: k.2 },
+    }
+}
+
+fn random_event_key(rng: &mut Rng) -> (u8, usize, usize, u64) {
+    let job = rng.usize(0, 999);
+    match rng.usize(0, 6) {
+        0 => (0, job, 0, 0),
+        1 => (1, job, rng.usize(0, 15), rng.usize(0, 40) as u64),
+        2 => (2, job, 0, 0),
+        3 => (3, 0, 0, 0),
+        4 => (4, rng.usize(0, 99), 0, 0),
+        5 => (5, job, rng.usize(0, 15), 0),
+        _ => (6, job, rng.usize(0, 7), 0),
+    }
+}
+
+/// Random interleavings of schedules and pops must pop identically
+/// across 1/2/8 partitions — the queue-level half of the golden-trace
+/// guarantee (the sim-level proptest covers the generic engine).
+#[test]
+fn event_queue_pop_order_identical_across_shard_counts() {
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(0x9A27_1D00 + case);
+        let mut queues = [EventQueue::new(1), EventQueue::new(2), EventQueue::new(8)];
+        assert_eq!(queues[0].num_shards(), 1);
+        assert_eq!(queues[1].num_shards(), 2);
+        assert_eq!(queues[2].num_shards(), 8);
+        for _ in 0..rng.usize(50, 300) {
+            if rng.chance(0.6) {
+                // same-instant bursts are the FIFO-tie-break stressor
+                let at = if rng.chance(0.3) { 100.0 } else { rng.range(0.0, 5_000.0) };
+                let k = random_event_key(&mut rng);
+                for q in queues.iter_mut() {
+                    q.schedule_at(at, event_from(k));
+                }
+            } else {
+                let pops: Vec<Option<(u64, (u8, usize, usize, u64))>> = queues
+                    .iter_mut()
+                    .map(|q| q.next().map(|(t, e)| (t.to_bits(), key(&e))))
+                    .collect();
+                assert_eq!(pops[0], pops[1], "case {case}: 1 vs 2 shards");
+                assert_eq!(pops[0], pops[2], "case {case}: 1 vs 8 shards");
+            }
+        }
+        // drain: the tails must agree too
+        loop {
+            let pops: Vec<Option<(u64, (u8, usize, usize, u64))>> = queues
+                .iter_mut()
+                .map(|q| q.next().map(|(t, e)| (t.to_bits(), key(&e))))
+                .collect();
+            assert_eq!(pops[0], pops[1], "case {case}: drain 1 vs 2");
+            assert_eq!(pops[0], pops[2], "case {case}: drain 1 vs 8");
+            if pops[0].is_none() {
+                break;
+            }
+        }
+        assert_eq!(queues[0].events_processed(), queues[2].events_processed());
+        assert_eq!(queues[0].now().to_bits(), queues[2].now().to_bits());
+    }
+}
+
+fn scaled_cfg(arch: Arch, streaming: bool) -> DriverConfig {
+    // 2× the paper testbed: 16 servers → a 2-shard EventQueue and 16
+    // epoch partitions, so both partitioned structures are genuinely
+    // exercised (the paper cluster collapses to one shard)
+    let cluster = star::cluster::ClusterConfig {
+        gpu_servers: 10,
+        cpu_servers: 6,
+        ..Default::default()
+    };
+    let mut cfg = DriverConfig {
+        arch,
+        cluster,
+        record_series: false,
+        streaming_stats: streaming,
+        ..Default::default()
+    };
+    let trace = generate(&TraceConfig::paced_scaled(10, 3, 2));
+    cfg.faults = star::scenario::FaultRegime::Rate { rate: 1.0, seed: 9 }.plan(
+        &trace,
+        star::faults::span_for(&trace, cfg.max_job_duration_s),
+        cfg.cluster.total_servers(),
+    );
+    cfg
+}
+
+fn scaled_driver(arch: Arch, streaming: bool) -> Driver {
+    let cfg = scaled_cfg(arch, streaming);
+    let trace = generate(&TraceConfig::paced_scaled(10, 3, 2));
+    Driver::new(cfg, trace, Box::new(|_| make_policy("STAR-H").expect("known system")))
+}
+
+fn assert_stats_identical(a: &[JobStats], b: &[JobStats]) {
+    assert_eq!(a.len(), b.len(), "job count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.job, y.job);
+        assert_eq!(x.start_s, y.start_s, "job {}", x.job);
+        assert_eq!(x.end_s, y.end_s, "job {}", x.job);
+        assert_eq!(x.jct_s, y.jct_s, "job {}", x.job);
+        assert_eq!(x.tta_s, y.tta_s, "job {}", x.job);
+        assert_eq!(x.updates, y.updates, "job {}", x.job);
+        assert_eq!(x.iters_total, y.iters_total, "job {}", x.job);
+        assert_eq!(x.straggler_iters, y.straggler_iters, "job {}", x.job);
+        assert_eq!(x.downtime_s, y.downtime_s, "job {}", x.job);
+    }
+}
+
+/// Partitioned epochs on a multi-shard cluster: cache on vs cache off
+/// (every query recomputed) must be bit-identical — a stale partition
+/// would perturb an iteration time and cascade into every field.
+#[test]
+fn scaled_cluster_cached_replay_is_bit_identical() {
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        let mut cached = scaled_driver(arch, false);
+        cached.cluster.set_share_cache_enabled(true);
+        let mut direct = scaled_driver(arch, false);
+        direct.cluster.set_share_cache_enabled(false);
+        let (a, _) = cached.run();
+        let (b, _) = direct.run();
+        assert!(!a.is_empty(), "scaled replay must finish jobs");
+        assert_stats_identical(&a, &b);
+    }
+}
+
+fn assert_streams_match(name: &str, a: &StatStream, b: &StatStream) {
+    assert_eq!(a.count, b.count, "{name} count");
+    assert!((a.sum - b.sum).abs() <= 1e-9, "{name} sum: {} vs {}", a.sum, b.sum);
+    assert!((a.mean() - b.mean()).abs() <= 1e-9, "{name} mean");
+    for q in [0.01, 0.5, 0.99] {
+        let (x, y) = (a.quantile(q), b.quantile(q));
+        assert!((x - y).abs() <= 1e-9, "{name} q{q}: {x} vs {y}");
+    }
+}
+
+/// `--streaming-stats` folds each job at termination; the reference
+/// accumulates every JobStats and summarizes at the end. Same trace,
+/// same fold order ⇒ the aggregates must agree (to 1e-9; the counters
+/// exactly).
+#[test]
+fn streaming_stats_match_accumulate_then_summarize() {
+    for arch in [Arch::Ps, Arch::AllReduce] {
+        let (stats, _, accum_metrics) = scaled_driver(arch, false).run_instrumented();
+        let reference = StreamAgg::from_stats(&stats);
+        let (streamed, _, stream_metrics) = scaled_driver(arch, true).run_streaming();
+        assert_eq!(reference.jobs, streamed.jobs);
+        assert_eq!(stats.len() as u64, stream_metrics.jobs_finished);
+        assert_eq!(accum_metrics.jobs_finished, stream_metrics.jobs_finished);
+        // the streaming run must not perturb the simulation itself
+        assert_eq!(accum_metrics.events, stream_metrics.events);
+        assert_streams_match("jct_s", &reference.jct_s, &streamed.jct_s);
+        assert_streams_match("tta_s", &reference.tta_s, &streamed.tta_s);
+        assert_streams_match("queue_s", &reference.queue_s, &streamed.queue_s);
+        assert_streams_match("updates", &reference.updates, &streamed.updates);
+        assert_streams_match("iters", &reference.iters, &streamed.iters);
+        assert_streams_match("downtime_s", &reference.downtime_s, &streamed.downtime_s);
+        assert_eq!(reference.straggler_iters, streamed.straggler_iters);
+        assert_eq!(reference.rollbacks, streamed.rollbacks);
+    }
+}
