@@ -5,6 +5,7 @@
 
 use star::baselines::make_policy;
 use star::benchkit::Bencher;
+use star::cluster::{water_fill_into, water_fill_sorted};
 use star::driver::{Driver, DriverConfig};
 use star::sim::Engine;
 use star::simrng::Rng;
@@ -12,6 +13,39 @@ use star::trace::{generate, Arch, TraceConfig};
 
 fn main() {
     let mut b = Bencher::quick();
+
+    // water-fill: full-sort (the pre-§13 every-fill path) vs sorted-reuse
+    // (the generation-keyed cached-permutation path). Same demand vector,
+    // over-capacity so both run the allocation pass; the delta is the
+    // gather + stable sort the cache elides on epoch refills.
+    for n in [10usize, 100, 1000] {
+        let mut rng = Rng::seeded(42 ^ n as u64);
+        let demands: Vec<f64> = (0..n).map(|_| rng.range(0.1, 4.0)).collect();
+        let capacity = demands.iter().sum::<f64>() * 0.5;
+        let d2 = demands.clone();
+        b.bench(&format!("water_fill full-sort n={n}"), move || {
+            let mut order = Vec::new();
+            let mut alloc = Vec::new();
+            let mut acc = 0.0f64;
+            for _ in 0..100 {
+                water_fill_into(&d2, capacity, &mut order, &mut alloc);
+                acc += alloc[0];
+            }
+            acc
+        });
+        let d3 = demands.clone();
+        b.bench(&format!("water_fill sorted-reuse n={n}"), move || {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| d3[a].partial_cmp(&d3[b]).unwrap());
+            let mut alloc = Vec::new();
+            let mut acc = 0.0f64;
+            for _ in 0..100 {
+                water_fill_sorted(&d3, capacity, &order, &mut alloc);
+                acc += alloc[0];
+            }
+            acc
+        });
+    }
 
     // raw event-engine throughput
     b.bench("sim::Engine 100k events", || {

@@ -37,6 +37,16 @@
 //! recomputation, and the two paths are bit-identical (verified by the
 //! `share_cache_equivalence` integration test).
 //!
+//! Within one server generation the co-located set and its capped demands
+//! are constant — only availability and interference vary with `t` — so
+//! each epoch also keeps its gathered demand vector and the water-fill's
+//! sorted permutation keyed on the generation: a fill at a new time skips
+//! the gather and the sort entirely and runs one O(n) allocation pass
+//! (DESIGN.md §13). A fill itself is a pure function of per-server state
+//! ([`fill_epoch`]'s signature proves it), which is what lets
+//! [`Cluster::prefill_epochs`] fill the distinct epochs an upcoming round
+//! will touch across scoped threads, byte-identically to serial fills.
+//!
 //! Contention-spike and per-task event lists are pruned as simulated time
 //! advances (event durations are capped at 500 s, and the discrete-event
 //! driver queries at non-decreasing times), so arbitrarily long traces run
@@ -90,6 +100,12 @@ const SPIKE_MAX_DUR_S: f64 = 500.0;
 /// Expired spikes are dropped in batches of this size (amortizes the
 /// front-drain to O(1) per query).
 const SPIKE_PRUNE_BATCH: usize = 64;
+
+/// Below this many pending fills, `prefill_epochs` runs serially: a fill
+/// is a few microseconds, so spawning scoped threads for a handful of
+/// fills costs more than it saves. (Results are identical either way —
+/// this is purely a dispatch heuristic.)
+const PREFILL_MIN_PAR_FILLS: usize = 8;
 
 /// One server.
 #[derive(Clone, Debug)]
@@ -211,6 +227,49 @@ struct ShareEpoch {
     /// task ids in `by_server` order at fill time
     ids: Vec<TaskId>,
     shares: Vec<f64>,
+    /// Generation-keyed fill inputs (DESIGN.md §13): membership and
+    /// capped demands change only on a `server_gen` bump, so fills at
+    /// new times within one generation reuse the gathered vector (and
+    /// its sum) instead of re-reading the task registry.
+    inputs_gen: u64,
+    inputs_valid: bool,
+    demands: Vec<f64>,
+    demand_total: f64,
+    /// demand-sorted permutation for the over-capacity water-fill,
+    /// built at most once per generation. `order_built` is separate
+    /// from `inputs_valid` because under-capacity fills never need it —
+    /// a later contended fill in the same generation builds it then.
+    order: Vec<usize>,
+    order_built: bool,
+}
+
+/// Per-task interference constants hoisted out of the fill inner loop:
+/// the `smooth_noise` seeds for both resources at both time scales plus
+/// the victim-hash bit — all pure functions of `(noise_seed, task id)`,
+/// precomputed once at registration instead of re-hashed on every fill.
+#[derive(Clone, Copy, Debug)]
+struct TaskNoise {
+    /// `res_idx`-indexed seed of the fast (t/3) noise component
+    fast: [u64; 2],
+    /// `res_idx`-indexed seed of the slow (t/45) noise component
+    slow: [u64; 2],
+    /// whether server spikes hit this task (hashed victim subset)
+    victim: bool,
+}
+
+impl TaskNoise {
+    fn compute(noise_seed: u64, id: TaskId) -> Self {
+        let mut fast = [0u64; 2];
+        let mut slow = [0u64; 2];
+        for res in [Res::Cpu, Res::Bw] {
+            let tag = 0x7a5c_u64 ^ ((id as u64) << 16) ^ res_tag(res);
+            fast[res_idx(res)] = noise_seed ^ tag;
+            slow[res_idx(res)] = noise_seed ^ tag ^ 0x99;
+        }
+        let h = (noise_seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        TaskNoise { fast, slow, victim: (h >> 32) & 1 == 0 }
+    }
 }
 
 /// The cluster: servers + task registry + contention model.
@@ -237,8 +296,17 @@ pub struct Cluster {
     by_server: Vec<Vec<TaskId>>,
     /// lazily-created per-task straggler-event streams (heavy-tailed
     /// slowdowns hitting one task: pinned-core co-tenants, NIC queue
-    /// imbalance, GC pauses — the paper's 0.1–500 s events, Fig 7)
-    task_events: Vec<SpikeStream>,
+    /// imbalance, GC pauses — the paper's 0.1–500 s events, Fig 7).
+    /// Owned **per server** (outer index) so a share-epoch fill touches
+    /// only its own server's streams — the state partitioning that makes
+    /// [`Cluster::prefill_epochs`] data-race-free; `event_slot` maps a
+    /// global task id to its slot. Stream RNGs stay keyed on the global
+    /// id, so the streams are bit-identical to the old flat layout.
+    task_events: Vec<Vec<SpikeStream>>,
+    /// task id -> index into `task_events[task.server]`
+    event_slot: Vec<usize>,
+    /// task id -> precomputed interference constants
+    task_noise: Vec<TaskNoise>,
     noise_seed: u64,
     /// bumped on any share-relevant mutation — the cluster-wide change
     /// counter exposed through [`Cluster::generation`]
@@ -263,9 +331,19 @@ pub struct Cluster {
     /// number of epoch recomputations (cache misses); the partition
     /// tests assert that cross-server mutations leave this untouched
     epoch_fills: u64,
-    /// water-fill scratch (demand + sort-order buffers)
-    scratch_demands: Vec<f64>,
-    scratch_order: Vec<usize>,
+    /// when set, every fill's wall time accrues into `fill_wall_s`
+    /// (off by default: `Instant::now` twice per fill is measurable on
+    /// the million-fill traces)
+    fill_timing: bool,
+    /// cumulative wall-clock seconds spent inside epoch fills (only
+    /// accrued while `fill_timing` is on); for parallel prefill this is
+    /// the *sum over workers* — cross-thread fill cost, not elapsed time
+    fill_wall_s: f64,
+    /// prefill scratch: per-server bitmask of requested resources
+    /// (`1 << res_idx`) and the list of servers holding a nonzero mask —
+    /// reused across rounds so prefill allocates nothing in steady state
+    prefill_mask: Vec<u8>,
+    prefill_servers: Vec<usize>,
 }
 
 /// A lazily-extended stream of heavy-tailed events.
@@ -381,7 +459,9 @@ impl Cluster {
             suspended: Vec::new(),
             degradations,
             by_server,
-            task_events: Vec::new(),
+            task_events: vec![Vec::new(); n_servers],
+            event_slot: Vec::new(),
+            task_noise: Vec::new(),
             noise_seed,
             generation: 0,
             server_gen: vec![0; n_servers],
@@ -390,8 +470,10 @@ impl Cluster {
             cache,
             cache_enabled: true,
             epoch_fills: 0,
-            scratch_demands: Vec::new(),
-            scratch_order: Vec::new(),
+            fill_timing: false,
+            fill_wall_s: 0.0,
+            prefill_mask: vec![0; n_servers],
+            prefill_servers: Vec::new(),
         }
     }
 
@@ -432,10 +514,15 @@ impl Cluster {
         self.suspended.push(false);
         let id = self.tasks.len() - 1;
         self.by_server[server].push(id);
-        self.task_events.push(SpikeStream::new(Rng::new(
+        // the stream RNG stays keyed on the *global* id even though the
+        // stream lives in its server's partition — bit-compatible with
+        // the pre-partitioned flat layout
+        self.event_slot.push(self.task_events[server].len());
+        self.task_events[server].push(SpikeStream::new(Rng::new(
             self.noise_seed ^ (id as u64).wrapping_mul(0xA24B_AED4_963E_E407),
             0x7a51,
         )));
+        self.task_noise.push(TaskNoise::compute(self.noise_seed, id));
         self.bump(server);
         id
     }
@@ -511,19 +598,7 @@ impl Cluster {
     /// scan stops at the first window opening after `t` — this sits on
     /// the `available` hot path (every share-epoch fill).
     pub fn degradation_frac(&self, server: usize, res: Res, t: f64) -> f64 {
-        let mut frac: f64 = 0.0;
-        for w in &self.degradations[server] {
-            if w.start > t {
-                break;
-            }
-            if t < w.end {
-                frac += match res {
-                    Res::Cpu => w.cpu_frac,
-                    Res::Bw => w.bw_frac,
-                };
-            }
-        }
-        frac.min(0.9)
+        degradation_frac_in(&self.degradations[server], res, t)
     }
 
     /// Set a task's dynamic caps (§IV-D1 prevention / equalization),
@@ -596,6 +671,20 @@ impl Cluster {
         self.epoch_fills
     }
 
+    /// Cumulative wall-clock seconds spent inside epoch fills. Zero
+    /// unless [`Cluster::set_fill_timing`] enabled timing; for parallel
+    /// prefills this sums the per-worker fill time (total compute, not
+    /// elapsed), so fills/second stays comparable at any thread count.
+    pub fn fill_wall_s(&self) -> f64 {
+        self.fill_wall_s
+    }
+
+    /// Enable per-fill wall-time accrual (off by default: two `Instant`
+    /// reads per fill are measurable on million-fill traces).
+    pub fn set_fill_timing(&mut self, on: bool) {
+        self.fill_timing = on;
+    }
+
     /// Disable (or re-enable) the share cache. With the cache off every
     /// query recomputes from scratch — the reference path the equivalence
     /// tests compare against; results are bit-identical either way.
@@ -618,76 +707,29 @@ impl Cluster {
     /// cosine-interpolated hash noise at two time scales (seconds +
     /// minutes), deterministic in (seed, server, resource, t).
     pub fn background_frac(&self, server: usize, res: Res, t: f64) -> f64 {
-        let tag = (server as u64) << 8 | res_tag(res);
-        let fast = smooth_noise(self.noise_seed ^ tag, t);
-        let slow = smooth_noise(self.noise_seed ^ tag ^ 0xABCD, t / 60.0);
-        (self.cfg.bg_base + self.cfg.bg_amp * (0.6 * slow + 0.4 * fast)).clamp(0.0, 0.95)
-    }
-
-    /// Extend + query contention spikes overlapping time `t`.
-    fn spike_frac(&mut self, server: usize, res: Res, t: f64) -> f64 {
-        let cfg_interval = self.cfg.spike_interval_s;
-        let (mu, sigma) = (self.cfg.spike_dur_mu, self.cfg.spike_dur_sigma);
-        let srv = &mut self.servers[server];
-        debug_assert!(
-            t >= srv.spike_pruned_to,
-            "cluster query times must be non-decreasing once pruning has run \
-             (query at {t}, server spikes pruned for {})",
-            srv.spike_pruned_to
-        );
-        while srv.spike_horizon <= t {
-            let gap = srv.spike_rng.exponential(1.0 / cfg_interval);
-            let start = srv.spike_horizon + gap;
-            let dur = srv.spike_rng.lognormal(mu, sigma).clamp(0.1, SPIKE_MAX_DUR_S);
-            let both = srv.spike_rng.chance(0.3);
-            let on_cpu = both || srv.spike_rng.chance(0.5);
-            let mag = srv.spike_rng.range(0.2, 0.7);
-            srv.spikes.push(Spike {
-                start,
-                end: start + dur,
-                cpu_frac: if on_cpu { mag } else { 0.0 },
-                bw_frac: if !on_cpu || both { mag } else { 0.0 },
-            });
-            srv.spike_horizon = start;
-        }
-        prune_spikes(&mut srv.spikes, t, &mut srv.spike_pruned_to);
-        // sum overlapping (rare to have >1); scan tail (spikes sorted by start)
-        let mut frac: f64 = 0.0;
-        for s in srv.spikes.iter().rev() {
-            if s.start > t {
-                continue;
-            }
-            if s.end > t {
-                frac += match res {
-                    Res::Cpu => s.cpu_frac,
-                    Res::Bw => s.bw_frac,
-                };
-            }
-            // spikes are start-ordered; once start+500 < t nothing earlier overlaps
-            if s.start + SPIKE_MAX_DUR_S < t {
-                break;
-            }
-        }
-        frac.min(0.9)
+        background_frac_in(&self.cfg, self.noise_seed, server, res, t)
     }
 
     /// Available capacity of `res` on `server` at time `t`: nameplate
     /// minus smooth background load minus any fault-plan degradation
     /// window overlapping `t`.
     pub fn available(&self, server: usize, res: Res, t: f64) -> f64 {
-        let cap = match res {
-            Res::Cpu => self.servers[server].cpus,
-            Res::Bw => self.servers[server].bw_gbps,
-        };
-        let bg = self.background_frac(server, res, t);
-        let deg = self.degradation_frac(server, res, t);
-        (cap * (1.0 - (bg + deg).min(0.95))).max(0.05 * cap)
+        available_in(
+            &self.servers[server],
+            &self.degradations[server],
+            &self.cfg,
+            self.noise_seed,
+            server,
+            res,
+            t,
+        )
     }
 
     /// Fill the (server, res) share epoch for time `t` unless it is
-    /// already current. This is the only place shares are computed: one
-    /// in-place water-fill over the co-located set plus per-task
-    /// interference — everything else is cache lookups.
+    /// already current. The fill itself is [`fill_epoch`] — a free
+    /// function of one server's state — so this method is only the cache
+    /// check plus accounting; `prefill_epochs` runs the same function on
+    /// disjoint servers across threads.
     fn ensure_epoch(&mut self, server: usize, res: Res, t: f64) {
         let slot = server * 2 + res_idx(res);
         if self.cache_enabled {
@@ -697,40 +739,155 @@ impl Cluster {
             }
         }
         self.epoch_fills += 1;
-        let avail = self.available(server, res, t);
-        // move the buffers out so the borrow checker lets us call &mut
-        // self methods while filling them
-        let mut ids = std::mem::take(&mut self.cache[slot].ids);
-        let mut shares = std::mem::take(&mut self.cache[slot].shares);
-        let mut demands = std::mem::take(&mut self.scratch_demands);
-        let mut order = std::mem::take(&mut self.scratch_order);
-        ids.clear();
-        ids.extend_from_slice(&self.by_server[server]);
-        demands.clear();
-        for &i in &ids {
-            demands.push(match res {
-                Res::Cpu => self.tasks[i].capped_cpu(),
-                Res::Bw => self.tasks[i].capped_bw(),
+        let t0 = if self.fill_timing { Some(std::time::Instant::now()) } else { None };
+        let ctx = FillCtx {
+            cfg: &self.cfg,
+            tasks: &self.tasks,
+            noise: &self.task_noise,
+            event_slot: &self.event_slot,
+            by_server: &self.by_server,
+            degradations: &self.degradations,
+            noise_seed: self.noise_seed,
+            reuse_inputs: self.cache_enabled,
+        };
+        fill_epoch(
+            &ctx,
+            &mut self.servers[server],
+            &mut self.task_events[server],
+            &mut self.cache[slot],
+            self.server_gen[server],
+            server,
+            res,
+            t,
+        );
+        if let Some(t0) = t0 {
+            self.fill_wall_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Fill the distinct `(server, res)` epochs in `keys` for time `t`
+    /// across up to `threads` scoped workers, returning how many fills
+    /// actually ran (already-current epochs are skipped, duplicates
+    /// deduped). Byte-identical to filling them one by one on the query
+    /// path: a fill is a pure function of its own server's state
+    /// ([`fill_epoch`]), distinct servers share no mutable state, and the
+    /// lazy spike/event streams extend deterministically to whatever time
+    /// first queries them — so *who* fills an epoch can never change
+    /// *what* it holds. With the cache disabled this is a no-op (there is
+    /// nothing to pre-fill; every query recomputes anyway).
+    pub fn prefill_epochs(&mut self, keys: &[(usize, Res)], t: f64, threads: usize) -> usize {
+        if keys.is_empty() || !self.cache_enabled {
+            return 0;
+        }
+        // dedupe into per-server resource masks, skipping epochs that are
+        // already current (same check as ensure_epoch)
+        let mut pending = 0usize;
+        for &(server, res) in keys {
+            let e = &self.cache[server * 2 + res_idx(res)];
+            if e.valid && e.generation == self.server_gen[server] && e.time == t {
+                continue;
+            }
+            let bit = 1u8 << res_idx(res);
+            if self.prefill_mask[server] & bit == 0 {
+                if self.prefill_mask[server] == 0 {
+                    self.prefill_servers.push(server);
+                }
+                self.prefill_mask[server] |= bit;
+                pending += 1;
+            }
+        }
+        if pending == 0 {
+            return 0;
+        }
+        let workers = threads.min(self.prefill_servers.len());
+        if workers <= 1 || pending < PREFILL_MIN_PAR_FILLS {
+            // not worth spawning: run the fills serially in key order
+            let servers = std::mem::take(&mut self.prefill_servers);
+            for &server in &servers {
+                let mask = std::mem::replace(&mut self.prefill_mask[server], 0);
+                for res in [Res::Cpu, Res::Bw] {
+                    if mask & (1 << res_idx(res)) != 0 {
+                        self.ensure_epoch(server, res, t);
+                    }
+                }
+            }
+            self.prefill_servers = servers;
+            self.prefill_servers.clear();
+            return pending;
+        }
+        // deterministic partition: ascending server order, contiguous chunks
+        self.prefill_servers.sort_unstable();
+        let ctx = FillCtx {
+            cfg: &self.cfg,
+            tasks: &self.tasks,
+            noise: &self.task_noise,
+            event_slot: &self.event_slot,
+            by_server: &self.by_server,
+            degradations: &self.degradations,
+            noise_seed: self.noise_seed,
+            reuse_inputs: true,
+        };
+        let timing = self.fill_timing;
+        let mask = &self.prefill_mask;
+        let gens = &self.server_gen;
+        let wall: f64 = {
+            // zip the per-server mutable state into disjoint work items:
+            // each item owns one server's Server, event streams, and two
+            // cache slots, so scoped threads mutate without overlap
+            let mut work = Vec::with_capacity(self.prefill_servers.len());
+            {
+                let mut want = self.prefill_servers.iter().copied().peekable();
+                for (((s, srv), events), slots) in self
+                    .servers
+                    .iter_mut()
+                    .enumerate()
+                    .zip(self.task_events.iter_mut())
+                    .zip(self.cache.chunks_exact_mut(2))
+                {
+                    if want.peek() == Some(&s) {
+                        want.next();
+                        work.push((s, srv, events, slots));
+                    }
+                }
+            }
+            let chunk = work.len().div_ceil(workers);
+            let walls: Vec<f64> = std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .chunks_mut(chunk)
+                    .map(|part| {
+                        let ctx = &ctx;
+                        scope.spawn(move || {
+                            let mut w = 0.0f64;
+                            for (s, srv, events, slots) in part.iter_mut() {
+                                let t0 = if timing { Some(std::time::Instant::now()) } else { None };
+                                let m = mask[*s];
+                                let gen = gens[*s];
+                                let (cpu_slot, bw_slot) = slots.split_at_mut(1);
+                                if m & (1 << res_idx(Res::Cpu)) != 0 {
+                                    fill_epoch(ctx, srv, events, &mut cpu_slot[0], gen, *s, Res::Cpu, t);
+                                }
+                                if m & (1 << res_idx(Res::Bw)) != 0 {
+                                    fill_epoch(ctx, srv, events, &mut bw_slot[0], gen, *s, Res::Bw, t);
+                                }
+                                if let Some(t0) = t0 {
+                                    w += t0.elapsed().as_secs_f64();
+                                }
+                            }
+                            w
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("prefill worker panicked")).collect()
             });
+            walls.into_iter().sum()
+        };
+        self.epoch_fills += pending as u64;
+        self.fill_wall_s += wall;
+        for &server in &self.prefill_servers {
+            self.prefill_mask[server] = 0;
         }
-        water_fill_into(&demands, avail, &mut order, &mut shares);
-        // per-task interference: co-tenant contention hits individual
-        // tasks unevenly (pinned cores, NIC queues), which is where the
-        // paper's *within-server* stragglers come from (Fig 3/4). Scaled
-        // by how loaded the server is.
-        let load = (demands.iter().sum::<f64>() / avail.max(1e-9)).min(1.5);
-        for (k, &id) in ids.iter().enumerate() {
-            let inter = self.task_interference(server, id, res, t, load);
-            shares[k] *= 1.0 - inter;
-        }
-        self.scratch_demands = demands;
-        self.scratch_order = order;
-        let e = &mut self.cache[slot];
-        e.ids = ids;
-        e.shares = shares;
-        e.time = t;
-        e.generation = self.server_gen[server];
-        e.valid = true;
+        self.prefill_servers.clear();
+        pending
     }
 
     /// Max–min fair share of `res` for every active task on `server` at
@@ -760,44 +917,6 @@ impl Cluster {
         self.ensure_epoch(server, res, t);
         let e = &self.cache[server * 2 + res_idx(res)];
         (&e.ids, &e.shares)
-    }
-
-    /// Interference fraction in [0, 0.85] on one task: smooth per-task
-    /// noise (amplified under load) + heavy-tailed contention spikes that
-    /// hit a hashed subset of the server's tasks.
-    fn task_interference(&mut self, server: usize, id: TaskId, res: Res, t: f64, load: f64) -> f64 {
-        // smooth component: per-task two-scale noise, cubed for a skewed
-        // (mostly-small, occasionally-large) distribution
-        let tag = 0x7a5c_u64 ^ ((id as u64) << 16) ^ res_tag(res);
-        let fast = smooth_noise(self.noise_seed ^ tag, t / 3.0);
-        let slow = smooth_noise(self.noise_seed ^ tag ^ 0x99, t / 45.0);
-        let u = 0.5 * fast + 0.5 * slow;
-        // superlinear in load: relieving a loaded server (balanced PS
-        // placement, §IV-D1 equalization caps) pays off disproportionately
-        let smooth = 1.1 * u * u * load.clamp(0.0, 1.2).powf(1.5);
-        // spike component: victim-hashed server spikes
-        let spike = self.spike_frac(server, res, t);
-        let victim = {
-            let h = (self.noise_seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-                .wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            (h >> 32) & 1 == 0
-        };
-        let hit = if victim { spike } else { 0.0 };
-        // per-task heavy-tailed straggler events (the dominant mechanism)
-        let own = if self.cfg.task_event_interval_s > 0.0 {
-            let (mu, sigma) = (self.cfg.spike_dur_mu, self.cfg.spike_dur_sigma);
-            self.task_events[id].frac_at(
-                t,
-                self.cfg.task_event_interval_s,
-                self.cfg.task_event_mag,
-                mu,
-                sigma,
-                res,
-            )
-        } else {
-            0.0
-        };
-        (smooth + hit + own).clamp(0.0, 0.9)
     }
 
     /// Share granted to one task (water-filled against its co-located set).
@@ -838,6 +957,232 @@ impl Cluster {
     }
 }
 
+/// The immutable cluster state a share-epoch fill reads — everything
+/// except the one server being filled. Building it (all shared `&`
+/// borrows plus two copies) is free, and because it is `Sync`, one
+/// context serves every prefill worker at once; the per-server *mutable*
+/// state travels separately as `&mut` arguments, which is exactly the
+/// disjointness that makes parallel prefill sound (DESIGN.md §13).
+struct FillCtx<'a> {
+    cfg: &'a ClusterConfig,
+    tasks: &'a [Task],
+    noise: &'a [TaskNoise],
+    event_slot: &'a [usize],
+    by_server: &'a [Vec<TaskId>],
+    degradations: &'a [Vec<Spike>],
+    noise_seed: u64,
+    /// whether generation-keyed fill inputs may be reused. False when the
+    /// share cache is disabled, so the reference path re-gathers and
+    /// re-sorts from the registry on every query — a true from-scratch
+    /// recompute for the equivalence tests to compare against.
+    reuse_inputs: bool,
+}
+
+/// See [`Cluster::background_frac`].
+fn background_frac_in(cfg: &ClusterConfig, noise_seed: u64, server: usize, res: Res, t: f64) -> f64 {
+    let tag = (server as u64) << 8 | res_tag(res);
+    let fast = smooth_noise(noise_seed ^ tag, t);
+    let slow = smooth_noise(noise_seed ^ tag ^ 0xABCD, t / 60.0);
+    (cfg.bg_base + cfg.bg_amp * (0.6 * slow + 0.4 * fast)).clamp(0.0, 0.95)
+}
+
+/// See [`Cluster::degradation_frac`]; `windows` is one server's
+/// start-ordered degradation list.
+fn degradation_frac_in(windows: &[Spike], res: Res, t: f64) -> f64 {
+    let mut frac: f64 = 0.0;
+    for w in windows {
+        if w.start > t {
+            break;
+        }
+        if t < w.end {
+            frac += match res {
+                Res::Cpu => w.cpu_frac,
+                Res::Bw => w.bw_frac,
+            };
+        }
+    }
+    frac.min(0.9)
+}
+
+/// See [`Cluster::available`].
+fn available_in(
+    srv: &Server,
+    windows: &[Spike],
+    cfg: &ClusterConfig,
+    noise_seed: u64,
+    server: usize,
+    res: Res,
+    t: f64,
+) -> f64 {
+    let cap = match res {
+        Res::Cpu => srv.cpus,
+        Res::Bw => srv.bw_gbps,
+    };
+    let bg = background_frac_in(cfg, noise_seed, server, res, t);
+    let deg = degradation_frac_in(windows, res, t);
+    (cap * (1.0 - (bg + deg).min(0.95))).max(0.05 * cap)
+}
+
+/// Extend + query one server's contention spikes overlapping time `t`.
+fn spike_frac_in(cfg: &ClusterConfig, srv: &mut Server, res: Res, t: f64) -> f64 {
+    debug_assert!(
+        t >= srv.spike_pruned_to,
+        "cluster query times must be non-decreasing once pruning has run \
+         (query at {t}, server spikes pruned for {})",
+        srv.spike_pruned_to
+    );
+    while srv.spike_horizon <= t {
+        let gap = srv.spike_rng.exponential(1.0 / cfg.spike_interval_s);
+        let start = srv.spike_horizon + gap;
+        let dur = srv.spike_rng.lognormal(cfg.spike_dur_mu, cfg.spike_dur_sigma).clamp(0.1, SPIKE_MAX_DUR_S);
+        let both = srv.spike_rng.chance(0.3);
+        let on_cpu = both || srv.spike_rng.chance(0.5);
+        let mag = srv.spike_rng.range(0.2, 0.7);
+        srv.spikes.push(Spike {
+            start,
+            end: start + dur,
+            cpu_frac: if on_cpu { mag } else { 0.0 },
+            bw_frac: if !on_cpu || both { mag } else { 0.0 },
+        });
+        srv.spike_horizon = start;
+    }
+    prune_spikes(&mut srv.spikes, t, &mut srv.spike_pruned_to);
+    // sum overlapping (rare to have >1); scan tail (spikes sorted by start)
+    let mut frac: f64 = 0.0;
+    for s in srv.spikes.iter().rev() {
+        if s.start > t {
+            continue;
+        }
+        if s.end > t {
+            frac += match res {
+                Res::Cpu => s.cpu_frac,
+                Res::Bw => s.bw_frac,
+            };
+        }
+        // spikes are start-ordered; once start+500 < t nothing earlier overlaps
+        if s.start + SPIKE_MAX_DUR_S < t {
+            break;
+        }
+    }
+    frac.min(0.9)
+}
+
+/// Interference fraction in [0, 0.9] on one task: smooth per-task noise
+/// (amplified under load) + heavy-tailed contention spikes that hit a
+/// hashed subset of the server's tasks. `events` is the task's server's
+/// stream partition. Seeds and the victim bit come precomputed from
+/// [`TaskNoise`]; values are bit-identical to hashing them inline.
+fn task_interference_in(
+    ctx: &FillCtx<'_>,
+    srv: &mut Server,
+    events: &mut [SpikeStream],
+    id: TaskId,
+    res: Res,
+    t: f64,
+    load: f64,
+) -> f64 {
+    // smooth component: per-task two-scale noise, squared for a skewed
+    // (mostly-small, occasionally-large) distribution
+    let tn = &ctx.noise[id];
+    let fast = smooth_noise(tn.fast[res_idx(res)], t / 3.0);
+    let slow = smooth_noise(tn.slow[res_idx(res)], t / 45.0);
+    let u = 0.5 * fast + 0.5 * slow;
+    // superlinear in load: relieving a loaded server (balanced PS
+    // placement, §IV-D1 equalization caps) pays off disproportionately
+    let smooth = 1.1 * u * u * load.clamp(0.0, 1.2).powf(1.5);
+    // spike component: victim-hashed server spikes
+    let spike = spike_frac_in(ctx.cfg, srv, res, t);
+    let hit = if tn.victim { spike } else { 0.0 };
+    // per-task heavy-tailed straggler events (the dominant mechanism)
+    let own = if ctx.cfg.task_event_interval_s > 0.0 {
+        events[ctx.event_slot[id]].frac_at(
+            t,
+            ctx.cfg.task_event_interval_s,
+            ctx.cfg.task_event_mag,
+            ctx.cfg.spike_dur_mu,
+            ctx.cfg.spike_dur_sigma,
+            res,
+        )
+    } else {
+        0.0
+    };
+    (smooth + hit + own).clamp(0.0, 0.9)
+}
+
+/// Compute the (server, res, t) share epoch into `e`: gather the
+/// co-located demands (or reuse the generation-keyed cached vector), one
+/// in-place water-fill (sort skipped when the permutation is already
+/// built for this generation), then per-task interference scaling. This
+/// is the only place shares are computed.
+///
+/// A pure function of its arguments — it touches exactly one server's
+/// mutable state (`srv`, that server's `events` partition, its epoch
+/// `e`) plus the shared read-only [`FillCtx`] — which is the whole
+/// soundness argument for [`Cluster::prefill_epochs`] running fills for
+/// distinct servers concurrently.
+#[allow(clippy::too_many_arguments)]
+fn fill_epoch(
+    ctx: &FillCtx<'_>,
+    srv: &mut Server,
+    events: &mut Vec<SpikeStream>,
+    e: &mut ShareEpoch,
+    gen: u64,
+    server: usize,
+    res: Res,
+    t: f64,
+) {
+    let avail = available_in(srv, &ctx.degradations[server], ctx.cfg, ctx.noise_seed, server, res, t);
+    if !(ctx.reuse_inputs && e.inputs_valid && e.inputs_gen == gen) {
+        // membership or demands changed (or reuse is disabled): re-gather
+        // from the registry and drop the stale permutation
+        e.ids.clear();
+        e.ids.extend_from_slice(&ctx.by_server[server]);
+        e.demands.clear();
+        for &i in &e.ids {
+            e.demands.push(match res {
+                Res::Cpu => ctx.tasks[i].capped_cpu(),
+                Res::Bw => ctx.tasks[i].capped_bw(),
+            });
+        }
+        e.demand_total = e.demands.iter().sum();
+        e.inputs_gen = gen;
+        e.inputs_valid = true;
+        e.order_built = false;
+    }
+    // water-fill over the cached inputs (same arithmetic as
+    // `water_fill_into`, with the gather and sort amortized across the
+    // generation)
+    let n = e.ids.len();
+    e.shares.clear();
+    e.shares.resize(n, 0.0);
+    if n > 0 {
+        if e.demand_total <= avail {
+            e.shares.copy_from_slice(&e.demands);
+        } else {
+            if !e.order_built {
+                let (demands, order) = (&e.demands, &mut e.order);
+                order.clear();
+                order.extend(0..n);
+                order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+                e.order_built = true;
+            }
+            fill_sorted_over(&e.demands, avail, &e.order, &mut e.shares);
+        }
+    }
+    // per-task interference: co-tenant contention hits individual tasks
+    // unevenly (pinned cores, NIC queues), which is where the paper's
+    // *within-server* stragglers come from (Fig 3/4). Scaled by how
+    // loaded the server is.
+    let load = (e.demand_total / avail.max(1e-9)).min(1.5);
+    for k in 0..n {
+        let id = e.ids[k];
+        e.shares[k] *= 1.0 - task_interference_in(ctx, srv, events, id, res, t, load);
+    }
+    e.time = t;
+    e.generation = gen;
+    e.valid = true;
+}
+
 /// Max–min fair (water-filling) allocation of `capacity` among `demands`;
 /// no task receives more than its demand, and unmet demand shares the
 /// remainder equally.
@@ -872,8 +1217,50 @@ pub fn water_fill_into(
     order.clear();
     order.extend(0..n);
     order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    fill_sorted_over(demands, capacity, order, alloc);
+}
+
+/// [`water_fill_into`] with a caller-supplied demand-sorted permutation:
+/// skips the gather and the sort, running only the O(n) allocation pass.
+/// `order` must be a permutation of `0..demands.len()` that is
+/// non-decreasing in demand; *any* such permutation yields bit-identical
+/// allocations (ties subtract equal bit-values in either order, and the
+/// fair-split boundary can never fall between tied demands), which is
+/// what lets the share cache reuse one stably-sorted permutation for a
+/// whole server generation (DESIGN.md §13; pinned by a proptest).
+pub fn water_fill_sorted(
+    demands: &[f64],
+    capacity: f64,
+    order: &[usize],
+    alloc: &mut Vec<f64>,
+) {
+    let n = demands.len();
+    debug_assert_eq!(order.len(), n, "order must be a permutation of 0..n");
+    debug_assert!(
+        order.windows(2).all(|w| demands[w[0]] <= demands[w[1]]),
+        "order must be non-decreasing in demand"
+    );
+    alloc.clear();
+    alloc.resize(n, 0.0);
+    if n == 0 {
+        return;
+    }
+    let total: f64 = demands.iter().sum();
+    if total <= capacity {
+        alloc.copy_from_slice(demands);
+        return;
+    }
+    fill_sorted_over(demands, capacity, order, alloc);
+}
+
+/// The over-capacity water-fill allocation pass (shared verbatim by the
+/// sorting and sorted-reuse entry points, so the two are bit-identical
+/// by construction): walk tasks in demand order, granting full demand
+/// while it fits under the current fair share, then split the remainder
+/// equally among everyone still unserved.
+fn fill_sorted_over(demands: &[f64], capacity: f64, order: &[usize], alloc: &mut [f64]) {
     let mut remaining = capacity;
-    let mut left = n;
+    let mut left = order.len();
     for (k, &i) in order.iter().enumerate() {
         let fair = remaining / left as f64;
         if demands[i] <= fair {
@@ -1369,7 +1756,7 @@ mod tests {
         // only the ~500 s live window plus at most one unpruned batch
         let live = c.servers[0].spikes.len();
         assert!(live < 2 * SPIKE_PRUNE_BATCH + 16, "server spikes not pruned: {live}");
-        let ev = c.task_events[id].spikes.len();
+        let ev = c.task_events[0][c.event_slot[id]].spikes.len();
         assert!(ev < 2 * SPIKE_PRUNE_BATCH + 16, "task events not pruned: {ev}");
     }
 
@@ -1407,5 +1794,214 @@ mod tests {
         let after = c.utilization(4, Res::Cpu, 100.0);
         assert!(after > before);
         assert!(after <= 1.0);
+    }
+
+    /// Proptest: the sorted-reuse water-fill is bit-identical to the
+    /// allocating form for *any* valid demand-sorted permutation —
+    /// including tie-heavy, zero-demand, and exact-capacity vectors
+    /// (the claim that lets one cached permutation serve a whole server
+    /// generation, DESIGN.md §13).
+    #[test]
+    fn water_fill_sorted_matches_allocating_form() {
+        crate::testutil::forall(
+            "water-fill-sorted-equiv",
+            400,
+            |r| {
+                let n = r.usize(0, 14);
+                // a small palette forces heavy ties; occasional continuous
+                // draws cover the general case
+                let palette = [0.0, 0.0, 0.5, 1.0, 1.0, 1.0, 2.5, 4.0];
+                let demands: Vec<f64> = (0..n)
+                    .map(|_| {
+                        if r.chance(0.7) {
+                            palette[r.usize(0, palette.len() - 1)]
+                        } else {
+                            r.range(0.0, 10.0)
+                        }
+                    })
+                    .collect();
+                let total: f64 = demands.iter().sum();
+                // mix exact-capacity, zero, under- and over-capacity
+                let cap = match r.usize(0, 3) {
+                    0 => total,
+                    1 => 0.0,
+                    2 => r.range(0.0, total.max(0.1)),
+                    _ => r.range(0.0, 30.0),
+                };
+                let tie_swaps = r.usize(0, 6);
+                (demands, cap, tie_swaps)
+            },
+            |(demands, cap, tie_swaps)| {
+                let want = water_fill(demands, *cap);
+                // the stably-sorted permutation (what the cache stores)
+                let mut order: Vec<usize> = (0..demands.len()).collect();
+                order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+                let mut alloc = vec![42.0]; // dirty scratch
+                water_fill_sorted(demands, *cap, &order, &mut alloc);
+                if want != alloc {
+                    return Err(format!("stable order: want {want:?} got {alloc:?}"));
+                }
+                // any other demand-sorted permutation (adjacent tied
+                // entries swapped) must produce the same bits
+                for s in 0..*tie_swaps {
+                    let k = s % order.len().max(1);
+                    if k + 1 < order.len() && demands[order[k]] == demands[order[k + 1]] {
+                        order.swap(k, k + 1);
+                    }
+                }
+                water_fill_sorted(demands, *cap, &order, &mut alloc);
+                if want != alloc {
+                    return Err(format!("tie-swapped order: want {want:?} got {alloc:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// A generation bump must drop the cached permutation: mutate demands
+    /// so the sort order reverses, and require the post-bump shares to
+    /// match a cluster that never cached anything. A stale permutation
+    /// reused here would mis-allocate (the proof is the `direct` cluster,
+    /// whose fills re-sort every time).
+    #[test]
+    fn generation_bump_rebuilds_demand_permutation() {
+        let mk = || {
+            let mut c = Cluster::new(ClusterConfig::default());
+            let mut ids = Vec::new();
+            for j in 0..10 {
+                // ascending demands 8..17 saturate server 0 (sum 125 > 96)
+                let mut t = worker(j, 0, 8.0 + j as f64, 0.5);
+                t.role = Role::Ps { idx: 0 };
+                ids.push(c.add_task(t));
+            }
+            (c, ids)
+        };
+        let (mut cached, ids) = mk();
+        let (mut direct, _) = mk();
+        direct.set_share_cache_enabled(false);
+        // build the permutation inside the first generation
+        for step in 0..3 {
+            let t = 5.0 + step as f64;
+            for res in [Res::Cpu, Res::Bw] {
+                assert_eq!(cached.shares(0, res, t), direct.shares(0, res, t));
+            }
+        }
+        // reverse the demand ordering: task j goes from 8+j to 20-j
+        for (j, &id) in ids.iter().enumerate() {
+            cached.set_demands(id, 20.0 - j as f64, 0.5);
+            direct.set_demands(id, 20.0 - j as f64, 0.5);
+        }
+        for step in 0..3 {
+            let t = 9.0 + step as f64;
+            for res in [Res::Cpu, Res::Bw] {
+                assert_eq!(
+                    cached.shares(0, res, t),
+                    direct.shares(0, res, t),
+                    "stale permutation reused after generation bump ({res:?}, t={t})"
+                );
+            }
+        }
+    }
+
+    /// Prefilled epochs make the round's queries pure cache hits: the
+    /// fill count after prefill+queries equals the count after prefill
+    /// alone, and a second prefill at the same instant fills nothing.
+    #[test]
+    fn prefill_makes_round_queries_pure_hits() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        for j in 0..16 {
+            let mut t = worker(j, j % 8, 6.0, 0.8);
+            t.role = Role::Ps { idx: 0 };
+            c.add_task(t);
+        }
+        let keys: Vec<(usize, Res)> =
+            (0..8).flat_map(|s| [(s, Res::Cpu), (s, Res::Bw)]).collect();
+        let t = 12.5;
+        let filled = c.prefill_epochs(&keys, t, 4);
+        assert_eq!(filled, 16, "all 16 epochs were cold");
+        let fills = c.epoch_fills();
+        for &(s, res) in &keys {
+            let _ = c.shares(s, res, t);
+        }
+        assert_eq!(fills, c.epoch_fills(), "queries after prefill must be pure hits");
+        assert_eq!(c.prefill_epochs(&keys, t, 4), 0, "everything is already current");
+        // duplicate keys dedupe to one fill each
+        let dup: Vec<(usize, Res)> = vec![(0, Res::Cpu); 5];
+        let _ = c.shares(0, Res::Cpu, t + 1.0); // only (0, Cpu) goes stale... and refills
+        assert_eq!(c.prefill_epochs(&dup, t + 1.0, 4), 0);
+        assert_eq!(c.prefill_epochs(&dup, t + 2.0, 4), 1);
+    }
+
+    /// Thread-count invariance: prefilling with 1 thread, with 8
+    /// threads, or not at all (lazy query-path fills) produces
+    /// bit-identical shares and identical fill counts, across
+    /// generation-bumping mutations.
+    #[test]
+    fn prefill_thread_count_never_changes_shares() {
+        let mk = || {
+            let mut c = Cluster::new(ClusterConfig::default());
+            let mut ids = Vec::new();
+            for j in 0..20 {
+                let mut t = worker(j, j % 8, 9.0 + (j % 4) as f64, 0.9);
+                t.role = Role::Ps { idx: 0 };
+                ids.push(c.add_task(t));
+            }
+            (c, ids)
+        };
+        let (mut lazy, ids) = mk();
+        let (mut serial, _) = mk();
+        let (mut parallel, _) = mk();
+        let keys: Vec<(usize, Res)> =
+            (0..8).flat_map(|s| [(s, Res::Cpu), (s, Res::Bw)]).collect();
+        for step in 0..6 {
+            let t = 3.0 + step as f64 * 4.1;
+            serial.prefill_epochs(&keys, t, 1);
+            parallel.prefill_epochs(&keys, t, 8);
+            for &(s, res) in &keys {
+                let want = lazy.shares(s, res, t);
+                assert_eq!(want, serial.shares(s, res, t), "serial prefill diverged");
+                assert_eq!(want, parallel.shares(s, res, t), "parallel prefill diverged");
+            }
+            assert_eq!(lazy.epoch_fills(), serial.epoch_fills());
+            assert_eq!(lazy.epoch_fills(), parallel.epoch_fills());
+            // churn a server so the next round re-fills under a new generation
+            let id = ids[step % ids.len()];
+            lazy.set_caps(id, 0.6, 0.8);
+            serial.set_caps(id, 0.6, 0.8);
+            parallel.set_caps(id, 0.6, 0.8);
+        }
+    }
+
+    /// With the cache disabled there is nothing to pre-fill: prefill is a
+    /// no-op and the direct-recompute path stays a true from-scratch
+    /// recompute (regather + re-sort every query).
+    #[test]
+    fn prefill_is_noop_with_cache_disabled() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        for j in 0..8 {
+            let mut t = worker(j, j % 8, 6.0, 0.8);
+            t.role = Role::Ps { idx: 0 };
+            c.add_task(t);
+        }
+        c.set_share_cache_enabled(false);
+        let keys: Vec<(usize, Res)> =
+            (0..8).flat_map(|s| [(s, Res::Cpu), (s, Res::Bw)]).collect();
+        assert_eq!(c.prefill_epochs(&keys, 5.0, 4), 0);
+        assert_eq!(c.epoch_fills(), 0, "prefill must not fill with the cache off");
+    }
+
+    /// Fill timing accrues only when enabled, and only on actual fills.
+    #[test]
+    fn fill_timing_accrues_only_when_enabled() {
+        let mut c = Cluster::new(ClusterConfig::default());
+        let id = c.add_task(worker(0, 0, 2.0, 1.0));
+        let _ = c.share_of(id, Res::Cpu, 1.0);
+        assert_eq!(c.fill_wall_s(), 0.0, "timing off by default");
+        c.set_fill_timing(true);
+        let _ = c.share_of(id, Res::Cpu, 2.0);
+        assert!(c.fill_wall_s() > 0.0, "a timed fill must accrue wall time");
+        let w = c.fill_wall_s();
+        let _ = c.share_of(id, Res::Cpu, 2.0); // pure hit
+        assert_eq!(w, c.fill_wall_s(), "cache hits accrue nothing");
     }
 }

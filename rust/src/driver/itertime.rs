@@ -11,6 +11,20 @@
 //! The function mutates `cluster` (share-epoch fills) and `rng` (GPU
 //! jitter) in exactly the order the monolithic driver did, so replays
 //! stay bit-identical across the refactor.
+//!
+//! ## The prefill contract (DESIGN.md §13)
+//!
+//! The share queries below — the worker's (CPU, BW) pair plus, under the
+//! PS architecture, every PS task's BW share — define the epoch key set
+//! of one composition. `Driver::prefill_round` collects exactly these
+//! keys for every worker that will start in an imminent round and fills
+//! them through [`Cluster::prefill_epochs`] *before* the serial
+//! composition loop runs. Because an epoch fill draws only from
+//! per-server deterministic streams (never from the driver `rng` passed
+//! here), pre-filling changes neither this function's inputs nor any RNG
+//! draw — the jitter stream is consumed in the same loop, in the same
+//! order, whether the epochs were filled eagerly, in parallel, or
+//! lazily by the `worker_shares` call below.
 
 use crate::cluster::{Cluster, TaskId};
 use crate::models::ModelSpec;

@@ -218,6 +218,17 @@ pub struct DriverConfig {
     /// `star simulate --profile` table). Off by default: the timers cost
     /// two `Instant::now` calls per event when enabled, zero when not.
     pub profile: bool,
+    /// threads for parallel share-epoch prefill (DESIGN.md §13): before
+    /// each round's serial composition loop, the epochs the round will
+    /// touch are filled concurrently via [`Cluster::prefill_epochs`].
+    /// `<= 1` disables prefill entirely (the byte-exact legacy path —
+    /// and every other value is byte-identical to it, pinned by
+    /// `tests/prefill_equivalence.rs` and the CI artifact diff).
+    pub prefill_threads: usize,
+    /// accrue per-fill wall time into [`RunMetrics::fill_wall_s`] even
+    /// when `profile` is off (the `scale` cells want fill timing without
+    /// paying for full event-dispatch profiling)
+    pub fill_timing: bool,
 }
 
 impl Default for DriverConfig {
@@ -236,6 +247,8 @@ impl Default for DriverConfig {
             faults: FaultPlan::default(),
             streaming_stats: false,
             profile: false,
+            prefill_threads: 1,
+            fill_timing: false,
         }
     }
 }
@@ -281,6 +294,14 @@ pub struct RunMetrics {
     pub peak_rss_bytes: Option<u64>,
     /// per-phase timing counters (all zero unless `cfg.profile`)
     pub profile: PhaseProfile,
+    /// share-epoch recomputations over the whole run
+    /// ([`Cluster::epoch_fills`]) — invariant across `prefill_threads`
+    /// settings, which the determinism tests exploit
+    pub epoch_fills: u64,
+    /// cumulative wall seconds inside epoch fills
+    /// ([`Cluster::fill_wall_s`]; zero unless `cfg.profile` or
+    /// `cfg.fill_timing` enabled fill timing)
+    pub fill_wall_s: f64,
 }
 
 impl RunMetrics {
@@ -390,6 +411,8 @@ pub struct Driver {
     drop_scratch: Vec<usize>,
     /// first-K arrival order
     arrival_scratch: Vec<usize>,
+    /// (server, res) keys for the next round's parallel epoch prefill
+    prefill_keys: Vec<(usize, Res)>,
 
     profile_on: bool,
     profile: PhaseProfile,
@@ -408,6 +431,7 @@ impl Driver {
             engine.schedule_at(cfg.server_sample_period_s, Event::ServerSample);
         }
         faulting::register_plan(&cfg.faults, &mut cluster, &mut engine);
+        cluster.set_fill_timing(cfg.profile || cfg.fill_timing);
         let n_jobs = specs.len();
         Driver {
             rng: Rng::new(cfg.seed, 0xd21fe4),
@@ -428,6 +452,7 @@ impl Driver {
             group_scratch: Vec::new(),
             drop_scratch: Vec::new(),
             arrival_scratch: Vec::new(),
+            prefill_keys: Vec::new(),
             profile: PhaseProfile::default(),
         }
     }
@@ -499,6 +524,8 @@ impl Driver {
             jobs_finished: self.jobs_done,
             peak_rss_bytes: stats::peak_rss_bytes(),
             profile: self.profile,
+            epoch_fills: self.cluster.epoch_fills(),
+            fill_wall_s: self.cluster.fill_wall_s(),
         }
     }
 
@@ -600,6 +627,8 @@ impl Driver {
                 }
                 self.jobs[job] = Some(Box::new(run));
                 self.decide(job, t);
+                // after decide (it may impose caps, bumping generations)
+                self.prefill_round(job, None, t);
                 for w in 0..n {
                     self.start_iteration(job, w, t);
                 }
@@ -689,6 +718,61 @@ impl Driver {
 
         run.wb.last_times[worker] = bd.total_s;
         self.engine.schedule_at(t + bd.total_s, Event::WorkerDone { job, worker, iter });
+    }
+
+    /// Fill the share epochs an imminent fan-out of `start_iteration`
+    /// calls will query, across `cfg.prefill_threads` scoped workers
+    /// (DESIGN.md §13). Eligibility mirrors `start_iteration` exactly
+    /// (skip finished/busy/dead, query at `t.max(pause_until)`), so the
+    /// collected keys are precisely the epochs the serial loop would
+    /// fill lazily — `epoch_fills` is invariant and every artifact is
+    /// byte-identical at any thread count. `members: None` means the
+    /// whole worker set (initial placement).
+    fn prefill_round(&mut self, job: usize, members: Option<&[usize]>, t: f64) {
+        let threads = self.cfg.prefill_threads;
+        if threads <= 1 {
+            return;
+        }
+        let Some(run) = self.jobs[job].as_ref() else { return };
+        if run.finished {
+            return;
+        }
+        let t = t.max(run.pause_until);
+        fn collect(run: &JobRun, cluster: &Cluster, keys: &mut Vec<(usize, Res)>, w: usize) {
+            if run.wb.busy[w] || !run.wb.is_alive(w) {
+                return;
+            }
+            let s = cluster.task(run.placement.worker_tasks[w]).server;
+            keys.push((s, Res::Cpu));
+            keys.push((s, Res::Bw));
+        }
+        self.prefill_keys.clear();
+        match members {
+            Some(ms) => {
+                for &w in ms {
+                    collect(run, &self.cluster, &mut self.prefill_keys, w);
+                }
+            }
+            None => {
+                for w in 0..run.job.workers {
+                    collect(run, &self.cluster, &mut self.prefill_keys, w);
+                }
+            }
+        }
+        if self.prefill_keys.is_empty() {
+            return; // nobody starts, so nothing gets queried
+        }
+        if matches!(self.cfg.arch, Arch::Ps) {
+            // every starting worker's breakdown also sums the PS-side
+            // bandwidth fan-in ([`itertime::breakdown`])
+            for &tid in &run.placement.ps_tasks {
+                let s = self.cluster.task(tid).server;
+                self.prefill_keys.push((s, Res::Bw));
+            }
+        }
+        let keys = std::mem::take(&mut self.prefill_keys);
+        self.cluster.prefill_epochs(&keys, t, threads);
+        self.prefill_keys = keys;
     }
 
     fn worker_done(&mut self, job: usize, worker: usize, iter: u64, t: f64) {
@@ -972,6 +1056,7 @@ impl Driver {
             }
         }
 
+        self.prefill_round(job, Some(members), t);
         for &w in members {
             self.start_iteration(job, w, t);
         }
@@ -1336,9 +1421,11 @@ mod tests {
         assert!(m.peak_queue_depth > 0);
         assert!(m.wall_s > 0.0);
         assert!(m.events_per_sec() > 0.0);
+        assert!(m.epoch_fills > 0, "a run must fill share epochs");
         // profiling off: no timers accumulate
         assert_eq!(m.profile.dispatch_s, 0.0);
         assert_eq!(m.profile.decide_calls, 0);
+        assert_eq!(m.fill_wall_s, 0.0, "fill timing off unless profile/fill_timing");
 
         // profiling on: phases accumulate, sub-phases nest under dispatch,
         // and the trace itself is unchanged (instrumentation only reads
@@ -1359,6 +1446,63 @@ mod tests {
             "sub-phases ({subs}) must nest inside dispatch ({})",
             mp.profile.dispatch_s
         );
+        // profiling also turns on fill timing, and the fill count is an
+        // artifact of the trace, not the instrumentation
+        assert_eq!(mp.epoch_fills, m.epoch_fills);
+        assert!(mp.fill_wall_s > 0.0, "profile mode must time fills");
+        assert!(
+            mp.fill_wall_s <= mp.profile.itertime_s + 1e-6,
+            "fills ({}) happen inside the itertime phase ({})",
+            mp.fill_wall_s,
+            mp.profile.itertime_s
+        );
+    }
+
+    /// Driver-level thread-count invariance (DESIGN.md §13): the same
+    /// trace with `prefill_threads` 1 (prefill disabled, the legacy
+    /// query-path fills) and 4 (parallel prefill before every round)
+    /// must produce identical stats, event counts, and fill counts.
+    #[test]
+    fn prefill_threads_do_not_perturb_the_trace() {
+        let mk = |prefill_threads: usize| {
+            let cfg = DriverConfig {
+                max_updates_per_job: 500,
+                max_iters_per_job: 2000,
+                max_job_duration_s: 4000.0,
+                prefill_threads,
+                ..Default::default()
+            };
+            Driver::new(
+                cfg,
+                tiny_trace(3),
+                Box::new(|_| {
+                    Box::new(Always(DriverMode::Sync(SyncMode::Ssgd), "t")) as Box<dyn Policy>
+                }),
+            )
+        };
+        let (stats1, _, m1) = mk(1).run_instrumented();
+        let (stats4, _, m4) = mk(4).run_instrumented();
+        assert_eq!(m1.events, m4.events, "event count must be invariant");
+        assert_eq!(m1.epoch_fills, m4.epoch_fills, "fill count must be invariant");
+        assert_eq!(stats1.len(), stats4.len());
+        for (a, b) in stats1.iter().zip(&stats4) {
+            assert_eq!(a.jct_s, b.jct_s);
+            assert_eq!(a.tta_s, b.tta_s);
+            assert_eq!(a.updates, b.updates);
+            assert_eq!(a.iters_total, b.iters_total);
+            assert_eq!(a.straggler_iters, b.straggler_iters);
+            // per-iteration breakdowns: the rawest observable of the
+            // share path, compared bit-for-bit
+            assert_eq!(a.series.len(), b.series.len());
+            for (sw, dw) in a.series.iter().zip(&b.series) {
+                assert_eq!(sw.len(), dw.len());
+                for (si, di) in sw.iter().zip(dw) {
+                    assert_eq!(si.total_s, di.total_s);
+                    assert_eq!(si.cpu_share, di.cpu_share);
+                    assert_eq!(si.bw_share, di.bw_share);
+                }
+            }
+        }
     }
 
     #[test]

@@ -102,6 +102,12 @@ fn run_cell(ctx: &ExpCtx, system: &str, spec: ScaleSpec, arch: Arch, smoke: bool
         seed: ctx.seed,
         record_series: false,
         streaming_stats: giant,
+        // the scale bench measures the parallel-prefill hot path and
+        // reports fill counters per cell (DESIGN.md §13); artifacts
+        // stay byte-identical at any thread count, so using all cores
+        // here cannot perturb the events/jobs columns
+        prefill_threads: sweep::resolve_threads(0),
+        fill_timing: true,
         ..Default::default()
     };
     if smoke || giant {
@@ -205,6 +211,8 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             "events",
             "events_per_sec",
             "wall_s",
+            "epoch_fills",
+            "fill_s",
             "peak_queue",
             "peak_rss_mb",
         ],
@@ -222,6 +230,8 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             table::i(m.events as i64),
             table::f(eps, 0),
             table::f(m.wall_s, 2),
+            table::i(m.epoch_fills as i64),
+            table::f(m.fill_wall_s, 2),
             table::i(m.peak_queue_depth as i64),
             match m.peak_rss_bytes {
                 Some(b) => table::f(b as f64 / (1024.0 * 1024.0), 1),
@@ -248,6 +258,8 @@ pub fn run_grid(ctx: &ExpCtx, grid: &[ScaleSpec], smoke: bool) -> crate::Result<
             ("events", jsonio::num(m.events as f64)),
             ("events_per_sec", jsonio::num(eps)),
             ("wall_s", jsonio::num(m.wall_s)),
+            ("epoch_fills", jsonio::num(m.epoch_fills as f64)),
+            ("fill_s", jsonio::num(m.fill_wall_s)),
             ("peak_queue_depth", jsonio::num(m.peak_queue_depth as f64)),
             // null (never 0) when /proc/self/status is unreadable, so
             // the CI RSS diff can tell "no probe" from "tiny footprint"
@@ -329,6 +341,10 @@ mod tests {
         for r in results {
             assert!(r.get("events").unwrap().num().unwrap() > 0.0);
             assert!(r.get("events_per_sec").unwrap().num().unwrap() > 0.0);
+            // §13 fill counters: every cell water-fills at least once,
+            // and timing is armed (fill_timing) so the wall is nonzero
+            assert!(r.get("epoch_fills").unwrap().num().unwrap() > 0.0);
+            assert!(r.get("fill_s").unwrap().num().unwrap() > 0.0);
             assert!(r.get("peak_queue_depth").unwrap().num().unwrap() > 0.0);
             assert!(r.get("wall_s").unwrap().num().unwrap() > 0.0);
             // present in every row; null only where /proc is unreadable

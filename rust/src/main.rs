@@ -41,7 +41,7 @@ fn main() {
                 "usage: star <train|simulate|replay|scenario|worker|dispatch|artifacts> [options]\n\
                  \n\
                  train      --config tiny|small|base --workers N --steps K [--mode ssgd|asgd|static-x|dynamic|star] [--seed S]\n\
-                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--profile] [--streaming-stats]\n\
+                 simulate   --system SSGD[,ASGD,…,STAR-ML] --jobs N [--arch ps|ar] [--seed S] [--fault-rate R] [--fault-seed S] [--threads N] [--prefill-threads N] [--profile] [--streaming-stats]\n\
                  replay     --trace FILE.csv --system NAME [--arch ps|ar] [--fault-rate R] [--fault-seed S]\n\
                  scenario   list | run <file.json|builtin> [--quick] [--jobs N] [--out DIR] [--threads N]\n\
                  \x20          | sample <space.json|builtin> [--count N] [--out-dir DIR] [--index K]\n\
@@ -127,6 +127,7 @@ fn simulate(args: &Args) -> star::Result<()> {
         "fault-rate",
         "fault-seed",
         "threads",
+        "prefill-threads",
         "profile",
         "streaming-stats",
     ])?;
@@ -148,6 +149,13 @@ fn simulate(args: &Args) -> star::Result<()> {
     let fault_rate = args.f64_or("fault-rate", 0.0)?;
     let fault_seed = args.u64_or("fault-seed", 0)?;
     let threads = star::exp::sweep::resolve_threads(args.usize_or("threads", 0)?);
+    // --prefill-threads: intra-run parallel share-epoch prefill
+    // (DESIGN.md §13). 1 = serial lazy fills (byte-exact legacy path);
+    // 0 = all cores. Artifacts are byte-identical at any value.
+    let prefill_threads = match args.usize_or("prefill-threads", 1)? {
+        0 => star::exp::sweep::resolve_threads(0),
+        n => n,
+    };
     // --profile: per-phase timing counters (event dispatch / share fills
     // / policy decide / stats) from the instrumented run, printed as a
     // table per system — where the wall time goes, without a profiler
@@ -160,7 +168,17 @@ fn simulate(args: &Args) -> star::Result<()> {
     star::baselines::validate_systems(&systems)?;
     let trace = generate(&TraceConfig::paced(jobs, seed));
     let all = star::exp::sweep::run_indexed(&systems, threads, |_, sys| {
-        run_stats(sys, arch, seed, trace.clone(), fault_rate, fault_seed, profile, streaming)
+        run_stats(
+            sys,
+            arch,
+            seed,
+            trace.clone(),
+            fault_rate,
+            fault_seed,
+            profile,
+            streaming,
+            prefill_threads,
+        )
     })?;
     for (sys, (stats, metrics, agg)) in systems.iter().zip(&all) {
         match agg {
@@ -421,7 +439,8 @@ fn run_and_report(
 ) -> star::Result<()> {
     // validate the system name before the simulation starts
     make_policy(system)?;
-    let (stats_v, _, _) = run_stats(system, arch, seed, trace, fault_rate, fault_seed, false, false);
+    let (stats_v, _, _) =
+        run_stats(system, arch, seed, trace, fault_rate, fault_seed, false, false, 1);
     report(system, arch, &stats_v);
     Ok(())
 }
@@ -441,6 +460,7 @@ fn run_stats(
     fault_seed: u64,
     profile: bool,
     streaming: bool,
+    prefill_threads: usize,
 ) -> (Vec<star::driver::JobStats>, star::driver::RunMetrics, Option<star::driver::StreamAgg>) {
     let base_cfg = DriverConfig::default();
     // the scenario layer's rate regime — the shared --fault-rate recipe
@@ -456,6 +476,7 @@ fn run_stats(
         faults,
         profile,
         streaming_stats: streaming,
+        prefill_threads,
         ..Default::default()
     };
     let name = system.to_string();
@@ -515,9 +536,10 @@ fn print_profile(system: &str, m: &star::driver::RunMetrics) {
         &["phase", "wall_s", "share_pct", "calls"],
     );
     let total = p.dispatch_s.max(1e-12);
-    let rows: [(&str, f64, u64); 5] = [
+    let rows: [(&str, f64, u64); 6] = [
         ("event dispatch (total)", p.dispatch_s, m.events),
         ("- share fills / iter time", p.itertime_s, p.itertime_calls),
+        ("- share-epoch fills", m.fill_wall_s, m.epoch_fills),
         ("- policy decide", p.decide_s, p.decide_calls),
         ("- stats accounting", p.stats_s, p.stats_calls),
         ("- other (grouping, queue, faults)", other, 0),

@@ -1,0 +1,133 @@
+//! The prefill contract (DESIGN.md §13): parallel share-epoch prefill is
+//! a pure performance optimization — replaying a full trace at
+//! `prefill_threads: N` must be **bit-identical** to the serial lazy-fill
+//! path at `prefill_threads: 1`, for every N. This holds because (a) an
+//! epoch fill is a pure function of (server state, res, t) drawing only
+//! from per-server deterministic streams, never from the driver RNG,
+//! (b) the driver prefills exactly the epochs the imminent round will
+//! query, after `decide` has applied its cap churn, and (c) distinct
+//! (server, res) epochs touch disjoint mutable state, so scoped-thread
+//! fills cannot race. Faults are on: recovery restarts, pauses, and
+//! membership churn are where a stale or early fill would first diverge.
+
+use star::baselines::make_policy;
+use star::driver::{Driver, DriverConfig, JobStats, RunMetrics, ServerRecord};
+use star::faults::span_for;
+use star::scenario::FaultRegime;
+use star::trace::{generate, Arch, TraceConfig};
+
+fn run(
+    arch: Arch,
+    system: &str,
+    prefill_threads: usize,
+) -> (Vec<JobStats>, Vec<ServerRecord>, RunMetrics) {
+    let trace = generate(&TraceConfig { jobs: 8, span_s: 2000.0, ..Default::default() });
+    let mut cfg = DriverConfig {
+        arch,
+        record_series: true,
+        server_sample_period_s: 200.0,
+        prefill_threads,
+        ..Default::default()
+    };
+    // fault-heavy: rate 2 triggers kills, pauses, and FirstK membership
+    // churn — the paths where prefill eligibility must mirror
+    // start_iteration exactly
+    cfg.faults = FaultRegime::Rate { rate: 2.0, seed: 7 }.plan(
+        &trace,
+        span_for(&trace, cfg.max_job_duration_s),
+        cfg.cluster.total_servers(),
+    );
+    let name = system.to_string();
+    let driver =
+        Driver::new(cfg, trace, Box::new(move |_| make_policy(&name).expect("known system")));
+    driver.run_instrumented()
+}
+
+/// Every field compared with exact equality — "close" is not good enough:
+/// prefill must not perturb a single RNG draw or float operation.
+fn assert_bit_identical(a: &[JobStats], b: &[JobStats]) {
+    assert_eq!(a.len(), b.len(), "job count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.job, y.job);
+        assert_eq!(x.system, y.system);
+        assert_eq!(x.start_s, y.start_s, "job {}", x.job);
+        assert_eq!(x.end_s, y.end_s, "job {}", x.job);
+        assert_eq!(x.tta_s, y.tta_s, "job {} TTA", x.job);
+        assert_eq!(x.jct_s, y.jct_s, "job {} JCT", x.job);
+        assert_eq!(x.converged_value, y.converged_value, "job {}", x.job);
+        assert_eq!(x.updates, y.updates, "job {}", x.job);
+        assert_eq!(x.iters_total, y.iters_total, "job {}", x.job);
+        assert_eq!(x.straggler_iters, y.straggler_iters, "job {}", x.job);
+        assert_eq!(x.straggler_episodes, y.straggler_episodes, "job {}", x.job);
+        assert_eq!(x.mode_switches, y.mode_switches, "job {}", x.job);
+        assert_eq!(x.decision_count, y.decision_count, "job {}", x.job);
+        assert_eq!(x.prediction.tp, y.prediction.tp, "job {}", x.job);
+        assert_eq!(x.prediction.fp, y.prediction.fp, "job {}", x.job);
+        assert_eq!(x.prediction.tn, y.prediction.tn, "job {}", x.job);
+        assert_eq!(x.prediction.fn_, y.prediction.fn_, "job {}", x.job);
+        assert_eq!(x.decision_pause_total_s, y.decision_pause_total_s, "job {}", x.job);
+        assert_eq!(x.value_series, y.value_series, "job {}", x.job);
+        // per-iteration breakdowns: the rawest observable of the share path
+        assert_eq!(x.series.len(), y.series.len());
+        for (sw, dw) in x.series.iter().zip(&y.series) {
+            assert_eq!(sw.len(), dw.len(), "job {} series length", x.job);
+            for (si, di) in sw.iter().zip(dw) {
+                assert_eq!(si.pre_s, di.pre_s, "job {}", x.job);
+                assert_eq!(si.gpu_s, di.gpu_s, "job {}", x.job);
+                assert_eq!(si.comm_s, di.comm_s, "job {}", x.job);
+                assert_eq!(si.total_s, di.total_s, "job {}", x.job);
+                assert_eq!(si.cpu_share, di.cpu_share, "job {}", x.job);
+                assert_eq!(si.bw_share, di.bw_share, "job {}", x.job);
+            }
+        }
+    }
+}
+
+fn assert_records_identical(a: &[ServerRecord], b: &[ServerRecord]) {
+    assert_eq!(a.len(), b.len(), "record count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.time, y.time);
+        assert_eq!(x.server, y.server);
+        assert_eq!(x.ps_hosted, y.ps_hosted);
+        assert_eq!(x.cpu_util, y.cpu_util, "server {} t {}", x.server, x.time);
+        assert_eq!(x.bw_util, y.bw_util, "server {} t {}", x.server, x.time);
+    }
+}
+
+/// The counters must match too: prefill may not add or skip a fill
+/// relative to the lazy path (eligibility mirrors start_iteration), and
+/// the event stream must be untouched.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.events, b.events, "event count");
+    assert_eq!(a.epoch_fills, b.epoch_fills, "fill count");
+    assert_eq!(a.peak_queue_depth, b.peak_queue_depth, "queue depth");
+    assert_eq!(a.jobs_finished, b.jobs_finished, "jobs finished");
+}
+
+#[test]
+fn prefill_replay_is_bit_identical_ps() {
+    let (serial, serial_recs, serial_m) = run(Arch::Ps, "STAR-H", 1);
+    let (par, par_recs, par_m) = run(Arch::Ps, "STAR-H", 4);
+    assert_bit_identical(&serial, &par);
+    assert_records_identical(&serial_recs, &par_recs);
+    assert_metrics_identical(&serial_m, &par_m);
+}
+
+#[test]
+fn prefill_replay_is_bit_identical_ar() {
+    let (serial, serial_recs, serial_m) = run(Arch::AllReduce, "STAR-H", 1);
+    let (par, par_recs, par_m) = run(Arch::AllReduce, "STAR-H", 4);
+    assert_bit_identical(&serial, &par);
+    assert_records_identical(&serial_recs, &par_recs);
+    assert_metrics_identical(&serial_m, &par_m);
+}
+
+#[test]
+fn prefill_replay_is_bit_identical_for_round_burst_baseline() {
+    // SSGD starts whole groups at one instant — the widest prefill batch
+    // per round and the cache's sweet spot — without STAR's cap churn
+    let (serial, _, serial_m) = run(Arch::Ps, "SSGD", 1);
+    let (par, _, par_m) = run(Arch::Ps, "SSGD", 4);
+    assert_bit_identical(&serial, &par);
+    assert_metrics_identical(&serial_m, &par_m);
+}
