@@ -4,7 +4,8 @@
 //! ```text
 //! experiments <id> [--jobs N] [--seed S] [--out results] [--quick]
 //!             [--fault-rate R] [--fault-seed S] [--threads N] [--smoke]
-//!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, scale, all }
+//!   id ∈ { fig1..fig14, tab1, fig16..fig29, resilience, scale,
+//!          fabric-bench, all }
 //! ```
 //!
 //! `--fault-rate` injects a seeded failure plan (worker/PS crashes,
@@ -23,12 +24,23 @@ fn main() {
     let args = Args::parse_env();
     let Some(id) = args.subcommand() else {
         eprintln!(
-            "usage: experiments <figN|tab1|resilience|scale|all> [--jobs N] [--seed S] \
+            "usage: experiments <figN|tab1|resilience|scale|fabric-bench|all> [--jobs N] [--seed S] \
              [--out DIR] [--quick|--smoke] [--fault-rate R] [--fault-seed S] [--threads N]\n\
              experiment index: DESIGN.md §4"
         );
         std::process::exit(2);
     };
+    // hidden passthrough: `experiments worker` serves sweep cells over
+    // stdio, so a dispatch whose --worker-bin defaults to current_exe
+    // (e.g. `experiments fabric-bench`) can spawn *this* binary as its
+    // subprocess fleet, exactly like `star worker`
+    if id == "worker" {
+        if let Err(e) = star::fabric::worker::serve_stdio() {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let run = || -> star::Result<()> {
         args.check_known(&[
             "jobs", "seed", "out", "quick", "smoke", "fault-rate", "fault-seed", "threads",

@@ -1,0 +1,137 @@
+//! `experiments fabric-bench` — throughput benchmark of the dispatch
+//! fabric itself (DESIGN.md §14): the quick resilience grid dispatched
+//! at every {workers} × {window} × {group-commit} corner, reporting
+//! cells/sec, protocol round-trips per cell, and journal fsyncs per run
+//! as a `star-bench-v1` document (`results/BENCH_fabric.json`).
+//!
+//! Every fabric run's artifacts are byte-compared against a serial
+//! in-process `--threads 1` baseline before its row is recorded — a
+//! corner that wins throughput by corrupting determinism fails the
+//! bench (this is also CI's byte-identity enforcement for `--window 4`,
+//! complementing the chaos smoke step).
+//!
+//! The workload is deliberately the *quick* grid at a tiny job count:
+//! this bench measures fabric overhead (issue latency, fsync stalls,
+//! idle bubbles between cells), not cell compute, and cheap cells are
+//! exactly where that overhead shows.
+
+use anyhow::Context;
+
+use crate::fabric::dispatch::{dispatch, DispatchOpts};
+use crate::fabric::SweepSpec;
+use crate::jsonio::{self, Json};
+use crate::table::{self, Table};
+
+use super::{resilience, ExpCtx};
+
+pub fn fabric_bench(ctx: &ExpCtx) -> crate::Result<()> {
+    // small + quick regardless of the invocation: fabric overhead is
+    // what's measured, and the serial/fabric byte-diff below only needs
+    // the two sides to agree on the workload
+    let jobs = ctx.effective_jobs().clamp(2, 4);
+    let sweep = SweepSpec::Resilience {
+        jobs,
+        seed: ctx.seed,
+        quick: true,
+        fault_seed: ctx.fault_seed,
+    };
+    let cells = sweep.cell_labels()?.len();
+
+    // the ground truth everything is diffed against
+    let serial_dir = ctx.out_dir.join("fabric_bench_serial");
+    let serial_ctx = ExpCtx {
+        jobs,
+        seed: ctx.seed,
+        out_dir: serial_dir.clone(),
+        quick: true,
+        fault_rate: 0.0,
+        fault_seed: ctx.fault_seed,
+        threads: 1,
+    };
+    eprintln!("[exp] fabric-bench: serial baseline ({jobs} jobs, {cells} cells)…");
+    resilience::resilience(&serial_ctx)?;
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut t = Table::new(
+        &format!("fabric bench ({cells} cells, {jobs} jobs; vs serial baseline)"),
+        &["config", "wall_s", "cells_per_sec", "rt_per_cell", "fsyncs"],
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &window in &[1usize, 4] {
+            for &group_commit in &[false, true] {
+                let gc = if group_commit { "on" } else { "off" };
+                let name = format!("fabric/w{workers}/win{window}/gc_{gc}");
+                let out = ctx
+                    .out_dir
+                    .join(format!("fabric_bench_w{workers}_win{window}_gc_{gc}"));
+                let opts = DispatchOpts {
+                    workers,
+                    out_dir: out.clone(),
+                    fresh: true,
+                    window,
+                    commit_batch: if group_commit { 16 } else { 1 },
+                    // park the interval flush: the fsync column should
+                    // show batch-boundary commits, not timer noise
+                    commit_interval_ms: 10_000,
+                    // likewise no speculative duplicates: round-trips
+                    // per cell must reflect pipelining alone
+                    straggler_factor: 1e9,
+                    ..Default::default()
+                };
+                eprintln!("[exp] fabric-bench: {name}…");
+                let report = dispatch(&sweep, &opts)?;
+                for ext in ["json", "csv"] {
+                    let a = std::fs::read(serial_dir.join(format!("resilience.{ext}")))?;
+                    let b = std::fs::read(out.join(format!("resilience.{ext}")))?;
+                    if a != b {
+                        anyhow::bail!(
+                            "{name}: resilience.{ext} diverged from the serial baseline — \
+                             the fabric corrupted determinism"
+                        );
+                    }
+                }
+                let cells_per_sec =
+                    if report.wall_s > 0.0 { cells as f64 / report.wall_s } else { 0.0 };
+                let rt_per_cell = report.round_trips as f64 / cells.max(1) as f64;
+                let ns_per_iter =
+                    if cells > 0 { report.wall_s * 1e9 / cells as f64 } else { 0.0 };
+                t.rowf(&[
+                    table::s(&name),
+                    table::f(report.wall_s, 2),
+                    table::f(cells_per_sec, 2),
+                    table::f(rt_per_cell, 2),
+                    table::i(report.journal_fsyncs as i64),
+                ]);
+                rows.push(jsonio::obj(vec![
+                    ("name", jsonio::s(&name)),
+                    ("iters", jsonio::num(cells as f64)),
+                    ("ns_per_iter", jsonio::num(ns_per_iter)),
+                    ("workers", jsonio::num(workers as f64)),
+                    ("window", jsonio::num(window as f64)),
+                    ("group_commit", jsonio::b(group_commit)),
+                    ("cells", jsonio::num(cells as f64)),
+                    ("wall_s", jsonio::num(report.wall_s)),
+                    ("cells_per_sec", jsonio::num(cells_per_sec)),
+                    ("round_trips", jsonio::num(report.round_trips as f64)),
+                    ("round_trips_per_cell", jsonio::num(rt_per_cell)),
+                    ("journal_fsyncs", jsonio::num(report.journal_fsyncs as f64)),
+                    ("matches_serial", jsonio::b(true)),
+                ]));
+            }
+        }
+    }
+    t.print();
+
+    let doc = jsonio::obj(vec![
+        ("schema", jsonio::s("star-bench-v1")),
+        ("generated_by", jsonio::s("star::exp::fabric_bench")),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all(&ctx.out_dir)
+        .with_context(|| format!("creating {}", ctx.out_dir.display()))?;
+    let path = ctx.out_dir.join("BENCH_fabric.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("fabric bench written to {}", path.display());
+    Ok(())
+}

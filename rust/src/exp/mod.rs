@@ -5,6 +5,7 @@
 
 pub mod ablation;
 pub mod eval;
+pub mod fabric_bench;
 pub mod measure;
 pub mod overhead;
 pub mod resilience;
@@ -229,7 +230,7 @@ pub const EXPERIMENT_IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
     "fig12", "fig13", "tab1", "fig14", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
     "fig22", "fig23", "fig24", "fig25", "fig26", "fig27", "fig28", "fig29", "resilience",
-    "scale", "all",
+    "scale", "fabric-bench", "all",
 ];
 
 /// Dispatch an experiment id. `all` runs everything.
@@ -256,6 +257,9 @@ pub fn dispatch(id: &str, ctx: &ExpCtx) -> crate::Result<()> {
         // long-running benchmark, not a paper artifact (`--quick`/
         // `--smoke` selects the down-sized CI grid)
         "scale" => scale::scale(ctx, ctx.quick),
+        // not part of `all` either: it benchmarks the dispatch fabric
+        // (12 subprocess-fleet runs), a CI artifact, not a paper figure
+        "fabric-bench" => fabric_bench::fabric_bench(ctx),
         "all" => {
             for id in [
                 "fig1", "fig8", "fig9", "fig11", "fig12", "fig13", "tab1", "fig14", "fig16",

@@ -26,11 +26,25 @@ pub struct ChaosConfig {
     pub stall_ms: u64,
     /// how long a doomed worker lingers before exiting
     pub die_after_ms: u64,
+    /// model a heterogeneous fleet: every request served by this *slot*
+    /// stalls `slow_ms` first (unlike the per-cell rolls above, this
+    /// follows the worker, not the cell — a slow machine, not bad luck)
+    pub slow_worker: Option<usize>,
+    /// the slow slot's per-request stall
+    pub slow_ms: u64,
 }
 
 impl Default for ChaosConfig {
     fn default() -> Self {
-        ChaosConfig { seed: 0, kill_prob: 0.2, stall_prob: 0.1, stall_ms: 750, die_after_ms: 25 }
+        ChaosConfig {
+            seed: 0,
+            kill_prob: 0.2,
+            stall_prob: 0.1,
+            stall_ms: 750,
+            die_after_ms: 25,
+            slow_worker: None,
+            slow_ms: 2_000,
+        }
     }
 }
 
@@ -49,6 +63,13 @@ pub fn decide(cfg: &ChaosConfig, index: usize, attempt: usize) -> Option<Chaos> 
     } else {
         None
     }
+}
+
+/// The slow-machine stall for requests issued to `slot`, if this slot
+/// is the configured straggler. Applied to every attempt (including
+/// straggler duplicates) — a slow machine doesn't speed up on retry.
+pub fn slow_stall(cfg: &ChaosConfig, slot: usize) -> Option<Chaos> {
+    (cfg.slow_worker == Some(slot)).then_some(Chaos::Stall { ms: cfg.slow_ms })
 }
 
 #[cfg(test)]
@@ -76,6 +97,14 @@ mod tests {
             assert_eq!(decide(&cfg, index, 1), None);
             assert_eq!(decide(&cfg, index, 5), None);
         }
+    }
+
+    #[test]
+    fn slow_worker_stalls_only_its_own_slot_on_every_attempt() {
+        let cfg = ChaosConfig { slow_worker: Some(2), slow_ms: 123, ..Default::default() };
+        assert_eq!(slow_stall(&cfg, 2), Some(Chaos::Stall { ms: 123 }));
+        assert_eq!(slow_stall(&cfg, 1), None);
+        assert_eq!(slow_stall(&ChaosConfig::default(), 2), None);
     }
 
     #[test]

@@ -4,26 +4,39 @@
 //! spawns, or remote `star worker --listen` peers via `--connect`),
 //! tolerating every failure mode a fleet exhibits:
 //!
-//! * **crash** — a worker dying (EOF on its link) re-queues the cell it
-//!   held, with exponential backoff and a bounded retry budget;
-//! * **hang** — a cell exceeding `deadline_s` retires its worker and
-//!   re-queues the cell;
+//! * **crash** — a worker dying (EOF on its link) re-queues every cell
+//!   it held, with exponential backoff and a bounded retry budget; a
+//!   remote worker's address is re-dialed on the same backoff schedule,
+//!   so a restarted `star worker --listen` rejoins mid-dispatch;
+//! * **hang** — a worker serving its current cell past `deadline_s` is
+//!   retired and its cells re-queued;
 //! * **straggle** — once the queue drains, a cell running far past the
-//!   p99 of completed cells is *duplicated* onto an idle worker; first
-//!   result wins, the loser is discarded on arrival;
-//! * **interruption** — every completed cell is fsync'd into the
-//!   checkpoint journal before it counts, so a killed dispatch resumes
-//!   re-running only the missing cells.
+//!   p99 of completed cells is *duplicated* onto the fastest idle
+//!   worker; first result wins, the loser is discarded on arrival;
+//! * **interruption** — a completed cell counts once its journal batch
+//!   is group-committed (fsync'd); a killed dispatch resumes re-running
+//!   only the cells whose batch never synced.
+//!
+//! Throughput comes from pipelining and weighting (DESIGN.md §14): up
+//! to `--window` cells ride per worker (credit-based, capped by the
+//! worker's announced capability — old workers stay at 1), a
+//! dispatcher-side EWMA of per-cell service time shrinks a slow
+//! worker's credits and steers new work to fast slots, and the pending
+//! queue serves longest-expected-cost-first using the sweep's cost
+//! hints so the big cells can't pile up at the tail.
 //!
 //! None of this can perturb results: cells are pure, rows come back
-//! pre-rendered, and the merge is index-ordered — so the artifacts are
+//! pre-rendered, and the merge is index-ordered — rows stream into the
+//! artifact buffer the moment they become contiguous with the
+//! completed prefix (a watermark, so merge memory is bounded by
+//! scheduling skew, not sweep size) — so the artifacts are
 //! byte-identical to a serial in-process `--threads 1` run no matter
 //! how chaotic the execution was (pinned by `tests/fabric_dispatch.rs`
 //! and the CI chaos-smoke step).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -31,7 +44,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::exp::CellRows;
 use crate::jsonio::Json;
+use crate::stats::SortedStream;
 
 use super::chaos::{self, ChaosConfig};
 use super::journal::Journal;
@@ -58,6 +73,15 @@ pub struct DispatchOpts {
     pub chaos: Option<ChaosConfig>,
     /// worker executable; default: this binary (`current_exe`)
     pub worker_bin: Option<PathBuf>,
+    /// max cells in flight per worker (credit window). Capped by each
+    /// worker's announced capability, so a pre-pipelining worker keeps
+    /// serving lock-step at 1.
+    pub window: usize,
+    /// journal group commit: fsync once this many records are buffered
+    /// (`<= 1` restores per-cell durability syncs)
+    pub commit_batch: usize,
+    /// journal group commit: fsync a partial batch after this long
+    pub commit_interval_ms: u64,
 }
 
 impl Default for DispatchOpts {
@@ -74,6 +98,9 @@ impl Default for DispatchOpts {
             straggler_factor: 3.0,
             chaos: None,
             worker_bin: None,
+            window: 4,
+            commit_batch: 16,
+            commit_interval_ms: 50,
         }
     }
 }
@@ -93,6 +120,19 @@ pub struct DispatchReport {
     pub worker_deaths: usize,
     pub chaos_kills: usize,
     pub chaos_stalls: usize,
+    /// issues that found the worker idle — a full protocol round-trip;
+    /// refills behind an already-in-flight cell ride the pipeline free
+    pub round_trips: usize,
+    /// journal records appended this run (== executed)
+    pub journal_appends: u64,
+    /// journal data fsyncs this run (group commit: one per batch)
+    pub journal_fsyncs: u64,
+    /// successful re-dials of remote workers (fleet mode)
+    pub worker_reconnects: usize,
+    /// fresh results credited per worker slot — the balance report
+    pub per_worker_cells: Vec<usize>,
+    /// max out-of-order rows held by the watermark merge
+    pub peak_merge_buffer: usize,
     pub wall_s: f64,
 }
 
@@ -102,6 +142,7 @@ enum Link {
 }
 
 struct Flight {
+    id: u64,
     cell: usize,
     issued: Instant,
     duplicate: bool,
@@ -109,11 +150,51 @@ struct Flight {
 
 struct Slot {
     link: Option<Link>,
-    busy: Option<Flight>,
-    /// bumped on every (re)spawn so stale reader-thread events are
-    /// recognizable — except `done` results, which are salvaged
+    /// cells in flight on this worker, oldest first (the worker serves
+    /// them in arrival order)
+    outstanding: VecDeque<Flight>,
+    /// bumped on every (re)spawn/(re)dial so stale reader-thread events
+    /// are recognizable — except `done` results, which are salvaged
     /// regardless of which incarnation produced them
     gen: u64,
+    /// negotiated in-flight cap: min(--window, the worker's announced
+    /// capability); 1 until this incarnation's `ready` line arrives
+    window: usize,
+    /// EWMA of per-cell service seconds, measured dispatcher-side
+    /// (response-to-response), so stalls and protocol overhead count
+    ewma_s: Option<f64>,
+    /// when the head flight's service began (None while idle)
+    service_mark: Option<Instant>,
+    /// fresh results credited to this slot (the balance report)
+    completed: usize,
+    /// remote address (fleet mode) — kept so a lost link is re-dialed
+    addr: Option<String>,
+    /// when to try dialing `addr` next
+    redial_at: Option<Instant>,
+    /// consecutive failed dials (drives the re-dial backoff)
+    dial_attempts: usize,
+    /// times this slot's link was lost (a later successful dial is a
+    /// *re*connect)
+    losses: usize,
+}
+
+impl Slot {
+    fn new(addr: Option<String>) -> Slot {
+        let redial_at = addr.as_ref().map(|_| Instant::now());
+        Slot {
+            link: None,
+            outstanding: VecDeque::new(),
+            gen: 0,
+            window: 1,
+            ewma_s: None,
+            service_mark: None,
+            completed: 0,
+            addr,
+            redial_at,
+            dial_attempts: 0,
+            losses: 0,
+        }
+    }
 }
 
 enum Event {
@@ -130,6 +211,7 @@ pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<Dispatc
     if cells == 0 {
         anyhow::bail!("sweep {} has no cells", sweep.name());
     }
+    let cost = sweep.cost_hints()?;
 
     let journal_path = opts
         .journal
@@ -138,40 +220,28 @@ pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<Dispatc
     let (journal, recovered) =
         Journal::open(&journal_path, &sweep.fingerprint(), cells, opts.fresh)?;
 
-    let mut done: BTreeMap<usize, CellDone> = BTreeMap::new();
-    let mut durations: Vec<f64> = Vec::new();
-    for rec in recovered {
-        durations.push(rec.elapsed_s);
-        done.insert(rec.index, rec);
-    }
-    let resumed = done.len();
-    let pending: VecDeque<usize> = (0..cells).filter(|i| !done.contains_key(i)).collect();
-    if resumed > 0 {
-        eprintln!(
-            "star dispatch: resuming {} — {} of {} cell(s) already journaled",
-            journal_path.display(),
-            resumed,
-            cells
-        );
-    }
-
     let (tx, rx) = std::sync::mpsc::channel();
     let mut d = Dispatcher {
         sweep_json: sweep.to_json(),
         opts,
         labels,
+        cost,
         slots: Vec::new(),
         tx,
         rx,
-        pending,
+        pending: Vec::new(),
         delayed: Vec::new(),
         attempts: vec![0; cells],
         flights: vec![Vec::new(); cells],
-        done,
+        done: vec![false; cells],
+        done_count: 0,
+        merged: Vec::with_capacity(cells),
+        buffered: BTreeMap::new(),
         journal,
-        durations,
+        commit_due: None,
+        durations: SortedStream::default(),
         cell_error: vec![None; cells],
-        report: DispatchReport { cells, resumed, ..Default::default() },
+        report: DispatchReport { cells, ..Default::default() },
         next_id: 1,
         fatal: None,
         // covers the initial fleet plus one chaos kill per cell with
@@ -179,6 +249,23 @@ pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<Dispatc
         respawn_budget: opts.workers * 4 + 2 * cells + 8,
         tcp_mode: !opts.connect.is_empty(),
     };
+    for rec in recovered {
+        // the journal already refused duplicates and out-of-range cells
+        d.done[rec.index] = true;
+        d.done_count += 1;
+        d.durations.push(rec.elapsed_s);
+        d.admit_rows(rec.index, rec.rows);
+    }
+    d.report.resumed = d.done_count;
+    d.pending = (0..cells).filter(|&i| !d.done[i]).collect();
+    if d.report.resumed > 0 {
+        eprintln!(
+            "star dispatch: resuming {} — {} of {} cell(s) already journaled",
+            journal_path.display(),
+            d.report.resumed,
+            cells
+        );
+    }
 
     let result = d.run();
     d.shutdown_fleet();
@@ -187,18 +274,22 @@ pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<Dispatc
         anyhow::bail!("dispatch of {} failed: {}", sweep.name(), msg);
     }
 
-    // deterministic merge: strictly index-ordered, identical to the
-    // serial sweep's row order
-    let rows: Vec<_> = (0..cells)
-        .map(|i| d.done.remove(&i).expect("loop exits only when every cell is done").rows)
-        .collect();
+    // deterministic merge: the watermark has streamed every row into
+    // `merged` in strict index order, identical to the serial sweep
+    let rows = std::mem::take(&mut d.merged);
+    assert_eq!(rows.len(), cells, "loop exits only when every cell is done");
     sweep.assemble(&rows, &opts.out_dir)?;
 
+    d.report.journal_appends = d.report.executed as u64;
+    d.report.journal_fsyncs = d.journal.fsyncs();
+    d.report.per_worker_cells = d.slots.iter().map(|s| s.completed).collect();
     d.report.wall_s = t0.elapsed().as_secs_f64();
     let r = &d.report;
     eprintln!(
         "star dispatch: {} cell(s) ({} resumed, {} executed) — {} retr{}, \
-         {} straggler re-issue(s), {} worker death(s), chaos {}k/{}s — {:.1}s",
+         {} straggler re-issue(s), {} worker death(s), {} reconnect(s), \
+         chaos {}k/{}s — window {}, {} round-trip(s), {} fsync(s), \
+         balance {:?} — {:.1}s",
         r.cells,
         r.resumed,
         r.executed,
@@ -206,8 +297,13 @@ pub fn dispatch(sweep: &SweepSpec, opts: &DispatchOpts) -> crate::Result<Dispatc
         if r.retries == 1 { "y" } else { "ies" },
         r.straggler_reissues,
         r.worker_deaths,
+        r.worker_reconnects,
         r.chaos_kills,
         r.chaos_stalls,
+        opts.window.max(1),
+        r.round_trips,
+        r.journal_fsyncs,
+        r.per_worker_cells,
         r.wall_s
     );
     Ok(d.report)
@@ -217,20 +313,31 @@ struct Dispatcher<'a> {
     sweep_json: Json,
     opts: &'a DispatchOpts,
     labels: Vec<String>,
+    /// per-cell expected-cost hints (ratios only; drives queue order)
+    cost: Vec<f64>,
     slots: Vec<Slot>,
     tx: Sender<(usize, u64, Event)>,
     rx: Receiver<(usize, u64, Event)>,
-    pending: VecDeque<usize>,
+    /// cells awaiting issue — served longest-expected-cost-first
+    pending: Vec<usize>,
     /// (due, cell) — backoff re-queues waiting to re-enter `pending`
     delayed: Vec<(Instant, usize)>,
     /// non-duplicate issues per cell (the retry budget's currency)
     attempts: Vec<usize>,
     /// cell -> slot ids with an attempt in flight
     flights: Vec<Vec<usize>>,
-    done: BTreeMap<usize, CellDone>,
+    done: Vec<bool>,
+    done_count: usize,
+    /// the contiguous completed prefix, already in artifact row order
+    merged: Vec<CellRows>,
+    /// completed rows still waiting for a lower index (watermark gap)
+    buffered: BTreeMap<usize, CellRows>,
     journal: Journal,
-    /// completed-cell compute seconds (feeds the straggler p99)
-    durations: Vec<f64>,
+    /// when a partially-filled journal batch must be committed
+    commit_due: Option<Instant>,
+    /// completed-cell compute seconds (feeds the straggler p99),
+    /// incrementally sorted so the per-completion read is O(1)
+    durations: SortedStream,
     cell_error: Vec<Option<String>>,
     report: DispatchReport,
     next_id: u64,
@@ -242,9 +349,11 @@ struct Dispatcher<'a> {
 impl Dispatcher<'_> {
     fn run(&mut self) -> crate::Result<()> {
         if self.tcp_mode {
-            self.connect_fleet()?;
+            for addr in self.opts.connect.clone() {
+                self.slots.push(Slot::new(Some(addr.trim().to_string())));
+            }
         }
-        while self.done.len() < self.report.cells && self.fatal.is_none() {
+        while self.done_count < self.report.cells && self.fatal.is_none() {
             self.ensure_fleet();
             if self.fatal.is_some() {
                 break;
@@ -263,40 +372,51 @@ impl Dispatcher<'_> {
                 Err(RecvTimeoutError::Disconnected) => unreachable!("we hold a sender"),
             }
             self.check_deadlines();
+            self.maybe_commit()?;
         }
-        Ok(())
+        // final group commit: whatever the last partial batch holds
+        // becomes durable before the merge (even when bailing on fatal,
+        // completed cells must survive for the resume)
+        self.journal.flush()
     }
 
-    fn outstanding(&self) -> usize {
-        self.report.cells - self.done.len()
+    fn outstanding_cells(&self) -> usize {
+        self.report.cells - self.done_count
     }
 
     // -- fleet ------------------------------------------------------------
 
-    fn connect_fleet(&mut self) -> crate::Result<()> {
-        for addr in &self.opts.connect {
-            let stream = TcpStream::connect(addr)
-                .with_context(|| format!("connecting to worker {addr}"))?;
-            let reader = BufReader::new(
-                stream.try_clone().context("cloning worker stream for reads")?,
-            );
-            let slot = self.slots.len();
-            self.slots.push(Slot { link: Some(Link::Tcp { stream }), busy: None, gen: 0 });
-            spawn_reader(reader, slot, 0, self.tx.clone());
-        }
-        Ok(())
-    }
-
-    /// Keep the fleet at strength: respawn dead subprocess workers (with
-    /// a budget so a broken worker binary can't respawn forever); in TCP
-    /// mode remote workers cannot be revived, so a fully dead fleet with
-    /// work left is fatal.
+    /// Keep the fleet at strength: respawn dead subprocess workers, or
+    /// (re-)dial remote addresses whose backoff has elapsed. Both paths
+    /// share the respawn budget so a broken setup can't retry forever;
+    /// exhausting it with work left and no live worker is fatal.
     fn ensure_fleet(&mut self) {
-        let outstanding = self.outstanding();
+        let outstanding = self.outstanding_cells();
         if self.tcp_mode {
-            if outstanding > 0 && self.slots.iter().all(|s| s.link.is_none()) {
-                self.fatal = Some("every remote worker is gone (they cannot be respawned — \
-                                   restart them and re-dispatch to resume)".into());
+            let now = Instant::now();
+            for slot in 0..self.slots.len() {
+                if self.slots[slot].link.is_some() || self.respawn_budget == 0 {
+                    continue;
+                }
+                let due = match self.slots[slot].redial_at {
+                    Some(due) => due,
+                    None => continue,
+                };
+                if due > now {
+                    continue;
+                }
+                self.respawn_budget -= 1;
+                self.dial(slot);
+            }
+            if outstanding > 0
+                && self.slots.iter().all(|s| s.link.is_none())
+                && self.respawn_budget == 0
+            {
+                self.fatal = Some(
+                    "every remote worker is unreachable and the re-dial budget is \
+                     exhausted (restart the workers and re-dispatch to resume)"
+                        .into(),
+                );
             }
             return;
         }
@@ -326,12 +446,59 @@ impl Dispatcher<'_> {
             let slot = match self.slots.iter().position(|s| s.link.is_none()) {
                 Some(i) => i,
                 None => {
-                    self.slots.push(Slot { link: None, busy: None, gen: 0 });
+                    self.slots.push(Slot::new(None));
                     self.slots.len() - 1
                 }
             };
             if let Err(e) = self.spawn_child(slot) {
                 eprintln!("star dispatch: spawning worker failed: {e:#}");
+            }
+        }
+    }
+
+    /// One dial attempt at a remote slot's address. Failure schedules
+    /// the next attempt on the retry backoff curve (capped tighter than
+    /// cell re-queues: a fleet should reform in seconds).
+    fn dial(&mut self, slot: usize) {
+        let addr = self.slots[slot].addr.clone().expect("tcp slots carry an address");
+        let attempt = self.slots[slot].dial_attempts;
+        self.slots[slot].dial_attempts += 1;
+        let connected = try_dial(&addr).and_then(|stream| {
+            let reader =
+                BufReader::new(stream.try_clone().context("cloning worker stream for reads")?);
+            Ok((stream, reader))
+        });
+        match connected {
+            Ok((stream, reader)) => {
+                let rejoined = attempt > 0 || self.slots[slot].losses > 0;
+                let s = &mut self.slots[slot];
+                s.gen += 1;
+                s.window = 1; // until this incarnation's ready line
+                s.link = Some(Link::Tcp { stream });
+                s.redial_at = None;
+                s.dial_attempts = 0;
+                let gen = s.gen;
+                if rejoined {
+                    self.report.worker_reconnects += 1;
+                    eprintln!(
+                        "star dispatch: worker {slot} re-joined at {addr} \
+                         (dial attempt {})",
+                        attempt + 1
+                    );
+                }
+                spawn_reader(reader, slot, gen, self.tx.clone());
+            }
+            Err(e) => {
+                let delay =
+                    backoff_delay_ms(self.opts.backoff_ms, self.slots[slot].dial_attempts)
+                        .min(2_000);
+                if attempt == 0 {
+                    eprintln!(
+                        "star dispatch: worker {addr} unreachable ({e:#}); re-dialing"
+                    );
+                }
+                self.slots[slot].redial_at =
+                    Some(Instant::now() + Duration::from_millis(delay));
             }
         }
     }
@@ -350,14 +517,17 @@ impl Dispatcher<'_> {
         let stdin = child.stdin.take().expect("stdin was piped");
         let stdout = child.stdout.take().expect("stdout was piped");
         self.slots[slot].gen += 1;
+        self.slots[slot].window = 1; // until this incarnation's ready line
         let gen = self.slots[slot].gen;
         self.slots[slot].link = Some(Link::Child { child, stdin });
         spawn_reader(BufReader::new(stdout), slot, gen, self.tx.clone());
         Ok(())
     }
 
-    /// Tear down a worker (idempotent). Its in-flight cell is re-queued
-    /// unless another attempt is still running elsewhere.
+    /// Tear down a worker (idempotent). Every cell it held in its
+    /// pipeline is re-queued unless another attempt is still running
+    /// elsewhere — with credit windows a death can cost several cells,
+    /// and all of them must re-run. A remote slot schedules a re-dial.
     fn retire(&mut self, slot: usize, reason: &str) {
         let Some(link) = self.slots[slot].link.take() else { return };
         match link {
@@ -371,18 +541,26 @@ impl Dispatcher<'_> {
             }
         }
         self.slots[slot].gen += 1;
+        self.slots[slot].service_mark = None;
+        self.slots[slot].losses += 1;
         self.report.worker_deaths += 1;
-        if let Some(flight) = self.slots[slot].busy.take() {
+        let flights: Vec<Flight> = self.slots[slot].outstanding.drain(..).collect();
+        if flights.is_empty() {
+            eprintln!("star dispatch: worker {slot} lost ({reason}) while idle");
+        }
+        for flight in flights {
             eprintln!(
                 "star dispatch: worker {slot} lost ({reason}) holding cell {} [{}]",
                 flight.cell, self.labels[flight.cell]
             );
             self.flights[flight.cell].retain(|&s| s != slot);
-            if !self.done.contains_key(&flight.cell) && self.flights[flight.cell].is_empty() {
+            if !self.done[flight.cell] && self.flights[flight.cell].is_empty() {
                 self.requeue(flight.cell, reason);
             }
-        } else {
-            eprintln!("star dispatch: worker {slot} lost ({reason}) while idle");
+        }
+        if self.tcp_mode && self.slots[slot].addr.is_some() {
+            let delay = backoff_delay_ms(self.opts.backoff_ms, 1).min(2_000);
+            self.slots[slot].redial_at = Some(Instant::now() + Duration::from_millis(delay));
         }
     }
 
@@ -417,34 +595,144 @@ impl Dispatcher<'_> {
         while i < self.delayed.len() {
             if self.delayed[i].0 <= now {
                 let (_, cell) = self.delayed.swap_remove(i);
-                self.pending.push_back(cell);
+                self.pending.push(cell);
             } else {
                 i += 1;
             }
         }
     }
 
-    fn idle_slot(&self) -> Option<usize> {
-        self.slots.iter().position(|s| s.link.is_some() && s.busy.is_none())
+    /// Expected next-cell service seconds for a slot. The EWMA is the
+    /// base; a head flight already running *longer* than it pushes the
+    /// estimate up, so a freshly stalled worker looks slow immediately
+    /// instead of after it recovers. `None` means "no evidence yet" —
+    /// treated optimistically by the schedulers.
+    fn est(&self, slot: &Slot) -> Option<f64> {
+        let head = slot.service_mark.map(|m| m.elapsed().as_secs_f64());
+        match (slot.ewma_s, head) {
+            (Some(e), Some(h)) => Some(e.max(h)),
+            (Some(e), None) => Some(e),
+            (None, h) => h, // first cell still in service: all we know
+        }
+    }
+
+    /// The fleet's best (smallest) service estimate among live slots.
+    fn fleet_best_est(&self) -> Option<f64> {
+        self.slots
+            .iter()
+            .filter(|s| s.link.is_some())
+            .filter_map(|s| self.est(s))
+            .min_by(|a, b| a.partial_cmp(b).expect("service estimates are finite"))
+    }
+
+    /// Credits for a slot: how many cells may be in flight on it. The
+    /// negotiated window, scaled down by how much slower this worker is
+    /// than the fleet's best (a worker 4× slower gets ¼ the credits),
+    /// floored at 1 so every live worker keeps contributing.
+    fn credits(&self, slot: &Slot) -> usize {
+        let w = slot.window.max(1);
+        let (Some(e), Some(best)) = (self.est(slot), self.fleet_best_est()) else {
+            return w;
+        };
+        if e <= 0.0 || best <= 0.0 {
+            return w;
+        }
+        ((w as f64 * (best / e)).round() as usize).clamp(1, w)
+    }
+
+    /// Where the next pending cell goes: the live slot with spare
+    /// credits holding the fewest cells, ties broken by the faster
+    /// estimate (unknown = optimistic 0), then lowest index.
+    fn best_slot(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.link.is_none() || s.outstanding.len() >= self.credits(s) {
+                continue;
+            }
+            let e = self.est(s).unwrap_or(0.0);
+            let k = s.outstanding.len();
+            let better = match best {
+                None => true,
+                Some((_, bk, be)) => k < bk || (k == bk && e < be),
+            };
+            if better {
+                best = Some((i, k, e));
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+
+    /// Where a straggler duplicate goes: the *fastest* idle slot — the
+    /// whole point of speculative re-issue is finishing before the
+    /// original, so the backup must not land on another slow worker.
+    fn fastest_idle_slot(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.link.is_none() || !s.outstanding.is_empty() {
+                continue;
+            }
+            let e = self.est(s).unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                Some((_, be)) => e < be,
+            };
+            if better {
+                best = Some((i, e));
+            }
+        }
+        best.map(|(i, _)| i)
     }
 
     fn issue_pending(&mut self) {
-        while !self.pending.is_empty() {
-            let Some(slot) = self.idle_slot() else { return };
-            let Some(cell) = self.pending.pop_front() else { return };
-            if self.done.contains_key(&cell) {
-                continue;
+        loop {
+            if self.pending.is_empty() {
+                return;
             }
+            let Some(slot) = self.best_slot() else { return };
+            let Some(cell) = self.pop_pending() else { return };
             self.issue(slot, cell, false);
         }
     }
 
+    /// Longest-expected-cost-first: the big cells go out early so the
+    /// makespan doesn't end on one giant cell issued last. Ties break
+    /// on the lowest index (stable). Cells completed while waiting
+    /// (a straggler duplicate won) are skipped.
+    fn pop_pending(&mut self) -> Option<usize> {
+        loop {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for (pos, &cell) in self.pending.iter().enumerate() {
+                let c = self.cost.get(cell).copied().unwrap_or(1.0);
+                let better = match best {
+                    None => true,
+                    Some((_, bcell, bc)) => c > bc || (c == bc && cell < bcell),
+                };
+                if better {
+                    best = Some((pos, cell, c));
+                }
+            }
+            let (pos, cell, _) = best?;
+            self.pending.swap_remove(pos);
+            if !self.done[cell] {
+                return Some(cell);
+            }
+        }
+    }
+
     fn issue(&mut self, slot: usize, cell: usize, duplicate: bool) {
-        let chaos: Option<Chaos> = if duplicate {
+        if self.slots[slot].link.is_none() {
+            return; // schedulers never pick a linkless slot
+        }
+        let mut chaos: Option<Chaos> = if duplicate {
             None
         } else {
             self.opts.chaos.as_ref().and_then(|cfg| chaos::decide(cfg, cell, self.attempts[cell]))
         };
+        if chaos.is_none() {
+            // the slow-worker knob follows the slot, not the cell: every
+            // request this worker serves stalls (a slow machine)
+            chaos = self.opts.chaos.as_ref().and_then(|cfg| chaos::slow_stall(cfg, slot));
+        }
         match chaos {
             Some(Chaos::Die { .. }) => self.report.chaos_kills += 1,
             Some(Chaos::Stall { .. }) => self.report.chaos_stalls += 1,
@@ -462,7 +750,19 @@ impl Dispatcher<'_> {
         let id = self.next_id;
         self.next_id += 1;
         let line = cell_request_json(id, cell, &self.sweep_json, chaos).to_string_compact();
-        self.slots[slot].busy = Some(Flight { cell, issued: Instant::now(), duplicate });
+        if self.slots[slot].outstanding.is_empty() {
+            // nothing was in flight: this issue pays a full round-trip
+            // (request out, response back, worker idle in between);
+            // pipelined refills don't
+            self.report.round_trips += 1;
+            self.slots[slot].service_mark = Some(Instant::now());
+        }
+        self.slots[slot].outstanding.push_back(Flight {
+            id,
+            cell,
+            issued: Instant::now(),
+            duplicate,
+        });
         self.flights[cell].push(slot);
         let sent = match self.slots[slot].link.as_mut() {
             Some(Link::Child { stdin, .. }) => {
@@ -471,7 +771,7 @@ impl Dispatcher<'_> {
             Some(Link::Tcp { stream }) => {
                 writeln!(stream, "{line}").and_then(|()| stream.flush())
             }
-            None => return,
+            None => unreachable!("checked above"),
         };
         if let Err(e) = sent {
             self.retire(slot, &format!("send failed: {e}"));
@@ -494,27 +794,29 @@ impl Dispatcher<'_> {
 
     /// Straggler re-issue (the fabric's speculative execution): once
     /// nothing is queued, duplicate any first-attempt cell running far
-    /// past the p99 of completed cells onto an idle worker. First result
-    /// wins; at most two attempts of a cell fly at once.
+    /// past the p99 of completed cells onto the fastest idle worker.
+    /// First result wins; at most two attempts of a cell fly at once.
+    /// A cell stuck deep in a stalled worker's pipeline counts too —
+    /// its wait *is* the straggle.
     fn maybe_duplicate(&mut self) {
         if !self.pending.is_empty() || !self.delayed.is_empty() || self.durations.len() < 3 {
             return;
         }
-        let p99 = crate::stats::percentile(&self.durations, 99.0);
+        let p99 = self.durations.percentile(99.0);
         let threshold = (self.opts.straggler_factor * p99).max(0.25);
         let now = Instant::now();
         let candidates: Vec<usize> = self
             .slots
             .iter()
-            .filter_map(|s| s.busy.as_ref())
+            .flat_map(|s| s.outstanding.iter())
             .filter(|f| {
                 !f.duplicate && now.duration_since(f.issued).as_secs_f64() > threshold
             })
             .map(|f| f.cell)
-            .filter(|&c| !self.done.contains_key(&c) && self.flights[c].len() < 2)
+            .filter(|&c| !self.done[c] && self.flights[c].len() < 2)
             .collect();
         for cell in candidates {
-            let Some(slot) = self.idle_slot() else { return };
+            let Some(slot) = self.fastest_idle_slot() else { return };
             self.issue(slot, cell, true);
         }
     }
@@ -529,30 +831,30 @@ impl Dispatcher<'_> {
                     self.retire(slot, "worker exited");
                 }
             }
-            Event::Msg(Response::Ready { .. }) => {}
-            Event::Msg(Response::Done { done, .. }) => {
+            Event::Msg(Response::Ready { window, .. }) => {
                 if current {
-                    if let Some(flight) = self.slots[slot].busy.take() {
-                        self.flights[flight.cell].retain(|&s| s != slot);
-                    }
+                    // credit negotiation: our --window, capped at what
+                    // the worker announced (1 for pre-pipelining ones)
+                    self.slots[slot].window = self.opts.window.max(1).min(window.max(1));
                 }
+            }
+            Event::Msg(Response::Done { id, done }) => {
                 // salvage the result even from a retired worker — it is
                 // just as valid, and discarding it would waste the work
-                self.record_done(done)?;
+                let fresh = self.record_done(done)?;
+                if current && self.complete_flight(slot, id) && fresh {
+                    self.slots[slot].completed += 1;
+                }
             }
-            Event::Msg(Response::Failed { index, error, .. }) => {
-                eprintln!(
-                    "star dispatch: cell {index} failed on worker {slot}: {error}"
-                );
+            Event::Msg(Response::Failed { id, index, error }) => {
+                eprintln!("star dispatch: cell {index} failed on worker {slot}: {error}");
                 if !current {
                     return Ok(()); // its re-queue already happened at retire()
                 }
-                if let Some(flight) = self.slots[slot].busy.take() {
-                    self.flights[flight.cell].retain(|&s| s != slot);
-                }
+                self.complete_flight(slot, id);
                 if index < self.cell_error.len() {
                     self.cell_error[index] = Some(error);
-                    if !self.done.contains_key(&index) && self.flights[index].is_empty() {
+                    if !self.done[index] && self.flights[index].is_empty() {
                         self.requeue(index, "cell failed");
                     }
                 }
@@ -561,22 +863,93 @@ impl Dispatcher<'_> {
         Ok(())
     }
 
-    fn record_done(&mut self, done: CellDone) -> crate::Result<()> {
+    /// Remove flight `id` from a slot's pipeline and update the slot's
+    /// service clock + EWMA. Timing is response-to-response on the
+    /// dispatcher's clock — not the worker-reported `elapsed_s` — so
+    /// chaos stalls, queueing, and protocol overhead all count against
+    /// a worker's throughput estimate. Returns whether the flight was
+    /// found (stale responses from a retired incarnation are not).
+    fn complete_flight(&mut self, slot: usize, id: u64) -> bool {
+        let Some(pos) = self.slots[slot].outstanding.iter().position(|f| f.id == id) else {
+            return false;
+        };
+        let flight = self.slots[slot].outstanding.remove(pos).expect("position exists");
+        self.flights[flight.cell].retain(|&s| s != slot);
+        let now = Instant::now();
+        let s = &mut self.slots[slot];
+        if let Some(mark) = s.service_mark {
+            let service = now.duration_since(mark).as_secs_f64();
+            s.ewma_s = Some(match s.ewma_s {
+                Some(prev) => 0.7 * prev + 0.3 * service,
+                None => service,
+            });
+        }
+        s.service_mark = if s.outstanding.is_empty() { None } else { Some(now) };
+        true
+    }
+
+    /// Record a completed cell: journal it (group-committed), feed the
+    /// straggler stats, and stream its rows past the merge watermark.
+    /// Returns false for a duplicate (the losing half of a straggler
+    /// race) or an out-of-range index — both discarded.
+    fn record_done(&mut self, done: CellDone) -> crate::Result<bool> {
         if done.index >= self.report.cells {
             eprintln!("star dispatch: discarding result for unknown cell {}", done.index);
-            return Ok(());
+            return Ok(false);
         }
-        if self.done.contains_key(&done.index) {
-            // the losing half of a straggler race (or a duplicate retry)
-            return Ok(());
+        if self.done[done.index] {
+            return Ok(false);
         }
-        self.journal.append(&done)?;
+        self.journal.append(&done);
+        if self.opts.commit_batch <= 1 || self.journal.pending() >= self.opts.commit_batch {
+            self.commit()?;
+        } else if self.commit_due.is_none() {
+            self.commit_due = Some(
+                Instant::now() + Duration::from_millis(self.opts.commit_interval_ms.max(1)),
+            );
+        }
         self.durations.push(done.elapsed_s);
         self.report.executed += 1;
-        self.done.insert(done.index, done);
+        self.done[done.index] = true;
+        self.done_count += 1;
+        self.admit_rows(done.index, done.rows);
+        Ok(true)
+    }
+
+    /// Watermark merge: a row joins the merged prefix the moment it is
+    /// contiguous with it; only out-of-order rows wait in the buffer.
+    /// Merge memory is therefore bounded by scheduling skew (at most
+    /// the fleet's total in-flight window), not by the sweep size.
+    fn admit_rows(&mut self, index: usize, rows: CellRows) {
+        if index == self.merged.len() {
+            self.merged.push(rows);
+            while let Some(next) = self.buffered.remove(&self.merged.len()) {
+                self.merged.push(next);
+            }
+        } else {
+            self.buffered.insert(index, rows);
+        }
+        self.report.peak_merge_buffer = self.report.peak_merge_buffer.max(self.buffered.len());
+    }
+
+    fn commit(&mut self) -> crate::Result<()> {
+        self.commit_due = None;
+        self.journal.flush()
+    }
+
+    /// Commit a partial batch whose flush interval has elapsed — bounds
+    /// how long a completed cell can sit non-durable when the sweep
+    /// finishes slower than the batch fills.
+    fn maybe_commit(&mut self) -> crate::Result<()> {
+        if self.commit_due.is_some_and(|due| due <= Instant::now()) {
+            self.commit()?;
+        }
         Ok(())
     }
 
+    /// A worker whose *current* cell (head of its pipeline, measured by
+    /// the service clock) exceeds the deadline is presumed hung. Queued
+    /// cells behind it don't count — they aren't being served yet.
     fn check_deadlines(&mut self) {
         let now = Instant::now();
         let overdue: Vec<usize> = self
@@ -584,8 +957,8 @@ impl Dispatcher<'_> {
             .iter()
             .enumerate()
             .filter(|(_, s)| {
-                s.busy.as_ref().is_some_and(|f| {
-                    now.duration_since(f.issued).as_secs_f64() > self.opts.deadline_s
+                s.service_mark.is_some_and(|m| {
+                    now.duration_since(m).as_secs_f64() > self.opts.deadline_s
                 })
             })
             .map(|(i, _)| i)
@@ -594,6 +967,17 @@ impl Dispatcher<'_> {
             self.retire(slot, "cell deadline exceeded");
         }
     }
+}
+
+fn try_dial(addr: &str) -> crate::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving worker address {addr:?}"))?
+        .next()
+        .with_context(|| format!("worker address {addr:?} resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sa, Duration::from_millis(500))
+        .with_context(|| format!("connecting to worker {addr}"))?;
+    Ok(stream)
 }
 
 /// Pump a worker's response lines into the event channel. Unparseable

@@ -1,14 +1,22 @@
 //! Append-only checkpoint journal: `results/<sweep>.journal.jsonl`.
 //!
 //! Line 1 is a header binding the journal to a sweep fingerprint and
-//! cell count; every later line is one [`CellDone`] record, fsync'd as
-//! it is appended — a cell is either durably journaled or it will be
-//! re-run, never half-written. On open, an existing journal is replayed
-//! to recover completed cells, so an interrupted dispatch resumes
-//! re-running only the missing ones. A torn final line (the process
-//! died mid-append, pre-fsync) is detected by its missing newline and
-//! dropped; any *complete* line that fails to parse means real
-//! corruption and is refused rather than guessed at.
+//! cell count; every later line is one [`CellDone`] record. Appends are
+//! **group-committed** (DESIGN.md §14): [`Journal::append`] only
+//! buffers the record in memory, and [`Journal::flush`] writes the
+//! whole batch and fsyncs once — so a cheap-cell sweep pays one fsync
+//! per batch, not one per cell. The durability contract is unchanged
+//! from the per-cell days because a cell only *counts* as durable after
+//! its batch syncs: a crash loses at most the buffered (never-written)
+//! tail, which the dispatcher simply re-runs on resume. A cell is
+//! either durably journaled or it will be re-run, never half-written.
+//!
+//! On open, an existing journal is replayed to recover completed cells,
+//! so an interrupted dispatch resumes re-running only the missing ones.
+//! A torn final line (the process died mid-write, pre-fsync) is
+//! detected by its missing newline and dropped; any *complete* line
+//! that fails to parse means real corruption and is refused rather than
+//! guessed at.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -27,6 +35,12 @@ pub const JOURNAL_SCHEMA: &str = "star-journal-v1";
 pub struct Journal {
     file: File,
     path: PathBuf,
+    /// records appended since the last flush — deliberately held in
+    /// process memory (not an OS write buffer) so a crash loses exactly
+    /// what was never committed, with no page-cache gray zone
+    buf: String,
+    buffered: usize,
+    fsyncs: u64,
 }
 
 impl Journal {
@@ -61,7 +75,7 @@ impl Journal {
             ]);
             writeln!(file, "{}", header.to_string_compact())?;
             file.sync_data()?;
-            return Ok((Journal { file, path: path.to_path_buf() }, Vec::new()));
+            return Ok((Journal::around(file, path), Vec::new()));
         }
 
         let mut text = String::new();
@@ -129,7 +143,11 @@ impl Journal {
             .with_context(|| format!("reopening journal {}", path.display()))?;
         file.set_len(good_end as u64)?; // drop the torn tail for good
         file.seek(SeekFrom::End(0))?;
-        Ok((Journal { file, path: path.to_path_buf() }, recovered))
+        Ok((Journal::around(file, path), recovered))
+    }
+
+    fn around(file: File, path: &Path) -> Journal {
+        Journal { file, path: path.to_path_buf(), buf: String::new(), buffered: 0, fsyncs: 0 }
     }
 
     fn check_header(j: &Json, path: &Path, fingerprint: &str, cells: usize) -> crate::Result<()> {
@@ -156,15 +174,63 @@ impl Journal {
         Ok(())
     }
 
-    /// Durably record one completed cell: append + fsync.
-    pub fn append(&mut self, done: &CellDone) -> crate::Result<()> {
-        writeln!(self.file, "{}", done.to_json().to_string_compact())
+    /// Buffer one completed cell for the next group commit. The record
+    /// is NOT durable (and not even written) until [`flush`] runs —
+    /// callers that need per-cell durability flush after every append.
+    ///
+    /// [`flush`]: Journal::flush
+    pub fn append(&mut self, done: &CellDone) {
+        self.buf.push_str(&done.to_json().to_string_compact());
+        self.buf.push('\n');
+        self.buffered += 1;
+    }
+
+    /// Group commit: write every buffered record and fsync once. An
+    /// empty buffer is a no-op (no write, no fsync counted).
+    pub fn flush(&mut self) -> crate::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.file
+            .write_all(self.buf.as_bytes())
             .and_then(|()| self.file.sync_data())
-            .with_context(|| format!("appending to journal {}", self.path.display()))
+            .with_context(|| format!("committing batch to journal {}", self.path.display()))?;
+        self.buf.clear();
+        self.buffered = 0;
+        self.fsyncs += 1;
+        Ok(())
+    }
+
+    /// Records appended since the last commit.
+    pub fn pending(&self) -> usize {
+        self.buffered
+    }
+
+    /// Data fsyncs performed so far (the header sync at create is not
+    /// counted — this is the per-sweep group-commit figure).
+    pub fn fsyncs(&self) -> u64 {
+        self.fsyncs
+    }
+
+    /// Simulate a crash for tests: drop the uncommitted buffer — those
+    /// records were never written, exactly as if the process died
+    /// mid-batch — and close the file without the drop-flush.
+    pub fn abandon(mut self) {
+        self.buf.clear();
+        self.buffered = 0;
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+}
+
+/// Clean exit durability: whatever is still buffered gets committed.
+/// Errors are swallowed (nowhere to report them in a destructor); the
+/// dispatcher flushes explicitly on its happy path.
+impl Drop for Journal {
+    fn drop(&mut self) {
+        let _ = self.flush();
     }
 }
 
@@ -191,8 +257,8 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let (mut j, rec) = Journal::open(&path, "fp1", 4, false).unwrap();
         assert!(rec.is_empty());
-        j.append(&done(2)).unwrap();
-        j.append(&done(0)).unwrap();
+        j.append(&done(2));
+        j.append(&done(0));
         drop(j);
 
         let (_j, rec) = Journal::open(&path, "fp1", 4, false).unwrap();
@@ -209,8 +275,8 @@ mod tests {
         let path = dir.join("sweep.journal.jsonl");
         let _ = std::fs::remove_file(&path);
         let (mut j, _) = Journal::open(&path, "fp", 3, false).unwrap();
-        j.append(&done(0)).unwrap();
-        j.append(&done(1)).unwrap();
+        j.append(&done(0));
+        j.append(&done(1));
         drop(j);
 
         // simulate dying mid-append: chop the file inside the last record
@@ -220,10 +286,36 @@ mod tests {
         let (mut j, rec) = Journal::open(&path, "fp", 3, false).unwrap();
         assert_eq!(rec, vec![done(0)], "the torn record must be dropped");
         // and the file must be usable again: append lands on a clean line
-        j.append(&done(2)).unwrap();
+        j.append(&done(2));
         drop(j);
         let (_j, rec) = Journal::open(&path, "fp", 3, false).unwrap();
         assert_eq!(rec, vec![done(0), done(2)]);
+    }
+
+    #[test]
+    fn group_commit_buffers_until_flush_and_abandon_loses_only_the_tail() {
+        let dir = tempdir("journal_gc");
+        let path = dir.join("sweep.journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, "fp", 8, false).unwrap();
+        j.append(&done(0));
+        j.append(&done(1));
+        assert_eq!((j.pending(), j.fsyncs()), (2, 0), "appends must only buffer");
+        j.flush().unwrap();
+        assert_eq!((j.pending(), j.fsyncs()), (0, 1), "one sync commits the whole batch");
+        j.flush().unwrap();
+        assert_eq!(j.fsyncs(), 1, "an empty flush is a no-op, not an fsync");
+        j.append(&done(2));
+        j.append(&done(3));
+        j.abandon(); // crash mid-batch: the unsynced tail dies with us
+
+        let (mut j, rec) = Journal::open(&path, "fp", 8, false).unwrap();
+        assert_eq!(rec, vec![done(0), done(1)], "only the committed batch survives");
+        // clean exit (drop) still commits whatever is buffered
+        j.append(&done(4));
+        drop(j);
+        let (_j, rec) = Journal::open(&path, "fp", 8, false).unwrap();
+        assert_eq!(rec, vec![done(0), done(1), done(4)]);
     }
 
     #[test]
@@ -232,7 +324,7 @@ mod tests {
         let path = dir.join("sweep.journal.jsonl");
         let _ = std::fs::remove_file(&path);
         let (mut j, _) = Journal::open(&path, "fp-a", 2, false).unwrap();
-        j.append(&done(0)).unwrap();
+        j.append(&done(0));
         drop(j);
         let err = Journal::open(&path, "fp-b", 2, false).unwrap_err();
         assert!(format!("{err:#}").contains("--fresh"), "{err:#}");
@@ -246,8 +338,8 @@ mod tests {
         let path = dir.join("sweep.journal.jsonl");
         let _ = std::fs::remove_file(&path);
         let (mut j, _) = Journal::open(&path, "fp", 2, false).unwrap();
-        j.append(&done(1)).unwrap();
-        j.append(&done(1)).unwrap();
+        j.append(&done(1));
+        j.append(&done(1));
         drop(j);
         let err = Journal::open(&path, "fp", 2, false).unwrap_err();
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
@@ -255,7 +347,7 @@ mod tests {
         let path = dir.join("range.journal.jsonl");
         let _ = std::fs::remove_file(&path);
         let (mut j, _) = Journal::open(&path, "fp", 2, false).unwrap();
-        j.append(&done(5)).unwrap();
+        j.append(&done(5));
         drop(j);
         let err = Journal::open(&path, "fp", 2, false).unwrap_err();
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");

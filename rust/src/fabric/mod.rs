@@ -9,11 +9,14 @@
 //! * [`protocol`] — `star-cell-v1`: the line protocol and [`SweepSpec`],
 //!   the self-contained description of a sweep any worker can compute
 //!   cells of;
-//! * [`journal`] — the fsync'd append-only checkpoint
-//!   (`results/<sweep>.journal.jsonl`) behind resume;
-//! * [`worker`] — `star worker`: the stateless cell server;
-//! * [`dispatch`] — `star dispatch`: scatter, deadline, retry,
-//!   straggler re-issue, re-queue, deterministic merge;
+//! * [`journal`] — the group-committed append-only checkpoint
+//!   (`results/<sweep>.journal.jsonl`) behind resume: appends batch in
+//!   memory and one fsync commits the batch;
+//! * [`worker`] — `star worker`: the stateless cell server, pipelined
+//!   so the next queued cell computes while the last response ships;
+//! * [`dispatch`] — `star dispatch`: credit-based pipelined scatter,
+//!   EWMA-weighted load balancing, deadline, retry, straggler
+//!   re-issue, re-queue, watermark-merged deterministic output;
 //! * [`chaos`] — seeded fault injection (`--chaos`) so tests and CI can
 //!   *prove* the recovery paths preserve byte-identity.
 //!

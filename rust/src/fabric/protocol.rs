@@ -127,8 +127,10 @@ impl SweepSpec {
     }
 
     /// The resilience flavor's experiment context. `threads: 1` because
-    /// fabric workers compute one cell at a time; the artifact is
-    /// identical at any width anyway (the byte-identity contract).
+    /// a fabric worker computes each *cell* serially (pipelining only
+    /// overlaps a cell's compute with the previous cell's I/O); the
+    /// artifact is identical at any width anyway (the byte-identity
+    /// contract).
     fn resilience_ctx(&self, out_dir: &std::path::Path) -> Option<ExpCtx> {
         match *self {
             SweepSpec::Resilience { jobs, seed, quick, fault_seed } => Some(ExpCtx {
@@ -160,6 +162,29 @@ impl SweepSpec {
                 Ok(search::plan(space, *count, *points)
                     .into_iter()
                     .map(|c| format!("{}/{}/{}", c.scenario.name, c.policy, arch_tag(c.arch)))
+                    .collect())
+            }
+        }
+    }
+
+    /// Relative expected compute cost per cell, in grid order
+    /// (arbitrary units; only ratios matter). The dispatcher serves its
+    /// pending queue longest-expected-cost-first so the big cells go
+    /// out early instead of stretching the makespan tail. Resilience
+    /// cells grow with the fault rate (more membership churn per
+    /// round); space cells scale with their sampled job count; generic
+    /// grids are uniform (one trace, policy × arch variations only).
+    pub fn cost_hints(&self) -> crate::Result<Vec<f64>> {
+        match self {
+            SweepSpec::Resilience { quick, .. } => Ok(resilience::cell_specs(*quick)
+                .into_iter()
+                .map(|(ri, _)| 1.0 + resilience::RATES.get(ri).copied().unwrap_or(0.0))
+                .collect()),
+            SweepSpec::Generic { spec, .. } => Ok(vec![1.0; runner::grid(spec).len()]),
+            SweepSpec::Space { space, count, points, .. } => {
+                Ok(search::plan(space, *count, *points)
+                    .into_iter()
+                    .map(|c| c.scenario.workload.jobs.max(1) as f64)
                     .collect())
             }
         }
@@ -402,7 +427,12 @@ pub fn cell_request_json(id: u64, index: usize, sweep_json: &Json, chaos: Option
 /// A parsed worker → dispatcher message.
 #[derive(Debug)]
 pub enum Response {
-    Ready { pid: u64 },
+    /// `window` is the worker's announced pipelining capability: how
+    /// many cell requests it is willing to queue at once. The
+    /// dispatcher issues `min(--window, announced)` credits to the
+    /// slot. Pre-pipelining workers emit no `window` field, which
+    /// parses as 1 — they keep working, lock-step, unmodified.
+    Ready { pid: u64, window: usize },
     Done { id: u64, done: CellDone },
     Failed { id: u64, index: usize, error: String },
 }
@@ -410,10 +440,11 @@ pub enum Response {
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
-            Response::Ready { pid } => jsonio::obj(vec![
+            Response::Ready { pid, window } => jsonio::obj(vec![
                 ("schema", jsonio::s(PROTOCOL)),
                 ("type", jsonio::s("ready")),
                 ("pid", jsonio::num(*pid as f64)),
+                ("window", jsonio::num(*window as f64)),
             ]),
             Response::Done { id, done } => jsonio::obj(vec![
                 ("schema", jsonio::s(PROTOCOL)),
@@ -438,7 +469,13 @@ impl Response {
             anyhow::bail!("unexpected schema {schema:?} (want {PROTOCOL:?})");
         }
         match j.get("type")?.str()? {
-            "ready" => Ok(Response::Ready { pid: j.get("pid")?.u64()? }),
+            "ready" => Ok(Response::Ready {
+                pid: j.get("pid")?.u64()?,
+                window: match j.opt("window") {
+                    Some(v) => (v.u64()? as usize).max(1),
+                    None => 1, // a v1 worker: lock-step
+                },
+            }),
             "done" => Ok(Response::Done {
                 id: j.get("id")?.u64()?,
                 done: CellDone::from_json(j.get("cell")?)?,
@@ -571,6 +608,55 @@ mod tests {
             .to_string_compact();
         assert!(!line.contains('\n'), "errors must stay one line on the wire");
         assert!(matches!(Response::from_line(&line).unwrap(), Response::Failed { index: 2, .. }));
+    }
+
+    #[test]
+    fn ready_window_round_trips_and_absent_window_means_lockstep() {
+        let line = Response::Ready { pid: 7, window: 32 }.to_json().to_string_compact();
+        match Response::from_line(&line).unwrap() {
+            Response::Ready { pid, window } => assert_eq!((pid, window), (7, 32)),
+            other => panic!("parsed {other:?}"),
+        }
+        // a pre-pipelining worker announces no window: the dispatcher
+        // must fall back to one-in-flight so old fleets keep working
+        let legacy = format!(r#"{{"pid":9,"schema":"{PROTOCOL}","type":"ready"}}"#);
+        match Response::from_line(&legacy).unwrap() {
+            Response::Ready { pid, window } => assert_eq!((pid, window), (9, 1)),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cost_hints_cover_every_cell_and_weight_fault_rates() {
+        let specs = [
+            SweepSpec::Resilience { jobs: 2, seed: 0, quick: true, fault_seed: 0 },
+            SweepSpec::Generic {
+                spec: Scenario {
+                    name: "g".into(),
+                    policies: vec!["SSGD".into()],
+                    ..Default::default()
+                },
+                jobs_override: None,
+                quick: true,
+            },
+            SweepSpec::Space {
+                space: crate::scenario::find_space("mode_choice").unwrap(),
+                count: 2,
+                points: 2,
+                jobs_override: Some(2),
+                quick: true,
+            },
+        ];
+        for spec in specs {
+            let hints = spec.cost_hints().unwrap();
+            assert_eq!(hints.len(), spec.cell_labels().unwrap().len(), "{}", spec.name());
+            assert!(hints.iter().all(|&c| c > 0.0), "{}", spec.name());
+        }
+        // the rate-major resilience grid: rate-4 cells (churn-heavy)
+        // must be expected costlier than fault-free ones
+        let r = SweepSpec::Resilience { jobs: 2, seed: 0, quick: true, fault_seed: 0 };
+        let hints = r.cost_hints().unwrap();
+        assert!(hints[8] > hints[0], "{hints:?}");
     }
 
     #[test]

@@ -3,12 +3,18 @@
 //! (subprocess mode, `star dispatch` spawns these) or a TCP listener
 //! (fleet mode, `--listen host:port`).
 //!
-//! The worker is deliberately dumb: no queue, no state between
-//! requests, one cell at a time. All the cleverness — retries,
-//! deadlines, straggler re-issue, re-queue — lives in the dispatcher,
-//! which only works because a worker is safe to kill at any instant:
-//! cells are pure and journaling happens dispatcher-side after the
-//! response, so a dead worker costs only the cell it was holding.
+//! The worker is deliberately dumb: no state between requests, cells
+//! computed one at a time in arrival order. It is however **pipelined**
+//! (DESIGN.md §14): a reader thread queues incoming requests and a
+//! writer thread ships responses, so while one `CellDone` is in flight
+//! back to the dispatcher the next cell is already computing. The
+//! `ready` line announces [`WINDOW`], the number of requests the
+//! dispatcher may keep outstanding here; the dispatcher caps its
+//! `--window` credits at that. All the cleverness — retries, deadlines,
+//! straggler re-issue, re-queue — stays in the dispatcher, which only
+//! works because a worker is safe to kill at any instant: cells are
+//! pure and journaling happens dispatcher-side after the response, so a
+//! dead worker costs only the cells it was holding.
 //!
 //! Diagnostics go to stderr; stdout carries protocol lines only (the
 //! compute path never prints — pinned by the dispatch byte-identity
@@ -17,6 +23,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, ToSocketAddrs};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Context;
@@ -25,13 +32,15 @@ use crate::exp::sweep::panic_message;
 
 use super::protocol::{Chaos, Request, Response};
 
+/// How many requests this worker is willing to queue: announced in the
+/// `ready` line, capping the dispatcher's per-slot credits. Generous on
+/// purpose — requests are small, and the dispatcher's `--window` is the
+/// real knob.
+pub const WINDOW: usize = 32;
+
 /// Serve cells over stdin/stdout until EOF or a `shutdown` request.
 pub fn serve_stdio() -> crate::Result<()> {
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let mut out = stdout.lock();
-    announce(&mut out)?;
-    serve_lines(stdin.lock(), &mut out)
+    serve_session(BufReader::new(std::io::stdin()), std::io::stdout())
 }
 
 /// Serve cells over TCP, one connection at a time, forever. Connection
@@ -59,9 +68,8 @@ pub fn serve_tcp(addr: &str) -> crate::Result<()> {
         eprintln!("star worker: serving {peer}");
         let serve = || -> crate::Result<()> {
             let reader = BufReader::new(stream.try_clone()?);
-            let mut out = stream.try_clone()?;
-            announce(&mut out)?;
-            serve_lines(reader, &mut out)
+            let out = stream.try_clone()?;
+            serve_session(reader, out)
         };
         if let Err(e) = serve() {
             eprintln!("star worker: connection to {peer} failed: {e:#}");
@@ -69,39 +77,74 @@ pub fn serve_tcp(addr: &str) -> crate::Result<()> {
     }
 }
 
-fn announce(out: &mut impl Write) -> crate::Result<()> {
-    let ready = Response::Ready { pid: std::process::id() as u64 };
-    writeln!(out, "{}", ready.to_json().to_string_compact())?;
-    out.flush()?;
-    Ok(())
-}
+/// The pipelined session loop shared by both transports: requests queue
+/// up on a reader thread, responses drain through a writer thread, and
+/// this thread computes cells strictly in arrival order in between. Up
+/// to [`WINDOW`] requests can be buffered, so the dispatcher's next
+/// cell is already here when the current one finishes — compute
+/// overlaps both directions of protocol I/O.
+fn serve_session(
+    reader: impl BufRead + Send + 'static,
+    out: impl Write + Send + 'static,
+) -> crate::Result<()> {
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || write_lines(out, resp_rx));
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    // the reader thread owns the input; at EOF (or shutdown) it drops
+    // `req_tx`, which ends the recv loop below
+    std::thread::spawn(move || read_requests(reader, req_tx));
 
-/// The request loop shared by both transports. Unparseable lines are
-/// warned about and skipped (they can only come from a broken peer;
-/// dying on them would turn one bad line into a lost worker).
-fn serve_lines(reader: impl BufRead, out: &mut impl Write) -> crate::Result<()> {
-    for line in reader.lines() {
-        let line = line.context("reading request line")?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let req = match Request::from_line(&line) {
-            Ok(r) => r,
-            Err(e) => {
-                eprintln!("star worker: skipping bad request line: {e:#}");
-                continue;
-            }
-        };
-        match req {
-            Request::Shutdown => return Ok(()),
-            Request::Cell { id, index, sweep, chaos } => {
-                let resp = serve_cell(id, index, &sweep, chaos);
-                writeln!(out, "{}", resp.to_json().to_string_compact())?;
-                out.flush()?;
+    let ready = Response::Ready { pid: std::process::id() as u64, window: WINDOW };
+    if resp_tx.send(ready.to_json().to_string_compact()).is_ok() {
+        loop {
+            match req_rx.recv() {
+                Err(_) | Ok(Request::Shutdown) => break, // EOF or polite end
+                Ok(Request::Cell { id, index, sweep, chaos }) => {
+                    let resp = serve_cell(id, index, &sweep, chaos);
+                    if resp_tx.send(resp.to_json().to_string_compact()).is_err() {
+                        break; // writer died: the peer is gone
+                    }
+                }
             }
         }
     }
+    drop(resp_tx); // writer drains the queue, then exits
+    match writer.join() {
+        Ok(served) => served.context("writing responses"),
+        Err(p) => anyhow::bail!("writer thread panicked: {}", panic_message(p)),
+    }
+}
+
+/// Writer thread: one line per response, flushed immediately so the
+/// dispatcher sees results (and can refill credits) without delay.
+fn write_lines(mut out: impl Write, rx: mpsc::Receiver<String>) -> std::io::Result<()> {
+    for line in rx {
+        writeln!(out, "{line}")?;
+        out.flush()?;
+    }
     Ok(())
+}
+
+/// Reader thread: parse request lines into the session queue.
+/// Unparseable lines are warned about and skipped (they can only come
+/// from a broken peer; dying on them would turn one bad line into a
+/// lost worker).
+fn read_requests(reader: impl BufRead, tx: mpsc::Sender<Request>) {
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::from_line(&line) {
+            Ok(req) => {
+                let shutdown = matches!(req, Request::Shutdown);
+                if tx.send(req).is_err() || shutdown {
+                    break;
+                }
+            }
+            Err(e) => eprintln!("star worker: skipping bad request line: {e:#}"),
+        }
+    }
 }
 
 /// Compute one cell (honoring any chaos instruction first) and build
@@ -145,23 +188,50 @@ fn serve_cell(id: u64, index: usize, sweep: &super::SweepSpec, chaos: Option<Cha
 mod tests {
     use super::*;
     use crate::fabric::protocol::{cell_request_json, SweepSpec};
+    use std::sync::{Arc, Mutex};
+
+    /// A `Write` the test keeps a handle to after the writer thread
+    /// takes ownership of its clone.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
 
     #[test]
-    fn serve_lines_answers_cells_and_honors_shutdown() {
+    fn serve_session_pipelines_queued_cells_and_honors_shutdown() {
         let sweep = SweepSpec::Resilience { jobs: 2, seed: 0, quick: true, fault_seed: 0 };
         let sweep_json = sweep.to_json();
+        // two requests queued back-to-back (the pipelined shape: the
+        // second arrives while the first computes), plus garbage and a
+        // shutdown
         let input = format!(
             "{}\nnot json\n\n{}\n{}\nafter shutdown is never read\n",
             cell_request_json(1, 0, &sweep_json, None).to_string_compact(),
             cell_request_json(2, 999, &sweep_json, None).to_string_compact(),
             Request::shutdown_json().to_string_compact(),
         );
-        let mut out: Vec<u8> = Vec::new();
-        serve_lines(BufReader::new(input.as_bytes()), &mut out).unwrap();
-        let text = String::from_utf8(out).unwrap();
+        let out = SharedBuf::default();
+        serve_session(BufReader::new(std::io::Cursor::new(input.into_bytes())), out.clone())
+            .unwrap();
+        let text = String::from_utf8(out.0.lock().unwrap().clone()).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 2, "one response per cell request: {text}");
+        assert_eq!(lines.len(), 3, "ready + one response per cell request: {text}");
         match Response::from_line(lines[0]).unwrap() {
+            Response::Ready { window, .. } => {
+                assert_eq!(window, WINDOW, "the worker must announce its queue depth");
+            }
+            other => panic!("expected ready, got {other:?}"),
+        }
+        match Response::from_line(lines[1]).unwrap() {
             Response::Done { id, done } => {
                 assert_eq!(id, 1);
                 assert_eq!(done.index, 0);
@@ -169,7 +239,7 @@ mod tests {
             }
             other => panic!("expected done, got {other:?}"),
         }
-        match Response::from_line(lines[1]).unwrap() {
+        match Response::from_line(lines[2]).unwrap() {
             Response::Failed { id, index, error } => {
                 assert_eq!((id, index), (2, 999));
                 assert!(error.contains("out of range"), "{error}");

@@ -49,10 +49,12 @@ fn main() {
                  \x20            [--out DIR] [--threads N | --dispatch + dispatch options]\n\
                  worker     [--listen HOST:PORT]   (serve sweep cells over stdio, or TCP with --listen)\n\
                  dispatch   <file.json|builtin|space> [--quick] [--jobs N] [--count N] [--points P]\n\
-                 \x20          [--out DIR] [--workers N] [--connect H:P,…]\n\
+                 \x20          [--out DIR] [--workers N] [--connect H:P,…] [--window K]\n\
                  \x20          [--deadline-s X] [--retries N] [--backoff-ms B] [--straggler-factor F]\n\
-                 \x20          [--journal PATH] [--fresh] [--chaos] [--chaos-seed S] [--chaos-kill-prob P]\n\
-                 \x20          [--chaos-stall-prob P] [--chaos-stall-ms M] [--worker-bin PATH]\n\
+                 \x20          [--journal PATH] [--fresh] [--commit-batch N] [--commit-interval-ms M]\n\
+                 \x20          [--chaos] [--chaos-seed S] [--chaos-kill-prob P] [--chaos-stall-prob P]\n\
+                 \x20          [--chaos-stall-ms M] [--chaos-slow-worker I] [--chaos-slow-ms M]\n\
+                 \x20          [--worker-bin PATH]\n\
                  artifacts  [--dir artifacts]"
             );
             2
@@ -302,7 +304,9 @@ fn scenario_search(args: &Args) -> star::Result<()> {
     args.check_known(&[
         "count", "points", "quick", "jobs", "threads", "out", "dispatch", "workers", "connect",
         "deadline-s", "retries", "backoff-ms", "straggler-factor", "journal", "fresh", "chaos",
-        "chaos-seed", "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
+        "chaos-seed", "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms",
+        "chaos-slow-worker", "chaos-slow-ms", "worker-bin", "window", "commit-batch",
+        "commit-interval-ms",
     ])?;
     let target = args.pos(2).ok_or_else(|| {
         anyhow::anyhow!(
@@ -350,15 +354,17 @@ fn worker(args: &Args) -> star::Result<()> {
     }
 }
 
-/// `star dispatch` — scatter a scenario's sweep grid across workers with
-/// deadlines, retry, straggler re-issue, and a resumable checkpoint
-/// journal; merge results index-ordered into artifacts byte-identical to
-/// a serial `--threads 1` run.
+/// `star dispatch` — scatter a scenario's sweep grid across workers
+/// (pipelined `--window` deep per worker, EWMA-load-balanced) with
+/// deadlines, retry, straggler re-issue, and a resumable group-committed
+/// checkpoint journal; merge results index-ordered into artifacts
+/// byte-identical to a serial `--threads 1` run.
 fn dispatch_cmd(args: &Args) -> star::Result<()> {
     args.check_known(&[
         "quick", "jobs", "count", "points", "out", "workers", "connect", "deadline-s",
         "retries", "backoff-ms", "straggler-factor", "journal", "fresh", "chaos", "chaos-seed",
-        "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms", "worker-bin",
+        "chaos-kill-prob", "chaos-stall-prob", "chaos-stall-ms", "chaos-slow-worker",
+        "chaos-slow-ms", "worker-bin", "window", "commit-batch", "commit-interval-ms",
     ])?;
     let target = args.pos(1).ok_or_else(|| {
         anyhow::anyhow!("usage: star dispatch <file.json|builtin> [options] (see `star` usage)")
@@ -394,10 +400,16 @@ fn dispatch_opts(args: &Args) -> star::Result<star::fabric::dispatch::DispatchOp
             stall_prob: args.f64_or("chaos-stall-prob", defaults.stall_prob)?,
             stall_ms: args.u64_or("chaos-stall-ms", defaults.stall_ms)?,
             die_after_ms: defaults.die_after_ms,
+            slow_worker: match args.get("chaos-slow-worker") {
+                Some(_) => Some(args.usize_or("chaos-slow-worker", 0)?),
+                None => None,
+            },
+            slow_ms: args.u64_or("chaos-slow-ms", defaults.slow_ms)?,
         })
     } else {
         None
     };
+    let defaults = star::fabric::dispatch::DispatchOpts::default();
     Ok(star::fabric::dispatch::DispatchOpts {
         workers: args.usize_or("workers", 4)?,
         connect: match args.get("connect") {
@@ -413,6 +425,9 @@ fn dispatch_opts(args: &Args) -> star::Result<star::fabric::dispatch::DispatchOp
         straggler_factor: args.f64_or("straggler-factor", 3.0)?,
         chaos,
         worker_bin: args.get("worker-bin").map(std::path::PathBuf::from),
+        window: args.usize_or("window", defaults.window)?,
+        commit_batch: args.usize_or("commit-batch", defaults.commit_batch)?,
+        commit_interval_ms: args.u64_or("commit-interval-ms", defaults.commit_interval_ms)?,
     })
 }
 

@@ -73,6 +73,41 @@ pub fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
     xs[lo] * (1.0 - frac) + xs[hi] * frac
 }
 
+/// Incrementally sorted sample stream: `push` keeps the backing vec
+/// ordered with a binary-search insert, so a percentile read is a plain
+/// [`percentile_sorted`] lookup instead of [`percentile`]'s
+/// clone-and-sort. The dispatch fabric reads a p99 straggler threshold
+/// after every completed cell, which made the batch form O(n log n)
+/// *per completion*. Both paths funnel into [`percentile_sorted`] over
+/// identically sorted data, so they agree exactly.
+#[derive(Clone, Debug, Default)]
+pub struct SortedStream {
+    sorted: Vec<f64>,
+}
+
+impl SortedStream {
+    pub fn push(&mut self, x: f64) {
+        let at = self.sorted.partition_point(|&y| y <= x);
+        self.sorted.insert(at, x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p)
+    }
+
+    pub fn as_sorted(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         f64::NAN
@@ -247,6 +282,25 @@ mod tests {
         // spread evenly over 8 bins (bin centers)
         let xs: Vec<f64> = (0..8).map(|i| i as f64 + 0.5).collect();
         assert_eq!(occupied_bins(&xs, 8), 8);
+    }
+
+    #[test]
+    fn sorted_stream_matches_batch_percentile_on_random_sequences() {
+        let mut rng = crate::simrng::Rng::seeded(7);
+        let mut stream = SortedStream::default();
+        let mut batch: Vec<f64> = Vec::new();
+        for _ in 0..500 {
+            let x = rng.normal() * 3.0 + rng.f64() * 10.0;
+            stream.push(x);
+            batch.push(x);
+            for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+                // bit-exact, not just close: both sides interpolate over
+                // the same sorted data
+                assert_eq!(stream.percentile(p), percentile(&batch, p), "p{p} after {} samples", batch.len());
+            }
+        }
+        assert_eq!(stream.len(), batch.len());
+        assert!(stream.as_sorted().windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use star::exp::{resilience, ExpCtx};
 use star::fabric::chaos::ChaosConfig;
 use star::fabric::dispatch::{dispatch, DispatchOpts, DispatchReport};
 use star::fabric::journal::Journal;
+use star::fabric::protocol::CellDone;
 use star::fabric::SweepSpec;
 use star::jsonio::Json;
 use star::scenario::search::{self, SearchOpts};
@@ -310,6 +311,199 @@ fn tcp_worker_serves_dispatches_and_survives_them() {
     let r1 = run("tcp_a");
     let r2 = run("tcp_b");
     assert_eq!((r1.executed, r2.executed), (1, 1));
+
+    let _ = worker.kill();
+    let _ = worker.wait();
+}
+
+/// The pipelining + group-commit acceptance contract (DESIGN.md §14):
+/// at `--window 4` the fleet needs fewer than half the protocol
+/// round-trips of lock-step `--window 1`, and batched journal commits
+/// fsync once per batch instead of once per cell — all without moving a
+/// single artifact byte.
+#[test]
+fn pipelining_cuts_round_trips_and_group_commit_cuts_fsyncs() {
+    let serial = tmp("pipe_serial");
+    serial_resilience(&serial);
+    let sweep = resilience_sweep();
+
+    // lock-step + per-cell durability: every cell is a full round-trip
+    // and every record its own fsync (straggler re-issue parked so the
+    // round-trip count is exact)
+    let a = tmp("pipe_lockstep");
+    let opts = DispatchOpts {
+        window: 1,
+        commit_batch: 1,
+        commit_interval_ms: 60_000,
+        straggler_factor: 1e9,
+        ..base_opts(&a)
+    };
+    let ra = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(ra.executed, CELLS, "{ra:?}");
+    assert_eq!(ra.round_trips, CELLS, "window 1 pays one round-trip per cell: {ra:?}");
+    assert_eq!(ra.journal_fsyncs, CELLS as u64, "batch 1 syncs every record: {ra:?}");
+    assert_same_artifacts(&serial, &a, "resilience");
+
+    // pipelined + group-committed: only the first issue per worker finds
+    // it idle (3 workers ⇒ 3 round-trips); one batch commit plus the
+    // final-tail flush cover all nine records
+    let b = tmp("pipe_windowed");
+    let opts = DispatchOpts {
+        window: 4,
+        commit_batch: 8,
+        commit_interval_ms: 60_000,
+        straggler_factor: 1e9,
+        ..base_opts(&b)
+    };
+    let rb = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(rb.executed, CELLS, "{rb:?}");
+    assert!(
+        2 * rb.round_trips < ra.round_trips,
+        "window 4 must need < half the round-trips of window 1: {} vs {}",
+        rb.round_trips,
+        ra.round_trips
+    );
+    assert_eq!(
+        rb.journal_fsyncs, 2,
+        "batch 8 over 9 cells is one batch commit + the final tail: {rb:?}"
+    );
+    assert_same_artifacts(&serial, &b, "resilience");
+}
+
+/// A heterogeneous fleet: one chaos-stalled slow worker among three
+/// fast ones. The EWMA scheduler must route most cells to the fast
+/// workers, the journal must hold each cell exactly once (straggler
+/// duplicates race, but only one result lands), and the artifacts must
+/// still match the serial run byte for byte.
+#[test]
+fn heterogeneous_fleet_balances_away_from_the_slow_worker() {
+    let serial = tmp("hetero_serial");
+    serial_resilience(&serial);
+    let sweep = resilience_sweep();
+
+    let fabric = tmp("hetero_fabric");
+    let opts = DispatchOpts {
+        workers: 4,
+        window: 4,
+        chaos: Some(ChaosConfig {
+            kill_prob: 0.0,
+            stall_prob: 0.0,
+            slow_worker: Some(0),
+            slow_ms: 1_500,
+            ..Default::default()
+        }),
+        ..base_opts(&fabric)
+    };
+    let report = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(report.executed, CELLS, "{report:?}");
+    assert_same_artifacts(&serial, &fabric, "resilience");
+
+    let balance = &report.per_worker_cells;
+    assert_eq!(balance.len(), 4, "{report:?}");
+    assert_eq!(balance.iter().sum::<usize>(), CELLS, "every fresh result is credited");
+    assert!(
+        balance[1..].iter().sum::<usize>() > balance[0],
+        "the fast workers must out-complete the stalled one: {balance:?}"
+    );
+
+    // the journal is the durability ledger: exactly one record per cell,
+    // no matter how many duplicate attempts raced
+    let journal = read(&fabric.join("resilience.journal.jsonl"));
+    let mut indices: Vec<u64> = journal
+        .lines()
+        .skip(1) // header
+        .map(|l| Json::parse(l).unwrap().get("index").unwrap().u64().unwrap())
+        .collect();
+    indices.sort_unstable();
+    indices.dedup();
+    assert_eq!(indices.len(), CELLS, "each cell must be journaled exactly once");
+}
+
+/// Group commit's crash contract: records buffered past the last fsync
+/// are simply gone, and a resumed dispatch re-runs exactly those cells
+/// — no more (the synced prefix is honored), no less (nothing
+/// half-written sneaks in).
+#[test]
+fn group_commit_crash_reruns_exactly_the_unsynced_tail() {
+    let serial = tmp("gc_crash_serial");
+    serial_resilience(&serial);
+    let sweep = resilience_sweep();
+
+    // hand-build the pre-crash journal: 6 cells appended, only the
+    // first 4 committed, then the process "dies" mid-batch
+    let fabric = tmp("gc_crash_fabric");
+    let path = fabric.join("resilience.journal.jsonl");
+    let (mut j, _) = Journal::open(&path, &sweep.fingerprint(), CELLS, true).unwrap();
+    for i in 0..6 {
+        let rows = sweep.compute(i).unwrap();
+        j.append(&CellDone { index: i, elapsed_s: 0.5, rows });
+        if i == 3 {
+            j.flush().unwrap();
+        }
+    }
+    assert_eq!(j.pending(), 2, "cells 4 and 5 must still be buffered");
+    j.abandon(); // the crash: the unsynced tail never hits the disk
+
+    let opts = DispatchOpts { fresh: false, ..base_opts(&fabric) };
+    let report = dispatch(&sweep, &opts).unwrap();
+    assert_eq!(
+        (report.resumed, report.executed),
+        (4, CELLS - 4),
+        "resume must re-run exactly the cells whose batch never synced: {report:?}"
+    );
+    assert_same_artifacts(&serial, &fabric, "resilience");
+}
+
+/// Satellite contract: a remote worker that is down when the dispatch
+/// starts (killed, not yet restarted) is re-dialed on the backoff
+/// schedule and rejoins mid-dispatch once `star worker --listen` comes
+/// back on its address.
+#[test]
+fn tcp_dispatch_redials_until_a_restarted_worker_rejoins() {
+    let sc = Scenario {
+        name: "fabric_rejoin".into(),
+        policies: vec!["SSGD".into()],
+        archs: vec![Arch::Ps],
+        ..Default::default()
+    };
+    let sweep = SweepSpec::from_scenario(&sc, Some(JOBS), true).unwrap();
+
+    // reserve a port the OS considers free, then release it: the
+    // dispatch dials an address nothing listens on (the "killed worker")
+    let addr = {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.local_addr().unwrap().to_string()
+    };
+
+    let out = tmp("rejoin_out");
+    let opts = DispatchOpts {
+        connect: vec![addr.clone()],
+        out_dir: out.clone(),
+        backoff_ms: 50,
+        fresh: true,
+        ..Default::default()
+    };
+    let dispatcher = std::thread::spawn(move || dispatch(&sweep, &opts));
+
+    // let a few dials fail against the dead address, then "restart" the
+    // worker on it mid-dispatch
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let mut worker = std::process::Command::new(worker_bin())
+        .args(["worker", "--listen", &addr])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(worker.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains(&addr), "the restarted worker must bind the same address: {line:?}");
+
+    let report = dispatcher.join().unwrap().unwrap();
+    assert_eq!(report.executed, 1, "{report:?}");
+    assert!(
+        report.worker_reconnects >= 1,
+        "the restarted worker must be counted as a re-join: {report:?}"
+    );
+    assert!(out.join("scenario_fabric_rejoin.json").is_file());
 
     let _ = worker.kill();
     let _ = worker.wait();
